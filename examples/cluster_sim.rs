@@ -1,0 +1,141 @@
+//! End-to-end driver: the full system on a real (synthetic-Google)
+//! workload — trace generation, cluster sampling from Table I, all
+//! three schedulers, the XLA-accelerated picker when artifacts are
+//! present, and the paper's headline metrics.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example cluster_sim
+//! ```
+//!
+//! This is the repository's E2E validation (see EXPERIMENTS.md): it
+//! proves the three layers compose — the Rust coordinator replays a
+//! 24-hour-scaled trace, and the same decisions flow through the
+//! AOT-compiled Pallas/JAX kernels via PJRT.
+
+use drfh::cluster::Cluster;
+use drfh::experiments::EvalSetup;
+use drfh::runtime::{artifacts_available, XlaRuntime};
+use drfh::sched::{BestFitDrfh, FirstFitDrfh, SlotsScheduler, XlaBestFit};
+use drfh::sim::{run, SimOpts};
+use drfh::util::Pcg32;
+use drfh::workload::{GoogleLikeConfig, TraceGenerator};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    // A 400-server / 40-user / 4-hour slice of the paper's setup —
+    // large enough to show the utilization gap, small enough to finish
+    // in seconds. Scale up with `drfh exp fig5 --servers 2000`.
+    let setup = EvalSetup::with_duration(42, 400, 40, 14_400.0);
+    println!(
+        "cluster: {} servers ({} classes), total {:.1} CPU / {:.1} mem units",
+        setup.cluster.len(),
+        setup.cluster.classes().len(),
+        setup.cluster.total_capacity()[0],
+        setup.cluster.total_capacity()[1],
+    );
+    println!(
+        "trace: {} users, {} jobs, {} tasks over {:.0} s\n",
+        setup.trace.users.len(),
+        setup.trace.jobs.len(),
+        setup.trace.total_tasks(),
+        setup.opts.horizon,
+    );
+
+    println!(
+        "{:<18} {:>9} {:>9} {:>10} {:>10} {:>9}",
+        "scheduler", "CPU util", "mem util", "tasks", "jobs", "wall"
+    );
+    let mut rows = Vec::new();
+    let schedulers: Vec<(&str, Box<dyn drfh::sched::Scheduler>)> = vec![
+        ("bestfit-drfh", Box::new(BestFitDrfh::default())),
+        ("firstfit-drfh", Box::new(FirstFitDrfh)),
+        ("slots-14", Box::new(SlotsScheduler::new(&setup.cluster, 14))),
+    ];
+    for (name, sched) in schedulers {
+        let t0 = Instant::now();
+        let r = run(
+            setup.cluster.clone(),
+            &setup.trace,
+            sched,
+            setup.opts.clone(),
+        );
+        let wall = t0.elapsed();
+        println!(
+            "{:<18} {:>8.1}% {:>8.1}% {:>10} {:>10} {:>8.2}s",
+            name,
+            r.avg_cpu_util * 100.0,
+            r.avg_mem_util * 100.0,
+            r.tasks_completed,
+            r.jobs.len(),
+            wall.as_secs_f64()
+        );
+        rows.push((name.to_string(), r));
+    }
+
+    // headline: DRFH vs slots utilization and completed work
+    let bf = &rows[0].1;
+    let slots = &rows[2].1;
+    println!(
+        "\nheadline: Best-Fit DRFH vs Slots — CPU {:.1}% vs {:.1}% \
+         ({:+.0}% relative), tasks {} vs {} ({:+.0}%)",
+        bf.avg_cpu_util * 100.0,
+        slots.avg_cpu_util * 100.0,
+        (bf.avg_cpu_util / slots.avg_cpu_util - 1.0) * 100.0,
+        bf.tasks_completed,
+        slots.tasks_completed,
+        (bf.tasks_completed as f64 / slots.tasks_completed.max(1) as f64
+            - 1.0)
+            * 100.0,
+    );
+
+    // XLA path: same policy, decisions computed by the AOT kernels
+    if artifacts_available() {
+        println!("\n-- XLA-accelerated picker (AOT Pallas/JAX via PJRT) --");
+        let rt = Arc::new(XlaRuntime::load_default().expect("artifacts"));
+        let mut rng = Pcg32::seeded(9);
+        let cluster = Cluster::google_sample(120, &mut rng);
+        let gen = TraceGenerator::new(GoogleLikeConfig {
+            users: 12,
+            duration: 3_600.0,
+            jobs_per_user: 8.0,
+            max_tasks_per_job: 100,
+            ..Default::default()
+        });
+        let trace = gen.generate(3);
+        let opts = SimOpts {
+            horizon: 3_600.0,
+            sample_dt: 60.0,
+            track_user_series: false,
+        };
+        let t0 = Instant::now();
+        let native = run(
+            cluster.clone(),
+            &trace,
+            Box::new(BestFitDrfh::default()),
+            opts.clone(),
+        );
+        let t_native = t0.elapsed();
+        let t0 = Instant::now();
+        let xla = run(
+            cluster,
+            &trace,
+            Box::new(XlaBestFit::new(rt)),
+            opts,
+        );
+        let t_xla = t0.elapsed();
+        println!(
+            "native: {} placements in {:.2}s; XLA: {} placements in {:.2}s",
+            native.tasks_placed,
+            t_native.as_secs_f64(),
+            xla.tasks_placed,
+            t_xla.as_secs_f64()
+        );
+        let diff =
+            (native.tasks_placed as i64 - xla.tasks_placed as i64).abs();
+        assert!(diff <= 2, "native and XLA schedules diverged");
+        println!("decision parity: OK (Δplacements = {diff})");
+    } else {
+        println!("\n(artifacts/ missing — run `make artifacts` to exercise the XLA path)");
+    }
+}

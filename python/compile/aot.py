@@ -1,0 +1,115 @@
+"""AOT-lower the L2 scheduling graphs to HLO text artifacts.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the Rust `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Emits one artifact per (n, k, m[, steps]) shape variant plus a
+manifest.json the Rust runtime uses for discovery. `make artifacts` is a
+no-op when artifacts are newer than their Python inputs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Shape variants compiled ahead of time. The Rust coordinator pads its
+# live state (users up to n, servers up to k) into the smallest variant
+# that fits. Tiles are 128 wide, so k and n are powers of two.
+STEP_VARIANTS = [
+    # (n_users, k_servers, m_resources)
+    (4, 16, 2),
+    (8, 32, 3),
+    (16, 128, 2),
+    (64, 512, 2),
+    (128, 2048, 2),
+]
+LOOP_VARIANTS = [
+    # (n_users, k_servers, m_resources, steps)
+    (16, 128, 2, 32),
+    (64, 512, 2, 64),
+    (128, 2048, 2, 64),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowering -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_step(n: int, k: int, m: int) -> str:
+    f32 = jnp.float32
+    i32 = jnp.int32
+    lowered = jax.jit(model.sched_step).lower(
+        jax.ShapeDtypeStruct((k, m), f32),  # avail
+        jax.ShapeDtypeStruct((n, m), f32),  # demand
+        jax.ShapeDtypeStruct((n,), f32),  # share
+        jax.ShapeDtypeStruct((n,), f32),  # weight
+        jax.ShapeDtypeStruct((n,), i32),  # active
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_loop(n: int, k: int, m: int, steps: int) -> str:
+    f32 = jnp.float32
+    i32 = jnp.int32
+    fn = functools.partial(model.sched_loop, steps=steps)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((k, m), f32),  # avail
+        jax.ShapeDtypeStruct((n, m), f32),  # demand
+        jax.ShapeDtypeStruct((n,), f32),  # share
+        jax.ShapeDtypeStruct((n,), f32),  # weight
+        jax.ShapeDtypeStruct((n,), i32),  # pending
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"step": [], "loop": []}
+    for n, k, m in STEP_VARIANTS:
+        name = f"sched_step_n{n}_k{k}_m{m}.hlo.txt"
+        text = lower_step(n, k, m)
+        with open(os.path.join(args.out, name), "w") as f:
+            f.write(text)
+        manifest["step"].append({"n": n, "k": k, "m": m, "file": name})
+        print(f"wrote {name} ({len(text)} chars)")
+
+    for n, k, m, steps in LOOP_VARIANTS:
+        name = f"sched_loop_n{n}_k{k}_m{m}_t{steps}.hlo.txt"
+        text = lower_loop(n, k, m, steps)
+        with open(os.path.join(args.out, name), "w") as f:
+            f.write(text)
+        manifest["loop"].append(
+            {"n": n, "k": k, "m": m, "steps": steps, "file": name}
+        )
+        print(f"wrote {name} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['step'])} step, "
+          f"{len(manifest['loop'])} loop variants)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Pallas kernel for Best-Fit DRFH server scoring (paper eq. (9)).
+
+For every user i and server l the kernel computes
+
+    H(i, l) = sum_r | D_ir / D_i0  -  avail_lr / avail_l0 |
+
+masks out servers that cannot fit the task (``any_r avail_lr < D_ir``)
+and reduces per user to the best (lowest-H, lowest-index) feasible
+server. Semantics match ``ref.score_servers`` exactly, including
+first-occurrence tie-breaking.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the (k, m) available-
+resource matrix is streamed HBM->VMEM in 128-server tiles via BlockSpec;
+the demand matrix (n <= 128 users x m <= 4 resources) stays resident in
+VMEM across the whole grid. Each grid step does an elementwise VPU pass
+over one tile plus an [n, TILE] reduction; the running per-user best is
+carried in the output refs across sequential grid steps (the canonical
+TPU accumulator pattern). The kernel is memory-bound: ~O(n*m) flops per
+avail byte, no MXU work. ``interpret=True`` is mandatory on this image —
+the CPU PJRT plugin cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SERVER_TILE = 128
+
+
+def _score_kernel(avail_ref, demand_ref, best_h_ref, best_idx_ref):
+    """One grid step: fold a tile of servers into the running best."""
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        best_h_ref[...] = jnp.full_like(best_h_ref[...], jnp.inf)
+        best_idx_ref[...] = jnp.full_like(best_idx_ref[...], -1)
+
+    avail = avail_ref[...]  # [T, m]
+    demand = demand_ref[...]  # [n, m]
+
+    # ratios relative to resource 0 (paper's D_i1 / c-bar_l1), div-by-0 safe
+    dden = jnp.where(demand[:, 0:1] != 0.0, demand[:, 0:1], 1.0)
+    aden = jnp.where(avail[:, 0:1] != 0.0, avail[:, 0:1], 1.0)
+    dratio = demand / dden  # [n, m]
+    aratio = avail / aden  # [T, m]
+
+    h = jnp.sum(jnp.abs(dratio[:, None, :] - aratio[None, :, :]), axis=-1)
+    fit = jnp.all(avail[None, :, :] >= demand[:, None, :], axis=-1)
+    h = jnp.where(fit, h, jnp.inf)  # [n, T]
+
+    tile_min = jnp.min(h, axis=1)  # [n]
+    tile_arg = jnp.argmin(h, axis=1).astype(jnp.int32) + t * avail.shape[0]
+
+    # strict < keeps the earliest tile on ties; argmin keeps the earliest
+    # server within a tile -> global first-occurrence semantics.
+    better = tile_min < best_h_ref[...]
+    best_idx_ref[...] = jnp.where(better, tile_arg, best_idx_ref[...])
+    best_h_ref[...] = jnp.where(better, tile_min, best_h_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def score_servers(avail, demand, *, tile=SERVER_TILE):
+    """Pallas-backed all-pairs best-fit scoring.
+
+    Args:
+      avail:  f32[k, m], k divisible by ``tile`` (or k < tile).
+      demand: f32[n, m].
+
+    Returns:
+      (best_h f32[n], best_server i32[n]); +inf/-1 when no server fits.
+    """
+    avail = jnp.asarray(avail, jnp.float32)
+    demand = jnp.asarray(demand, jnp.float32)
+    k, m = avail.shape
+    n = demand.shape[0]
+    t = min(tile, k)
+    if k % t != 0:
+        raise ValueError(f"k={k} not divisible by tile={t}")
+    grid = k // t
+    best_h, best_idx = pl.pallas_call(
+        _score_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((t, m), lambda i: (i, 0)),  # stream server tiles
+            pl.BlockSpec((n, m), lambda i: (0, 0)),  # demands stay resident
+        ],
+        out_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(avail, demand)
+    return best_h, best_idx

@@ -1,0 +1,84 @@
+"""Pallas kernel for progressive-filling user selection.
+
+Selects the eligible user with the lowest *weighted global dominant
+share* ``share_i / weight_i`` (paper Sec. V-A/V-B): the user that
+progressive filling serves next. Eligibility (active AND has a feasible
+server) arrives as an i32 mask. Returns -1 when no user is eligible.
+Semantics match ``ref.select_user`` exactly (first-occurrence ties).
+
+TPU mapping: shares/weights/mask are tiny 1-D vectors tiled in VMEM;
+the running (best value, best index) scalar pair is carried across the
+sequential grid in (1,)-shaped output refs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+USER_TILE = 128
+
+
+def _select_kernel(share_ref, weight_ref, mask_ref, val_ref, idx_ref):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        val_ref[0] = jnp.float32(jnp.inf)
+        idx_ref[0] = jnp.int32(-1)
+
+    share = share_ref[...]
+    weight = weight_ref[...]
+    mask = mask_ref[...] != 0
+    wsafe = jnp.where(weight != 0.0, weight, 1.0)
+    key = jnp.where(mask, share / wsafe, jnp.inf)
+
+    tile_min = jnp.min(key)
+    tile_arg = jnp.argmin(key).astype(jnp.int32) + t * share.shape[0]
+
+    @pl.when(tile_min < val_ref[0])
+    def _update():
+        val_ref[0] = tile_min
+        idx_ref[0] = tile_arg
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def select_user(share, weight, mask, *, tile=USER_TILE):
+    """Pallas-backed masked argmin of share/weight.
+
+    Args:
+      share:  f32[n]; weight: f32[n] (positive); mask: i32[n] nonzero=ok.
+
+    Returns:
+      i32[1] selected user index (-1 if the mask is empty).
+    """
+    share = jnp.asarray(share, jnp.float32)
+    weight = jnp.asarray(weight, jnp.float32)
+    mask = jnp.asarray(mask, jnp.int32)
+    n = share.shape[0]
+    t = min(tile, n)
+    if n % t != 0:
+        raise ValueError(f"n={n} not divisible by tile={t}")
+    grid = n // t
+    _, idx = pl.pallas_call(
+        _select_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(share, weight, mask)
+    return idx

@@ -1,0 +1,144 @@
+"""Pure-jnp reference oracle for the DRFH scheduling kernels.
+
+These functions define the *semantics* that both the Pallas kernels
+(bestfit.py / dominant.py) and the native Rust picker must reproduce
+bit-for-bit on f32 inputs:
+
+  * ``score_servers`` — paper eq. (9): for every (user, server) pair the
+    fitness ``H(i,l) = sum_r |D_ir/D_i0 - avail_lr/avail_l0|`` together with
+    the feasibility mask ``all_r(avail_lr >= D_ir)``; reduced per user to
+    the best (lowest-H, lowest-index) feasible server.
+  * ``select_user`` — progressive filling (paper Sec. V-B): among active
+    users that have at least one feasible server, pick the one with the
+    lowest weighted global dominant share (ties -> lowest index).
+  * ``sched_step`` — one scheduling decision composing the two.
+  * ``sched_loop`` — T consecutive decisions with state updates, used by
+    the Rust coordinator to batch placements into a single PJRT call.
+
+Tie-breaking is everywhere "first occurrence of the minimum", which the
+kernels implement with strict-< accumulator updates and jnp.argmin's
+first-occurrence guarantee.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+# Infeasible placements score +inf; users with no feasible server are
+# excluded from selection.
+INF = jnp.inf
+
+
+def _safe_div(num, den):
+    """num / den with den==0 mapped to den=1 (masked out by callers)."""
+    safe = jnp.where(den != 0.0, den, 1.0)
+    return num / safe
+
+
+def score_servers(avail, demand):
+    """All-pairs best-fit scoring (paper eq. (9)).
+
+    Args:
+      avail:  f32[k, m] per-server available resources (absolute units).
+      demand: f32[n, m] per-user per-task demand (absolute units).
+
+    Returns:
+      best_h:      f32[n] lowest feasible H per user (+inf if none fits).
+      best_server: i32[n] argmin server per user (-1 if none fits).
+    """
+    avail = jnp.asarray(avail, jnp.float32)
+    demand = jnp.asarray(demand, jnp.float32)
+    # ratios relative to resource 0, paper's D_i1 / c-bar_l1 convention
+    dratio = _safe_div(demand, demand[:, 0:1])  # [n, m]
+    aratio = _safe_div(avail, avail[:, 0:1])  # [k, m]
+    h = jnp.sum(
+        jnp.abs(dratio[:, None, :] - aratio[None, :, :]), axis=-1
+    )  # [n, k]
+    fit = jnp.all(avail[None, :, :] >= demand[:, None, :], axis=-1)  # [n, k]
+    # a server with zero available resource-0 cannot host positive demand
+    # and is already excluded by `fit`; keep H finite-safe regardless.
+    h = jnp.where(fit, h, INF)
+    best_h = jnp.min(h, axis=1)
+    best_server = jnp.where(
+        jnp.isfinite(best_h), jnp.argmin(h, axis=1).astype(jnp.int32), -1
+    )
+    return best_h, best_server
+
+
+def select_user(share, weight, mask):
+    """Masked argmin of share/weight; -1 when the mask is empty.
+
+    Args:
+      share:  f32[n] current global dominant shares.
+      weight: f32[n] positive user weights.
+      mask:   bool[n] user is eligible (active AND has a feasible server).
+
+    Returns:
+      i32 scalar user index, -1 if no user is eligible.
+    """
+    share = jnp.asarray(share, jnp.float32)
+    weight = jnp.asarray(weight, jnp.float32)
+    key = jnp.where(mask, _safe_div(share, weight), INF)
+    u = jnp.argmin(key).astype(jnp.int32)
+    return jnp.where(jnp.isfinite(key[u]), u, jnp.int32(-1))
+
+
+def sched_step(avail, demand, share, weight, active):
+    """One progressive-filling decision.
+
+    Returns (u, s): the user served and the server hosting the task,
+    both -1 if no placement is possible.
+    """
+    best_h, best_server = score_servers(avail, demand)
+    eligible = jnp.logical_and(active, jnp.isfinite(best_h))
+    u = select_user(share, weight, eligible)
+    s = jnp.where(u >= 0, best_server[jnp.maximum(u, 0)], jnp.int32(-1))
+    return u, s
+
+
+def sched_loop(avail, demand, share, weight, pending, steps):
+    """`steps` consecutive decisions with state updates.
+
+    Args:
+      avail:   f32[k, m]; demand: f32[n, m]; share: f32[n];
+      weight:  f32[n]; pending: i32[n] tasks not yet placed.
+      steps:   static int, number of decisions to attempt.
+
+    Returns:
+      decisions: i32[steps, 2] (user, server), -1/-1 for no-op steps.
+      avail', share', pending': updated state.
+    """
+    demand = jnp.asarray(demand, jnp.float32)
+    weight = jnp.asarray(weight, jnp.float32)
+    dom = jnp.max(demand, axis=1)  # dominant-resource demand per task
+
+    def body(t, state):
+        avail, share, pending, decisions = state
+        active = pending > 0
+        u, s = sched_step(avail, demand, share, weight, active)
+        ok = u >= 0
+        uu = jnp.maximum(u, 0)
+        ss = jnp.maximum(s, 0)
+        delta = jnp.where(ok, 1.0, 0.0).astype(jnp.float32)
+        avail = avail.at[ss].add(-demand[uu] * delta)
+        share = share.at[uu].add(dom[uu] * delta)
+        pending = pending.at[uu].add(jnp.where(ok, -1, 0).astype(jnp.int32))
+        decisions = decisions.at[t].set(
+            jnp.where(ok, jnp.stack([u, s]), jnp.array([-1, -1], jnp.int32))
+        )
+        return avail, share, pending, decisions
+
+    decisions = jnp.full((steps, 2), -1, jnp.int32)
+    avail, share, pending, decisions = lax.fori_loop(
+        0,
+        steps,
+        body,
+        (
+            jnp.asarray(avail, jnp.float32),
+            jnp.asarray(share, jnp.float32),
+            jnp.asarray(pending, jnp.int32),
+            decisions,
+        ),
+    )
+    return decisions, avail, share, pending

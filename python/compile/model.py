@@ -1,0 +1,86 @@
+"""L2: the DRFH scheduling decision as a JAX computation.
+
+Composes the two Pallas kernels (kernels/bestfit.py, kernels/dominant.py)
+into the progressive-filling decision the Rust coordinator executes on its
+hot path:
+
+  * ``sched_step``  — one decision: (avail, demand, share, weight, active)
+                      -> (user, server), both -1 when nothing can be placed.
+  * ``sched_loop``  — ``steps`` consecutive decisions with in-graph state
+                      updates, so the coordinator can amortize one PJRT call
+                      over a whole batch of placements.
+
+Everything here is lowered ONCE by aot.py into artifacts/*.hlo.txt; Python
+never runs at serving time.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels import bestfit, dominant
+
+
+def sched_step(avail, demand, share, weight, active):
+    """One progressive-filling decision (Pallas-backed).
+
+    Args:
+      avail:  f32[k, m] per-server available resources.
+      demand: f32[n, m] per-user per-task demands.
+      share:  f32[n] current global dominant shares.
+      weight: f32[n] positive user weights.
+      active: i32[n] nonzero iff the user has pending tasks.
+
+    Returns:
+      (u i32[1], s i32[1]): chosen user and server, -1/-1 if no placement
+      is possible.
+    """
+    best_h, best_server = bestfit.score_servers(avail, demand)
+    eligible = (jnp.asarray(active, jnp.int32) != 0) & jnp.isfinite(best_h)
+    u = dominant.select_user(share, weight, eligible.astype(jnp.int32))
+    uu = jnp.maximum(u[0], 0)
+    s = jnp.where(u[0] >= 0, best_server[uu], jnp.int32(-1))
+    return u, s.reshape((1,))
+
+
+def sched_loop(avail, demand, share, weight, pending, *, steps):
+    """``steps`` consecutive decisions with in-graph state updates.
+
+    Args:
+      avail: f32[k, m]; demand: f32[n, m]; share: f32[n]; weight: f32[n];
+      pending: i32[n] tasks not yet placed; steps: static int.
+
+    Returns:
+      decisions i32[steps, 2] ((user, server) rows, -1/-1 no-ops),
+      updated avail f32[k, m], share f32[n], pending i32[n].
+    """
+    avail = jnp.asarray(avail, jnp.float32)
+    demand = jnp.asarray(demand, jnp.float32)
+    share = jnp.asarray(share, jnp.float32)
+    weight = jnp.asarray(weight, jnp.float32)
+    pending = jnp.asarray(pending, jnp.int32)
+    dom = jnp.max(demand, axis=1)  # per-task dominant-resource demand
+
+    def body(t, state):
+        avail, share, pending, decisions = state
+        active = (pending > 0).astype(jnp.int32)
+        u, s = sched_step(avail, demand, share, weight, active)
+        u, s = u[0], s[0]
+        ok = u >= 0
+        uu = jnp.maximum(u, 0)
+        ss = jnp.maximum(s, 0)
+        delta = jnp.where(ok, 1.0, 0.0).astype(jnp.float32)
+        avail = avail.at[ss].add(-demand[uu] * delta)
+        share = share.at[uu].add(dom[uu] * delta)
+        pending = pending.at[uu].add(jnp.where(ok, -1, 0).astype(jnp.int32))
+        decisions = decisions.at[t].set(
+            jnp.where(ok, jnp.stack([u, s]), jnp.array([-1, -1], jnp.int32))
+        )
+        return avail, share, pending, decisions
+
+    decisions = jnp.full((steps, 2), -1, jnp.int32)
+    avail, share, pending, decisions = lax.fori_loop(
+        0, steps, body, (avail, share, pending, decisions)
+    )
+    return decisions, avail, share, pending

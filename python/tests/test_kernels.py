@@ -1,0 +1,224 @@
+"""Kernel-vs-oracle correctness: the CORE L1/L2 signal.
+
+Hypothesis sweeps shapes, values, masks, and degenerate cases; every
+property asserts the Pallas kernels (and the composed L2 graphs) agree
+with the pure-jnp oracle in ref.py — allclose on scores, *identical*
+argmin decisions (tie-breaking included).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import bestfit, dominant, ref
+
+SET = dict(deadline=None, max_examples=25, print_blob=True)
+
+
+def rng_for(seed):
+    return np.random.default_rng(seed)
+
+
+# k must be < 128 or a multiple of the 128-wide server tile.
+ks = st.one_of(st.integers(1, 127), st.sampled_from([128, 256, 384, 512]))
+ns = st.one_of(st.integers(1, 127), st.sampled_from([128, 256]))
+ms = st.integers(1, 4)
+seeds = st.integers(0, 2**32 - 1)
+
+
+def random_instance(seed, n, k, m, *, tight=False):
+    rng = rng_for(seed)
+    avail = rng.uniform(0.0, 1.0, (k, m)).astype(np.float32)
+    hi = 1.5 if tight else 0.5  # tight => many infeasible pairs
+    demand = rng.uniform(1e-3, hi, (n, m)).astype(np.float32)
+    return avail, demand
+
+
+# ---------------------------------------------------------------- bestfit
+
+
+@settings(**SET)
+@given(seeds, ns, ks, ms, st.booleans())
+def test_score_servers_matches_ref(seed, n, k, m, tight):
+    avail, demand = random_instance(seed, n, k, m, tight=tight)
+    bh_r, bs_r = ref.score_servers(avail, demand)
+    bh_p, bs_p = bestfit.score_servers(avail, demand)
+    np.testing.assert_allclose(np.asarray(bh_p), np.asarray(bh_r))
+    np.testing.assert_array_equal(np.asarray(bs_p), np.asarray(bs_r))
+
+
+@settings(**SET)
+@given(seeds, st.integers(1, 32), st.integers(2, 64), st.integers(1, 3))
+def test_score_servers_duplicate_servers_tiebreak(seed, n, k, m):
+    """Identical servers => first occurrence must win in both."""
+    rng = rng_for(seed)
+    row = rng.uniform(0.5, 1.0, (1, m)).astype(np.float32)
+    avail = np.repeat(row, k, axis=0)
+    demand = rng.uniform(1e-3, 0.4, (n, m)).astype(np.float32)
+    _, bs_r = ref.score_servers(avail, demand)
+    _, bs_p = bestfit.score_servers(avail, demand)
+    np.testing.assert_array_equal(np.asarray(bs_p), np.asarray(bs_r))
+    # every feasible user must pick server 0 (first of the duplicates)
+    feasible = (avail[0][None, :] >= demand).all(axis=1)
+    np.testing.assert_array_equal(
+        np.asarray(bs_p)[feasible], np.zeros(feasible.sum(), np.int32)
+    )
+
+
+def test_score_servers_zero_avail_rows():
+    """Fully-drained servers are infeasible, not NaN/crash."""
+    avail = np.array([[0.0, 0.0], [0.5, 0.5]], np.float32)
+    demand = np.array([[0.1, 0.1]], np.float32)
+    bh, bs = bestfit.score_servers(avail, demand)
+    assert np.isfinite(np.asarray(bh)).all()
+    assert int(np.asarray(bs)[0]) == 1
+
+
+def test_score_servers_nothing_fits():
+    avail = np.full((4, 2), 0.01, np.float32)
+    demand = np.full((3, 2), 0.5, np.float32)
+    bh, bs = bestfit.score_servers(avail, demand)
+    assert np.isinf(np.asarray(bh)).all()
+    assert (np.asarray(bs) == -1).all()
+
+
+@settings(**SET)
+@given(seeds, st.integers(1, 8), st.sampled_from([128, 256]), st.integers(1, 3))
+def test_score_servers_cross_tile_tiebreak(seed, n, k, m):
+    """Ties spanning tile boundaries resolve to the lowest index."""
+    rng = rng_for(seed)
+    row = rng.uniform(0.5, 1.0, (1, m)).astype(np.float32)
+    avail = np.repeat(row, k, axis=0)  # every tile identical
+    demand = rng.uniform(1e-3, 0.4, (n, m)).astype(np.float32)
+    _, bs_p = bestfit.score_servers(avail, demand)
+    feasible = (avail[0][None, :] >= demand).all(axis=1)
+    assert (np.asarray(bs_p)[feasible] == 0).all()
+
+
+# --------------------------------------------------------------- dominant
+
+
+@settings(**SET)
+@given(seeds, ns)
+def test_select_user_matches_ref(seed, n):
+    rng = rng_for(seed)
+    share = rng.uniform(0, 1, n).astype(np.float32)
+    weight = rng.uniform(0.1, 4.0, n).astype(np.float32)
+    mask = (rng.uniform(0, 1, n) > 0.4).astype(np.int32)
+    u_r = ref.select_user(share, weight, mask != 0)
+    u_p = dominant.select_user(share, weight, mask)
+    assert int(u_r) == int(np.asarray(u_p)[0])
+
+
+@settings(**SET)
+@given(seeds, ns)
+def test_select_user_empty_mask(seed, n):
+    rng = rng_for(seed)
+    share = rng.uniform(0, 1, n).astype(np.float32)
+    weight = np.ones(n, np.float32)
+    mask = np.zeros(n, np.int32)
+    assert int(np.asarray(dominant.select_user(share, weight, mask))[0]) == -1
+
+
+@settings(**SET)
+@given(seeds, st.sampled_from([128, 256]))
+def test_select_user_all_ties(seed, n):
+    """All-equal shares => lowest eligible index wins."""
+    rng = rng_for(seed)
+    share = np.full(n, 0.25, np.float32)
+    weight = np.ones(n, np.float32)
+    mask = (rng.uniform(0, 1, n) > 0.5).astype(np.int32)
+    u = int(np.asarray(dominant.select_user(share, weight, mask))[0])
+    expect = int(np.flatnonzero(mask)[0]) if mask.any() else -1
+    assert u == expect
+
+
+# ------------------------------------------------------------------ model
+
+
+@settings(**SET)
+@given(seeds, ns, ks, ms)
+def test_sched_step_matches_ref(seed, n, k, m):
+    avail, demand = random_instance(seed, n, k, m)
+    rng = rng_for(seed + 1)
+    share = rng.uniform(0, 1, n).astype(np.float32)
+    weight = rng.uniform(0.5, 2.0, n).astype(np.float32)
+    active = (rng.uniform(0, 1, n) > 0.3).astype(np.int32)
+    u_r, s_r = ref.sched_step(avail, demand, share, weight, active != 0)
+    u_p, s_p = model.sched_step(avail, demand, share, weight, active)
+    assert (int(u_r), int(s_r)) == (int(u_p[0]), int(s_p[0]))
+
+
+@settings(deadline=None, max_examples=10)
+@given(seeds, st.integers(2, 24), st.integers(4, 100), st.integers(1, 3),
+       st.integers(1, 48))
+def test_sched_loop_matches_ref(seed, n, k, m, steps):
+    avail, demand = random_instance(seed, n, k, m)
+    rng = rng_for(seed + 2)
+    share = np.zeros(n, np.float32)
+    weight = rng.uniform(0.5, 2.0, n).astype(np.float32)
+    pending = rng.integers(0, 6, n).astype(np.int32)
+    dec_r, av_r, sh_r, pe_r = ref.sched_loop(
+        avail, demand, share, weight, pending, steps
+    )
+    dec_p, av_p, sh_p, pe_p = model.sched_loop(
+        avail, demand, share, weight, pending, steps=steps
+    )
+    np.testing.assert_array_equal(np.asarray(dec_p), np.asarray(dec_r))
+    np.testing.assert_allclose(np.asarray(av_p), np.asarray(av_r), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(sh_p), np.asarray(sh_r), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(pe_p), np.asarray(pe_r))
+
+
+@settings(deadline=None, max_examples=10)
+@given(seeds, st.integers(2, 16), st.integers(4, 64), st.integers(1, 3))
+def test_sched_loop_conservation(seed, n, k, m):
+    """Resources removed from avail == sum of placed task demands,
+    pending decrements match placements, shares grow by dominant demand."""
+    avail, demand = random_instance(seed, n, k, m)
+    rng = rng_for(seed + 3)
+    weight = np.ones(n, np.float32)
+    pending = rng.integers(0, 8, n).astype(np.int32)
+    steps = 32
+    dec, av, sh, pe = model.sched_loop(
+        avail, demand, np.zeros(n, np.float32), weight, pending, steps=steps
+    )
+    dec = np.asarray(dec)
+    placed = dec[dec[:, 0] >= 0]
+    counts = np.bincount(placed[:, 0], minlength=n)
+    np.testing.assert_array_equal(np.asarray(pe), pending - counts)
+    expected_av = avail.copy()
+    for u, s in placed:
+        expected_av[s] -= demand[u]
+    np.testing.assert_allclose(np.asarray(av), expected_av, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(sh), counts * demand.max(axis=1), rtol=1e-5, atol=1e-6
+    )
+    # placements only stop being made if nothing fits or nothing pending
+    if (dec[:, 0] == -1).any() and (np.asarray(pe) > 0).any():
+        bh, _ = ref.score_servers(np.asarray(av), demand)
+        assert not np.isfinite(
+            np.asarray(bh)[np.asarray(pe) > 0]
+        ).any(), "loop stalled while a feasible placement existed"
+
+
+def test_sched_loop_no_pending_is_noop():
+    avail = np.ones((4, 2), np.float32)
+    demand = np.full((3, 2), 0.2, np.float32)
+    dec, av, sh, pe = model.sched_loop(
+        avail, demand, np.zeros(3, np.float32), np.ones(3, np.float32),
+        np.zeros(3, np.int32), steps=8
+    )
+    assert (np.asarray(dec) == -1).all()
+    np.testing.assert_array_equal(np.asarray(av), avail)
+
+
+def test_paper_fig1_example_decision():
+    """Fig. 1 instance: mem-heavy user 1 must be routed to the
+    high-memory server, CPU-heavy user 2 to the high-CPU server."""
+    # server 1: 2 CPU 12 GB; server 2: 12 CPU 2 GB
+    avail = np.array([[2.0, 12.0], [12.0, 2.0]], np.float32)
+    demand = np.array([[0.2, 1.0], [1.0, 0.2]], np.float32)
+    _, bs = bestfit.score_servers(avail, demand)
+    assert list(np.asarray(bs)) == [0, 1]

@@ -1,0 +1,130 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **strict vs work-conserving progressive filling** — the paper
+//!    leaves the blocked-user case unspecified (see
+//!    `sched::BestFitDrfh`); we quantify the fairness/utilization
+//!    trade-off: strict keeps shares equalized (higher Jain index on
+//!    dominant shares), work-conserving converts the stalled capacity
+//!    into utilization.
+//! 2. **Best-Fit vs First-Fit placement** — eq. (9)'s H heuristic vs
+//!    naive lowest-index placement.
+//! 3. **server-class aggregation in the exact allocator** — collapsing
+//!    identical servers into classes vs solving the raw per-server LP.
+//!
+//! Run: `cargo bench --bench ablation`
+
+use drfh::allocator::{self, FluidUser};
+use drfh::cluster::{Cluster, ResVec, ServerClass};
+use drfh::experiments::EvalSetup;
+use drfh::sched::{BestFitDrfh, FirstFitDrfh};
+use drfh::sim::run;
+use drfh::util::bench::{bench, header};
+use drfh::util::{stats, Pcg32};
+use std::time::Duration;
+
+fn main() {
+    // ---- 1. strict vs work-conserving filling --------------------
+    let setup = EvalSetup::with_duration(42, 300, 30, 21_600.0);
+    let opts = drfh::sim::SimOpts {
+        track_user_series: true,
+        ..setup.opts.clone()
+    };
+    let wc = run(
+        setup.cluster.clone(),
+        &setup.trace,
+        Box::new(BestFitDrfh::default()),
+        opts.clone(),
+    );
+    let strict = run(
+        setup.cluster.clone(),
+        &setup.trace,
+        Box::new(BestFitDrfh::strict_filling()),
+        opts.clone(),
+    );
+    let jain = |r: &drfh::sim::SimReport| {
+        // Jain index over mean dominant shares of users with work
+        let shares: Vec<f64> = r
+            .user_dom_share
+            .iter()
+            .map(|ts| stats::mean(&ts.v))
+            .filter(|&s| s > 1e-9)
+            .collect();
+        stats::jain_index(&shares)
+    };
+    println!("== ablation 1: progressive filling variant ==");
+    println!(
+        "{:<18} {:>10} {:>10} {:>12} {:>12}",
+        "variant", "CPU util", "mem util", "tasks done", "Jain(shares)"
+    );
+    for (name, r) in [("work-conserving", &wc), ("strict", &strict)] {
+        println!(
+            "{:<18} {:>9.1}% {:>9.1}% {:>12} {:>12.4}",
+            name,
+            r.avg_cpu_util * 100.0,
+            r.avg_mem_util * 100.0,
+            r.tasks_completed,
+            jain(r)
+        );
+    }
+    assert!(
+        wc.tasks_completed >= strict.tasks_completed,
+        "work conservation must not complete less work"
+    );
+
+    // ---- 2. Best-Fit vs First-Fit --------------------------------
+    println!("\n== ablation 2: placement heuristic ==");
+    let ff = run(
+        setup.cluster.clone(),
+        &setup.trace,
+        Box::new(FirstFitDrfh),
+        setup.opts.clone(),
+    );
+    println!(
+        "best-fit: cpu {:.1}% tasks {};  first-fit: cpu {:.1}% tasks {}",
+        wc.avg_cpu_util * 100.0,
+        wc.tasks_completed,
+        ff.avg_cpu_util * 100.0,
+        ff.tasks_completed
+    );
+
+    // ---- 3. class aggregation in the exact allocator -------------
+    header("ablation 3: exact DRFH — class-aggregated vs raw-server LP");
+    let mut rng = Pcg32::seeded(3);
+    // raw per-server LP is O((n·k)³)-ish in the dense simplex — keep k
+    // modest so the ablation finishes in seconds; the point (identical
+    // optimum, orders-of-magnitude cost gap) is scale-independent
+    let cluster = Cluster::google_sample(60, &mut rng);
+    let users: Vec<FluidUser> = (0..10)
+        .map(|_| {
+            FluidUser::unweighted(ResVec::cpu_mem(
+                rng.uniform(0.02, 0.5),
+                rng.uniform(0.02, 0.5),
+            ))
+        })
+        .collect();
+    let agg = bench("aggregated classes (<=10)", Duration::from_millis(800), 200, || {
+        allocator::solve(&cluster, &users).g[0]
+    });
+    // raw: one class per server (what the naive formulation would do)
+    let raw_classes: Vec<ServerClass> = cluster
+        .servers
+        .iter()
+        .map(|s| ServerClass { capacity: s.capacity, count: 1 })
+        .collect();
+    let total = cluster.total_capacity();
+    let raw = bench("raw per-server classes (60)", Duration::from_secs(3), 3, || {
+        allocator::drfh::solve_classes(&raw_classes, &total, &users).g[0]
+    });
+    // same optimum, very different cost
+    let g_agg = allocator::solve(&cluster, &users).g[0];
+    let g_raw = allocator::drfh::solve_classes(&raw_classes, &total, &users).g[0];
+    assert!(
+        (g_agg - g_raw).abs() < 1e-6,
+        "aggregation changed the optimum: {g_agg} vs {g_raw}"
+    );
+    println!(
+        "speedup from class aggregation: {:.0}x (same optimum g = {:.6})",
+        raw.p50.as_secs_f64() / agg.p50.as_secs_f64(),
+        g_agg
+    );
+}

@@ -1,0 +1,78 @@
+//! §Perf bench: the exact fluid DRFH allocator (LP on server classes)
+//! as users and cluster size grow, plus the per-server DRF baseline.
+//!
+//! Run: `cargo bench --bench allocator_scale`
+
+use drfh::allocator::{self, per_server_drf, FluidUser};
+use drfh::cluster::{Cluster, ResVec};
+use drfh::util::bench::{bench, header};
+use drfh::util::Pcg32;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(1000);
+    header("exact fluid DRFH solve (Table I classes)");
+    for &(servers, users) in
+        &[(100usize, 5usize), (500, 20), (2000, 50), (2000, 100), (12583, 100)]
+    {
+        let mut rng = Pcg32::seeded(7);
+        let cluster = if servers == 12_583 {
+            Cluster::google_full()
+        } else {
+            Cluster::google_sample(servers, &mut rng)
+        };
+        let fluid_users: Vec<FluidUser> = (0..users)
+            .map(|_| {
+                FluidUser::unweighted(ResVec::cpu_mem(
+                    rng.uniform(0.02, 0.5),
+                    rng.uniform(0.02, 0.5),
+                ))
+            })
+            .collect();
+        bench(
+            &format!("drfh solve k={servers} n={users}"),
+            budget,
+            1_000,
+            || allocator::solve(&cluster, &fluid_users),
+        );
+    }
+
+    header("exact solve with finite caps (progressive rounds)");
+    for &users in &[20usize, 50] {
+        let mut rng = Pcg32::seeded(11);
+        let cluster = Cluster::google_sample(1000, &mut rng);
+        let fluid_users: Vec<FluidUser> = (0..users)
+            .map(|i| FluidUser {
+                demand: ResVec::cpu_mem(
+                    rng.uniform(0.02, 0.5),
+                    rng.uniform(0.02, 0.5),
+                ),
+                weight: 1.0,
+                task_cap: Some(10.0 + i as f64 * 40.0),
+            })
+            .collect();
+        bench(
+            &format!("drfh solve capped k=1000 n={users}"),
+            budget,
+            1_000,
+            || allocator::solve(&cluster, &fluid_users),
+        );
+    }
+
+    header("naive per-server DRF baseline (Sec. III-D)");
+    for &servers in &[500usize, 2000] {
+        let mut rng = Pcg32::seeded(13);
+        let cluster = Cluster::google_sample(servers, &mut rng);
+        let demands: Vec<ResVec> = (0..50)
+            .map(|_| {
+                ResVec::cpu_mem(rng.uniform(0.02, 0.5), rng.uniform(0.02, 0.5))
+            })
+            .collect();
+        bench(
+            &format!("per-server drf k={servers} n=50"),
+            budget,
+            1_000,
+            || per_server_drf::solve(&cluster, &demands),
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! Regenerates paper Fig. 4 (dynamic allocation with users joining and
+//! departing) and times the run.
+//!
+//! Run: `cargo bench --bench fig4_dynamic`
+
+use drfh::experiments::fig4;
+use drfh::util::bench::{bench, header};
+use std::time::Duration;
+
+fn main() {
+    // regenerate the figure once, with the full printed summary
+    let res = fig4::run_fig4(42);
+    fig4::print(&res);
+
+    header("fig4: full dynamic-allocation run (100 servers, 2000 s)");
+    bench("fig4 run", Duration::from_secs(5), 50, || {
+        fig4::run_fig4(42).report.tasks_placed
+    });
+}

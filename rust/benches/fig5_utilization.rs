@@ -1,0 +1,47 @@
+//! Regenerates paper Fig. 5 (utilization time series: Best-Fit vs
+//! First-Fit vs Slots) and times each scheduler's full simulation —
+//! this is the end-to-end §Perf driver for the L3 hot path.
+//!
+//! Run: `cargo bench --bench fig5_utilization`
+//! Full scale: `drfh exp fig5 --servers 2000`
+
+use drfh::experiments::{fig5, EvalSetup};
+use drfh::sched::{BestFitDrfh, FirstFitDrfh, SlotsScheduler};
+use drfh::sim::run;
+use drfh::util::bench::{bench, header};
+use std::time::Duration;
+
+fn main() {
+    let setup = EvalSetup::with_duration(42, 300, 30, 21_600.0);
+    let res = fig5::run_fig5(&setup);
+    fig5::print(&res);
+
+    header("fig5: full simulation per scheduler (300 servers, 6 h)");
+    bench("bestfit-drfh", Duration::from_secs(5), 20, || {
+        run(
+            setup.cluster.clone(),
+            &setup.trace,
+            Box::new(BestFitDrfh::default()),
+            setup.opts.clone(),
+        )
+        .tasks_completed
+    });
+    bench("firstfit-drfh", Duration::from_secs(5), 20, || {
+        run(
+            setup.cluster.clone(),
+            &setup.trace,
+            Box::new(FirstFitDrfh),
+            setup.opts.clone(),
+        )
+        .tasks_completed
+    });
+    bench("slots-14", Duration::from_secs(5), 20, || {
+        run(
+            setup.cluster.clone(),
+            &setup.trace,
+            Box::new(SlotsScheduler::new(&setup.cluster, 14)),
+            setup.opts.clone(),
+        )
+        .tasks_completed
+    });
+}

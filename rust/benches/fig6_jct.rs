@@ -1,0 +1,19 @@
+//! Regenerates paper Fig. 6 (job completion times: CDF + per-size
+//! reduction buckets) and times the paired comparison.
+//!
+//! Run: `cargo bench --bench fig6_jct`
+
+use drfh::experiments::{fig6, EvalSetup};
+use drfh::util::bench::{bench, header};
+use std::time::Duration;
+
+fn main() {
+    let setup = EvalSetup::with_duration(42, 300, 30, 21_600.0);
+    let res = fig6::run_fig6(&setup);
+    fig6::print(&res);
+
+    header("fig6: paired best-fit + slots runs");
+    bench("fig6 paired run", Duration::from_secs(8), 10, || {
+        fig6::run_fig6(&setup).matched.len()
+    });
+}

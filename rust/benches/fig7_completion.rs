@@ -1,0 +1,19 @@
+//! Regenerates paper Fig. 7 (per-user task completion ratios,
+//! Best-Fit vs Slots) and times the paired comparison.
+//!
+//! Run: `cargo bench --bench fig7_completion`
+
+use drfh::experiments::{fig7, EvalSetup};
+use drfh::util::bench::{bench, header};
+use std::time::Duration;
+
+fn main() {
+    let setup = EvalSetup::with_duration(42, 300, 30, 21_600.0);
+    let res = fig7::run_fig7(&setup);
+    fig7::print(&res);
+
+    header("fig7: paired completion-ratio runs");
+    bench("fig7 paired run", Duration::from_secs(8), 10, || {
+        fig7::run_fig7(&setup).users.len()
+    });
+}

@@ -1,0 +1,19 @@
+//! Regenerates paper Fig. 8 (sharing incentive: shared cloud vs
+//! per-user dedicated clouds) and times the n+1 simulations.
+//!
+//! Run: `cargo bench --bench fig8_sharing`
+
+use drfh::experiments::{fig8, EvalSetup};
+use drfh::util::bench::{bench, header};
+use std::time::Duration;
+
+fn main() {
+    let setup = EvalSetup::with_duration(42, 300, 30, 21_600.0);
+    let res = fig8::run_fig8(&setup);
+    fig8::print(&res);
+
+    header("fig8: shared + n dedicated-cloud simulations");
+    bench("fig8 full comparison", Duration::from_secs(10), 5, || {
+        fig8::run_fig8(&setup).users.len()
+    });
+}

@@ -1,0 +1,101 @@
+//! §Perf L3/L2 bench: one scheduling decision and one batched loop,
+//! native vs XLA, across cluster sizes. The paper's scheduler must
+//! sustain thousands of placements per second on a 2,000-server pool.
+//!
+//! Run: `cargo bench --bench picker`
+
+use drfh::runtime::{artifacts_available, picker, XlaRuntime};
+use drfh::util::bench::{bench, header};
+use drfh::util::Pcg32;
+use std::time::Duration;
+
+fn instance(
+    rng: &mut Pcg32,
+    n: usize,
+    k: usize,
+    m: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<i32>) {
+    (
+        (0..k * m).map(|_| rng.uniform(0.1, 1.0) as f32).collect(),
+        (0..n * m).map(|_| rng.uniform(0.01, 0.3) as f32).collect(),
+        (0..n).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+        vec![1.0; n],
+        vec![1; n],
+    )
+}
+
+fn main() {
+    let budget = Duration::from_millis(800);
+    header("picker: one scheduling decision (native)");
+    let mut rng = Pcg32::seeded(1);
+    for &(n, k) in &[(16usize, 128usize), (64, 512), (128, 2048), (128, 8192)] {
+        let (avail, demand, share, weight, active) =
+            instance(&mut rng, n, k, 2);
+        bench(
+            &format!("native sched_step n={n} k={k}"),
+            budget,
+            100_000,
+            || {
+                picker::sched_step(
+                    &avail, &demand, &share, &weight, &active, n, k, 2,
+                )
+            },
+        );
+    }
+
+    header("picker: batched loop (native, 64 decisions/call)");
+    for &(n, k) in &[(64usize, 512usize), (128, 2048)] {
+        let (avail, demand, share, weight, _) = instance(&mut rng, n, k, 2);
+        bench(
+            &format!("native sched_loop n={n} k={k} t=64"),
+            budget,
+            10_000,
+            || {
+                let mut av = avail.clone();
+                let mut sh = share.clone();
+                let mut pe = vec![10i32; n];
+                picker::sched_loop(
+                    &mut av, &demand, &mut sh, &weight, &mut pe, n, k, 2, 64,
+                )
+            },
+        );
+    }
+
+    if !artifacts_available() {
+        println!("\n(artifacts/ missing — skipping XLA benches; run `make artifacts`)");
+        return;
+    }
+    let rt = XlaRuntime::load_default().expect("artifacts");
+    header("picker: one scheduling decision (XLA / PJRT)");
+    for &(n, k) in &[(16usize, 128usize), (64, 512), (128, 2048)] {
+        let (avail, demand, share, weight, active) =
+            instance(&mut rng, n, k, 2);
+        bench(
+            &format!("xla sched_step n={n} k={k}"),
+            budget,
+            10_000,
+            || {
+                rt.sched_step(
+                    &avail, &demand, &share, &weight, &active, n, k, 2,
+                )
+                .unwrap()
+            },
+        );
+    }
+    header("picker: batched loop (XLA, one PJRT call = 64 decisions)");
+    for &(n, k) in &[(64usize, 512usize), (128, 2048)] {
+        let (avail, demand, share, weight, _) = instance(&mut rng, n, k, 2);
+        let pending = vec![10i32; n];
+        bench(
+            &format!("xla sched_loop n={n} k={k} t=64"),
+            budget,
+            10_000,
+            || {
+                rt.sched_loop(
+                    &avail, &demand, &share, &weight, &pending, n, k, 2,
+                )
+                .unwrap()
+            },
+        );
+    }
+}

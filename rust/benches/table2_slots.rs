@@ -1,0 +1,37 @@
+//! Regenerates paper Table II (Slots scheduler utilization vs slot
+//! size) and times one sweep point.
+//!
+//! Run: `cargo bench --bench table2_slots`
+//! Full-scale sweep: `drfh exp table2 --servers 2000`
+
+use drfh::experiments::{table2, EvalSetup};
+use drfh::sched::SlotsScheduler;
+use drfh::sim::run;
+use drfh::util::bench::{bench, header};
+use std::time::Duration;
+
+fn main() {
+    // bench-scale setup: 300 servers / 30 users / 6 h keeps the sweep
+    // shape while finishing quickly (scale with `drfh exp table2`)
+    let setup = EvalSetup::with_duration(42, 300, 30, 21_600.0);
+    let rows = table2::run_table2(&setup);
+    table2::print(&rows);
+
+    header("table2: one slots-scheduler simulation");
+    for &slots in &[10usize, 14, 20] {
+        bench(
+            &format!("slots={slots} sim (300 servers, 6 h)"),
+            Duration::from_secs(5),
+            20,
+            || {
+                run(
+                    setup.cluster.clone(),
+                    &setup.trace,
+                    Box::new(SlotsScheduler::new(&setup.cluster, slots)),
+                    setup.opts.clone(),
+                )
+                .tasks_completed
+            },
+        );
+    }
+}

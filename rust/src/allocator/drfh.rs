@@ -1,0 +1,414 @@
+//! The exact fluid DRFH allocation (paper Sec. IV, eq. (7)):
+//!
+//! ```text
+//!   max  g    s.t.  Σ_i g_il · d_ir <= c_lr   ∀ server l, resource r
+//!                   Σ_l g_il = w_i · g        ∀ user i
+//! ```
+//!
+//! Identical servers are collapsed into classes (`Cluster::classes()`):
+//! any class-level allocation can be split evenly across its members, so
+//! the LP shrinks from `n·k` to `n·C` variables (C <= 10 for the Google
+//! Table I pool) while remaining exact.
+//!
+//! Finite task demands (paper Sec. V-A) are handled by progressive
+//! filling rounds: all unsaturated users' dominant shares grow at rates
+//! proportional to their weights until one hits its cap, which freezes
+//! it; repeat until no user can grow.
+
+use super::NormalizedDemand;
+use crate::cluster::{Cluster, ResVec, ServerClass};
+use crate::solver::{self, Lp, LpResult};
+
+/// A user as seen by the fluid allocator.
+#[derive(Clone, Debug)]
+pub struct FluidUser {
+    /// Per-task demand in absolute units.
+    pub demand: ResVec,
+    /// Fair-share weight (1.0 = unweighted).
+    pub weight: f64,
+    /// Max number of (fractional) tasks the user can use; None = infinite.
+    pub task_cap: Option<f64>,
+}
+
+impl FluidUser {
+    pub fn unweighted(demand: ResVec) -> Self {
+        FluidUser { demand, weight: 1.0, task_cap: None }
+    }
+}
+
+/// The fluid DRFH allocation.
+#[derive(Clone, Debug)]
+pub struct FluidAllocation {
+    /// Server classes the solution is expressed over.
+    pub classes: Vec<ServerClass>,
+    /// Pool totals (absolute units).
+    pub total: ResVec,
+    /// Normalized demands (paper terms) per user.
+    pub demands: Vec<NormalizedDemand>,
+    /// x[i][c]: global dominant share user i draws from class c.
+    pub x: Vec<Vec<f64>>,
+    /// g_i = Σ_c x[i][c]: each user's global dominant share.
+    pub g: Vec<f64>,
+    /// Number of (fractional) tasks each user schedules.
+    pub tasks: Vec<f64>,
+}
+
+impl FluidAllocation {
+    /// Resource vector (pool-share units) user i holds in class c:
+    /// A_ic = x_ic · d_i (Lemma 1 — non-wasteful allocations are
+    /// proportional to the normalized demand).
+    pub fn alloc_share(&self, i: usize, c: usize) -> ResVec {
+        self.demands[i].norm.scale(self.x[i][c])
+    }
+
+    /// Resource vector (absolute units) user i holds in class c.
+    pub fn alloc_absolute(&self, i: usize, c: usize) -> ResVec {
+        let s = self.alloc_share(i, c);
+        let mut a = s;
+        for r in 0..a.dims() {
+            a[r] = s[r] * self.total[r];
+        }
+        a
+    }
+
+    /// The minimum dominant share across users (the maximized objective
+    /// for unweighted, uncapped instances).
+    pub fn min_share(&self) -> f64 {
+        self.g.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Feasibility check: per class and resource, allocations within
+    /// capacity (share units), with tolerance.
+    pub fn is_feasible(&self, eps: f64) -> bool {
+        let m = self.total.dims();
+        for (c, class) in self.classes.iter().enumerate() {
+            for r in 0..m {
+                let cap_share =
+                    class.capacity[r] * class.count as f64 / self.total[r];
+                let used: f64 = (0..self.demands.len())
+                    .map(|i| self.x[i][c] * self.demands[i].norm[r])
+                    .sum();
+                if used > cap_share + eps {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Solve the exact fluid DRFH allocation for `users` on `cluster`.
+pub fn solve(cluster: &Cluster, users: &[FluidUser]) -> FluidAllocation {
+    solve_classes(&cluster.classes(), &cluster.total_capacity(), users)
+}
+
+/// Same, over pre-aggregated server classes.
+pub fn solve_classes(
+    classes: &[ServerClass],
+    total: &ResVec,
+    users: &[FluidUser],
+) -> FluidAllocation {
+    let n = users.len();
+    let nc = classes.len();
+    let m = total.dims();
+    let demands: Vec<NormalizedDemand> = users
+        .iter()
+        .map(|u| NormalizedDemand::from_absolute(&u.demand, total))
+        .collect();
+    // caps in dominant-share units
+    let caps: Vec<f64> = users
+        .iter()
+        .zip(&demands)
+        .map(|(u, d)| {
+            u.task_cap
+                .map(|t| t * d.share[d.dominant])
+                .unwrap_or(f64::INFINITY)
+        })
+        .collect();
+    // class capacity in pool-share units
+    let cap_share: Vec<ResVec> = classes
+        .iter()
+        .map(|c| {
+            let mut v = ResVec::zeros(m);
+            for r in 0..m {
+                v[r] = c.capacity[r] * c.count as f64 / total[r];
+            }
+            v
+        })
+        .collect();
+
+    // Progressive filling: frozen[i] = dominant share fixed so far.
+    let mut frozen = vec![0.0f64; n];
+    let mut saturated = vec![false; n];
+    let mut x = vec![vec![0.0f64; nc]; n];
+
+    // Users already at cap 0 are trivially saturated.
+    for i in 0..n {
+        if caps[i] <= 1e-15 {
+            saturated[i] = true;
+        }
+    }
+
+    for _round in 0..n + 1 {
+        if saturated.iter().all(|&s| s) {
+            break;
+        }
+        // LP variables: x_ic (n·nc) then delta.
+        let nv = n * nc + 1;
+        let var = |i: usize, c: usize| i * nc + c;
+        let dvar = nv - 1;
+
+        let mut c_obj = vec![0.0; nv];
+        c_obj[dvar] = 1.0;
+
+        let mut a_ub: Vec<Vec<f64>> = Vec::new();
+        let mut b_ub: Vec<f64> = Vec::new();
+        // class capacity rows
+        for (c, cs) in cap_share.iter().enumerate() {
+            for r in 0..m {
+                let mut row = vec![0.0; nv];
+                for i in 0..n {
+                    row[var(i, c)] = demands[i].norm[r];
+                }
+                a_ub.push(row);
+                b_ub.push(cs[r]);
+            }
+        }
+        // delta bounded by the tightest remaining cap among active users
+        let mut delta_max = f64::INFINITY;
+        for i in 0..n {
+            if !saturated[i] && caps[i].is_finite() {
+                delta_max = delta_max.min((caps[i] - frozen[i]) / users[i].weight);
+            }
+        }
+        if delta_max.is_finite() {
+            let mut row = vec![0.0; nv];
+            row[dvar] = 1.0;
+            a_ub.push(row);
+            b_ub.push(delta_max.max(0.0));
+        }
+
+        let mut a_eq: Vec<Vec<f64>> = Vec::new();
+        let mut b_eq: Vec<f64> = Vec::new();
+        for i in 0..n {
+            let mut row = vec![0.0; nv];
+            for c in 0..nc {
+                row[var(i, c)] = 1.0;
+            }
+            if saturated[i] {
+                // frozen users keep their total dominant share
+                a_eq.push(row);
+                b_eq.push(frozen[i]);
+            } else {
+                row[dvar] = -users[i].weight;
+                a_eq.push(row);
+                b_eq.push(frozen[i]);
+            }
+        }
+
+        let lp = Lp { n: nv, c: c_obj, a_ub, b_ub, a_eq, b_eq };
+        let (sol, delta) = match solver::solve(&lp) {
+            LpResult::Optimal { x, obj } => (x, obj),
+            other => panic!("DRFH round LP not optimal: {other:?}"),
+        };
+        // commit
+        for i in 0..n {
+            for c in 0..nc {
+                x[i][c] = sol[var(i, c)];
+            }
+        }
+        if delta <= 1e-12 {
+            break; // capacity exhausted for all active users
+        }
+        let mut newly = 0;
+        for i in 0..n {
+            if !saturated[i] {
+                frozen[i] += users[i].weight * delta;
+                if caps[i].is_finite() && frozen[i] >= caps[i] - 1e-9 {
+                    frozen[i] = caps[i];
+                    saturated[i] = true;
+                    newly += 1;
+                }
+            }
+        }
+        if newly == 0 {
+            break; // no cap hit: capacity-limited optimum reached
+        }
+    }
+
+    let g: Vec<f64> = x.iter().map(|xi| xi.iter().sum()).collect();
+    let tasks: Vec<f64> = g
+        .iter()
+        .zip(&demands)
+        .map(|(&gi, d)| gi / d.share[d.dominant])
+        .collect();
+    FluidAllocation {
+        classes: classes.to_vec(),
+        total: *total,
+        demands,
+        x,
+        g,
+        tasks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+
+    fn fig1_users() -> Vec<FluidUser> {
+        vec![
+            FluidUser::unweighted(ResVec::cpu_mem(0.2, 1.0)),
+            FluidUser::unweighted(ResVec::cpu_mem(1.0, 0.2)),
+        ]
+    }
+
+    #[test]
+    fn paper_fig3_exact_allocation() {
+        // DRFH on the Fig. 1 example: g = 5/7, 10 tasks each (Fig. 3)
+        let cluster = Cluster::fig1_example();
+        let a = solve(&cluster, &fig1_users());
+        assert!((a.g[0] - 5.0 / 7.0).abs() < 1e-6, "g1={}", a.g[0]);
+        assert!((a.g[1] - 5.0 / 7.0).abs() < 1e-6, "g2={}", a.g[1]);
+        assert!((a.tasks[0] - 10.0).abs() < 1e-5);
+        assert!((a.tasks[1] - 10.0).abs() < 1e-5);
+        assert!(a.is_feasible(1e-9));
+    }
+
+    #[test]
+    fn single_server_reduces_to_drf() {
+        // one server (9 CPU, 18 GB); users (1,4) and (3,1) — the DRF
+        // paper's canonical example: equalized dominant shares
+        let cluster =
+            Cluster::from_capacities(&[ResVec::cpu_mem(9.0, 18.0)]);
+        let users = vec![
+            FluidUser::unweighted(ResVec::cpu_mem(1.0, 4.0)),
+            FluidUser::unweighted(ResVec::cpu_mem(3.0, 1.0)),
+        ];
+        let a = solve(&cluster, &users);
+        // DRF: user1 gets 3 tasks (12 GB = 2/3 mem), user2 gets 2 tasks
+        // (6 CPU = 2/3 cpu)
+        assert!((a.g[0] - a.g[1]).abs() < 1e-6);
+        assert!((a.g[0] - 2.0 / 3.0).abs() < 1e-6, "g={}", a.g[0]);
+        assert!((a.tasks[0] - 3.0).abs() < 1e-5);
+        assert!((a.tasks[1] - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn single_resource_max_min() {
+        let cluster = Cluster::from_capacities(&[
+            ResVec::from_slice(&[6.0]),
+            ResVec::from_slice(&[4.0]),
+        ]);
+        let users = vec![
+            FluidUser::unweighted(ResVec::from_slice(&[1.0])),
+            FluidUser::unweighted(ResVec::from_slice(&[2.0])),
+        ];
+        let a = solve(&cluster, &users);
+        // max-min: each gets half the pool (5 units) regardless of demand
+        assert!((a.g[0] - 0.5).abs() < 1e-6);
+        assert!((a.g[1] - 0.5).abs() < 1e-6);
+        assert!((a.tasks[0] - 5.0).abs() < 1e-5);
+        assert!((a.tasks[1] - 2.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn weights_scale_shares() {
+        let cluster = Cluster::fig1_example();
+        let mut users = fig1_users();
+        users[0].weight = 2.0;
+        let a = solve(&cluster, &users);
+        // weighted max-min: g_1 / 2 == g_2
+        assert!(
+            (a.g[0] - 2.0 * a.g[1]).abs() < 1e-6,
+            "g = {:?}",
+            a.g
+        );
+        assert!(a.is_feasible(1e-9));
+    }
+
+    #[test]
+    fn finite_caps_release_resources() {
+        let cluster = Cluster::fig1_example();
+        let mut users = fig1_users();
+        // user 1 only needs 2 tasks; user 2 should then grab more
+        users[0].task_cap = Some(2.0);
+        let a = solve(&cluster, &users);
+        assert!((a.tasks[0] - 2.0).abs() < 1e-5, "tasks={:?}", a.tasks);
+        assert!(a.tasks[1] > 10.0, "user 2 should exceed equal share");
+        assert!(a.is_feasible(1e-9));
+    }
+
+    #[test]
+    fn zero_cap_user_is_inactive() {
+        let cluster = Cluster::fig1_example();
+        let mut users = fig1_users();
+        users[0].task_cap = Some(0.0);
+        let a = solve(&cluster, &users);
+        assert!(a.tasks[0].abs() < 1e-9);
+        assert!(a.tasks[1] > 11.0, "tasks={:?}", a.tasks);
+    }
+
+    #[test]
+    fn bottleneck_fairness() {
+        // both users dominant on CPU -> equal CPU shares (max-min)
+        let cluster = Cluster::fig1_example();
+        let users = vec![
+            FluidUser::unweighted(ResVec::cpu_mem(1.0, 0.1)),
+            FluidUser::unweighted(ResVec::cpu_mem(1.0, 0.5)),
+        ];
+        let a = solve(&cluster, &users);
+        assert!((a.g[0] - a.g[1]).abs() < 1e-6);
+        // CPU is everyone's dominant resource, so the CPU share consumed
+        // equals the sum of dominant shares (max-min over CPU under the
+        // per-server packing constraints)
+        let cpu_used: f64 = (0..2)
+            .map(|i| {
+                (0..a.classes.len())
+                    .map(|c| a.alloc_share(i, c)[0])
+                    .sum::<f64>()
+            })
+            .sum();
+        assert!(
+            (cpu_used - (a.g[0] + a.g[1])).abs() < 1e-9,
+            "cpu_used={cpu_used} vs g sum {}",
+            a.g[0] + a.g[1]
+        );
+    }
+
+    #[test]
+    fn many_random_instances_feasible_and_equalized() {
+        use crate::util::Pcg32;
+        let mut rng = Pcg32::seeded(21);
+        for trial in 0..20 {
+            let k = 2 + rng.below(6);
+            let caps: Vec<ResVec> = (0..k)
+                .map(|_| {
+                    ResVec::cpu_mem(rng.uniform(1.0, 8.0), rng.uniform(1.0, 8.0))
+                })
+                .collect();
+            let cluster = Cluster::from_capacities(&caps);
+            let n = 2 + rng.below(5);
+            let users: Vec<FluidUser> = (0..n)
+                .map(|_| {
+                    FluidUser::unweighted(ResVec::cpu_mem(
+                        rng.uniform(0.05, 1.0),
+                        rng.uniform(0.05, 1.0),
+                    ))
+                })
+                .collect();
+            let a = solve(&cluster, &users);
+            assert!(a.is_feasible(1e-6), "trial {trial} infeasible");
+            // uncapped unweighted DRFH equalizes all dominant shares
+            let gmin = a.g.iter().cloned().fold(f64::INFINITY, f64::min);
+            let gmax = a.g.iter().cloned().fold(0.0, f64::max);
+            assert!(
+                gmax - gmin < 1e-6,
+                "trial {trial}: shares not equalized {:?}",
+                a.g
+            );
+            assert!(gmin > 0.0, "trial {trial}: zero share");
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! Fluid (divisible-task) allocation mechanisms.
+//!
+//! * [`drfh`] — the paper's contribution: the exact DRFH allocation
+//!   (eq. (7)), supporting weighted users and finite task demands via
+//!   progressive-filling rounds (paper Sec. V-A).
+//! * [`per_server_drf`] — the naive "run DRF inside every server"
+//!   extension of Sec. III-D, kept as the inefficiency baseline.
+
+pub mod drfh;
+pub mod per_server_drf;
+
+pub use drfh::{solve, FluidAllocation, FluidUser};
+
+use crate::cluster::ResVec;
+
+/// A user's demand expressed in the paper's normalized terms.
+#[derive(Clone, Debug)]
+pub struct NormalizedDemand {
+    /// D_i: per-task demand as a *fraction of the total pool* per
+    /// resource (paper Sec. III-A).
+    pub share: ResVec,
+    /// d_i = D_i / D_{i,r*}: demand normalized by the dominant demand.
+    pub norm: ResVec,
+    /// r*_i: index of the global dominant resource.
+    pub dominant: usize,
+}
+
+impl NormalizedDemand {
+    /// Normalize an absolute per-task demand against pool totals.
+    pub fn from_absolute(demand: &ResVec, total: &ResVec) -> Self {
+        let share = demand.div(total);
+        let dominant = share.argmax();
+        let norm = share.scale(1.0 / share[dominant]);
+        NormalizedDemand { share, norm, dominant }
+    }
+
+    /// Global dominant share delivered by an allocation vector `a`
+    /// (in pool-share units): min_r a_r / d_r (paper eq. (2)).
+    pub fn dominant_share_of(&self, a: &ResVec) -> f64 {
+        let mut g = f64::INFINITY;
+        for r in 0..a.dims() {
+            let d = self.norm[r];
+            if d > 0.0 {
+                g = g.min(a[r] / d);
+            }
+        }
+        g
+    }
+
+    /// Tasks schedulable from an allocation vector in pool-share units:
+    /// min_r a_r / D_r (paper eq. (1) for one bundle).
+    pub fn tasks_of(&self, a: &ResVec) -> f64 {
+        let mut n = f64::INFINITY;
+        for r in 0..a.dims() {
+            if self.share[r] > 0.0 {
+                n = n.min(a[r] / self.share[r]);
+            }
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_normalization() {
+        // pool: 14 CPU, 14 GB; user 1: (0.2 CPU, 1 GB)
+        let total = ResVec::cpu_mem(14.0, 14.0);
+        let nd = NormalizedDemand::from_absolute(
+            &ResVec::cpu_mem(0.2, 1.0),
+            &total,
+        );
+        assert!((nd.share[0] - 1.0 / 70.0).abs() < 1e-12);
+        assert!((nd.share[1] - 1.0 / 14.0).abs() < 1e-12);
+        assert_eq!(nd.dominant, 1); // memory
+        assert!((nd.norm[0] - 0.2).abs() < 1e-12);
+        assert!((nd.norm[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dominant_share_and_tasks() {
+        let total = ResVec::cpu_mem(14.0, 14.0);
+        let nd = NormalizedDemand::from_absolute(
+            &ResVec::cpu_mem(0.2, 1.0),
+            &total,
+        );
+        // allocate exactly server 1 = (2 CPU, 12 GB) in share units
+        let a = ResVec::cpu_mem(2.0 / 14.0, 12.0 / 14.0);
+        // CPU binds: g = (2/14)/0.2 = 5/7 — the paper's Fig. 3 value
+        // for user 1 holding server 1 exclusively
+        assert!((nd.dominant_share_of(&a) - 5.0 / 7.0).abs() < 1e-12);
+        // tasks: min(2/0.2, 12/1) = 10
+        assert!((nd.tasks_of(&a) - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,149 @@
+//! The naive per-server DRF extension (paper Sec. III-D) — the
+//! strawman DRFH replaces. Applies the single-server DRF allocation
+//! independently inside every server: each user's *per-server* dominant
+//! share is equalized within each server, with every user present in
+//! every server.
+//!
+//! The paper shows this is Pareto-inefficient: on the Fig. 1 example
+//! each user schedules 6 tasks, versus 10 under DRFH (Fig. 2 vs Fig. 3).
+
+use crate::cluster::{Cluster, ResVec};
+
+/// Result of the naive allocation: tasks per user per server.
+#[derive(Clone, Debug)]
+pub struct PerServerDrf {
+    /// tasks[i][l] — fractional tasks of user i on server l.
+    pub tasks: Vec<Vec<f64>>,
+}
+
+impl PerServerDrf {
+    /// Total tasks per user.
+    pub fn tasks_per_user(&self) -> Vec<f64> {
+        self.tasks.iter().map(|t| t.iter().sum()).collect()
+    }
+}
+
+/// Closed-form fluid DRF inside one server (equal per-server dominant
+/// shares, progressive filling with every user unsaturated):
+///
+/// Per unit of server-dominant share, user i consumes
+/// `u_ir = D_ir · c_{l,r*_il} / D_{i,r*_il}` of resource r, where
+/// `r*_il = argmax_r D_ir / c_lr`. The equalized share is
+/// `x* = min_r c_lr / Σ_i u_ir`, and user i schedules
+/// `x* · c_{l,r*_il} / D_{i,r*_il}` tasks.
+pub fn drf_single_server(capacity: &ResVec, demands: &[ResVec]) -> Vec<f64> {
+    let m = capacity.dims();
+    let n = demands.len();
+    if n == 0 {
+        return vec![];
+    }
+    // per-user: dominant resource within this server, and consumption
+    // per unit dominant share
+    let mut unit = vec![ResVec::zeros(m); n];
+    let mut tasks_per_share = vec![0.0f64; n];
+    for (i, d) in demands.iter().enumerate() {
+        let ratios = d.div(capacity);
+        let rstar = ratios.argmax();
+        let scale = capacity[rstar] / d[rstar]; // tasks per unit share
+        tasks_per_share[i] = scale;
+        for r in 0..m {
+            unit[i][r] = d[r] * scale;
+        }
+    }
+    // x* = min_r c_r / Σ_i unit_ir
+    let mut x = f64::INFINITY;
+    for r in 0..m {
+        let tot: f64 = unit.iter().map(|u| u[r]).sum();
+        if tot > 0.0 {
+            x = x.min(capacity[r] / tot);
+        }
+    }
+    tasks_per_share.iter().map(|&t| x * t).collect()
+}
+
+/// Apply DRF independently in every server of the cluster.
+pub fn solve(cluster: &Cluster, demands: &[ResVec]) -> PerServerDrf {
+    let n = demands.len();
+    let mut tasks = vec![vec![0.0; cluster.len()]; n];
+    for (l, s) in cluster.servers.iter().enumerate() {
+        let t = drf_single_server(&s.capacity, demands);
+        for i in 0..n {
+            tasks[i][l] = t[i];
+        }
+    }
+    PerServerDrf { tasks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_fig2_allocation() {
+        // Fig. 2: naive DRF gives user 1 five tasks on server 1 and one
+        // on server 2 (and symmetrically for user 2): 6 tasks each.
+        let cluster = Cluster::fig1_example();
+        let demands = vec![
+            ResVec::cpu_mem(0.2, 1.0),
+            ResVec::cpu_mem(1.0, 0.2),
+        ];
+        let a = solve(&cluster, &demands);
+        assert!((a.tasks[0][0] - 5.0).abs() < 1e-9, "{:?}", a.tasks);
+        assert!((a.tasks[0][1] - 1.0).abs() < 1e-9);
+        assert!((a.tasks[1][0] - 1.0).abs() < 1e-9);
+        assert!((a.tasks[1][1] - 5.0).abs() < 1e-9);
+        let per_user = a.tasks_per_user();
+        assert!((per_user[0] - 6.0).abs() < 1e-9);
+        assert!((per_user[1] - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_user_gets_whole_server() {
+        let t = drf_single_server(
+            &ResVec::cpu_mem(4.0, 8.0),
+            &[ResVec::cpu_mem(1.0, 1.0)],
+        );
+        // CPU binds: 4 tasks
+        assert!((t[0] - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn allocation_feasible_per_server() {
+        use crate::util::Pcg32;
+        let mut rng = Pcg32::seeded(31);
+        for _ in 0..20 {
+            let cap = ResVec::cpu_mem(
+                rng.uniform(1.0, 10.0),
+                rng.uniform(1.0, 10.0),
+            );
+            let n = 1 + rng.below(6);
+            let demands: Vec<ResVec> = (0..n)
+                .map(|_| {
+                    ResVec::cpu_mem(
+                        rng.uniform(0.05, 2.0),
+                        rng.uniform(0.05, 2.0),
+                    )
+                })
+                .collect();
+            let t = drf_single_server(&cap, &demands);
+            for r in 0..2 {
+                let used: f64 = t
+                    .iter()
+                    .zip(&demands)
+                    .map(|(&ti, d)| ti * d[r])
+                    .sum();
+                assert!(used <= cap[r] + 1e-9, "resource {r} over");
+            }
+            // at least one resource is saturated (Pareto within server)
+            let saturated = (0..2).any(|r| {
+                let used: f64 = t
+                    .iter()
+                    .zip(&demands)
+                    .map(|(&ti, d)| ti * d[r])
+                    .sum();
+                (used - cap[r]).abs() < 1e-6
+            });
+            assert!(saturated, "no resource saturated");
+        }
+    }
+}

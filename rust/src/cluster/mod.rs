@@ -1,0 +1,10 @@
+//! The heterogeneous server pool: resource vectors, servers, clusters,
+//! and the Google Table I configuration distribution.
+
+pub mod pool;
+pub mod server;
+pub mod vector;
+
+pub use pool::{Cluster, ServerClass, GOOGLE_CLASSES};
+pub use server::{Server, FIT_EPS};
+pub use vector::{ResVec, MAX_RES};

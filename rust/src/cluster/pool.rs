@@ -1,0 +1,249 @@
+//! The heterogeneous resource pool (paper Sec. III-A) and the Google
+//! cluster server-configuration distribution (paper Table I).
+
+use super::server::Server;
+use super::vector::ResVec;
+use crate::util::Pcg32;
+
+/// Paper Table I: configurations of servers in one of Google's clusters.
+/// (count, CPUs, memory), CPU/memory normalized to the maximum server.
+pub const GOOGLE_CLASSES: [(usize, f64, f64); 10] = [
+    (6732, 0.50, 0.50),
+    (3863, 0.50, 0.25),
+    (1001, 0.50, 0.75),
+    (795, 1.00, 1.00),
+    (126, 0.25, 0.25),
+    (52, 0.50, 0.12),
+    (5, 0.50, 0.03),
+    (5, 0.50, 0.97),
+    (3, 1.00, 0.50),
+    (1, 0.50, 0.06),
+];
+
+/// A group of identical servers — the exact fluid allocator exploits
+/// this to collapse per-server constraints into per-class constraints.
+#[derive(Clone, Debug)]
+pub struct ServerClass {
+    pub capacity: ResVec,
+    pub count: usize,
+}
+
+/// The cluster: a vector of heterogeneous servers.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub servers: Vec<Server>,
+    m: usize,
+}
+
+impl Cluster {
+    /// Build from explicit servers.
+    pub fn new(servers: Vec<Server>) -> Self {
+        assert!(!servers.is_empty(), "cluster needs at least one server");
+        let m = servers[0].capacity.dims();
+        assert!(
+            servers.iter().all(|s| s.capacity.dims() == m),
+            "mixed resource dimensionality"
+        );
+        Cluster { servers, m }
+    }
+
+    /// Build from capacity vectors.
+    pub fn from_capacities(caps: &[ResVec]) -> Self {
+        Self::new(caps.iter().map(|c| Server::new(*c)).collect())
+    }
+
+    /// The paper's running example (Fig. 1): server 1 = (2 CPU, 12 GB),
+    /// server 2 = (12 CPU, 2 GB).
+    pub fn fig1_example() -> Self {
+        Self::from_capacities(&[
+            ResVec::cpu_mem(2.0, 12.0),
+            ResVec::cpu_mem(12.0, 2.0),
+        ])
+    }
+
+    /// Sample `k` servers i.i.d. from the Google Table I distribution
+    /// (weights = class populations). Deterministic given the RNG.
+    pub fn google_sample(k: usize, rng: &mut Pcg32) -> Self {
+        let weights: Vec<f64> =
+            GOOGLE_CLASSES.iter().map(|&(c, _, _)| c as f64).collect();
+        let servers = (0..k)
+            .map(|_| {
+                let cls = rng.choice_weighted(&weights);
+                let (_, cpu, mem) = GOOGLE_CLASSES[cls];
+                Server::with_class(ResVec::cpu_mem(cpu, mem), cls)
+            })
+            .collect();
+        Self::new(servers)
+    }
+
+    /// The full 12,583-server Google cluster of Table I (every class at
+    /// its exact population).
+    pub fn google_full() -> Self {
+        let mut servers = Vec::new();
+        for (cls, &(count, cpu, mem)) in GOOGLE_CLASSES.iter().enumerate() {
+            for _ in 0..count {
+                servers.push(Server::with_class(ResVec::cpu_mem(cpu, mem), cls));
+            }
+        }
+        Self::new(servers)
+    }
+
+    /// Number of resource dimensions.
+    #[inline]
+    pub fn dims(&self) -> usize {
+        self.m
+    }
+
+    /// Number of servers.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.servers.len()
+    }
+
+    /// True when the pool is empty (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.servers.is_empty()
+    }
+
+    /// Total capacity across all servers.
+    pub fn total_capacity(&self) -> ResVec {
+        let mut t = ResVec::zeros(self.m);
+        for s in &self.servers {
+            t.add_assign(&s.capacity);
+        }
+        t
+    }
+
+    /// Total *effective* usage across all servers: per-server usage
+    /// discounted by the overcommit slowdown (`Server::effective_usage`)
+    /// — resources making progress, not resources merely claimed.
+    pub fn total_effective_usage(&self) -> ResVec {
+        let mut t = ResVec::zeros(self.m);
+        for s in &self.servers {
+            let e = s.effective_usage();
+            for r in 0..self.m {
+                t[r] += e[r];
+            }
+        }
+        t
+    }
+
+    /// Per-resource utilization in [0, 1].
+    pub fn utilization(&self) -> ResVec {
+        self.total_effective_usage().div(&self.total_capacity())
+    }
+
+    /// Group servers by identical capacity vectors (order-preserving);
+    /// used by the exact fluid allocator.
+    pub fn classes(&self) -> Vec<ServerClass> {
+        let mut classes: Vec<ServerClass> = Vec::new();
+        for s in &self.servers {
+            match classes.iter_mut().find(|c| c.capacity == s.capacity) {
+                Some(c) => c.count += 1,
+                None => classes.push(ServerClass {
+                    capacity: s.capacity,
+                    count: 1,
+                }),
+            }
+        }
+        classes
+    }
+
+    /// Flatten current availability into a row-major f32 matrix [k, m]
+    /// for the XLA picker.
+    pub fn avail_matrix_f32(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len() * self.m);
+        for s in &self.servers {
+            let a = s.available();
+            for r in 0..self.m {
+                out.push(a[r] as f32);
+            }
+        }
+        out
+    }
+
+    /// Reset all usage to zero.
+    pub fn reset(&mut self) {
+        for s in &mut self.servers {
+            s.usage = ResVec::zeros(self.m);
+            s.tasks = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn google_table1_totals() {
+        let c = Cluster::google_full();
+        assert_eq!(c.len(), 12_583);
+        let t = c.total_capacity();
+        // Σ count·cpu and Σ count·mem from Table I
+        let exp_cpu: f64 =
+            GOOGLE_CLASSES.iter().map(|&(n, c, _)| n as f64 * c).sum();
+        let exp_mem: f64 =
+            GOOGLE_CLASSES.iter().map(|&(n, _, m)| n as f64 * m).sum();
+        assert!((t[0] - exp_cpu).abs() < 1e-9);
+        assert!((t[1] - exp_mem).abs() < 1e-9);
+    }
+
+    #[test]
+    fn google_sample_is_deterministic_and_from_table() {
+        let mut r1 = Pcg32::seeded(9);
+        let mut r2 = Pcg32::seeded(9);
+        let a = Cluster::google_sample(500, &mut r1);
+        let b = Cluster::google_sample(500, &mut r2);
+        for (x, y) in a.servers.iter().zip(&b.servers) {
+            assert_eq!(x.capacity, y.capacity);
+        }
+        for s in &a.servers {
+            assert!(GOOGLE_CLASSES
+                .iter()
+                .any(|&(_, c, m)| s.capacity == ResVec::cpu_mem(c, m)));
+        }
+    }
+
+    #[test]
+    fn sample_distribution_tracks_weights() {
+        let mut rng = Pcg32::seeded(10);
+        let c = Cluster::google_sample(20_000, &mut rng);
+        let majority = c
+            .servers
+            .iter()
+            .filter(|s| s.capacity == ResVec::cpu_mem(0.5, 0.5))
+            .count();
+        // class 0 is 6732/12583 ≈ 53.5% of the population
+        let frac = majority as f64 / 20_000.0;
+        assert!((frac - 0.535).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn utilization_and_effective_usage() {
+        let mut c = Cluster::fig1_example();
+        c.servers[0].commit(&ResVec::cpu_mem(1.0, 6.0));
+        let u = c.utilization();
+        assert!((u[0] - 1.0 / 14.0).abs() < 1e-12);
+        assert!((u[1] - 6.0 / 14.0).abs() < 1e-12);
+        // overcommit: usage discounted by the thrashing slowdown
+        c.servers[0].commit(&ResVec::cpu_mem(5.0, 20.0));
+        let eff = c.servers[0].effective_usage();
+        let u = c.utilization();
+        assert!((u[0] - eff[0] / 14.0).abs() < 1e-12);
+        assert!((u[1] - eff[1] / 14.0).abs() < 1e-12);
+        assert!(u[1] < 12.0 / 14.0, "thrashing must cost utilization");
+    }
+
+    #[test]
+    fn classes_collapse_identical_servers() {
+        let mut rng = Pcg32::seeded(11);
+        let c = Cluster::google_sample(1000, &mut rng);
+        let classes = c.classes();
+        assert!(classes.len() <= 10);
+        assert_eq!(
+            classes.iter().map(|x| x.count).sum::<usize>(),
+            c.len()
+        );
+    }
+}

@@ -1,0 +1,161 @@
+//! A single heterogeneous server: capacity vector plus the usage the
+//! scheduler has committed to it.
+//!
+//! Usage (not "available") is the primary state so that the Slots
+//! baseline can *overcommit* a server — the paper's slot scheduler
+//! ignores real resource demands, and modelling its inefficiency
+//! requires letting usage exceed capacity (see `sim::engine` for the
+//! processor-sharing slowdown that results).
+
+use super::vector::ResVec;
+
+/// Tolerance used in feasibility checks; demands accumulate over many
+/// f64 adds/subs, so exact comparisons would spuriously reject fits.
+pub const FIT_EPS: f64 = 1e-9;
+
+/// One server in the pool.
+#[derive(Clone, Debug)]
+pub struct Server {
+    /// Total resources of the server (absolute units).
+    pub capacity: ResVec,
+    /// Resources currently committed to running tasks. May exceed
+    /// capacity only under overcommitting schedulers (Slots).
+    pub usage: ResVec,
+    /// Index of the configuration class the server was sampled from
+    /// (provenance for experiments; 0 when hand-built).
+    pub class: usize,
+    /// Number of tasks currently running on the server (the Slots
+    /// baseline keys its per-server slot accounting off this).
+    pub tasks: usize,
+}
+
+impl Server {
+    /// New empty server.
+    pub fn new(capacity: ResVec) -> Self {
+        let m = capacity.dims();
+        Server { capacity, usage: ResVec::zeros(m), class: 0, tasks: 0 }
+    }
+
+    /// New empty server tagged with its configuration class.
+    pub fn with_class(capacity: ResVec, class: usize) -> Self {
+        Server { class, ..Self::new(capacity) }
+    }
+
+    /// Resources still available (capacity - usage), clamped at 0 per
+    /// component for overcommitted servers.
+    pub fn available(&self) -> ResVec {
+        let mut a = self.capacity.sub(&self.usage);
+        for i in 0..a.dims() {
+            if a[i] < 0.0 {
+                a[i] = 0.0;
+            }
+        }
+        a
+    }
+
+    /// Would `demand` fit without overcommitting?
+    #[inline]
+    pub fn fits(&self, demand: &ResVec) -> bool {
+        self.usage.add(demand).le_eps(&self.capacity, FIT_EPS)
+    }
+
+    /// Commit resources (no feasibility check — callers decide whether
+    /// overcommit is allowed).
+    #[inline]
+    pub fn commit(&mut self, demand: &ResVec) {
+        self.usage.add_assign(demand);
+    }
+
+    /// Release resources, clamping tiny negative residue from float
+    /// accumulation back to zero.
+    #[inline]
+    pub fn release(&mut self, demand: &ResVec) {
+        self.usage.sub_assign(demand);
+        for i in 0..self.usage.dims() {
+            if self.usage[i] < 0.0 {
+                debug_assert!(self.usage[i] > -1e-6, "usage went negative");
+                self.usage[i] = 0.0;
+            }
+        }
+    }
+
+    /// Highest usage/capacity ratio across resources (>1 = overcommit).
+    pub fn load(&self) -> f64 {
+        self.usage.max_ratio(&self.capacity)
+    }
+
+    /// Processor-sharing rate factor: 1 within capacity; 1/load³ when
+    /// overcommitted. The superlinear term models thrashing (paging,
+    /// context-switch overhead) on top of the 1/load fair-sharing
+    /// slowdown — without it overcommit would be work-conserving and
+    /// the paper's Table II utilization drop at 20 slots could not
+    /// occur; the cubic exponent is calibrated so the Table II hump
+    /// lands at 14-16 slots as in the paper (see DESIGN.md §4).
+    pub fn rate(&self) -> f64 {
+        let l = self.load();
+        if l <= 1.0 {
+            1.0
+        } else {
+            1.0 / (l * l * l)
+        }
+    }
+
+    /// Resources making *progress* on this server: usage discounted by
+    /// the slowdown factor (== usage when not overcommitted).
+    pub fn effective_usage(&self) -> ResVec {
+        let f = self.rate();
+        let mut e = self.usage;
+        for r in 0..e.dims() {
+            e[r] = (e[r] * f).min(self.capacity[r]);
+        }
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_and_commit_release() {
+        let mut s = Server::new(ResVec::cpu_mem(4.0, 8.0));
+        let d = ResVec::cpu_mem(1.0, 2.0);
+        assert!(s.fits(&d));
+        s.commit(&d);
+        s.commit(&d);
+        assert_eq!(s.usage, ResVec::cpu_mem(2.0, 4.0));
+        assert!(s.fits(&ResVec::cpu_mem(2.0, 4.0)));
+        assert!(!s.fits(&ResVec::cpu_mem(2.1, 1.0)));
+        s.release(&d);
+        assert_eq!(s.usage, d);
+    }
+
+    #[test]
+    fn available_clamps_overcommit() {
+        let mut s = Server::new(ResVec::cpu_mem(1.0, 1.0));
+        s.commit(&ResVec::cpu_mem(1.5, 0.5));
+        assert_eq!(s.available(), ResVec::cpu_mem(0.0, 0.5));
+        assert!((s.load() - 1.5).abs() < 1e-12);
+        assert!((s.rate() - 1.0 / 3.375).abs() < 1e-12);
+        let e = s.effective_usage();
+        assert!((e[0] - 1.5 / 3.375).abs() < 1e-12);
+        assert!((e[1] - 0.5 / 3.375).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rate_is_one_within_capacity() {
+        let mut s = Server::new(ResVec::cpu_mem(2.0, 2.0));
+        s.commit(&ResVec::cpu_mem(1.0, 1.0));
+        assert_eq!(s.rate(), 1.0);
+    }
+
+    #[test]
+    fn fit_eps_tolerates_float_residue() {
+        let mut s = Server::new(ResVec::cpu_mem(1.0, 1.0));
+        let d = ResVec::cpu_mem(0.1, 0.1);
+        for _ in 0..10 {
+            assert!(s.fits(&d), "residue rejected fit at usage {}", s.usage);
+            s.commit(&d);
+        }
+    }
+}

@@ -1,0 +1,281 @@
+//! Fixed-capacity resource vectors (paper Sec. III-A).
+//!
+//! A `ResVec` holds up to [`MAX_RES`] resource quantities (CPU, memory,
+//! storage, ...) inline — no heap allocation on the scheduling hot path.
+//! Quantities are *absolute* units (cores, GB); the allocator normalizes
+//! against pool totals where the paper's theory requires shares.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Maximum number of resource dimensions supported inline.
+pub const MAX_RES: usize = 4;
+
+/// A small dense vector over the resource dimensions.
+#[derive(Clone, Copy, PartialEq)]
+pub struct ResVec {
+    vals: [f64; MAX_RES],
+    m: usize,
+}
+
+impl ResVec {
+    /// All-zero vector with `m` dimensions.
+    pub fn zeros(m: usize) -> Self {
+        assert!(m >= 1 && m <= MAX_RES, "m={m} out of range");
+        ResVec { vals: [0.0; MAX_RES], m }
+    }
+
+    /// Build from a slice (length = number of resources).
+    pub fn from_slice(xs: &[f64]) -> Self {
+        let mut v = Self::zeros(xs.len());
+        v.vals[..xs.len()].copy_from_slice(xs);
+        v
+    }
+
+    /// Two-resource convenience (CPU, memory) — the paper's setting.
+    pub fn cpu_mem(cpu: f64, mem: f64) -> Self {
+        Self::from_slice(&[cpu, mem])
+    }
+
+    /// Number of resource dimensions.
+    #[inline]
+    pub fn dims(&self) -> usize {
+        self.m
+    }
+
+    /// Immutable view of the live dimensions.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.vals[..self.m]
+    }
+
+    /// Elementwise sum.
+    #[inline]
+    pub fn add(&self, o: &ResVec) -> ResVec {
+        debug_assert_eq!(self.m, o.m);
+        let mut r = *self;
+        for i in 0..self.m {
+            r.vals[i] += o.vals[i];
+        }
+        r
+    }
+
+    /// Elementwise difference (may go negative — callers decide policy).
+    #[inline]
+    pub fn sub(&self, o: &ResVec) -> ResVec {
+        debug_assert_eq!(self.m, o.m);
+        let mut r = *self;
+        for i in 0..self.m {
+            r.vals[i] -= o.vals[i];
+        }
+        r
+    }
+
+    /// In-place add.
+    #[inline]
+    pub fn add_assign(&mut self, o: &ResVec) {
+        debug_assert_eq!(self.m, o.m);
+        for i in 0..self.m {
+            self.vals[i] += o.vals[i];
+        }
+    }
+
+    /// In-place subtract.
+    #[inline]
+    pub fn sub_assign(&mut self, o: &ResVec) {
+        debug_assert_eq!(self.m, o.m);
+        for i in 0..self.m {
+            self.vals[i] -= o.vals[i];
+        }
+    }
+
+    /// Scaled copy.
+    #[inline]
+    pub fn scale(&self, a: f64) -> ResVec {
+        let mut r = *self;
+        for i in 0..self.m {
+            r.vals[i] *= a;
+        }
+        r
+    }
+
+    /// Elementwise `self <= o` (with tolerance; used for "fits").
+    #[inline]
+    pub fn le_eps(&self, o: &ResVec, eps: f64) -> bool {
+        debug_assert_eq!(self.m, o.m);
+        (0..self.m).all(|i| self.vals[i] <= o.vals[i] + eps)
+    }
+
+    /// Elementwise `self <= o` exactly.
+    #[inline]
+    pub fn le(&self, o: &ResVec) -> bool {
+        self.le_eps(o, 0.0)
+    }
+
+    /// True iff every component is >= 0 (tolerates -eps).
+    #[inline]
+    pub fn non_negative(&self, eps: f64) -> bool {
+        self.as_slice().iter().all(|&x| x >= -eps)
+    }
+
+    /// Largest component value.
+    #[inline]
+    pub fn max(&self) -> f64 {
+        self.as_slice().iter().cloned().fold(f64::MIN, f64::max)
+    }
+
+    /// Smallest component value.
+    #[inline]
+    pub fn min(&self) -> f64 {
+        self.as_slice().iter().cloned().fold(f64::MAX, f64::min)
+    }
+
+    /// Index of the largest component (first on ties) — the dominant
+    /// resource when applied to a normalized demand vector.
+    #[inline]
+    pub fn argmax(&self) -> usize {
+        let mut best = 0;
+        for i in 1..self.m {
+            if self.vals[i] > self.vals[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Elementwise division; `den` components of 0 map to +inf unless the
+    /// numerator is also 0 (then 0).
+    pub fn div(&self, den: &ResVec) -> ResVec {
+        debug_assert_eq!(self.m, den.m);
+        let mut r = *self;
+        for i in 0..self.m {
+            r.vals[i] = if den.vals[i] != 0.0 {
+                self.vals[i] / den.vals[i]
+            } else if self.vals[i] == 0.0 {
+                0.0
+            } else {
+                f64::INFINITY
+            };
+        }
+        r
+    }
+
+    /// max_r self_r / o_r — e.g. the dominant share of a usage vector
+    /// against a capacity vector.
+    pub fn max_ratio(&self, o: &ResVec) -> f64 {
+        self.div(o).max()
+    }
+
+    /// Sum of components.
+    #[inline]
+    pub fn sum(&self) -> f64 {
+        self.as_slice().iter().sum()
+    }
+
+    /// L1 distance.
+    pub fn l1_dist(&self, o: &ResVec) -> f64 {
+        debug_assert_eq!(self.m, o.m);
+        (0..self.m)
+            .map(|i| (self.vals[i] - o.vals[i]).abs())
+            .sum()
+    }
+
+    /// True iff all components are strictly positive.
+    pub fn all_positive(&self) -> bool {
+        self.as_slice().iter().all(|&x| x > 0.0)
+    }
+}
+
+impl Index<usize> for ResVec {
+    type Output = f64;
+    #[inline]
+    fn index(&self, i: usize) -> &f64 {
+        debug_assert!(i < self.m);
+        &self.vals[i]
+    }
+}
+
+impl IndexMut<usize> for ResVec {
+    #[inline]
+    fn index_mut(&mut self, i: usize) -> &mut f64 {
+        debug_assert!(i < self.m);
+        &mut self.vals[i]
+    }
+}
+
+impl fmt::Debug for ResVec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ResVec{:?}", self.as_slice())
+    }
+}
+
+impl fmt::Display for ResVec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "(")?;
+        for (i, v) in self.as_slice().iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{v:.4}")?;
+        }
+        write!(f, ")")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let v = ResVec::cpu_mem(2.0, 12.0);
+        assert_eq!(v.dims(), 2);
+        assert_eq!(v[0], 2.0);
+        assert_eq!(v[1], 12.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_many_dims_panics() {
+        ResVec::zeros(MAX_RES + 1);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = ResVec::cpu_mem(1.0, 2.0);
+        let b = ResVec::cpu_mem(0.5, 1.0);
+        assert_eq!(a.add(&b), ResVec::cpu_mem(1.5, 3.0));
+        assert_eq!(a.sub(&b), b);
+        assert_eq!(a.scale(2.0), ResVec::cpu_mem(2.0, 4.0));
+        let mut c = a;
+        c.sub_assign(&b);
+        assert_eq!(c, b);
+    }
+
+    #[test]
+    fn ordering_and_ratios() {
+        let d = ResVec::cpu_mem(0.2, 1.0);
+        let c = ResVec::cpu_mem(2.0, 12.0);
+        assert!(d.le(&c));
+        assert!(!c.le(&d));
+        assert_eq!(d.argmax(), 1);
+        // ratios are (0.1, 1/12); the max is the CPU ratio 0.1
+        assert!((d.max_ratio(&c) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn div_by_zero_semantics() {
+        let a = ResVec::cpu_mem(1.0, 0.0);
+        let b = ResVec::cpu_mem(0.0, 0.0);
+        let r = a.div(&b);
+        assert!(r[0].is_infinite());
+        assert_eq!(r[1], 0.0);
+    }
+
+    #[test]
+    fn l1_distance() {
+        let a = ResVec::cpu_mem(1.0, 3.0);
+        let b = ResVec::cpu_mem(2.0, 1.0);
+        assert!((a.l1_dist(&b) - 3.0).abs() < 1e-12);
+    }
+}

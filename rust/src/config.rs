@@ -1,0 +1,244 @@
+//! TOML experiment configuration: the launcher's input format.
+//!
+//! ```toml
+//! seed = 42
+//! [cluster]
+//! servers = 2000
+//! [workload]
+//! users = 100
+//! duration = 86400.0
+//! jobs_per_user = 20.0
+//! [sim]
+//! horizon = 86400.0
+//! sample_dt = 60.0
+//! track_user_series = false
+//! [scheduler]
+//! policy = "bestfit"       # bestfit | firstfit | slots | bestfit-xla
+//! slots_per_max = 14       # slots policy only
+//! ```
+//!
+//! Parsed with the in-tree TOML-subset parser (`util::toml_lite`; the
+//! `toml` crate is unavailable offline).
+
+use crate::cluster::Cluster;
+use crate::sched::{BestFitDrfh, FirstFitDrfh, Scheduler, SlotsScheduler};
+use crate::sim::SimOpts;
+use crate::util::toml_lite;
+use crate::util::Pcg32;
+use crate::workload::{GoogleLikeConfig, TraceGenerator};
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Number of servers sampled from the Google Table I distribution.
+    pub servers: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig { servers: 2000 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// bestfit | firstfit | slots | bestfit-xla
+    pub policy: String,
+    /// Slots per maximum server (slots policy only).
+    pub slots_per_max: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { policy: "bestfit".into(), slots_per_max: 14 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub horizon: f64,
+    pub sample_dt: f64,
+    pub track_user_series: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { horizon: 86_400.0, sample_dt: 60.0, track_user_series: false }
+    }
+}
+
+/// Top-level experiment configuration.
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentConfig {
+    pub seed: u64,
+    pub cluster: ClusterConfig,
+    pub workload: GoogleLikeConfig,
+    pub sim: SimConfig,
+    pub scheduler: SchedulerConfig,
+}
+
+impl ExperimentConfig {
+    /// Parse from a TOML string (unset keys keep their defaults).
+    pub fn from_toml(s: &str) -> Result<Self> {
+        let doc = toml_lite::parse(s)
+            .map_err(|e| anyhow::anyhow!("parsing experiment config: {e}"))?;
+        let mut cfg = ExperimentConfig::default();
+        if let Some(seed) = doc.get("", "seed").and_then(|v| v.as_u64()) {
+            cfg.seed = seed;
+        }
+        if let Some(v) = doc.get_usize("cluster", "servers") {
+            cfg.cluster.servers = v;
+        }
+        let w = &mut cfg.workload;
+        if let Some(v) = doc.get_usize("workload", "users") {
+            w.users = v;
+        }
+        if let Some(v) = doc.get_f64("workload", "duration") {
+            w.duration = v;
+        }
+        if let Some(v) = doc.get_f64("workload", "jobs_per_user") {
+            w.jobs_per_user = v;
+        }
+        if let Some(v) = doc.get_usize("workload", "max_tasks_per_job") {
+            w.max_tasks_per_job = v;
+        }
+        if let Some(v) = doc.get_f64("workload", "job_size_zipf_s") {
+            w.job_size_zipf_s = v;
+        }
+        if let Some(v) = doc.get_f64("workload", "dur_lo") {
+            w.dur_lo = v;
+        }
+        if let Some(v) = doc.get_f64("workload", "dur_hi") {
+            w.dur_hi = v;
+        }
+        if let Some(v) = doc.get_f64("workload", "dur_alpha") {
+            w.dur_alpha = v;
+        }
+        if let Some(v) = doc.get_f64("sim", "horizon") {
+            cfg.sim.horizon = v;
+        }
+        if let Some(v) = doc.get_f64("sim", "sample_dt") {
+            cfg.sim.sample_dt = v;
+        }
+        if let Some(v) = doc.get_bool("sim", "track_user_series") {
+            cfg.sim.track_user_series = v;
+        }
+        if let Some(v) = doc.get_str("scheduler", "policy") {
+            cfg.scheduler.policy = v.to_string();
+        }
+        if let Some(v) = doc.get_usize("scheduler", "slots_per_max") {
+            cfg.scheduler.slots_per_max = v;
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let s = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_toml(&s)
+    }
+
+    /// Sample the cluster.
+    pub fn build_cluster(&self) -> Cluster {
+        let mut rng = Pcg32::new(self.seed, 0xc1u64);
+        Cluster::google_sample(self.cluster.servers, &mut rng)
+    }
+
+    /// Generate the trace.
+    pub fn build_trace(&self) -> crate::workload::Trace {
+        TraceGenerator::new(self.workload.clone()).generate(self.seed)
+    }
+
+    /// Instantiate the scheduler policy.
+    pub fn build_scheduler(
+        &self,
+        cluster: &Cluster,
+    ) -> Result<Box<dyn Scheduler>> {
+        Ok(match self.scheduler.policy.as_str() {
+            "bestfit" => Box::new(BestFitDrfh::default()),
+            "firstfit" => Box::new(FirstFitDrfh),
+            "slots" => Box::new(SlotsScheduler::new(
+                cluster,
+                self.scheduler.slots_per_max,
+            )),
+            "bestfit-xla" => {
+                let rt = std::sync::Arc::new(
+                    crate::runtime::XlaRuntime::load_default()?,
+                );
+                Box::new(crate::sched::XlaBestFit::new(rt))
+            }
+            other => bail!("unknown scheduler policy '{other}'"),
+        })
+    }
+
+    /// Simulation options.
+    pub fn sim_opts(&self) -> SimOpts {
+        SimOpts {
+            horizon: self.sim.horizon,
+            sample_dt: self.sim.sample_dt,
+            track_user_series: self.sim.track_user_series,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_parse_from_empty() {
+        let c = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(c.cluster.servers, 2000);
+        assert_eq!(c.scheduler.policy, "bestfit");
+        assert_eq!(c.scheduler.slots_per_max, 14);
+    }
+
+    #[test]
+    fn full_toml_roundtrip() {
+        let toml_src = r#"
+            seed = 7
+            [cluster]
+            servers = 100
+            [workload]
+            users = 3
+            duration = 2000.0
+            [sim]
+            horizon = 2000.0
+            sample_dt = 10.0
+            track_user_series = true
+            [scheduler]
+            policy = "slots"
+            slots_per_max = 16
+        "#;
+        let c = ExperimentConfig::from_toml(toml_src).unwrap();
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.cluster.servers, 100);
+        assert_eq!(c.workload.users, 3);
+        assert_eq!(c.scheduler.slots_per_max, 16);
+        assert!(c.sim.track_user_series);
+        let cluster = c.build_cluster();
+        assert_eq!(cluster.len(), 100);
+        let sched = c.build_scheduler(&cluster).unwrap();
+        assert_eq!(sched.name(), "slots");
+    }
+
+    #[test]
+    fn bad_policy_rejected() {
+        let c = ExperimentConfig::from_toml("[scheduler]\npolicy = 'nope'")
+            .unwrap();
+        let cluster = c.build_cluster();
+        assert!(c.build_scheduler(&cluster).is_err());
+    }
+
+    #[test]
+    fn deterministic_cluster_and_trace() {
+        let c = ExperimentConfig::from_toml("seed = 5").unwrap();
+        let a = c.build_cluster();
+        let b = c.build_cluster();
+        for (x, y) in a.servers.iter().zip(&b.servers) {
+            assert_eq!(x.capacity, y.capacity);
+        }
+        assert_eq!(c.build_trace().total_tasks(), c.build_trace().total_tasks());
+    }
+}

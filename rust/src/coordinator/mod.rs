@@ -1,0 +1,362 @@
+//! Online scheduling coordinator: the paper's scheduler as a service.
+//!
+//! A dedicated OS thread owns the scheduling state and receives task
+//! submissions over an mpsc channel; placements stream back on another
+//! channel. The decision hot path batches placements through the AOT
+//! `sched_loop` XLA artifact when available (one PJRT call = up to 64
+//! decisions) and falls back to the native picker otherwise — Python is
+//! never involved at serving time.
+
+use crate::cluster::{Cluster, ResVec};
+use crate::runtime::{picker, XlaRuntime};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// A task submission: `count` tasks for `user`.
+#[derive(Clone, Debug)]
+pub struct Submission {
+    pub user: usize,
+    pub count: usize,
+}
+
+/// A placement decision streamed back to the client.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlacementEvent {
+    pub user: usize,
+    pub server: usize,
+}
+
+enum Msg {
+    Submit(Submission),
+    /// Enqueue several submissions atomically before draining once —
+    /// simultaneous arrivals compete fairly instead of first-come-all.
+    SubmitMany(Vec<Submission>),
+    /// Task finished on a server: return its resources.
+    Finish { user: usize, server: usize },
+    Snapshot(mpsc::Sender<CoordinatorStats>),
+    Shutdown,
+}
+
+/// Coordinator statistics snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct CoordinatorStats {
+    pub placed: usize,
+    pub pending: Vec<i32>,
+    pub share: Vec<f32>,
+    pub decisions_per_call: f64,
+    pub xla_calls: usize,
+}
+
+/// Which engine computes batched decisions. PJRT handles are not
+/// `Send`, so the XLA runtime is loaded *inside* the coordinator thread
+/// from the given artifacts directory.
+#[derive(Clone, Debug)]
+pub enum Engine {
+    Native,
+    Xla(PathBuf),
+}
+
+/// Handle to a running coordinator thread.
+pub struct Coordinator {
+    tx: mpsc::Sender<Msg>,
+    /// Placement decisions, in order.
+    pub placements: mpsc::Receiver<PlacementEvent>,
+    join: Option<JoinHandle<()>>,
+}
+
+struct State {
+    avail: Vec<f32>,
+    demand: Vec<f32>,
+    share: Vec<f32>,
+    weight: Vec<f32>,
+    pending: Vec<i32>,
+    n: usize,
+    k: usize,
+    m: usize,
+    engine: Option<XlaRuntime>,
+    placed: usize,
+    xla_calls: usize,
+    decisions_total: usize,
+}
+
+impl State {
+    /// Drain as many placements as possible, emitting events.
+    fn drain(&mut self, out: &mpsc::Sender<PlacementEvent>) {
+        loop {
+            let decisions = match &self.engine {
+                None => {
+                    let step = 64;
+                    picker::sched_loop(
+                        &mut self.avail,
+                        &self.demand,
+                        &mut self.share,
+                        &self.weight,
+                        &mut self.pending,
+                        self.n,
+                        self.k,
+                        self.m,
+                        step,
+                    )
+                }
+                Some(rt) => {
+                    let outcome = rt
+                        .sched_loop(
+                            &self.avail,
+                            &self.demand,
+                            &self.share,
+                            &self.weight,
+                            &self.pending,
+                            self.n,
+                            self.k,
+                            self.m,
+                        )
+                        .expect("XLA sched_loop failed");
+                    self.avail.copy_from_slice(&outcome.avail);
+                    self.share.copy_from_slice(&outcome.share);
+                    self.pending.copy_from_slice(&outcome.pending);
+                    self.xla_calls += 1;
+                    outcome.decisions
+                }
+            };
+            let mut all_placed = true;
+            let mut any = false;
+            for (u, s) in &decisions {
+                if *u >= 0 {
+                    any = true;
+                    self.placed += 1;
+                    self.decisions_total += 1;
+                    let _ = out.send(PlacementEvent {
+                        user: *u as usize,
+                        server: *s as usize,
+                    });
+                } else {
+                    all_placed = false;
+                }
+            }
+            // fully used batch => maybe more work; otherwise done
+            if !any || !all_placed {
+                break;
+            }
+        }
+    }
+}
+
+impl Coordinator {
+    /// Spawn a coordinator for `cluster` and the given per-user demands
+    /// and weights.
+    pub fn spawn(
+        cluster: &Cluster,
+        demands: &[ResVec],
+        weights: &[f64],
+        engine: Engine,
+    ) -> Self {
+        let m = cluster.dims();
+        let n = demands.len();
+        let k = cluster.len();
+        let mut avail = Vec::with_capacity(k * m);
+        for s in &cluster.servers {
+            let a = s.available();
+            for r in 0..m {
+                avail.push(a[r] as f32);
+            }
+        }
+        let mut demand = Vec::with_capacity(n * m);
+        for d in demands {
+            for r in 0..m {
+                demand.push(d[r] as f32);
+            }
+        }
+        let share = vec![0.0; n];
+        let weight: Vec<f32> = weights.iter().map(|&w| w as f32).collect();
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ptx, prx) = mpsc::channel::<PlacementEvent>();
+        let join = std::thread::spawn(move || {
+            // PJRT handles are thread-bound: load the runtime here.
+            let rt = match engine {
+                Engine::Native => None,
+                Engine::Xla(dir) => Some(
+                    XlaRuntime::load(&dir)
+                        .expect("loading XLA artifacts in coordinator"),
+                ),
+            };
+            let mut st = State {
+                avail,
+                demand,
+                share,
+                weight,
+                pending: vec![0; n],
+                n,
+                k,
+                m,
+                engine: rt,
+                placed: 0,
+                xla_calls: 0,
+                decisions_total: 0,
+            };
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Submit(s) => {
+                        st.pending[s.user] += s.count as i32;
+                        st.drain(&ptx);
+                    }
+                    Msg::SubmitMany(subs) => {
+                        for s in subs {
+                            st.pending[s.user] += s.count as i32;
+                        }
+                        st.drain(&ptx);
+                    }
+                    Msg::Finish { user, server } => {
+                        // return the task's resources and dominant share
+                        let mut dom = 0.0f32;
+                        for r in 0..st.m {
+                            let d = st.demand[user * st.m + r];
+                            st.avail[server * st.m + r] += d;
+                            dom = dom.max(d);
+                        }
+                        st.share[user] = (st.share[user] - dom).max(0.0);
+                        st.drain(&ptx);
+                    }
+                    Msg::Snapshot(reply) => {
+                        let _ = reply.send(CoordinatorStats {
+                            placed: st.placed,
+                            pending: st.pending.clone(),
+                            share: st.share.clone(),
+                            decisions_per_call: if st.xla_calls > 0 {
+                                st.decisions_total as f64
+                                    / st.xla_calls as f64
+                            } else {
+                                0.0
+                            },
+                            xla_calls: st.xla_calls,
+                        });
+                    }
+                    Msg::Shutdown => break,
+                }
+            }
+        });
+        Coordinator { tx, placements: prx, join: Some(join) }
+    }
+
+    /// Submit `count` tasks for `user`.
+    pub fn submit(&self, user: usize, count: usize) -> Result<()> {
+        self.tx
+            .send(Msg::Submit(Submission { user, count }))
+            .map_err(|_| anyhow!("coordinator closed"))
+    }
+
+    /// Submit a batch atomically: all tasks are queued before any
+    /// placement happens, so simultaneous arrivals compete fairly.
+    pub fn submit_many(&self, subs: Vec<Submission>) -> Result<()> {
+        self.tx
+            .send(Msg::SubmitMany(subs))
+            .map_err(|_| anyhow!("coordinator closed"))
+    }
+
+    /// Report a task completion (frees resources, may trigger more
+    /// placements).
+    pub fn finish(&self, user: usize, server: usize) -> Result<()> {
+        self.tx
+            .send(Msg::Finish { user, server })
+            .map_err(|_| anyhow!("coordinator closed"))
+    }
+
+    /// Fetch a statistics snapshot (synchronous round-trip, so all
+    /// previously sent messages have been processed when it returns).
+    pub fn stats(&self) -> Result<CoordinatorStats> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Snapshot(tx))
+            .map_err(|_| anyhow!("coordinator closed"))?;
+        rx.recv().map_err(|_| anyhow!("coordinator died"))
+    }
+
+    /// Stop the coordinator and wait for the thread to exit.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            j.join().map_err(|_| anyhow!("coordinator panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_coordinator_places_and_rebalances() {
+        // Fig. 1-style instance with power-of-two demands so that f32
+        // accumulation is exact: mem server (2, 8), cpu server (8, 2);
+        // user 0 = (0.25, 1) mem-heavy, user 1 = (1, 0.25) cpu-heavy.
+        let cluster = Cluster::from_capacities(&[
+            ResVec::cpu_mem(2.0, 8.0),
+            ResVec::cpu_mem(8.0, 2.0),
+        ]);
+        let demands =
+            vec![ResVec::cpu_mem(0.25, 1.0), ResVec::cpu_mem(1.0, 0.25)];
+        let weights = vec![1.0, 1.0];
+        let coord =
+            Coordinator::spawn(&cluster, &demands, &weights, Engine::Native);
+        // interleave submissions so both users are queued while the
+        // cluster fills (messages are processed in order)
+        for _ in 0..9 {
+            coord.submit(0, 1).unwrap();
+            coord.submit(1, 1).unwrap();
+        }
+        let stats = coord.stats().unwrap();
+        // each matching server fits exactly 8 tasks of its user
+        assert_eq!(stats.placed, 16, "pending={:?}", stats.pending);
+        assert_eq!(stats.pending, vec![1, 1]);
+
+        // collect placements and check the routing
+        let mut placements = Vec::new();
+        while let Ok(p) = coord.placements.try_recv() {
+            placements.push(p);
+        }
+        assert_eq!(placements.len(), 16);
+        assert!(placements
+            .iter()
+            .all(|p| (p.user == 0) == (p.server == 0)));
+
+        // finishing a task frees capacity for one more
+        coord.finish(0, 0).unwrap();
+        let stats = coord.stats().unwrap();
+        assert_eq!(stats.placed, 17);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn shares_equalize_between_identical_users() {
+        let cluster =
+            Cluster::from_capacities(&[ResVec::cpu_mem(4.0, 4.0)]);
+        let demands =
+            vec![ResVec::cpu_mem(0.5, 0.5), ResVec::cpu_mem(0.5, 0.5)];
+        let coord = Coordinator::spawn(
+            &cluster,
+            &demands,
+            &[1.0, 1.0],
+            Engine::Native,
+        );
+        for _ in 0..10 {
+            coord.submit(0, 1).unwrap();
+            coord.submit(1, 1).unwrap();
+        }
+        let stats = coord.stats().unwrap();
+        // 8 fit; progressive filling alternates users -> 4/4
+        assert_eq!(stats.placed, 8);
+        assert!((stats.share[0] - stats.share[1]).abs() < 1e-6);
+        coord.shutdown().unwrap();
+    }
+}

@@ -1,0 +1,106 @@
+//! Fig. 6 — job completion times: (a) CDF of JCT under Best-Fit DRFH
+//! vs Slots over jobs completed in both runs; (b) mean completion-time
+//! reduction per job-size bucket.
+//!
+//! Paper reference: no improvement for small jobs, large reductions for
+//! jobs with many tasks (the bigger the job, the bigger the win).
+
+use super::{write_csv, EvalSetup};
+use crate::metrics::{jct_reduction_by_bucket, JobRecord};
+use crate::sched::{BestFitDrfh, SlotsScheduler};
+use crate::sim::run;
+use crate::util::stats;
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct Fig6Result {
+    /// matched (job, bestfit JCT, slots JCT)
+    pub matched: Vec<(usize, f64, f64)>,
+    /// (bucket label, mean reduction, sample count)
+    pub buckets: Vec<(String, f64, usize)>,
+    pub bf_jobs: Vec<JobRecord>,
+    pub slots_jobs: Vec<JobRecord>,
+}
+
+/// Run Best-Fit and Slots on the same setup and match completed jobs.
+pub fn run_fig6(setup: &EvalSetup) -> Fig6Result {
+    let bf = run(
+        setup.cluster.clone(),
+        &setup.trace,
+        Box::new(BestFitDrfh::default()),
+        setup.opts.clone(),
+    );
+    let slots = run(
+        setup.cluster.clone(),
+        &setup.trace,
+        Box::new(SlotsScheduler::new(&setup.cluster, 14)),
+        setup.opts.clone(),
+    );
+    let by_id: HashMap<usize, &JobRecord> =
+        slots.jobs.iter().map(|j| (j.job, j)).collect();
+    let matched = bf
+        .jobs
+        .iter()
+        .filter_map(|j| {
+            by_id
+                .get(&j.job)
+                .map(|s| (j.job, j.completion_time(), s.completion_time()))
+        })
+        .collect();
+    let buckets = jct_reduction_by_bucket(&bf.jobs, &slots.jobs);
+    Fig6Result { matched, buckets, bf_jobs: bf.jobs, slots_jobs: slots.jobs }
+}
+
+pub fn print(res: &Fig6Result) {
+    println!("== Fig. 6a: JCT CDF (jobs completed in both runs) ==");
+    let bf: Vec<f64> = res.matched.iter().map(|m| m.1).collect();
+    let sl: Vec<f64> = res.matched.iter().map(|m| m.2).collect();
+    println!("matched jobs: {}", res.matched.len());
+    for p in [25.0, 50.0, 75.0, 90.0, 99.0] {
+        println!(
+            "  p{:<4} best-fit {:>8.0} s   slots {:>8.0} s",
+            p,
+            stats::percentile(&bf, p),
+            stats::percentile(&sl, p)
+        );
+    }
+    println!("== Fig. 6b: mean JCT reduction by job size ==");
+    println!("{:<12} {:>12} {:>8}", "tasks/job", "reduction", "jobs");
+    for (label, red, count) in &res.buckets {
+        println!("{:<12} {:>11.1}% {:>8}", label, red * 100.0, count);
+    }
+    println!("(paper: ~0% for small jobs, growing with job size)");
+    let rows: Vec<String> = res
+        .matched
+        .iter()
+        .map(|(id, b, s)| format!("{id},{b:.1},{s:.1}"))
+        .collect();
+    write_csv("fig6_jct.csv", "job,bestfit_jct,slots_jct", &rows);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn large_jobs_gain_more_than_small() {
+        let setup = EvalSetup::with_duration(17, 120, 12, 12_000.0);
+        let res = run_fig6(&setup);
+        assert!(
+            res.matched.len() > 10,
+            "need matched jobs, got {}",
+            res.matched.len()
+        );
+        // aggregate reduction should be positive (DRFH wins overall)
+        let mean_red: f64 = res
+            .matched
+            .iter()
+            .map(|(_, b, s)| 1.0 - b / s.max(1e-9))
+            .sum::<f64>()
+            / res.matched.len() as f64;
+        assert!(
+            mean_red > 0.0,
+            "expected positive mean JCT reduction, got {mean_red:.3}"
+        );
+    }
+}

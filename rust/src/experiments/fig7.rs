@@ -1,0 +1,110 @@
+//! Fig. 7 — per-user task completion ratio under Best-Fit DRFH vs
+//! Slots (the scatter whose bubbles scale with tasks submitted).
+//!
+//! Paper reference: Best-Fit yields a higher ratio for almost every
+//! user; ~20% of users complete *all* tasks under Best-Fit but not
+//! under Slots.
+
+use super::{write_csv, EvalSetup};
+use crate::sched::{BestFitDrfh, SlotsScheduler};
+use crate::sim::run;
+
+#[derive(Clone, Debug)]
+pub struct Fig7Result {
+    /// (user, submitted, ratio under best-fit, ratio under slots)
+    pub users: Vec<(usize, usize, f64, f64)>,
+}
+
+impl Fig7Result {
+    /// Fraction of users whose ratio is >= the slots ratio.
+    pub fn frac_not_worse(&self) -> f64 {
+        let n = self.users.len().max(1);
+        self.users.iter().filter(|(_, _, b, s)| b >= s).count() as f64
+            / n as f64
+    }
+
+    /// Fraction of users complete under best-fit but not under slots.
+    pub fn frac_complete_only_bestfit(&self) -> f64 {
+        let n = self.users.len().max(1);
+        self.users
+            .iter()
+            .filter(|(_, _, b, s)| *b >= 1.0 - 1e-12 && *s < 1.0)
+            .count() as f64
+            / n as f64
+    }
+}
+
+pub fn run_fig7(setup: &EvalSetup) -> Fig7Result {
+    let bf = run(
+        setup.cluster.clone(),
+        &setup.trace,
+        Box::new(BestFitDrfh::default()),
+        setup.opts.clone(),
+    );
+    let slots = run(
+        setup.cluster.clone(),
+        &setup.trace,
+        Box::new(SlotsScheduler::new(&setup.cluster, 14)),
+        setup.opts.clone(),
+    );
+    let users = bf
+        .user_tasks
+        .iter()
+        .zip(&slots.user_tasks)
+        .enumerate()
+        .filter(|(_, (b, _))| b.submitted > 0)
+        .map(|(u, (b, s))| (u, b.submitted, b.ratio(), s.ratio()))
+        .collect();
+    Fig7Result { users }
+}
+
+pub fn print(res: &Fig7Result) {
+    println!("== Fig. 7: per-user task completion ratio ==");
+    println!("users with submissions: {}", res.users.len());
+    println!(
+        "best-fit not worse than slots: {:.0}% of users (paper: almost all)",
+        res.frac_not_worse() * 100.0
+    );
+    println!(
+        "complete under best-fit only: {:.0}% of users (paper: ~20%)",
+        res.frac_complete_only_bestfit() * 100.0
+    );
+    let mean_bf: f64 = res.users.iter().map(|u| u.2).sum::<f64>()
+        / res.users.len().max(1) as f64;
+    let mean_sl: f64 = res.users.iter().map(|u| u.3).sum::<f64>()
+        / res.users.len().max(1) as f64;
+    println!(
+        "mean completion ratio: best-fit {:.2}, slots {:.2}",
+        mean_bf, mean_sl
+    );
+    write_csv(
+        "fig7_completion_ratio.csv",
+        "user,submitted,bestfit_ratio,slots_ratio",
+        &res.users
+            .iter()
+            .map(|(u, n, b, s)| format!("{u},{n},{b:.4},{s:.4}"))
+            .collect::<Vec<_>>(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bestfit_dominates_completion_ratios() {
+        let setup = EvalSetup::with_duration(19, 120, 12, 12_000.0);
+        let res = run_fig7(&setup);
+        assert!(!res.users.is_empty());
+        assert!(
+            res.frac_not_worse() > 0.6,
+            "best-fit should dominate for most users, got {:.2}",
+            res.frac_not_worse()
+        );
+        let mean_bf: f64 = res.users.iter().map(|u| u.2).sum::<f64>()
+            / res.users.len() as f64;
+        let mean_sl: f64 = res.users.iter().map(|u| u.3).sum::<f64>()
+            / res.users.len() as f64;
+        assert!(mean_bf > mean_sl, "bf {mean_bf:.3} !> slots {mean_sl:.3}");
+    }
+}

@@ -1,0 +1,138 @@
+//! Fig. 8 — sharing incentive: per-user task completion ratio in the
+//! shared cloud (SC) vs a *dedicated cloud* (DC) of k/n servers drawn
+//! from the same Table I distribution (the paper's practical benchmark
+//! from Sec. IV-D).
+//!
+//! Paper reference: pooling benefits most users; only ~2% complete
+//! fewer tasks in the shared system, and only slightly.
+
+use super::{write_csv, EvalSetup};
+use crate::cluster::Cluster;
+use crate::sched::BestFitDrfh;
+use crate::sim::run;
+use crate::util::Pcg32;
+use crate::workload::Trace;
+
+#[derive(Clone, Debug)]
+pub struct Fig8Result {
+    /// (user, submitted, shared-cloud ratio, dedicated-cloud ratio)
+    pub users: Vec<(usize, usize, f64, f64)>,
+}
+
+impl Fig8Result {
+    /// Fraction of users strictly worse off in the shared cloud.
+    pub fn frac_worse_in_shared(&self) -> f64 {
+        let n = self.users.len().max(1);
+        self.users
+            .iter()
+            .filter(|(_, _, sc, dc)| sc < dc)
+            .count() as f64
+            / n as f64
+    }
+
+    /// Largest ratio loss experienced by any user in the shared cloud.
+    pub fn max_loss(&self) -> f64 {
+        self.users
+            .iter()
+            .map(|(_, _, sc, dc)| (dc - sc).max(0.0))
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Run the shared cloud once, then every user alone on its k/n-server
+/// dedicated cloud, and compare completion ratios.
+pub fn run_fig8(setup: &EvalSetup) -> Fig8Result {
+    let shared = run(
+        setup.cluster.clone(),
+        &setup.trace,
+        Box::new(BestFitDrfh::default()),
+        setup.opts.clone(),
+    );
+    let n = setup.trace.users.len();
+    let dc_size = (setup.cluster.len() / n).max(1);
+    let mut users = Vec::new();
+    for u in 0..n {
+        if shared.user_tasks[u].submitted == 0 {
+            continue;
+        }
+        // dedicated cloud: k/n servers from the same distribution
+        let mut rng = Pcg32::new(setup.seed ^ 0xdc, u as u64 + 1);
+        let dc = Cluster::google_sample(dc_size, &mut rng);
+        // the user's own jobs only (submit times preserved)
+        let trace_u = Trace {
+            users: setup.trace.users.clone(),
+            jobs: setup
+                .trace
+                .jobs
+                .iter()
+                .filter(|j| j.user == u)
+                .cloned()
+                .collect(),
+        };
+        let dedicated =
+            run(dc, &trace_u, Box::new(BestFitDrfh::default()), setup.opts.clone());
+        users.push((
+            u,
+            shared.user_tasks[u].submitted,
+            shared.user_tasks[u].ratio(),
+            dedicated.user_tasks[u].ratio(),
+        ));
+    }
+    Fig8Result { users }
+}
+
+pub fn print(res: &Fig8Result) {
+    println!("== Fig. 8: sharing incentive (shared vs dedicated cloud) ==");
+    println!("users compared: {}", res.users.len());
+    println!(
+        "worse off in shared cloud: {:.0}% of users (paper: ~2%)",
+        res.frac_worse_in_shared() * 100.0
+    );
+    println!(
+        "max completion-ratio loss: {:.3} (paper: 'only slightly')",
+        res.max_loss()
+    );
+    let mean_sc: f64 = res.users.iter().map(|u| u.2).sum::<f64>()
+        / res.users.len().max(1) as f64;
+    let mean_dc: f64 = res.users.iter().map(|u| u.3).sum::<f64>()
+        / res.users.len().max(1) as f64;
+    println!(
+        "mean completion ratio: shared {:.2}, dedicated {:.2}",
+        mean_sc, mean_dc
+    );
+    write_csv(
+        "fig8_sharing_incentive.csv",
+        "user,submitted,shared_ratio,dedicated_ratio",
+        &res.users
+            .iter()
+            .map(|(u, n, sc, dc)| format!("{u},{n},{sc:.4},{dc:.4}"))
+            .collect::<Vec<_>>(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sharing_benefits_most_users() {
+        let setup = EvalSetup::with_duration(23, 120, 12, 12_000.0);
+        let res = run_fig8(&setup);
+        assert!(!res.users.is_empty());
+        // pooling helps on average
+        let mean_sc: f64 = res.users.iter().map(|u| u.2).sum::<f64>()
+            / res.users.len() as f64;
+        let mean_dc: f64 = res.users.iter().map(|u| u.3).sum::<f64>()
+            / res.users.len() as f64;
+        assert!(
+            mean_sc >= mean_dc - 0.05,
+            "shared {mean_sc:.3} much worse than dedicated {mean_dc:.3}"
+        );
+        // the paper's claim: few users are worse off
+        assert!(
+            res.frac_worse_in_shared() < 0.5,
+            "too many users worse off: {:.2}",
+            res.frac_worse_in_shared()
+        );
+    }
+}

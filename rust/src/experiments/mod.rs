@@ -1,0 +1,119 @@
+//! Experiment harnesses: one per table/figure of the paper's
+//! evaluation (Sec. VI). Each regenerates the paper's rows/series on
+//! the synthetic Google-like substrate and prints paper-vs-measured
+//! summaries; see DESIGN.md §5 for the index and EXPERIMENTS.md for
+//! recorded results.
+
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod table2;
+
+use crate::cluster::Cluster;
+use crate::sim::SimOpts;
+use crate::util::Pcg32;
+use crate::workload::{GoogleLikeConfig, Trace, TraceGenerator};
+
+/// Shared setup for the trace-driven evaluations (Fig. 5-8, Table II):
+/// a cluster sampled from Table I and a 24-hour Google-like trace.
+///
+/// The paper evaluates on 2,000 servers; `servers` scales that down for
+/// quicker runs (the paper itself scales 12K -> 2K "so that fairness
+/// becomes relevant" — we keep k >> n at every scale).
+#[derive(Clone, Debug)]
+pub struct EvalSetup {
+    pub cluster: Cluster,
+    pub trace: Trace,
+    pub opts: SimOpts,
+    pub seed: u64,
+}
+
+impl EvalSetup {
+    /// The standard evaluation workload: `servers` Table I servers,
+    /// `users` tenants, 24 h of Poisson job arrivals heavy enough to
+    /// oversubscribe the pool (the paper's saturated regime).
+    pub fn standard(seed: u64, servers: usize, users: usize) -> Self {
+        Self::with_duration(seed, servers, users, 86_400.0)
+    }
+
+    /// Same, with a custom trace duration (benches use shorter runs).
+    pub fn with_duration(
+        seed: u64,
+        servers: usize,
+        users: usize,
+        duration: f64,
+    ) -> Self {
+        let mut rng = Pcg32::new(seed, 0xc1);
+        let cluster = Cluster::google_sample(servers, &mut rng);
+        // Oversubscription scaled to pool size. Back-of-envelope: the
+        // pool offers ~0.5 units of each resource per server; the mean
+        // dominant demand per task is ~0.095 units, so ~5.3 tasks fit
+        // per server concurrently; with a ~500 s mean duration and a
+        // ~72-task mean job size, ~2.2e-4 jobs per server-second keep
+        // the offered load at ~80-90% of DRFH capacity: bursts backlog the
+        // slot scheduler while DRFH drains — the paper's regime (slots
+        // utilization ~45%, small jobs mostly unqueued).
+        let jobs_per_user =
+            (2.2e-4 * servers as f64 * duration / users as f64).max(2.0);
+        let cfg = GoogleLikeConfig {
+            users,
+            duration,
+            jobs_per_user,
+            dur_lo: 120.0,
+            dur_hi: 21_600.0,
+            dur_alpha: 1.1,
+            ..Default::default()
+        };
+        let trace = TraceGenerator::new(cfg).generate(seed);
+        let opts = SimOpts {
+            horizon: duration,
+            sample_dt: (duration / 720.0).max(10.0),
+            track_user_series: false,
+        };
+        EvalSetup { cluster, trace, opts, seed }
+    }
+}
+
+/// Write a CSV file under `results/` (created on demand); best-effort —
+/// experiments still print their tables when the filesystem is
+/// read-only.
+pub fn write_csv(name: &str, header: &str, rows: &[String]) {
+    let dir = std::path::Path::new("results");
+    if std::fs::create_dir_all(dir).is_err() {
+        return;
+    }
+    let mut body = String::with_capacity(rows.len() * 32 + header.len() + 1);
+    body.push_str(header);
+    body.push('\n');
+    for r in rows {
+        body.push_str(r);
+        body.push('\n');
+    }
+    let _ = std::fs::write(dir.join(name), body);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_setup_is_consistent() {
+        let s = EvalSetup::with_duration(3, 100, 10, 4000.0);
+        assert_eq!(s.cluster.len(), 100);
+        assert_eq!(s.trace.users.len(), 10);
+        s.trace.validate().unwrap();
+        assert!(s.opts.horizon == 4000.0);
+    }
+
+    #[test]
+    fn setup_deterministic() {
+        let a = EvalSetup::with_duration(5, 50, 5, 2000.0);
+        let b = EvalSetup::with_duration(5, 50, 5, 2000.0);
+        assert_eq!(a.trace.total_tasks(), b.trace.total_tasks());
+        for (x, y) in a.cluster.servers.iter().zip(&b.cluster.servers) {
+            assert_eq!(x.capacity, y.capacity);
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Table II — resource utilization of the Slots scheduler as a
+//! function of slot size (10/12/14/16/20 slots per maximum server).
+//!
+//! Paper reference: CPU utilization rises from 35.1% (10 slots) to a
+//! peak of 43.9-45.4% around 14-16 slots and falls back at 20 (40.6%);
+//! memory peaks at 14 slots (28.0%). Too few slots leave resources
+//! stranded; too many overcommit servers and the processor-sharing
+//! slowdown wastes throughput.
+
+use super::{write_csv, EvalSetup};
+use crate::sched::SlotsScheduler;
+use crate::sim::run;
+
+/// One row of Table II.
+#[derive(Clone, Debug)]
+pub struct SlotRow {
+    pub slots: usize,
+    pub cpu_util: f64,
+    pub mem_util: f64,
+}
+
+pub const SLOT_SIZES: [usize; 5] = [10, 12, 14, 16, 20];
+
+/// Run the sweep on a shared setup.
+pub fn run_table2(setup: &EvalSetup) -> Vec<SlotRow> {
+    SLOT_SIZES
+        .iter()
+        .map(|&slots| {
+            let sched = SlotsScheduler::new(&setup.cluster, slots);
+            let report = run(
+                setup.cluster.clone(),
+                &setup.trace,
+                Box::new(sched),
+                setup.opts.clone(),
+            );
+            SlotRow {
+                slots,
+                cpu_util: report.avg_cpu_util,
+                mem_util: report.avg_mem_util,
+            }
+        })
+        .collect()
+}
+
+/// Print the table and dump CSV.
+pub fn print(rows: &[SlotRow]) {
+    println!("== Table II: Slots scheduler utilization vs slot size ==");
+    println!(
+        "{:<24} {:>14} {:>18}",
+        "slots per max server", "CPU util", "memory util"
+    );
+    let paper = [(35.1, 23.4), (42.2, 27.4), (43.9, 28.0), (45.4, 24.2), (40.6, 20.0)];
+    for (row, p) in rows.iter().zip(paper.iter()) {
+        println!(
+            "{:<24} {:>8.1}% (paper {:>4.1}%) {:>6.1}% (paper {:>4.1}%)",
+            row.slots,
+            row.cpu_util * 100.0,
+            p.0,
+            row.mem_util * 100.0,
+            p.1
+        );
+    }
+    let best = rows
+        .iter()
+        .max_by(|a, b| {
+            (a.cpu_util + a.mem_util)
+                .partial_cmp(&(b.cpu_util + b.mem_util))
+                .unwrap()
+        })
+        .unwrap();
+    println!("best overall: {} slots (paper: 14)", best.slots);
+    write_csv(
+        "table2_slots.csv",
+        "slots,cpu_util,mem_util",
+        &rows
+            .iter()
+            .map(|r| format!("{},{:.4},{:.4}", r.slots, r.cpu_util, r.mem_util))
+            .collect::<Vec<_>>(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_sweep_shape() {
+        // small but saturated setup so the sweep shape is visible
+        let setup = EvalSetup::with_duration(11, 120, 12, 12_000.0);
+        let rows = run_table2(&setup);
+        assert_eq!(rows.len(), 5);
+        for r in &rows {
+            assert!(r.cpu_util > 0.0 && r.cpu_util <= 1.0);
+            assert!(r.mem_util > 0.0 && r.mem_util <= 1.0);
+        }
+        // utilization with very few slots is below the best observed
+        let best_cpu =
+            rows.iter().map(|r| r.cpu_util).fold(0.0f64, f64::max);
+        assert!(
+            rows[0].cpu_util <= best_cpu + 1e-9,
+            "10-slot run should not beat the sweep max"
+        );
+    }
+}

@@ -1,0 +1,38 @@
+//! # drfh — Dominant Resource Fairness with Heterogeneous Servers
+//!
+//! A full reproduction of Wang, Li & Liang, *"Dominant Resource Fairness
+//! in Cloud Computing Systems with Heterogeneous Servers"* (2013):
+//!
+//! * [`cluster`] — the heterogeneous server pool (paper Sec. III-A),
+//!   including the Google Table I configuration distribution;
+//! * [`workload`] — users/jobs/tasks and the Google-like trace generator
+//!   substituting the original (unavailable) cluster traces;
+//! * [`solver`] — dense two-phase simplex, the LP substrate for eq. (7);
+//! * [`allocator`] — the *exact fluid* DRFH allocation (paper Sec. IV),
+//!   weighted users, finite demands, and the naive per-server DRF
+//!   baseline of Sec. III-D;
+//! * [`sched`] — discrete task schedulers: Best-Fit DRFH, First-Fit
+//!   DRFH (paper Sec. V-B) and the slot-based baseline (Table II);
+//! * [`sim`] — the discrete-event cluster simulator behind every figure
+//!   in the evaluation (Sec. VI);
+//! * [`metrics`] — utilization time series, JCT CDFs, completion ratios;
+//! * [`runtime`] — the PJRT bridge executing the AOT-compiled XLA
+//!   scheduling kernels (L1 Pallas / L2 JAX) from the Rust hot path;
+//! * [`coordinator`] — the online (tokio) scheduling service;
+//! * [`experiments`] — one harness per paper table/figure.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for
+//! measured-vs-paper results.
+
+pub mod allocator;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod metrics;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod solver;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,304 @@
+//! `drfh` — launcher CLI for the DRFH reproduction.
+//!
+//! ```text
+//! drfh exp <fig4|table2|fig5|fig6|fig7|fig8|all> [--seed N] [--servers K]
+//!          [--users N] [--duration S]             regenerate a paper figure/table
+//! drfh sim --config exp.toml                      run a configured simulation
+//! drfh solve                                      exact fluid DRFH on the Fig. 1 example
+//! drfh picker-check [--trials N] [--seed N]       native vs XLA decision parity
+//! drfh serve [--servers K] [--users N] [--tasks T] online coordinator demo
+//! ```
+//!
+//! (Hand-rolled argument parsing — clap is unavailable offline.)
+
+use anyhow::{bail, Result};
+use drfh::allocator::{self, FluidUser};
+use drfh::cluster::{Cluster, ResVec};
+use drfh::config::ExperimentConfig;
+use drfh::coordinator::{Coordinator, Engine};
+use drfh::experiments::{self, EvalSetup};
+use drfh::runtime::{self, picker, XlaRuntime};
+use drfh::sim;
+use drfh::util::Pcg32;
+
+const USAGE: &str = "\
+drfh — Dominant Resource Fairness with Heterogeneous Servers (paper reproduction)
+
+USAGE:
+  drfh exp <fig4|table2|fig5|fig6|fig7|fig8|all>
+           [--seed N] [--servers K] [--users N] [--duration SECONDS]
+  drfh sim --config <exp.toml>
+  drfh solve
+  drfh picker-check [--trials N] [--seed N]
+  drfh serve [--servers K] [--users N] [--tasks T]
+";
+
+/// Tiny flag parser: --key value pairs after the positional args.
+struct Flags(Vec<(String, String)>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Self> {
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("missing value for --{key}"))?;
+                flags.push((key.to_string(), val.clone()));
+                i += 2;
+            } else {
+                bail!("unexpected argument '{a}'");
+            }
+        }
+        Ok(Flags(flags))
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.0.iter().find(|(k, _)| k == key) {
+            None => Ok(default),
+            Some((_, v)) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad value for --{key}: '{v}'")),
+        }
+    }
+
+    fn get_str(&self, key: &str) -> Option<&str> {
+        self.0.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "exp" => {
+            let which = args
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("exp needs a figure name"))?
+                .clone();
+            let flags = Flags::parse(&args[2..])?;
+            run_exp(
+                &which,
+                flags.get("seed", 42u64)?,
+                flags.get("servers", 2000usize)?,
+                flags.get("users", 100usize)?,
+                flags.get("duration", 86_400.0f64)?,
+            )
+        }
+        "sim" => {
+            let flags = Flags::parse(&args[1..])?;
+            let cfg = flags
+                .get_str("config")
+                .ok_or_else(|| anyhow::anyhow!("sim needs --config"))?;
+            run_sim(std::path::Path::new(cfg))
+        }
+        "solve" => run_solve(),
+        "picker-check" => {
+            let flags = Flags::parse(&args[1..])?;
+            run_picker_check(flags.get("trials", 100usize)?, flags.get("seed", 7u64)?)
+        }
+        "serve" => {
+            let flags = Flags::parse(&args[1..])?;
+            run_serve(
+                flags.get("servers", 200usize)?,
+                flags.get("users", 16usize)?,
+                flags.get("tasks", 2000usize)?,
+            )
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn run_exp(
+    which: &str,
+    seed: u64,
+    servers: usize,
+    users: usize,
+    duration: f64,
+) -> Result<()> {
+    let setup = || EvalSetup::with_duration(seed, servers, users, duration);
+    match which {
+        "fig4" => {
+            let res = experiments::fig4::run_fig4(seed);
+            experiments::fig4::print(&res);
+        }
+        "table2" => {
+            let s = setup();
+            let rows = experiments::table2::run_table2(&s);
+            experiments::table2::print(&rows);
+        }
+        "fig5" => {
+            let s = setup();
+            let res = experiments::fig5::run_fig5(&s);
+            experiments::fig5::print(&res);
+        }
+        "fig6" => {
+            let s = setup();
+            let res = experiments::fig6::run_fig6(&s);
+            experiments::fig6::print(&res);
+        }
+        "fig7" => {
+            let s = setup();
+            let res = experiments::fig7::run_fig7(&s);
+            experiments::fig7::print(&res);
+        }
+        "fig8" => {
+            let s = setup();
+            let res = experiments::fig8::run_fig8(&s);
+            experiments::fig8::print(&res);
+        }
+        "all" => {
+            let res = experiments::fig4::run_fig4(seed);
+            experiments::fig4::print(&res);
+            let s = setup();
+            let rows = experiments::table2::run_table2(&s);
+            experiments::table2::print(&rows);
+            let f5 = experiments::fig5::run_fig5(&s);
+            experiments::fig5::print(&f5);
+            let f6 = experiments::fig6::run_fig6(&s);
+            experiments::fig6::print(&f6);
+            let f7 = experiments::fig7::run_fig7(&s);
+            experiments::fig7::print(&f7);
+            let f8 = experiments::fig8::run_fig8(&s);
+            experiments::fig8::print(&f8);
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}
+
+fn run_sim(path: &std::path::Path) -> Result<()> {
+    let cfg = ExperimentConfig::load(path)?;
+    let cluster = cfg.build_cluster();
+    let trace = cfg.build_trace();
+    let sched = cfg.build_scheduler(&cluster)?;
+    println!(
+        "simulating: {} servers, {} users, {} jobs, {} tasks, policy {}",
+        cluster.len(),
+        trace.users.len(),
+        trace.jobs.len(),
+        trace.total_tasks(),
+        sched.name()
+    );
+    let report = sim::run(cluster, &trace, sched, cfg.sim_opts());
+    println!(
+        "done: {} placed, {} completed, cpu {:.1}%, mem {:.1}%, jobs {}",
+        report.tasks_placed,
+        report.tasks_completed,
+        report.avg_cpu_util * 100.0,
+        report.avg_mem_util * 100.0,
+        report.jobs.len()
+    );
+    Ok(())
+}
+
+fn run_solve() -> Result<()> {
+    println!("== exact fluid DRFH on the paper's Fig. 1 example ==");
+    let cluster = Cluster::fig1_example();
+    let users = vec![
+        FluidUser::unweighted(ResVec::cpu_mem(0.2, 1.0)),
+        FluidUser::unweighted(ResVec::cpu_mem(1.0, 0.2)),
+    ];
+    let a = allocator::solve(&cluster, &users);
+    for i in 0..2 {
+        println!(
+            "user {}: dominant share g = {:.4} (paper: 5/7 = {:.4}), tasks = {:.2}",
+            i + 1,
+            a.g[i],
+            5.0 / 7.0,
+            a.tasks[i]
+        );
+    }
+    let naive = allocator::per_server_drf::solve(
+        &cluster,
+        &[ResVec::cpu_mem(0.2, 1.0), ResVec::cpu_mem(1.0, 0.2)],
+    );
+    let per_user = naive.tasks_per_user();
+    println!(
+        "naive per-server DRF (paper Fig. 2): {:.1} and {:.1} tasks",
+        per_user[0], per_user[1]
+    );
+    Ok(())
+}
+
+fn run_picker_check(trials: usize, seed: u64) -> Result<()> {
+    if !runtime::artifacts_available() {
+        bail!("artifacts missing; run `make artifacts` first");
+    }
+    let rt = XlaRuntime::load_default()?;
+    println!("loaded variants: {:?}", rt.step_variants());
+    let mut rng = Pcg32::seeded(seed);
+    let mut agree = 0usize;
+    for t in 0..trials {
+        let (n, k, m) = (1 + rng.below(16), 1 + rng.below(128), 2);
+        let avail: Vec<f32> =
+            (0..k * m).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+        let demand: Vec<f32> =
+            (0..n * m).map(|_| rng.uniform(0.01, 0.5) as f32).collect();
+        let share: Vec<f32> =
+            (0..n).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+        let weight: Vec<f32> = vec![1.0; n];
+        let active: Vec<i32> =
+            (0..n).map(|_| i32::from(rng.f64() > 0.2)).collect();
+        let native = picker::sched_step(
+            &avail, &demand, &share, &weight, &active, n, k, m,
+        );
+        let xla = rt
+            .sched_step(&avail, &demand, &share, &weight, &active, n, k, m)?;
+        if native == xla {
+            agree += 1;
+        } else {
+            println!("trial {t}: native {native:?} != xla {xla:?}");
+        }
+    }
+    println!("{agree}/{trials} decisions identical");
+    if agree != trials {
+        bail!("picker parity failure");
+    }
+    Ok(())
+}
+
+fn run_serve(servers: usize, users: usize, tasks: usize) -> Result<()> {
+    let mut rng = Pcg32::seeded(1);
+    let cluster = Cluster::google_sample(servers, &mut rng);
+    let demands: Vec<ResVec> = (0..users)
+        .map(|_| {
+            ResVec::cpu_mem(rng.uniform(0.02, 0.3), rng.uniform(0.02, 0.3))
+        })
+        .collect();
+    let weights = vec![1.0; users];
+    let engine = if runtime::artifacts_available() {
+        Engine::Xla(runtime::artifacts_dir())
+    } else {
+        println!("(artifacts missing; using native engine)");
+        Engine::Native
+    };
+    let coord = Coordinator::spawn(&cluster, &demands, &weights, engine);
+    let t0 = std::time::Instant::now();
+    for u in 0..users {
+        coord.submit(u, tasks / users)?;
+    }
+    let stats = coord.stats()?;
+    let dt = t0.elapsed();
+    println!(
+        "placed {} of {} tasks in {:.1} ms ({:.0} placements/s), \
+         {} XLA calls ({:.1} decisions/call)",
+        stats.placed,
+        tasks,
+        dt.as_secs_f64() * 1e3,
+        stats.placed as f64 / dt.as_secs_f64(),
+        stats.xla_calls,
+        stats.decisions_per_call
+    );
+    coord.shutdown()?;
+    Ok(())
+}

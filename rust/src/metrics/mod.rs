@@ -1,0 +1,187 @@
+//! Simulation metrics: everything the paper's evaluation section plots.
+
+use crate::util::stats;
+
+/// A sampled time series (e.g. utilization over time, Fig. 5).
+#[derive(Clone, Debug, Default)]
+pub struct TimeSeries {
+    pub t: Vec<f64>,
+    pub v: Vec<f64>,
+}
+
+impl TimeSeries {
+    pub fn push(&mut self, t: f64, v: f64) {
+        self.t.push(t);
+        self.v.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.t.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t.is_empty()
+    }
+
+    /// Time-weighted average over the sampled horizon.
+    pub fn time_avg(&self) -> f64 {
+        if self.t.len() < 2 {
+            return stats::mean(&self.v);
+        }
+        let mut area = 0.0;
+        for i in 1..self.t.len() {
+            area += self.v[i - 1] * (self.t[i] - self.t[i - 1]);
+        }
+        let span = self.t[self.t.len() - 1] - self.t[0];
+        if span > 0.0 {
+            area / span
+        } else {
+            stats::mean(&self.v)
+        }
+    }
+
+    /// Average of samples within [lo, hi].
+    pub fn window_avg(&self, lo: f64, hi: f64) -> f64 {
+        let vals: Vec<f64> = self
+            .t
+            .iter()
+            .zip(&self.v)
+            .filter(|(&t, _)| t >= lo && t <= hi)
+            .map(|(_, &v)| v)
+            .collect();
+        stats::mean(&vals)
+    }
+}
+
+/// A completed job record.
+#[derive(Clone, Debug)]
+pub struct JobRecord {
+    pub job: usize,
+    pub user: usize,
+    pub num_tasks: usize,
+    pub submit: f64,
+    pub finish: f64,
+}
+
+impl JobRecord {
+    pub fn completion_time(&self) -> f64 {
+        self.finish - self.submit
+    }
+}
+
+/// Per-user task accounting for completion-ratio figures (Fig. 7/8).
+#[derive(Clone, Debug, Default)]
+pub struct UserTaskCounts {
+    pub submitted: usize,
+    pub completed: usize,
+}
+
+impl UserTaskCounts {
+    pub fn ratio(&self) -> f64 {
+        if self.submitted == 0 {
+            1.0
+        } else {
+            self.completed as f64 / self.submitted as f64
+        }
+    }
+}
+
+/// Job-size buckets used by Fig. 6b.
+pub const JCT_BUCKETS: [(usize, usize); 5] =
+    [(1, 10), (11, 50), (51, 100), (101, 500), (501, usize::MAX)];
+
+/// Label for a Fig. 6b bucket.
+pub fn bucket_label(b: (usize, usize)) -> String {
+    if b.1 == usize::MAX {
+        format!(">{}", b.0 - 1)
+    } else {
+        format!("{}-{}", b.0, b.1)
+    }
+}
+
+/// Mean completion-time reduction of `ours` vs `base` per job-size
+/// bucket, over jobs completed in both (paper Fig. 6b methodology).
+pub fn jct_reduction_by_bucket(
+    ours: &[JobRecord],
+    base: &[JobRecord],
+) -> Vec<(String, f64, usize)> {
+    use std::collections::HashMap;
+    let by_id: HashMap<usize, &JobRecord> =
+        base.iter().map(|j| (j.job, j)).collect();
+    JCT_BUCKETS
+        .iter()
+        .map(|&(lo, hi)| {
+            let mut reductions = Vec::new();
+            for j in ours {
+                if j.num_tasks < lo || j.num_tasks > hi {
+                    continue;
+                }
+                if let Some(b) = by_id.get(&j.job) {
+                    let ours_t = j.completion_time();
+                    let base_t = b.completion_time();
+                    if base_t > 0.0 {
+                        reductions.push(1.0 - ours_t / base_t);
+                    }
+                }
+            }
+            (
+                bucket_label((lo, hi)),
+                stats::mean(&reductions),
+                reductions.len(),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_avg_weighted() {
+        let mut ts = TimeSeries::default();
+        ts.push(0.0, 1.0);
+        ts.push(1.0, 0.0); // value 1.0 held for [0,1)
+        ts.push(3.0, 0.0); // value 0.0 held for [1,3)
+        assert!((ts.time_avg() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_avg_filters() {
+        let mut ts = TimeSeries::default();
+        for i in 0..10 {
+            ts.push(i as f64, i as f64);
+        }
+        assert!((ts.window_avg(5.0, 9.0) - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn completion_ratio() {
+        let c = UserTaskCounts { submitted: 4, completed: 3 };
+        assert!((c.ratio() - 0.75).abs() < 1e-12);
+        assert_eq!(UserTaskCounts::default().ratio(), 1.0);
+    }
+
+    #[test]
+    fn buckets_and_reduction() {
+        let ours = vec![JobRecord {
+            job: 0,
+            user: 0,
+            num_tasks: 5,
+            submit: 0.0,
+            finish: 50.0,
+        }];
+        let base = vec![JobRecord {
+            job: 0,
+            user: 0,
+            num_tasks: 5,
+            submit: 0.0,
+            finish: 100.0,
+        }];
+        let red = jct_reduction_by_bucket(&ours, &base);
+        assert_eq!(red[0].2, 1);
+        assert!((red[0].1 - 0.5).abs() < 1e-12);
+        assert_eq!(red[1].2, 0);
+        assert_eq!(bucket_label((501, usize::MAX)), ">500");
+    }
+}

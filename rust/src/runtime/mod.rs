@@ -1,0 +1,363 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and execute them from the scheduling hot
+//! path. Python never runs at request time — the artifacts directory is
+//! the only interface between the layers.
+//!
+//! Interchange is HLO *text* (see aot.py and /opt/xla-example/README.md:
+//! jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1's
+//! proto path rejects; the text parser reassigns ids).
+
+pub mod picker;
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled `sched_step` shape variant.
+#[derive(Clone, Debug)]
+pub struct StepVariant {
+    pub n: usize,
+    pub k: usize,
+    pub m: usize,
+    pub file: String,
+}
+
+/// One AOT-compiled `sched_loop` shape variant.
+#[derive(Clone, Debug)]
+pub struct LoopVariant {
+    pub n: usize,
+    pub k: usize,
+    pub m: usize,
+    pub steps: usize,
+    pub file: String,
+}
+
+/// Parsed artifacts/manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub step: Vec<StepVariant>,
+    pub loops: Vec<LoopVariant>,
+}
+
+impl Manifest {
+    /// Parse the manifest JSON emitted by `python/compile/aot.py`.
+    pub fn parse(data: &str) -> Result<Self> {
+        let v = json::parse(data).map_err(|e| anyhow!("manifest: {e}"))?;
+        let get = |entry: &Json, key: &str| -> Result<usize> {
+            entry
+                .get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest entry missing '{key}'"))
+        };
+        let file = |entry: &Json| -> Result<String> {
+            Ok(entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("manifest entry missing 'file'"))?
+                .to_string())
+        };
+        let step = v
+            .get("step")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'step'"))?
+            .iter()
+            .map(|e| {
+                Ok(StepVariant {
+                    n: get(e, "n")?,
+                    k: get(e, "k")?,
+                    m: get(e, "m")?,
+                    file: file(e)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let loops = v
+            .get("loop")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'loop'"))?
+            .iter()
+            .map(|e| {
+                Ok(LoopVariant {
+                    n: get(e, "n")?,
+                    k: get(e, "k")?,
+                    m: get(e, "m")?,
+                    steps: get(e, "steps")?,
+                    file: file(e)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { step, loops })
+    }
+}
+
+/// Result of a batched `sched_loop` invocation.
+#[derive(Clone, Debug)]
+pub struct LoopOutcome {
+    /// (user, server) decisions in order; -1/-1 entries are no-ops.
+    pub decisions: Vec<(i32, i32)>,
+    /// Updated availability matrix, row-major [k, m] (unpadded view).
+    pub avail: Vec<f32>,
+    /// Updated global dominant shares (unpadded).
+    pub share: Vec<f32>,
+    /// Updated pending task counts (unpadded).
+    pub pending: Vec<i32>,
+}
+
+/// Default artifacts directory, overridable with `DRFH_ARTIFACTS`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("DRFH_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// True when AOT artifacts are present (used by tests to skip
+/// gracefully when `make artifacts` has not run).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+struct CompiledStep {
+    v: StepVariant,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+struct CompiledLoop {
+    v: LoopVariant,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The XLA-backed scheduling runtime: a PJRT CPU client plus one
+/// compiled executable per AOT shape variant.
+pub struct XlaRuntime {
+    _client: xla::PjRtClient,
+    steps: Vec<CompiledStep>,
+    loops: Vec<CompiledLoop>,
+}
+
+impl XlaRuntime {
+    /// Load every artifact listed in `<dir>/manifest.json` and compile
+    /// it on a fresh PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let data = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Manifest::parse(&data)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+
+        let mut steps = Vec::new();
+        for v in manifest.step {
+            let exe = compile(&client, &dir.join(&v.file))?;
+            steps.push(CompiledStep { v, exe });
+        }
+        let mut loops = Vec::new();
+        for v in manifest.loops {
+            let exe = compile(&client, &dir.join(&v.file))?;
+            loops.push(CompiledLoop { v, exe });
+        }
+        // smallest-first so variant selection picks the tightest fit
+        steps.sort_by_key(|s| (s.v.n * s.v.k, s.v.n, s.v.k));
+        loops.sort_by_key(|l| (l.v.n * l.v.k, l.v.n, l.v.k));
+        Ok(XlaRuntime { _client: client, steps, loops })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&artifacts_dir())
+    }
+
+    /// Shape variants available for `sched_step`, (n, k, m).
+    pub fn step_variants(&self) -> Vec<(usize, usize, usize)> {
+        self.steps.iter().map(|s| (s.v.n, s.v.k, s.v.m)).collect()
+    }
+
+    /// One scheduling decision via the AOT `sched_step` graph.
+    ///
+    /// Inputs are the *live* sizes (n users, k servers, m resources);
+    /// they are padded into the smallest compiled variant. Returns
+    /// (user, server), -1/-1 when no placement is possible.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sched_step(
+        &self,
+        avail: &[f32],
+        demand: &[f32],
+        share: &[f32],
+        weight: &[f32],
+        active: &[i32],
+        n: usize,
+        k: usize,
+        m: usize,
+    ) -> Result<(i32, i32)> {
+        debug_assert_eq!(avail.len(), k * m);
+        debug_assert_eq!(demand.len(), n * m);
+        let cs = self
+            .steps
+            .iter()
+            .find(|s| s.v.n >= n && s.v.k >= k && s.v.m == m)
+            .ok_or_else(|| {
+                anyhow!("no sched_step variant fits n={n} k={k} m={m}")
+            })?;
+        let (vn, vk) = (cs.v.n, cs.v.k);
+
+        let avail_p = pad_matrix(avail, k, vk, m, 0.0);
+        let demand_p = pad_matrix(demand, n, vn, m, 0.0);
+        let share_p = pad_vec(share, vn, 0.0f32);
+        let weight_p = pad_vec(weight, vn, 1.0f32);
+        let active_p = pad_vec(active, vn, 0i32);
+
+        let lits = [
+            lit_f32(&avail_p, &[vk as i64, m as i64])?,
+            lit_f32(&demand_p, &[vn as i64, m as i64])?,
+            lit_f32(&share_p, &[vn as i64])?,
+            lit_f32(&weight_p, &[vn as i64])?,
+            lit_i32(&active_p, &[vn as i64])?,
+        ];
+        let out = cs
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute sched_step: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let (u_lit, s_lit) =
+            out.to_tuple2().map_err(|e| anyhow!("tuple2: {e:?}"))?;
+        let u = u_lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?[0];
+        let s = s_lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?[0];
+        Ok((u, s))
+    }
+
+    /// Batched decisions via the AOT `sched_loop` graph: up to the
+    /// variant's `steps` placements in a single PJRT call, with state
+    /// updates applied in-graph.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sched_loop(
+        &self,
+        avail: &[f32],
+        demand: &[f32],
+        share: &[f32],
+        weight: &[f32],
+        pending: &[i32],
+        n: usize,
+        k: usize,
+        m: usize,
+    ) -> Result<LoopOutcome> {
+        let cl = self
+            .loops
+            .iter()
+            .find(|l| l.v.n >= n && l.v.k >= k && l.v.m == m)
+            .ok_or_else(|| {
+                anyhow!("no sched_loop variant fits n={n} k={k} m={m}")
+            })?;
+        let (vn, vk) = (cl.v.n, cl.v.k);
+
+        let avail_p = pad_matrix(avail, k, vk, m, 0.0);
+        let demand_p = pad_matrix(demand, n, vn, m, 0.0);
+        let share_p = pad_vec(share, vn, 0.0f32);
+        let weight_p = pad_vec(weight, vn, 1.0f32);
+        let pending_p = pad_vec(pending, vn, 0i32);
+
+        let lits = [
+            lit_f32(&avail_p, &[vk as i64, m as i64])?,
+            lit_f32(&demand_p, &[vn as i64, m as i64])?,
+            lit_f32(&share_p, &[vn as i64])?,
+            lit_f32(&weight_p, &[vn as i64])?,
+            lit_i32(&pending_p, &[vn as i64])?,
+        ];
+        let out = cl
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute sched_loop: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let (dec, av, sh, pe) =
+            out.to_tuple4().map_err(|e| anyhow!("tuple4: {e:?}"))?;
+        let dec = dec.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?;
+        let av = av.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let sh = sh.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let pe = pe.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?;
+
+        let decisions =
+            dec.chunks(2).map(|c| (c[0], c[1])).collect::<Vec<_>>();
+        // strip padding back out
+        let mut avail_out = Vec::with_capacity(k * m);
+        for r in 0..k {
+            avail_out.extend_from_slice(&av[r * m..r * m + m]);
+        }
+        Ok(LoopOutcome {
+            decisions,
+            avail: avail_out,
+            share: sh[..n].to_vec(),
+            pending: pe[..n].to_vec(),
+        })
+    }
+
+    /// Max batch size of the loop variant that serves (n, k, m).
+    pub fn loop_steps(&self, n: usize, k: usize, m: usize) -> Option<usize> {
+        self.loops
+            .iter()
+            .find(|l| l.v.n >= n && l.v.k >= k && l.v.m == m)
+            .map(|l| l.v.steps)
+    }
+}
+
+fn compile(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
+}
+
+fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape f32: {e:?}"))
+}
+
+fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape i32: {e:?}"))
+}
+
+/// Pad a row-major [rows, m] matrix to [rows_to, m] with `fill`.
+fn pad_matrix(
+    data: &[f32],
+    rows: usize,
+    rows_to: usize,
+    m: usize,
+    fill: f32,
+) -> Vec<f32> {
+    let mut out = Vec::with_capacity(rows_to * m);
+    out.extend_from_slice(&data[..rows * m]);
+    out.resize(rows_to * m, fill);
+    out
+}
+
+fn pad_vec<T: Copy>(data: &[T], to: usize, fill: T) -> Vec<T> {
+    let mut out = data.to_vec();
+    out.resize(to, fill);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_helpers() {
+        let m = pad_matrix(&[1.0, 2.0, 3.0, 4.0], 2, 4, 2, 0.0);
+        assert_eq!(m, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+        let v = pad_vec(&[1i32, 2], 4, 9);
+        assert_eq!(v, vec![1, 2, 9, 9]);
+    }
+
+    #[test]
+    fn artifacts_dir_default() {
+        if std::env::var_os("DRFH_ARTIFACTS").is_none() {
+            assert!(artifacts_dir().ends_with("artifacts"));
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! Native (pure-Rust) picker mirroring the AOT `sched_step` semantics
+//! exactly — same f32 arithmetic, same operation order, same
+//! first-occurrence tie-breaking — so XLA and native decisions can be
+//! asserted identical in `rust/tests/picker_parity.rs` and swapped
+//! freely at runtime.
+
+/// Best feasible server per user: H(i,l) score (paper eq. 9) and
+/// argmin, f32 arithmetic identical to `kernels/bestfit.py`.
+pub fn score_servers(
+    avail: &[f32],
+    demand: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) -> (Vec<f32>, Vec<i32>) {
+    debug_assert_eq!(avail.len(), k * m);
+    debug_assert_eq!(demand.len(), n * m);
+    let mut best_h = vec![f32::INFINITY; n];
+    let mut best_s = vec![-1i32; n];
+    // precompute per-user demand ratios (relative to resource 0)
+    let mut dratio = vec![0.0f32; n * m];
+    for i in 0..n {
+        let d0 = demand[i * m];
+        let den = if d0 != 0.0 { d0 } else { 1.0 };
+        for r in 0..m {
+            dratio[i * m + r] = demand[i * m + r] / den;
+        }
+    }
+    for l in 0..k {
+        let a = &avail[l * m..l * m + m];
+        let a0 = a[0];
+        let aden = if a0 != 0.0 { a0 } else { 1.0 };
+        for i in 0..n {
+            // feasibility: all resources fit
+            let mut fit = true;
+            for r in 0..m {
+                if a[r] < demand[i * m + r] {
+                    fit = false;
+                    break;
+                }
+            }
+            if !fit {
+                continue;
+            }
+            let mut h = 0.0f32;
+            for r in 0..m {
+                h += (dratio[i * m + r] - a[r] / aden).abs();
+            }
+            if h < best_h[i] {
+                best_h[i] = h;
+                best_s[i] = l as i32;
+            }
+        }
+    }
+    (best_h, best_s)
+}
+
+/// Masked argmin of share/weight (first occurrence), mirroring
+/// `kernels/dominant.py`. -1 when no user is eligible.
+pub fn select_user(share: &[f32], weight: &[f32], mask: &[bool]) -> i32 {
+    let mut best = f32::INFINITY;
+    let mut idx = -1i32;
+    for i in 0..share.len() {
+        if !mask[i] {
+            continue;
+        }
+        let w = if weight[i] != 0.0 { weight[i] } else { 1.0 };
+        let key = share[i] / w;
+        if key < best {
+            best = key;
+            idx = i as i32;
+        }
+    }
+    idx
+}
+
+/// One progressive-filling decision, mirroring `model.sched_step`.
+///
+/// Decision-equivalent to scoring every (user, server) pair like the
+/// XLA kernel does, but restructured for a scalar CPU (§Perf, see
+/// EXPERIMENTS.md): pass 1 finds `has_fit[i]` with early exit on the
+/// first feasible server; only the *selected* user's servers are then
+/// H-scored. Selection and tie-breaking are unchanged, so decisions
+/// stay bit-identical to `score_servers` + `select_user`.
+pub fn sched_step(
+    avail: &[f32],
+    demand: &[f32],
+    share: &[f32],
+    weight: &[f32],
+    active: &[i32],
+    n: usize,
+    k: usize,
+    m: usize,
+) -> (i32, i32) {
+    // pass 1: eligibility = active AND fits somewhere (early exit)
+    let mut best = f32::INFINITY;
+    let mut u = -1i32;
+    for i in 0..n {
+        if active[i] == 0 {
+            continue;
+        }
+        let w = if weight[i] != 0.0 { weight[i] } else { 1.0 };
+        let key = share[i] / w;
+        if key >= best {
+            continue; // cannot win selection; skip the fit scan
+        }
+        let d = &demand[i * m..i * m + m];
+        let fits_somewhere = (0..k).any(|l| {
+            let a = &avail[l * m..l * m + m];
+            (0..m).all(|r| a[r] >= d[r])
+        });
+        if fits_somewhere {
+            best = key;
+            u = i as i32;
+        }
+    }
+    if u < 0 {
+        return (-1, -1);
+    }
+    // pass 2: best-fit server for the selected user only
+    let ui = u as usize;
+    let d = &demand[ui * m..ui * m + m];
+    let d0 = d[0];
+    let dden = if d0 != 0.0 { d0 } else { 1.0 };
+    let mut best_h = f32::INFINITY;
+    let mut best_s = -1i32;
+    for l in 0..k {
+        let a = &avail[l * m..l * m + m];
+        let mut fit = true;
+        for r in 0..m {
+            if a[r] < d[r] {
+                fit = false;
+                break;
+            }
+        }
+        if !fit {
+            continue;
+        }
+        let aden = if a[0] != 0.0 { a[0] } else { 1.0 };
+        let mut h = 0.0f32;
+        for r in 0..m {
+            h += (d[r] / dden - a[r] / aden).abs();
+        }
+        if h < best_h {
+            best_h = h;
+            best_s = l as i32;
+        }
+    }
+    (u, best_s)
+}
+
+/// `steps` decisions with the same state updates as `model.sched_loop`.
+#[allow(clippy::too_many_arguments)]
+pub fn sched_loop(
+    avail: &mut [f32],
+    demand: &[f32],
+    share: &mut [f32],
+    weight: &[f32],
+    pending: &mut [i32],
+    n: usize,
+    k: usize,
+    m: usize,
+    steps: usize,
+) -> Vec<(i32, i32)> {
+    let mut decisions = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let active: Vec<i32> =
+            pending.iter().map(|&p| i32::from(p > 0)).collect();
+        let (u, s) = sched_step(avail, demand, share, weight, &active, n, k, m);
+        if u >= 0 {
+            let (ui, si) = (u as usize, s as usize);
+            for r in 0..m {
+                avail[si * m + r] -= demand[ui * m + r];
+            }
+            let dom = (0..m)
+                .map(|r| demand[ui * m + r])
+                .fold(f32::MIN, f32::max);
+            share[ui] += dom;
+            pending[ui] -= 1;
+        }
+        decisions.push((u, s));
+    }
+    decisions
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_routing() {
+        // server 0: (2 CPU, 12 GB); server 1: (12 CPU, 2 GB)
+        let avail = [2.0, 12.0, 12.0, 2.0];
+        let demand = [0.2, 1.0, 1.0, 0.2]; // u0 mem-heavy, u1 cpu-heavy
+        let (_, bs) = score_servers(&avail, &demand, 2, 2, 2);
+        assert_eq!(bs, vec![0, 1]);
+    }
+
+    #[test]
+    fn select_user_ties_first_occurrence() {
+        let share = [0.5, 0.5, 0.2, 0.2];
+        let weight = [1.0; 4];
+        let mask = [true, true, true, true];
+        assert_eq!(select_user(&share, &weight, &mask), 2);
+        let mask = [true, true, false, true];
+        assert_eq!(select_user(&share, &weight, &mask), 3);
+        assert_eq!(select_user(&share, &weight, &[false; 4]), -1);
+    }
+
+    #[test]
+    fn sched_step_no_fit_returns_minus_one() {
+        let avail = [0.01f32, 0.01];
+        let demand = [0.5f32, 0.5];
+        let (u, s) = sched_step(
+            &avail,
+            &demand,
+            &[0.0],
+            &[1.0],
+            &[1],
+            1,
+            1,
+            2,
+        );
+        assert_eq!((u, s), (-1, -1));
+    }
+
+    #[test]
+    fn sched_loop_places_until_pending_exhausted() {
+        let mut avail = vec![10.0f32, 10.0];
+        let demand = vec![1.0f32, 1.0];
+        let mut share = vec![0.0f32];
+        let mut pending = vec![3i32];
+        let dec = sched_loop(
+            &mut avail,
+            &demand,
+            &mut share,
+            &[1.0],
+            &mut pending,
+            1,
+            1,
+            2,
+            5,
+        );
+        let placed = dec.iter().filter(|d| d.0 >= 0).count();
+        assert_eq!(placed, 3);
+        assert_eq!(pending[0], 0);
+        assert!((avail[0] - 7.0).abs() < 1e-6);
+        assert!((share[0] - 3.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,76 @@
+//! First-Fit DRFH (paper Sec. V-B): progressive filling that places the
+//! chosen user's task on the *first* (lowest-index) server that fits —
+//! the simpler sibling of Best-Fit, kept as an evaluation baseline
+//! (Fig. 5 compares the two).
+
+use super::{min_share_user, Pick, Scheduler, UserState};
+use crate::cluster::{Cluster, ResVec};
+
+/// The First-Fit DRFH policy.
+#[derive(Default)]
+pub struct FirstFitDrfh;
+
+/// First server that fits `demand`, by index.
+pub fn first_server(cluster: &Cluster, demand: &ResVec) -> Option<usize> {
+    cluster.servers.iter().position(|s| s.fits(demand))
+}
+
+impl Scheduler for FirstFitDrfh {
+    fn name(&self) -> &'static str {
+        "firstfit-drfh"
+    }
+
+    fn pick(
+        &mut self,
+        cluster: &Cluster,
+        users: &[UserState],
+        eligible: &[bool],
+    ) -> Pick {
+        match min_share_user(users, eligible) {
+            None => Pick::Idle,
+            Some(u) => match first_server(cluster, &users[u].demand) {
+                Some(l) => Pick::Place { user: u, server: l },
+                None => Pick::Blocked { user: u },
+            },
+        }
+    }
+
+    fn can_fit(
+        &self,
+        cluster: &Cluster,
+        users: &[UserState],
+        user: usize,
+        server: usize,
+    ) -> bool {
+        cluster.servers[server].fits(&users[user].demand)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Server;
+
+    #[test]
+    fn takes_lowest_index_server() {
+        let cluster = Cluster::new(vec![
+            Server::new(ResVec::cpu_mem(0.1, 0.1)), // too small
+            Server::new(ResVec::cpu_mem(1.0, 1.0)),
+            Server::new(ResVec::cpu_mem(5.0, 5.0)),
+        ]);
+        let users = vec![UserState {
+            demand: ResVec::cpu_mem(0.5, 0.5),
+            weight: 1.0,
+            pending: 1,
+            running: 0,
+            dom_share: 0.0,
+            usage: ResVec::zeros(2),
+            dom_delta: 0.1,
+        }];
+        let mut sched = FirstFitDrfh;
+        assert_eq!(
+            sched.pick(&cluster, &users, &[true]),
+            Pick::Place { user: 0, server: 1 }
+        );
+    }
+}

@@ -1,0 +1,160 @@
+//! Discrete task schedulers (paper Sec. V-B and the evaluation
+//! baselines).
+//!
+//! A scheduler is a *policy*: given the current cluster and user states
+//! it picks the next `(user, server)` placement. The simulation engine
+//! owns all state mutation — committing resources, maintaining dominant
+//! shares, firing events — so policies stay side-effect-free and
+//! trivially swappable.
+//!
+//! ## The blocked-user protocol
+//!
+//! Concluding "nothing can be placed" naively costs O(n·k) at every
+//! scheduling opportunity, which dominates saturated-cluster runs. The
+//! engine therefore caches a *blocked* set: when `pick` returns
+//! [`Pick::Blocked`], the user is excluded from `eligible` until some
+//! server frees resources, at which point the engine re-checks only
+//! that server via [`Scheduler::can_fit`]. Demands are static per user
+//! (paper Sec. III-A), so a blocked verdict stays valid until capacity
+//! is released.
+
+pub mod best_fit;
+pub mod first_fit;
+pub mod slots;
+pub mod xla;
+
+pub use best_fit::BestFitDrfh;
+pub use first_fit::FirstFitDrfh;
+pub use slots::SlotsScheduler;
+pub use xla::XlaBestFit;
+
+use crate::cluster::{Cluster, ResVec};
+
+/// Per-user scheduling state maintained by the engine.
+#[derive(Clone, Debug)]
+pub struct UserState {
+    /// Per-task demand (absolute units).
+    pub demand: ResVec,
+    /// Fair-share weight.
+    pub weight: f64,
+    /// Queued (not yet placed) tasks.
+    pub pending: usize,
+    /// Currently running tasks.
+    pub running: usize,
+    /// Global dominant share currently held (pool-share units).
+    pub dom_share: f64,
+    /// Resources currently held (absolute units).
+    pub usage: ResVec,
+    /// Per-task dominant-resource demand in pool-share units
+    /// (engine-precomputed: max_r demand_r / total_r).
+    pub dom_delta: f64,
+}
+
+impl UserState {
+    /// Weighted progressive-filling key: lowest goes first.
+    #[inline]
+    pub fn share_key(&self) -> f64 {
+        self.dom_share / self.weight
+    }
+}
+
+/// Outcome of one policy invocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pick {
+    /// Place one task of `user` on `server`.
+    Place { user: usize, server: usize },
+    /// `user` would be served next but fits on no server right now;
+    /// the engine removes it from `eligible` until capacity frees up.
+    Blocked { user: usize },
+    /// No eligible user has pending work.
+    Idle,
+}
+
+/// A scheduling policy. (Not `Send`: the XLA-backed policy wraps PJRT
+/// handles that must stay on their creating thread.)
+pub trait Scheduler {
+    /// Human-readable policy name (used in reports).
+    fn name(&self) -> &'static str;
+
+    /// Pick the next placement among users with `eligible[i] == true`
+    /// (the engine guarantees those have pending > 0). Must not mutate
+    /// cluster/user state.
+    fn pick(
+        &mut self,
+        cluster: &Cluster,
+        users: &[UserState],
+        eligible: &[bool],
+    ) -> Pick;
+
+    /// Could one task of `user` be placed on `server` right now? Used
+    /// by the engine to unblock users when `server` frees capacity.
+    fn can_fit(
+        &self,
+        cluster: &Cluster,
+        users: &[UserState],
+        user: usize,
+        server: usize,
+    ) -> bool;
+
+    /// May placements exceed server capacity? Only the Slots baseline
+    /// says yes (it ignores real demands); the engine then applies the
+    /// processor-sharing slowdown.
+    fn allows_overcommit(&self) -> bool {
+        false
+    }
+
+    /// Notification: a task released capacity on `server`. Lets
+    /// policies maintain incremental state (the Slots free-slot cursor).
+    fn on_free(&mut self, _server: usize) {}
+}
+
+/// Lowest weighted-share eligible user (first on ties) — the
+/// progressive-filling selection shared by the DRFH policies.
+pub fn min_share_user(users: &[UserState], eligible: &[bool]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for i in 0..users.len() {
+        if !eligible[i] || users[i].pending == 0 {
+            continue;
+        }
+        match best {
+            Some(b) if users[b].share_key() <= users[i].share_key() => {}
+            _ => best = Some(i),
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn user(share: f64, pending: usize) -> UserState {
+        UserState {
+            demand: ResVec::cpu_mem(0.1, 0.1),
+            weight: 1.0,
+            pending,
+            running: 0,
+            dom_share: share,
+            usage: ResVec::zeros(2),
+            dom_delta: 0.01,
+        }
+    }
+
+    #[test]
+    fn min_share_respects_eligibility_and_pending() {
+        let users =
+            vec![user(0.5, 1), user(0.1, 0), user(0.2, 3), user(0.2, 1)];
+        let all = vec![true; 4];
+        assert_eq!(min_share_user(&users, &all), Some(2)); // tie -> lowest idx
+        let mask = vec![true, true, false, true];
+        assert_eq!(min_share_user(&users, &mask), Some(3));
+        assert_eq!(min_share_user(&users, &[false; 4]), None);
+    }
+
+    #[test]
+    fn weighted_key() {
+        let mut u = user(0.4, 1);
+        u.weight = 2.0;
+        assert!((u.share_key() - 0.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,111 @@
+//! XLA-backed Best-Fit DRFH: the same policy as
+//! [`super::BestFitDrfh`], but every decision is computed by the
+//! AOT-compiled Pallas/JAX kernel through the PJRT runtime.
+//!
+//! Used to (a) prove the three layers compose — decision-for-decision
+//! parity with the native policy is asserted in
+//! `rust/tests/picker_parity.rs` — and (b) batch placements: the
+//! `sched_loop` artifact performs up to 64 decisions per PJRT call for
+//! coordinator-style workloads (see `coordinator`).
+
+use super::{Pick, Scheduler, UserState};
+use crate::cluster::Cluster;
+use crate::runtime::XlaRuntime;
+use std::sync::Arc;
+
+/// Best-Fit DRFH evaluated by the XLA runtime.
+pub struct XlaBestFit {
+    rt: Arc<XlaRuntime>,
+    /// scratch buffers reused across picks
+    avail: Vec<f32>,
+    demand: Vec<f32>,
+    share: Vec<f32>,
+    weight: Vec<f32>,
+    active: Vec<i32>,
+}
+
+impl XlaBestFit {
+    pub fn new(rt: Arc<XlaRuntime>) -> Self {
+        XlaBestFit {
+            rt,
+            avail: Vec::new(),
+            demand: Vec::new(),
+            share: Vec::new(),
+            weight: Vec::new(),
+            active: Vec::new(),
+        }
+    }
+
+    fn fill_buffers(
+        &mut self,
+        cluster: &Cluster,
+        users: &[UserState],
+        eligible: &[bool],
+    ) {
+        let m = cluster.dims();
+        self.avail.clear();
+        for s in &cluster.servers {
+            let a = s.available();
+            for r in 0..m {
+                self.avail.push(a[r] as f32);
+            }
+        }
+        self.demand.clear();
+        self.share.clear();
+        self.weight.clear();
+        self.active.clear();
+        for (i, u) in users.iter().enumerate() {
+            for r in 0..m {
+                self.demand.push(u.demand[r] as f32);
+            }
+            self.share.push(u.dom_share as f32);
+            self.weight.push(u.weight as f32);
+            self.active.push(i32::from(u.pending > 0 && eligible[i]));
+        }
+    }
+}
+
+impl Scheduler for XlaBestFit {
+    fn name(&self) -> &'static str {
+        "bestfit-drfh-xla"
+    }
+
+    fn pick(
+        &mut self,
+        cluster: &Cluster,
+        users: &[UserState],
+        eligible: &[bool],
+    ) -> Pick {
+        self.fill_buffers(cluster, users, eligible);
+        let (u, s) = self
+            .rt
+            .sched_step(
+                &self.avail,
+                &self.demand,
+                &self.share,
+                &self.weight,
+                &self.active,
+                users.len(),
+                cluster.len(),
+                cluster.dims(),
+            )
+            .expect("XLA sched_step failed");
+        // the kernel already skips users with no feasible server, so a
+        // negative result means nothing can be placed at all
+        if u < 0 || s < 0 {
+            Pick::Idle
+        } else {
+            Pick::Place { user: u as usize, server: s as usize }
+        }
+    }
+
+    fn can_fit(
+        &self,
+        cluster: &Cluster,
+        users: &[UserState],
+        user: usize,
+        server: usize,
+    ) -> bool {
+        cluster.servers[server].fits(&users[user].demand)
+    }
+}

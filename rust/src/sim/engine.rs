@@ -1,0 +1,513 @@
+//! Discrete-event cluster simulator.
+//!
+//! Drives a [`Trace`] through a [`Scheduler`] over a [`Cluster`] and
+//! records everything the paper's evaluation section plots: utilization
+//! time series (Fig. 5), per-user share trajectories (Fig. 4), job
+//! completion times (Fig. 6), and per-user task completion ratios
+//! (Fig. 7/8).
+//!
+//! ## Processor sharing
+//!
+//! DRFH schedulers never exceed server capacity, so their tasks run at
+//! rate 1 and a task placed at `t` finishes at `t + duration`. The Slots
+//! baseline, however, ignores real demands and can overcommit a server;
+//! we model the resulting contention as egalitarian processor sharing
+//! with thrashing: every task on server `l` progresses at rate
+//! `f_l = min(1, 1/load_l³)` where `load_l = max_r usage_lr / c_lr`
+//! (the cubic term models paging/scheduling overhead; see
+//! `cluster::Server::rate`). Each server keeps a virtual
+//! clock advancing at `f_l`; a task with service demand `w` placed at
+//! virtual time `V` completes when the clock reaches `V + w`. Rate
+//! changes (placements/completions) reschedule the server's next
+//! completion event; stale events are skipped via a per-server
+//! generation counter.
+
+use crate::cluster::{Cluster, ResVec};
+use crate::metrics::{JobRecord, TimeSeries, UserTaskCounts};
+use crate::sched::{Pick, Scheduler, UserState};
+use crate::workload::Trace;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::collections::VecDeque;
+
+/// Simulation options.
+#[derive(Clone, Debug)]
+pub struct SimOpts {
+    /// Stop the clock here (seconds). Tasks still running are counted
+    /// as incomplete (paper Fig. 7/8 use completion *ratios*).
+    pub horizon: f64,
+    /// Metrics sampling period (seconds).
+    pub sample_dt: f64,
+    /// Record per-user share time series (Fig. 4 needs it; the
+    /// 2,000-server runs don't and save the memory).
+    pub track_user_series: bool,
+}
+
+impl Default for SimOpts {
+    fn default() -> Self {
+        SimOpts { horizon: 86_400.0, sample_dt: 30.0, track_user_series: false }
+    }
+}
+
+/// Everything measured during a run.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub scheduler: String,
+    pub cpu_util: TimeSeries,
+    pub mem_util: TimeSeries,
+    /// Per-user global dominant share over time (when tracked).
+    pub user_dom_share: Vec<TimeSeries>,
+    /// Per-user CPU / memory share of the pool over time (when tracked).
+    pub user_cpu_share: Vec<TimeSeries>,
+    pub user_mem_share: Vec<TimeSeries>,
+    /// Jobs that completed before the horizon.
+    pub jobs: Vec<JobRecord>,
+    pub user_tasks: Vec<UserTaskCounts>,
+    pub tasks_placed: usize,
+    pub tasks_completed: usize,
+    /// Time-averaged utilizations over the horizon.
+    pub avg_cpu_util: f64,
+    pub avg_mem_util: f64,
+}
+
+// ---------------------------------------------------------------- events
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum EventKind {
+    Arrival(usize),
+    ServerCheck { server: usize, gen: u64 },
+    Sample,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest first
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+// ------------------------------------------------------------- run state
+
+#[derive(Clone, Copy, Debug)]
+struct RunEntry {
+    vfinish: f64,
+    seq: u64,
+    user: u32,
+    job: u32,
+}
+
+impl PartialEq for RunEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for RunEntry {}
+impl PartialOrd for RunEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for RunEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap on (vfinish, seq)
+        other
+            .vfinish
+            .total_cmp(&self.vfinish)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct ServerSim {
+    vtime: f64,
+    t_last: f64,
+    rate: f64,
+    gen: u64,
+    running: BinaryHeap<RunEntry>,
+}
+
+impl ServerSim {
+    fn new() -> Self {
+        ServerSim {
+            vtime: 0.0,
+            t_last: 0.0,
+            rate: 1.0,
+            gen: 0,
+            running: BinaryHeap::new(),
+        }
+    }
+
+    #[inline]
+    fn advance(&mut self, now: f64) {
+        if now > self.t_last {
+            self.vtime += self.rate * (now - self.t_last);
+            self.t_last = now;
+        }
+    }
+}
+
+struct JobSim {
+    remaining: usize,
+    submit: f64,
+    num_tasks: usize,
+    user: usize,
+}
+
+/// A job's un-placed tasks in a user's queue.
+#[derive(Clone)]
+struct JobQueue {
+    job: u32,
+    tasks: VecDeque<f64>,
+}
+
+/// The simulator.
+pub struct Simulation<'a> {
+    pub cluster: Cluster,
+    pub users: Vec<UserState>,
+    scheduler: Box<dyn Scheduler + 'a>,
+    opts: SimOpts,
+
+    /// Per-user queue of jobs; each job holds its un-placed task
+    /// durations. Tasks are drawn round-robin across the user's jobs
+    /// (Hadoop Fair Scheduler semantics: fair across jobs within a
+    /// pool), so a small job is never buried behind an earlier big one.
+    queues: Vec<VecDeque<JobQueue>>,
+    jobs: Vec<JobSim>,
+    servers: Vec<ServerSim>,
+    events: BinaryHeap<Event>,
+    seq: u64,
+    now: f64,
+
+    eligible: Vec<bool>,
+    blocked: Vec<bool>,
+
+    report: SimReport,
+    total: ResVec,
+    /// Per-job task durations, consumed at arrival.
+    trace_tasks: Vec<Vec<f64>>,
+}
+
+impl<'a> Simulation<'a> {
+    /// Build a simulation for `trace` on `cluster` under `scheduler`.
+    pub fn new(
+        cluster: Cluster,
+        trace: &Trace,
+        scheduler: Box<dyn Scheduler + 'a>,
+        opts: SimOpts,
+    ) -> Self {
+        trace.validate().expect("invalid trace");
+        let total = cluster.total_capacity();
+        let m = cluster.dims();
+        let users: Vec<UserState> = trace
+            .users
+            .iter()
+            .map(|u| UserState {
+                demand: u.demand,
+                weight: u.weight,
+                pending: 0,
+                running: 0,
+                dom_share: 0.0,
+                usage: ResVec::zeros(m),
+                dom_delta: u.demand.div(&total).max(),
+            })
+            .collect();
+        let n = users.len();
+        let k = cluster.len();
+        let name = scheduler.name().to_string();
+
+        let mut sim = Simulation {
+            cluster,
+            users,
+            scheduler,
+            opts: opts.clone(),
+            queues: vec![VecDeque::new(); n],
+            jobs: trace
+                .jobs
+                .iter()
+                .map(|j| JobSim {
+                    remaining: j.num_tasks(),
+                    submit: j.submit,
+                    num_tasks: j.num_tasks(),
+                    user: j.user,
+                })
+                .collect(),
+            servers: (0..k).map(|_| ServerSim::new()).collect(),
+            events: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+            eligible: vec![true; n],
+            blocked: vec![false; n],
+            report: SimReport {
+                scheduler: name,
+                cpu_util: TimeSeries::default(),
+                mem_util: TimeSeries::default(),
+                user_dom_share: vec![TimeSeries::default(); if opts.track_user_series { n } else { 0 }],
+                user_cpu_share: vec![TimeSeries::default(); if opts.track_user_series { n } else { 0 }],
+                user_mem_share: vec![TimeSeries::default(); if opts.track_user_series { n } else { 0 }],
+                jobs: Vec::new(),
+                user_tasks: vec![UserTaskCounts::default(); n],
+                tasks_placed: 0,
+                tasks_completed: 0,
+                avg_cpu_util: 0.0,
+                avg_mem_util: 0.0,
+            },
+            total,
+            trace_tasks: trace
+                .jobs
+                .iter()
+                .map(|j| j.tasks.iter().map(|t| t.duration).collect())
+                .collect(),
+        };
+        for (j, job) in trace.jobs.iter().enumerate() {
+            if job.submit <= opts.horizon {
+                sim.push_event(job.submit, EventKind::Arrival(j));
+            }
+        }
+        sim.push_event(0.0, EventKind::Sample);
+        sim
+    }
+
+    fn push_event(&mut self, time: f64, kind: EventKind) {
+        self.seq += 1;
+        self.events.push(Event { time, seq: self.seq, kind });
+    }
+
+    /// Run to completion (horizon or event exhaustion) and return the
+    /// report.
+    ///
+    /// All events sharing a timestamp are applied *before* the
+    /// scheduler runs, so simultaneous arrivals compete fairly
+    /// (progressive filling sees every queued task, not an accident of
+    /// event ordering).
+    pub fn run(mut self) -> SimReport {
+        while let Some(ev) = self.events.pop() {
+            if ev.time > self.opts.horizon {
+                break;
+            }
+            self.now = ev.time;
+            let mut need_sched = self.apply(ev.kind);
+            while let Some(next) = self.events.peek() {
+                if next.time > self.now {
+                    break;
+                }
+                let next = self.events.pop().unwrap();
+                need_sched |= self.apply(next.kind);
+            }
+            if need_sched {
+                self.schedule_loop();
+            }
+        }
+        self.report.avg_cpu_util = self.report.cpu_util.time_avg();
+        self.report.avg_mem_util = self.report.mem_util.time_avg();
+        self.report
+    }
+
+    /// Apply one event's state changes; returns true when a scheduling
+    /// opportunity arises (arrival or completion).
+    fn apply(&mut self, kind: EventKind) -> bool {
+        match kind {
+            EventKind::Arrival(j) => self.on_arrival(j),
+            EventKind::ServerCheck { server, gen } => {
+                self.on_server_check(server, gen)
+            }
+            EventKind::Sample => {
+                self.on_sample();
+                false
+            }
+        }
+    }
+
+    fn on_arrival(&mut self, j: usize) -> bool {
+        let user = self.jobs[j].user;
+        let durations = std::mem::take(&mut self.trace_tasks[j]);
+        self.queues[user].push_back(JobQueue {
+            job: j as u32,
+            tasks: durations.into(),
+        });
+        self.users[user].pending += self.jobs[j].num_tasks;
+        self.report.user_tasks[user].submitted += self.jobs[j].num_tasks;
+        true
+    }
+
+    fn on_server_check(&mut self, l: usize, gen: u64) -> bool {
+        if self.servers[l].gen != gen {
+            return false; // stale event
+        }
+        self.servers[l].advance(self.now);
+        let mut completed_any = false;
+        while let Some(top) = self.servers[l].running.peek() {
+            if top.vfinish <= self.servers[l].vtime + 1e-9 {
+                let entry = self.servers[l].running.pop().unwrap();
+                self.complete_task(l, entry);
+                completed_any = true;
+            } else {
+                break;
+            }
+        }
+        self.refresh_server(l);
+        if completed_any {
+            self.unblock_for_server(l);
+        }
+        completed_any
+    }
+
+    fn complete_task(&mut self, l: usize, entry: RunEntry) {
+        let u = entry.user as usize;
+        let demand = self.users[u].demand;
+        self.cluster.servers[l].release(&demand);
+        self.cluster.servers[l].tasks -= 1;
+        self.scheduler.on_free(l);
+        self.users[u].running -= 1;
+        self.users[u].dom_share -= self.users[u].dom_delta;
+        if self.users[u].dom_share < 0.0 {
+            self.users[u].dom_share = 0.0;
+        }
+        self.users[u].usage.sub_assign(&demand);
+        self.report.tasks_completed += 1;
+        self.report.user_tasks[u].completed += 1;
+        let j = entry.job as usize;
+        self.jobs[j].remaining -= 1;
+        if self.jobs[j].remaining == 0 {
+            self.report.jobs.push(JobRecord {
+                job: j,
+                user: self.jobs[j].user,
+                num_tasks: self.jobs[j].num_tasks,
+                submit: self.jobs[j].submit,
+                finish: self.now,
+            });
+        }
+    }
+
+    /// Recompute a server's PS rate and (re)schedule its next
+    /// completion check.
+    fn refresh_server(&mut self, l: usize) {
+        let srv = &mut self.servers[l];
+        srv.rate = self.cluster.servers[l].rate();
+        srv.gen += 1;
+        if let Some(top) = srv.running.peek() {
+            let dt = (top.vfinish - srv.vtime).max(0.0) / srv.rate;
+            let eta = self.now + dt;
+            let gen = srv.gen;
+            self.push_event(eta, EventKind::ServerCheck { server: l, gen });
+        }
+    }
+
+    fn unblock_for_server(&mut self, l: usize) {
+        for u in 0..self.users.len() {
+            if self.blocked[u]
+                && self.scheduler.can_fit(&self.cluster, &self.users, u, l)
+            {
+                self.blocked[u] = false;
+                self.eligible[u] = true;
+            }
+        }
+    }
+
+    fn schedule_loop(&mut self) {
+        loop {
+            match self
+                .scheduler
+                .pick(&self.cluster, &self.users, &self.eligible)
+            {
+                Pick::Idle => break,
+                Pick::Blocked { user } => {
+                    self.blocked[user] = true;
+                    self.eligible[user] = false;
+                }
+                Pick::Place { user, server } => {
+                    self.place(user, server);
+                }
+            }
+        }
+    }
+
+    fn place(&mut self, u: usize, l: usize) {
+        let demand = self.users[u].demand;
+        if !self.scheduler.allows_overcommit() {
+            debug_assert!(
+                self.cluster.servers[l].fits(&demand),
+                "scheduler violated capacity"
+            );
+        }
+        // round-robin across the user's jobs: take one task from the
+        // front job, then rotate it to the back if it has more
+        let mut jq =
+            self.queues[u].pop_front().expect("placement without pending");
+        let duration = jq.tasks.pop_front().expect("empty job queue");
+        let job = jq.job;
+        if !jq.tasks.is_empty() {
+            self.queues[u].push_back(jq);
+        }
+        self.users[u].pending -= 1;
+        self.users[u].running += 1;
+        self.users[u].dom_share += self.users[u].dom_delta;
+        self.users[u].usage.add_assign(&demand);
+        self.cluster.servers[l].commit(&demand);
+        self.cluster.servers[l].tasks += 1;
+        self.report.tasks_placed += 1;
+
+        self.servers[l].advance(self.now);
+        self.seq += 1;
+        let entry = RunEntry {
+            vfinish: self.servers[l].vtime + duration,
+            seq: self.seq,
+            user: u as u32,
+            job,
+        };
+        self.servers[l].running.push(entry);
+        self.refresh_server(l);
+    }
+
+    fn on_sample(&mut self) {
+        let util = self.cluster.utilization();
+        self.report.cpu_util.push(self.now, util[0]);
+        if self.cluster.dims() > 1 {
+            self.report.mem_util.push(self.now, util[1]);
+        }
+        if self.opts.track_user_series {
+            for (u, us) in self.users.iter().enumerate() {
+                self.report.user_dom_share[u].push(self.now, us.dom_share);
+                self.report.user_cpu_share[u]
+                    .push(self.now, us.usage[0] / self.total[0]);
+                if self.cluster.dims() > 1 {
+                    self.report.user_mem_share[u]
+                        .push(self.now, us.usage[1] / self.total[1]);
+                }
+            }
+        }
+        let next = self.now + self.opts.sample_dt;
+        if next <= self.opts.horizon {
+            self.push_event(next, EventKind::Sample);
+        }
+    }
+}
+
+/// Convenience: build and run in one call.
+pub fn run(
+    cluster: Cluster,
+    trace: &Trace,
+    scheduler: Box<dyn Scheduler + '_>,
+    opts: SimOpts,
+) -> SimReport {
+    Simulation::new(cluster, trace, scheduler, opts).run()
+}

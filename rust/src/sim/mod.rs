@@ -1,0 +1,234 @@
+//! Discrete-event cluster simulation: the engine behind every figure in
+//! the paper's evaluation (Sec. VI).
+
+pub mod engine;
+
+pub use engine::{run, SimOpts, SimReport, Simulation};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ResVec};
+    use crate::sched::{BestFitDrfh, FirstFitDrfh, SlotsScheduler};
+    use crate::workload::{JobSpec, TaskSpec, Trace, UserSpec};
+
+    fn one_user_trace(tasks: usize, duration: f64) -> Trace {
+        Trace {
+            users: vec![UserSpec {
+                demand: ResVec::cpu_mem(1.0, 1.0),
+                weight: 1.0,
+            }],
+            jobs: vec![JobSpec {
+                id: 0,
+                user: 0,
+                submit: 0.0,
+                tasks: vec![TaskSpec { duration }; tasks],
+            }],
+        }
+    }
+
+    #[test]
+    fn single_task_completes_at_duration() {
+        let cluster =
+            Cluster::from_capacities(&[ResVec::cpu_mem(2.0, 2.0)]);
+        let r = run(
+            cluster,
+            &one_user_trace(1, 10.0),
+            Box::new(BestFitDrfh::default()),
+            SimOpts { horizon: 100.0, sample_dt: 1.0, track_user_series: false },
+        );
+        assert_eq!(r.tasks_placed, 1);
+        assert_eq!(r.tasks_completed, 1);
+        assert_eq!(r.jobs.len(), 1);
+        assert!((r.jobs[0].finish - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn capacity_serializes_tasks() {
+        // server fits one task at a time; 3 tasks of 10 s each -> job
+        // completes at 30 s
+        let cluster =
+            Cluster::from_capacities(&[ResVec::cpu_mem(1.0, 1.0)]);
+        let r = run(
+            cluster,
+            &one_user_trace(3, 10.0),
+            Box::new(BestFitDrfh::default()),
+            SimOpts { horizon: 100.0, sample_dt: 1.0, track_user_series: false },
+        );
+        assert_eq!(r.tasks_completed, 3);
+        assert!((r.jobs[0].finish - 30.0).abs() < 1e-6, "{}", r.jobs[0].finish);
+    }
+
+    #[test]
+    fn parallel_servers_run_concurrently() {
+        let cluster = Cluster::from_capacities(&[
+            ResVec::cpu_mem(1.0, 1.0),
+            ResVec::cpu_mem(1.0, 1.0),
+            ResVec::cpu_mem(1.0, 1.0),
+        ]);
+        let r = run(
+            cluster,
+            &one_user_trace(3, 10.0),
+            Box::new(FirstFitDrfh),
+            SimOpts { horizon: 100.0, sample_dt: 1.0, track_user_series: false },
+        );
+        assert!((r.jobs[0].finish - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn horizon_cuts_off_completions() {
+        let cluster =
+            Cluster::from_capacities(&[ResVec::cpu_mem(1.0, 1.0)]);
+        let r = run(
+            cluster,
+            &one_user_trace(3, 10.0),
+            Box::new(BestFitDrfh::default()),
+            SimOpts { horizon: 15.0, sample_dt: 1.0, track_user_series: false },
+        );
+        assert_eq!(r.tasks_completed, 1);
+        assert_eq!(r.user_tasks[0].submitted, 3);
+        assert!(r.jobs.is_empty());
+        assert!((r.user_tasks[0].ratio() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_users_share_fairly_under_bestfit() {
+        // two identical users, capacity for 4 concurrent tasks: each
+        // should end up with ~2 running at all times
+        let cluster = Cluster::from_capacities(&[
+            ResVec::cpu_mem(2.0, 2.0),
+            ResVec::cpu_mem(2.0, 2.0),
+        ]);
+        let trace = Trace {
+            users: vec![
+                UserSpec { demand: ResVec::cpu_mem(1.0, 1.0), weight: 1.0 },
+                UserSpec { demand: ResVec::cpu_mem(1.0, 1.0), weight: 1.0 },
+            ],
+            jobs: vec![
+                JobSpec {
+                    id: 0,
+                    user: 0,
+                    submit: 0.0,
+                    tasks: vec![TaskSpec { duration: 100.0 }; 10],
+                },
+                JobSpec {
+                    id: 1,
+                    user: 1,
+                    submit: 0.0,
+                    tasks: vec![TaskSpec { duration: 100.0 }; 10],
+                },
+            ],
+        };
+        let r = run(
+            cluster,
+            &trace,
+            Box::new(BestFitDrfh::default()),
+            SimOpts { horizon: 50.0, sample_dt: 5.0, track_user_series: true },
+        );
+        assert_eq!(r.tasks_placed, 4);
+        // equal dominant shares after the initial fill
+        let s0 = r.user_dom_share[0].v.last().unwrap();
+        let s1 = r.user_dom_share[1].v.last().unwrap();
+        assert!((s0 - s1).abs() < 1e-9, "{s0} vs {s1}");
+    }
+
+    #[test]
+    fn slots_overcommit_slows_tasks() {
+        // one server (1,1), 2 slots, but each task demands the whole
+        // server: two concurrent tasks -> load 2 -> thrashing rate
+        // 1/8, so a 10 s task takes 80 s.
+        let cluster =
+            Cluster::from_capacities(&[ResVec::cpu_mem(1.0, 1.0)]);
+        let slots = SlotsScheduler::new(&cluster, 2);
+        let trace = one_user_trace(2, 10.0);
+        let r = run(
+            cluster,
+            &trace,
+            Box::new(slots),
+            SimOpts { horizon: 100.0, sample_dt: 1.0, track_user_series: false },
+        );
+        assert_eq!(r.tasks_placed, 2);
+        assert_eq!(r.tasks_completed, 2);
+        assert!(
+            (r.jobs[0].finish - 80.0).abs() < 1e-6,
+            "finish = {}",
+            r.jobs[0].finish
+        );
+    }
+
+    #[test]
+    fn ps_rate_recovers_after_partial_drain() {
+        // server (1,1), 2 slots; task A (10 s) and B (30 s) both demand
+        // the whole server. Load 2 -> thrashing rate 1/8. A finishes at
+        // vt=10 -> t=80; then load 1 -> rate 1; B has 20 v-units left
+        // -> finishes at t=100.
+        let cluster =
+            Cluster::from_capacities(&[ResVec::cpu_mem(1.0, 1.0)]);
+        let slots = SlotsScheduler::new(&cluster, 2);
+        let trace = Trace {
+            users: vec![UserSpec {
+                demand: ResVec::cpu_mem(1.0, 1.0),
+                weight: 1.0,
+            }],
+            jobs: vec![
+                JobSpec {
+                    id: 0,
+                    user: 0,
+                    submit: 0.0,
+                    tasks: vec![TaskSpec { duration: 10.0 }],
+                },
+                JobSpec {
+                    id: 1,
+                    user: 0,
+                    submit: 0.0,
+                    tasks: vec![TaskSpec { duration: 30.0 }],
+                },
+            ],
+        };
+        let r = run(
+            cluster,
+            &trace,
+            Box::new(slots),
+            SimOpts { horizon: 200.0, sample_dt: 1.0, track_user_series: false },
+        );
+        assert_eq!(r.jobs.len(), 2);
+        let mut finishes: Vec<f64> =
+            r.jobs.iter().map(|j| j.finish).collect();
+        finishes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((finishes[0] - 80.0).abs() < 1e-6, "A at {}", finishes[0]);
+        assert!((finishes[1] - 100.0).abs() < 1e-6, "B at {}", finishes[1]);
+    }
+
+    #[test]
+    fn conservation_invariants() {
+        use crate::util::Pcg32;
+        use crate::workload::{GoogleLikeConfig, TraceGenerator};
+        let mut rng = Pcg32::seeded(40);
+        let cluster = Cluster::google_sample(50, &mut rng);
+        let gen = TraceGenerator::new(GoogleLikeConfig {
+            users: 10,
+            duration: 5_000.0,
+            jobs_per_user: 5.0,
+            max_tasks_per_job: 100,
+            ..Default::default()
+        });
+        let trace = gen.generate(41);
+        let r = run(
+            cluster.clone(),
+            &trace,
+            Box::new(BestFitDrfh::default()),
+            SimOpts { horizon: 50_000.0, sample_dt: 100.0, track_user_series: false },
+        );
+        // with a generous horizon everything completes
+        assert_eq!(r.tasks_placed, trace.total_tasks());
+        assert_eq!(r.tasks_completed, trace.total_tasks());
+        for (u, c) in r.user_tasks.iter().enumerate() {
+            assert_eq!(c.completed, c.submitted, "user {u}");
+        }
+        assert_eq!(r.jobs.len(), trace.jobs.len());
+        // utilization bounded
+        for &v in r.cpu_util.v.iter().chain(&r.mem_util.v) {
+            assert!((0.0..=1.0 + 1e-9).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! Optimization substrates: a dense two-phase simplex LP solver used by
+//! the exact fluid DRFH allocator.
+
+pub mod simplex;
+
+pub use simplex::{solve, Lp, LpResult};

@@ -1,0 +1,105 @@
+//! Tiny benchmark harness (substrate — criterion is unavailable
+//! offline). Prints mean / p50 / min over timed iterations, sized to a
+//! wall-clock budget. Used by every `rust/benches/*.rs` target.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>12} {:>12} {:>12}   ({} iters)",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.min),
+            self.iters
+        );
+    }
+}
+
+/// Pretty duration.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Print the header row for a group of cases.
+pub fn header(group: &str) {
+    println!("\n== bench: {group} ==");
+    println!(
+        "{:<44} {:>12} {:>12} {:>12}",
+        "case", "mean", "p50", "min"
+    );
+}
+
+/// Time `f` repeatedly within `budget` (at least 3 runs, at most
+/// `max_iters`), returning distribution statistics. `f` should return
+/// something observable to keep the optimizer honest.
+pub fn bench<T>(
+    name: &str,
+    budget: Duration,
+    max_iters: usize,
+    mut f: impl FnMut() -> T,
+) -> BenchResult {
+    // warmup
+    std::hint::black_box(f());
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while (samples.len() < 3
+        || (start.elapsed() < budget && samples.len() < max_iters))
+        && samples.len() < max_iters
+    {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: total / samples.len() as u32,
+        p50: samples[samples.len() / 2],
+        min: samples[0],
+    };
+    res.print();
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_at_least_three_iters() {
+        let r = bench("noop", Duration::from_millis(1), 100, || 1 + 1);
+        assert!(r.iters >= 3);
+        assert!(r.min <= r.mean);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(50)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared utilities built in-tree (this image has no crates.io access):
+//! deterministic RNG, statistics, JSON and TOML-subset parsing, and a
+//! tiny benchmark harness.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod toml_lite;
+
+pub use rng::Pcg32;

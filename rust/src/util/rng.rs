@@ -1,0 +1,252 @@
+//! Deterministic PCG32 random number generator plus the distribution
+//! samplers the workload generator needs (uniform, exponential, normal,
+//! log-normal, bounded Pareto, Zipf, weighted choice).
+//!
+//! We deliberately avoid external RNG crates: every experiment in
+//! EXPERIMENTS.md must be reproducible from a single `u64` seed across
+//! platforms, so the generator implementation is pinned here.
+
+/// PCG-XSH-RR 64/32 (O'Neill 2014). Deterministic and fast.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    /// Create a generator from a seed and stream id. Different streams
+    /// with the same seed are statistically independent.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience: stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 random mantissa bits
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free for our purposes (n << 2^32 bias ok
+        // is NOT acceptable for reproducible science; use rejection).
+        let n32 = n as u32;
+        let threshold = n32.wrapping_neg() % n32;
+        loop {
+            let r = self.next_u32();
+            if r >= threshold {
+                return (r % n32) as usize;
+            }
+        }
+    }
+
+    /// Exponential with the given rate (mean 1/rate).
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        let u = 1.0 - self.f64(); // (0, 1]
+        -u.ln() / rate
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = 1.0 - self.f64();
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Log-normal with the given mu/sigma of the underlying normal.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Bounded Pareto on [lo, hi] with tail index alpha.
+    pub fn pareto_bounded(&mut self, lo: f64, hi: f64, alpha: f64) -> f64 {
+        debug_assert!(lo > 0.0 && hi > lo && alpha > 0.0);
+        let u = self.f64();
+        let la = lo.powf(alpha);
+        let ha = hi.powf(alpha);
+        // inverse CDF of the truncated Pareto
+        (-(u * ha - u * la - ha) / (ha * la)).powf(-1.0 / alpha)
+    }
+
+    /// Zipf-like integer in [1, n]: P(x) ∝ 1/x^s, via inverse-CDF on a
+    /// harmonic table free approximation (rejection sampling, Devroye).
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        debug_assert!(n >= 1);
+        if n == 1 {
+            return 1;
+        }
+        // rejection method valid for s > 0, s != 1 handled via limits
+        let s = if (s - 1.0).abs() < 1e-9 { 1.0 + 1e-9 } else { s };
+        let nf = n as f64;
+        let t = (nf.powf(1.0 - s) - s) / (1.0 - s);
+        loop {
+            let u = self.f64() * t;
+            let x = if u <= 1.0 {
+                u.max(f64::MIN_POSITIVE)
+            } else {
+                (u * (1.0 - s) + s).powf(1.0 / (1.0 - s))
+            };
+            let k = (x.floor() as usize).clamp(1, n);
+            let ratio = (k as f64).powf(-s)
+                / if x <= 1.0 { 1.0 } else { x.powf(-s) };
+            if self.f64() < ratio {
+                return k;
+            }
+        }
+    }
+
+    /// Index sampled proportionally to `weights` (need not normalize).
+    pub fn choice_weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut x = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg32::new(42, 7);
+        let mut b = Pcg32::new(42, 7);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_streams_differ() {
+        let mut a = Pcg32::new(42, 1);
+        let mut b = Pcg32::new(42, 2);
+        let same = (0..100).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 5);
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut rng = Pcg32::seeded(1);
+        let xs: Vec<f64> = (0..20_000).map(|_| rng.f64()).collect();
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut rng = Pcg32::seeded(2);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[rng.below(7)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn exp_mean() {
+        let mut rng = Pcg32::seeded(3);
+        let mean = (0..50_000).map(|_| rng.exp(2.0)).sum::<f64>() / 50_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::seeded(4);
+        let xs: Vec<f64> = (0..50_000).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+                / xs.len() as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn pareto_bounds() {
+        let mut rng = Pcg32::seeded(5);
+        for _ in 0..10_000 {
+            let x = rng.pareto_bounded(1.0, 100.0, 1.5);
+            assert!((1.0..=100.0).contains(&x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn zipf_bounds_and_skew() {
+        let mut rng = Pcg32::seeded(6);
+        let mut ones = 0;
+        for _ in 0..10_000 {
+            let x = rng.zipf(50, 1.2);
+            assert!((1..=50).contains(&x));
+            if x == 1 {
+                ones += 1;
+            }
+        }
+        // Zipf(1.2) puts a large mass on 1
+        assert!(ones > 2_000, "ones={ones}");
+    }
+
+    #[test]
+    fn choice_weighted_prefers_heavy() {
+        let mut rng = Pcg32::seeded(7);
+        let w = [1.0, 0.0, 9.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[rng.choice_weighted(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        assert!(counts[2] > 8_000);
+    }
+}

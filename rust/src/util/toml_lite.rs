@@ -1,0 +1,196 @@
+//! Minimal TOML-subset parser (substrate — crates.io is unreachable on
+//! this image, so the `toml` crate is unavailable).
+//!
+//! Supported: `[section]` tables (one level), `key = value` with
+//! strings (`"..."` / `'...'`), integers, floats, booleans, and `#`
+//! comments. That covers the experiment config format documented in
+//! `config.rs`.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|x| x as usize)
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().map(|x| x as u64)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section -> key -> value. Top-level keys live in
+/// the "" section.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    /// Look up `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key).and_then(|v| v.as_f64())
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Option<usize> {
+        self.get(section, key).and_then(|v| v.as_usize())
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key).and_then(|v| v.as_str())
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key).and_then(|v| v.as_bool())
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(input: &str) -> Result<Doc, String> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: bad section", lineno + 1))?
+                .trim();
+            section = name.to_string();
+            doc.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim().to_string();
+        let value = parse_value(value.trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        doc.sections
+            .entry(section.clone())
+            .or_default()
+            .insert(key, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but sufficient: a '#' outside quotes starts a comment
+    let mut in_str: Option<char> = None;
+    for (i, c) in line.char_indices() {
+        match (c, in_str) {
+            ('"', None) => in_str = Some('"'),
+            ('\'', None) => in_str = Some('\''),
+            ('"', Some('"')) => in_str = None,
+            ('\'', Some('\'')) => in_str = None,
+            ('#', None) => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if let Some(rest) = s.strip_prefix('"') {
+        return rest
+            .strip_suffix('"')
+            .map(|v| Value::Str(v.to_string()))
+            .ok_or_else(|| "unterminated string".to_string());
+    }
+    if let Some(rest) = s.strip_prefix('\'') {
+        return rest
+            .strip_suffix('\'')
+            .map(|v| Value::Str(v.to_string()))
+            .ok_or_else(|| "unterminated string".to_string());
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    s.replace('_', "")
+        .parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_config_shape() {
+        let doc = parse(
+            r#"
+            seed = 42          # top-level
+            [cluster]
+            servers = 2000
+            [scheduler]
+            policy = "slots"
+            slots_per_max = 14
+            [sim]
+            horizon = 86400.0
+            track = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_f64("", "seed"), Some(42.0));
+        assert_eq!(doc.get_usize("cluster", "servers"), Some(2000));
+        assert_eq!(doc.get_str("scheduler", "policy"), Some("slots"));
+        assert_eq!(doc.get_bool("sim", "track"), Some(true));
+    }
+
+    #[test]
+    fn comments_and_strings_with_hash() {
+        let doc = parse("name = \"a#b\" # trailing").unwrap();
+        assert_eq!(doc.get_str("", "name"), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("x = @@").is_err());
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = parse("big = 1_000_000").unwrap();
+        assert_eq!(doc.get_f64("", "big"), Some(1e6));
+    }
+}

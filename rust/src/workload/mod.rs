@@ -1,0 +1,17 @@
+//! Workloads: users, jobs, tasks, and the synthetic Google-like trace
+//! generator.
+//!
+//! The paper's evaluation replays Google cluster-usage traces [Reiss et
+//! al.]. Those traces are no longer distributed in the original form, so
+//! we substitute a generator calibrated to the published statistics (see
+//! DESIGN.md §4): server configurations come *verbatim* from Table I
+//! (`cluster::GOOGLE_CLASSES`), user demand profiles span CPU-heavy,
+//! memory-heavy, and balanced classes, jobs arrive as a Poisson process,
+//! tasks-per-job follow a heavy-tailed (Zipf-like) law, and task
+//! durations follow a bounded Pareto.
+
+pub mod gen;
+pub mod trace;
+
+pub use gen::{GoogleLikeConfig, TraceGenerator};
+pub use trace::{JobSpec, TaskSpec, Trace, UserSpec};

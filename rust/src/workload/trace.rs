@@ -1,0 +1,270 @@
+//! Trace data model: what the simulator replays.
+
+use crate::cluster::ResVec;
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+/// A cloud user (tenant). Per the paper's model each user has one
+/// per-task resource demand vector `D_i` (absolute units) and a weight.
+#[derive(Clone, Debug)]
+pub struct UserSpec {
+    /// Per-task demand vector (absolute units, e.g. cores / GB).
+    pub demand: ResVec,
+    /// Fair-share weight (paper Sec. V-A); 1.0 = unweighted.
+    pub weight: f64,
+}
+
+/// One task of a job: the demand comes from the owning user's spec;
+/// the duration is the task's service requirement at rate 1.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskSpec {
+    pub duration: f64,
+}
+
+/// A job: a batch of tasks submitted together by one user.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub id: usize,
+    pub user: usize,
+    /// Submission time (seconds from trace start).
+    pub submit: f64,
+    pub tasks: Vec<TaskSpec>,
+}
+
+impl JobSpec {
+    pub fn num_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+}
+
+/// A complete workload trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub users: Vec<UserSpec>,
+    /// Jobs sorted by submission time.
+    pub jobs: Vec<JobSpec>,
+}
+
+impl Trace {
+    /// Total number of tasks across all jobs.
+    pub fn total_tasks(&self) -> usize {
+        self.jobs.iter().map(|j| j.num_tasks()).sum()
+    }
+
+    /// Tasks per user.
+    pub fn tasks_per_user(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.users.len()];
+        for j in &self.jobs {
+            counts[j.user] += j.num_tasks();
+        }
+        counts
+    }
+
+    /// Latest submission time.
+    pub fn horizon(&self) -> f64 {
+        self.jobs.iter().map(|j| j.submit).fold(0.0, f64::max)
+    }
+
+    /// Serialize to JSON (reproducibility capsules for EXPERIMENTS.md).
+    pub fn to_json(&self) -> String {
+        let users = Json::Arr(
+            self.users
+                .iter()
+                .map(|u| {
+                    let mut o = BTreeMap::new();
+                    o.insert(
+                        "demand".into(),
+                        Json::Arr(
+                            u.demand
+                                .as_slice()
+                                .iter()
+                                .map(|&x| Json::Num(x))
+                                .collect(),
+                        ),
+                    );
+                    o.insert("weight".into(), Json::Num(u.weight));
+                    Json::Obj(o)
+                })
+                .collect(),
+        );
+        let jobs = Json::Arr(
+            self.jobs
+                .iter()
+                .map(|j| {
+                    let mut o = BTreeMap::new();
+                    o.insert("id".into(), Json::Num(j.id as f64));
+                    o.insert("user".into(), Json::Num(j.user as f64));
+                    o.insert("submit".into(), Json::Num(j.submit));
+                    o.insert(
+                        "tasks".into(),
+                        Json::Arr(
+                            j.tasks
+                                .iter()
+                                .map(|t| Json::Num(t.duration))
+                                .collect(),
+                        ),
+                    );
+                    Json::Obj(o)
+                })
+                .collect(),
+        );
+        let mut root = BTreeMap::new();
+        root.insert("users".into(), users);
+        root.insert("jobs".into(), jobs);
+        Json::Obj(root).to_string()
+    }
+
+    /// Parse from JSON produced by [`Trace::to_json`].
+    pub fn from_json(s: &str) -> Result<Self, String> {
+        let v = json::parse(s)?;
+        let users = v
+            .get("users")
+            .and_then(Json::as_arr)
+            .ok_or("missing users")?
+            .iter()
+            .map(|u| {
+                let demand: Vec<f64> = u
+                    .get("demand")
+                    .and_then(Json::as_arr)
+                    .ok_or("missing demand")?
+                    .iter()
+                    .map(|x| x.as_f64().ok_or("bad demand"))
+                    .collect::<Result<_, _>>()?;
+                Ok(UserSpec {
+                    demand: ResVec::from_slice(&demand),
+                    weight: u
+                        .get("weight")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(1.0),
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let jobs = v
+            .get("jobs")
+            .and_then(Json::as_arr)
+            .ok_or("missing jobs")?
+            .iter()
+            .map(|j| {
+                let tasks = j
+                    .get("tasks")
+                    .and_then(Json::as_arr)
+                    .ok_or("missing tasks")?
+                    .iter()
+                    .map(|t| {
+                        t.as_f64()
+                            .map(|duration| TaskSpec { duration })
+                            .ok_or("bad task")
+                    })
+                    .collect::<Result<Vec<_>, _>>()?;
+                Ok(JobSpec {
+                    id: j.get("id").and_then(Json::as_usize).ok_or("id")?,
+                    user: j
+                        .get("user")
+                        .and_then(Json::as_usize)
+                        .ok_or("user")?,
+                    submit: j
+                        .get("submit")
+                        .and_then(Json::as_f64)
+                        .ok_or("submit")?,
+                    tasks,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(Trace { users, jobs })
+    }
+
+    /// Sanity checks: sorted submits, valid user ids, positive demands
+    /// and durations. Returns a description of the first violation.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut last = 0.0;
+        for j in &self.jobs {
+            if j.user >= self.users.len() {
+                return Err(format!("job {} has invalid user {}", j.id, j.user));
+            }
+            if j.submit < last {
+                return Err(format!("job {} submitted out of order", j.id));
+            }
+            last = j.submit;
+            if j.tasks.is_empty() {
+                return Err(format!("job {} has no tasks", j.id));
+            }
+            for t in &j.tasks {
+                if !(t.duration > 0.0) {
+                    return Err(format!("job {} has non-positive duration", j.id));
+                }
+            }
+        }
+        for (i, u) in self.users.iter().enumerate() {
+            if !u.demand.all_positive() {
+                return Err(format!("user {i} has non-positive demand"));
+            }
+            if !(u.weight > 0.0) {
+                return Err(format!("user {i} has non-positive weight"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Trace {
+        Trace {
+            users: vec![UserSpec {
+                demand: ResVec::cpu_mem(0.2, 0.3),
+                weight: 1.0,
+            }],
+            jobs: vec![JobSpec {
+                id: 0,
+                user: 0,
+                submit: 1.0,
+                tasks: vec![TaskSpec { duration: 5.0 }; 3],
+            }],
+        }
+    }
+
+    #[test]
+    fn counts_and_horizon() {
+        let t = tiny();
+        assert_eq!(t.total_tasks(), 3);
+        assert_eq!(t.tasks_per_user(), vec![3]);
+        assert_eq!(t.horizon(), 1.0);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = tiny();
+        let s = t.to_json();
+        let t2 = Trace::from_json(&s).unwrap();
+        assert_eq!(t2.total_tasks(), 3);
+        assert_eq!(t2.users[0].demand, t.users[0].demand);
+        assert_eq!(t2.jobs[0].submit, 1.0);
+        assert_eq!(t2.jobs[0].tasks[0].duration, 5.0);
+    }
+
+    #[test]
+    fn validate_rejects_bad_user() {
+        let mut t = tiny();
+        t.jobs[0].user = 7;
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unsorted() {
+        let mut t = tiny();
+        let mut j = t.jobs[0].clone();
+        j.id = 1;
+        j.submit = 0.5;
+        t.jobs.push(j);
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        assert!(Trace::from_json("{}").is_err());
+        assert!(Trace::from_json("not json").is_err());
+    }
+}

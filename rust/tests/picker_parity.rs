@@ -1,0 +1,194 @@
+//! L3 <-> L2/L1 bridge validation: the AOT-compiled XLA scheduling
+//! kernels must make *identical* decisions to the native Rust picker on
+//! the same f32 inputs — same argmins, same tie-breaking, same state
+//! evolution through batched loops.
+//!
+//! Skips (with a message) when `make artifacts` has not produced the
+//! AOT bundle.
+
+use drfh::runtime::{artifacts_available, picker, XlaRuntime};
+use drfh::util::Pcg32;
+
+fn runtime_or_skip() -> Option<XlaRuntime> {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/ missing; run `make artifacts`");
+        return None;
+    }
+    Some(XlaRuntime::load_default().expect("loading artifacts"))
+}
+
+fn random_instance(
+    rng: &mut Pcg32,
+    n: usize,
+    k: usize,
+    m: usize,
+    tight: bool,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<i32>) {
+    let hi = if tight { 1.2 } else { 0.5 };
+    let avail: Vec<f32> =
+        (0..k * m).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+    let demand: Vec<f32> =
+        (0..n * m).map(|_| rng.uniform(0.01, hi) as f32).collect();
+    let share: Vec<f32> =
+        (0..n).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+    let weight: Vec<f32> =
+        (0..n).map(|_| rng.uniform(0.5, 2.0) as f32).collect();
+    let active: Vec<i32> =
+        (0..n).map(|_| i32::from(rng.f64() > 0.25)).collect();
+    (avail, demand, share, weight, active)
+}
+
+#[test]
+fn sched_step_decisions_identical() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Pcg32::seeded(101);
+    for trial in 0..200 {
+        let n = 1 + rng.below(16);
+        let k = 1 + rng.below(128);
+        let m = 2;
+        let tight = rng.f64() < 0.3;
+        let (avail, demand, share, weight, active) =
+            random_instance(&mut rng, n, k, m, tight);
+        let native = picker::sched_step(
+            &avail, &demand, &share, &weight, &active, n, k, m,
+        );
+        let xla = rt
+            .sched_step(&avail, &demand, &share, &weight, &active, n, k, m)
+            .expect("xla step");
+        assert_eq!(native, xla, "trial {trial} (n={n} k={k} tight={tight})");
+    }
+}
+
+#[test]
+fn sched_step_three_resources() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Pcg32::seeded(103);
+    for trial in 0..50 {
+        let n = 1 + rng.below(8);
+        let k = 1 + rng.below(32);
+        let m = 3;
+        let (avail, demand, share, weight, active) =
+            random_instance(&mut rng, n, k, m, false);
+        let native = picker::sched_step(
+            &avail, &demand, &share, &weight, &active, n, k, m,
+        );
+        let xla = rt
+            .sched_step(&avail, &demand, &share, &weight, &active, n, k, m)
+            .expect("xla step m=3");
+        assert_eq!(native, xla, "trial {trial}");
+    }
+}
+
+#[test]
+fn sched_step_degenerate_cases() {
+    let Some(rt) = runtime_or_skip() else { return };
+    // all inactive
+    let r = rt
+        .sched_step(&[1.0, 1.0], &[0.5, 0.5], &[0.0], &[1.0], &[0], 1, 1, 2)
+        .unwrap();
+    assert_eq!(r, (-1, -1));
+    // nothing fits
+    let r = rt
+        .sched_step(
+            &[0.01, 0.01],
+            &[0.5, 0.5],
+            &[0.0],
+            &[1.0],
+            &[1],
+            1,
+            1,
+            2,
+        )
+        .unwrap();
+    assert_eq!(r, (-1, -1));
+    // exact tie between identical servers: lowest index wins, in both
+    let avail = vec![0.5f32, 0.5, 0.5, 0.5, 0.5, 0.5];
+    let demand = vec![0.25f32, 0.25];
+    let native =
+        picker::sched_step(&avail, &demand, &[0.0], &[1.0], &[1], 1, 3, 2);
+    let xla = rt
+        .sched_step(&avail, &demand, &[0.0], &[1.0], &[1], 1, 3, 2)
+        .unwrap();
+    assert_eq!(native, xla);
+    assert_eq!(xla.1, 0);
+}
+
+#[test]
+fn sched_loop_batched_state_identical() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Pcg32::seeded(107);
+    for trial in 0..25 {
+        let n = 2 + rng.below(14);
+        let k = 4 + rng.below(100);
+        let m = 2;
+        let (avail, demand, _share, weight, _active) =
+            random_instance(&mut rng, n, k, m, false);
+        let share = vec![0.0f32; n];
+        let pending: Vec<i32> =
+            (0..n).map(|_| rng.below(6) as i32).collect();
+        let steps = rt.loop_steps(n, k, m).expect("loop variant");
+
+        // native replay
+        let mut av_n = avail.clone();
+        let mut sh_n = share.clone();
+        let mut pe_n = pending.clone();
+        let dec_n = picker::sched_loop(
+            &mut av_n, &demand, &mut sh_n, &weight, &mut pe_n, n, k, m, steps,
+        );
+
+        let out = rt
+            .sched_loop(&avail, &demand, &share, &weight, &pending, n, k, m)
+            .expect("xla loop");
+        assert_eq!(out.decisions, dec_n, "trial {trial} decisions");
+        assert_eq!(out.pending, pe_n, "trial {trial} pending");
+        for (a, b) in out.avail.iter().zip(&av_n) {
+            assert!((a - b).abs() < 1e-5, "trial {trial} avail {a} vs {b}");
+        }
+        for (a, b) in out.share.iter().zip(&sh_n) {
+            assert!((a - b).abs() < 1e-5, "trial {trial} share {a} vs {b}");
+        }
+    }
+}
+
+/// The XLA-backed scheduler policy plays a whole (small) simulation and
+/// lands on the same placement count as the native policy.
+#[test]
+fn xla_scheduler_in_simulation() {
+    use drfh::cluster::Cluster;
+    use drfh::sched::{BestFitDrfh, XlaBestFit};
+    use drfh::sim::{run, SimOpts};
+    use drfh::workload::{GoogleLikeConfig, TraceGenerator};
+    use std::sync::Arc;
+
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Pcg32::seeded(109);
+    let cluster = Cluster::google_sample(50, &mut rng);
+    let gen = TraceGenerator::new(GoogleLikeConfig {
+        users: 6,
+        duration: 1_500.0,
+        jobs_per_user: 3.0,
+        max_tasks_per_job: 40,
+        ..Default::default()
+    });
+    let trace = gen.generate(7);
+    let opts =
+        SimOpts { horizon: 1_500.0, sample_dt: 50.0, track_user_series: false };
+    let native =
+        run(cluster.clone(), &trace, Box::new(BestFitDrfh::default()), opts.clone());
+    let xla = run(
+        cluster,
+        &trace,
+        Box::new(XlaBestFit::new(Arc::new(rt))),
+        opts,
+    );
+    // decision parity implies equal placement counts; minor f32-vs-f64
+    // availability drift can move a task or two at the margin
+    let diff =
+        (native.tasks_placed as i64 - xla.tasks_placed as i64).abs();
+    assert!(
+        diff <= 2,
+        "native {} vs xla {} placements",
+        native.tasks_placed,
+        xla.tasks_placed
+    );
+}

@@ -1,0 +1,410 @@
+//! Fairness property tests for the exact fluid DRFH allocation
+//! (paper Propositions 1-7), randomized over many instances with the
+//! in-tree deterministic RNG (proptest is unavailable offline; each
+//! property sweeps seeds explicitly, which doubles as shrink-free
+//! reproducibility — the failing seed is in the assert message).
+
+use drfh::allocator::{self, per_server_drf, FluidUser, NormalizedDemand};
+use drfh::cluster::{Cluster, ResVec};
+use drfh::util::Pcg32;
+
+fn random_cluster(rng: &mut Pcg32, max_servers: usize) -> Cluster {
+    let k = 1 + rng.below(max_servers);
+    Cluster::from_capacities(
+        &(0..k)
+            .map(|_| {
+                ResVec::cpu_mem(rng.uniform(0.5, 8.0), rng.uniform(0.5, 8.0))
+            })
+            .collect::<Vec<_>>(),
+    )
+}
+
+fn random_users(rng: &mut Pcg32, max_users: usize) -> Vec<FluidUser> {
+    let n = 2 + rng.below(max_users - 1);
+    (0..n)
+        .map(|_| {
+            FluidUser::unweighted(ResVec::cpu_mem(
+                rng.uniform(0.05, 1.5),
+                rng.uniform(0.05, 1.5),
+            ))
+        })
+        .collect()
+}
+
+/// Proposition 1 (envy-freeness): no user schedules more tasks with
+/// another user's allocation than with its own.
+#[test]
+fn prop1_envy_freeness() {
+    for seed in 0..40u64 {
+        let mut rng = Pcg32::seeded(1000 + seed);
+        let cluster = random_cluster(&mut rng, 6);
+        let users = random_users(&mut rng, 6);
+        let a = allocator::solve(&cluster, &users);
+        let n = users.len();
+        for i in 0..n {
+            // tasks user i schedules from its own allocation
+            let own: f64 = (0..a.classes.len())
+                .map(|c| a.demands[i].tasks_of(&a.alloc_share(i, c)))
+                .sum();
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let envy: f64 = (0..a.classes.len())
+                    .map(|c| a.demands[i].tasks_of(&a.alloc_share(j, c)))
+                    .sum();
+                assert!(
+                    envy <= own + 1e-6,
+                    "seed {seed}: user {i} envies {j}: {envy:.6} > {own:.6}"
+                );
+            }
+        }
+    }
+}
+
+/// Proposition 2 (Pareto optimality): no user's dominant share can grow
+/// while every other user keeps at least its DRFH share. Verified by a
+/// direct LP maximization per user.
+#[test]
+fn prop2_pareto_optimality() {
+    use drfh::solver::{self, Lp, LpResult};
+    for seed in 0..25u64 {
+        let mut rng = Pcg32::seeded(2000 + seed);
+        let cluster = random_cluster(&mut rng, 5);
+        let users = random_users(&mut rng, 5);
+        let a = allocator::solve(&cluster, &users);
+        let n = users.len();
+        let classes = &a.classes;
+        let nc = classes.len();
+        let total = a.total;
+        for target in 0..n {
+            let nv = n * nc;
+            let var = |i: usize, c: usize| i * nc + c;
+            let mut c_obj = vec![0.0; nv];
+            for c in 0..nc {
+                c_obj[var(target, c)] = 1.0;
+            }
+            let mut a_ub = Vec::new();
+            let mut b_ub = Vec::new();
+            for (c, class) in classes.iter().enumerate() {
+                for r in 0..total.dims() {
+                    let mut row = vec![0.0; nv];
+                    for i in 0..n {
+                        row[var(i, c)] = a.demands[i].norm[r];
+                    }
+                    a_ub.push(row);
+                    b_ub.push(
+                        class.capacity[r] * class.count as f64 / total[r],
+                    );
+                }
+            }
+            // others keep at least their DRFH share: -sum_c x_ic <= -g_i
+            for i in 0..n {
+                if i == target {
+                    continue;
+                }
+                let mut row = vec![0.0; nv];
+                for c in 0..nc {
+                    row[var(i, c)] = -1.0;
+                }
+                a_ub.push(row);
+                b_ub.push(-(a.g[i] - 1e-9));
+            }
+            let lp = Lp { n: nv, c: c_obj, a_ub, b_ub, ..Default::default() };
+            match solver::solve(&lp) {
+                LpResult::Optimal { obj, .. } => {
+                    assert!(
+                        obj <= a.g[target] + 1e-5,
+                        "seed {seed}: user {target} could grow {:.6} -> {:.6}",
+                        a.g[target],
+                        obj
+                    );
+                }
+                other => panic!("seed {seed}: LP failed {other:?}"),
+            }
+        }
+    }
+}
+
+/// Proposition 3 (truthfulness): misreporting the demand vector never
+/// increases the number of tasks scheduled (w.r.t. the true demand).
+#[test]
+fn prop3_truthfulness_randomized() {
+    for seed in 0..40u64 {
+        let mut rng = Pcg32::seeded(3000 + seed);
+        let cluster = random_cluster(&mut rng, 5);
+        let users = random_users(&mut rng, 5);
+        let n = users.len();
+        let honest = allocator::solve(&cluster, &users);
+        let liar = rng.below(n);
+        // random misreport (scale each component independently)
+        let mut lied = users.clone();
+        lied[liar].demand = ResVec::cpu_mem(
+            (users[liar].demand[0] * rng.uniform(0.3, 3.0)).max(1e-3),
+            (users[liar].demand[1] * rng.uniform(0.3, 3.0)).max(1e-3),
+        );
+        let dishonest = allocator::solve(&cluster, &lied);
+        // tasks the liar can *actually* run from the lying allocation:
+        // its real per-task demand applied to the received bundles
+        let total = dishonest.total;
+        let true_demand =
+            NormalizedDemand::from_absolute(&users[liar].demand, &total);
+        let lied_tasks: f64 = (0..dishonest.classes.len())
+            .map(|c| true_demand.tasks_of(&dishonest.alloc_share(liar, c)))
+            .sum();
+        assert!(
+            lied_tasks <= honest.tasks[liar] + 1e-6,
+            "seed {seed}: user {liar} gained by lying: {:.6} > {:.6}",
+            lied_tasks,
+            honest.tasks[liar]
+        );
+    }
+}
+
+/// Proposition 7 (population monotonicity): removing a user never
+/// reduces the remaining users' task counts.
+#[test]
+fn prop7_population_monotonicity() {
+    for seed in 0..40u64 {
+        let mut rng = Pcg32::seeded(7000 + seed);
+        let cluster = random_cluster(&mut rng, 5);
+        let users = random_users(&mut rng, 6);
+        let n = users.len();
+        let full = allocator::solve(&cluster, &users);
+        let leaver = rng.below(n);
+        let mut remaining = users.clone();
+        remaining.remove(leaver);
+        let reduced = allocator::solve(&cluster, &remaining);
+        for (new_i, old_i) in (0..n).filter(|&i| i != leaver).enumerate() {
+            assert!(
+                reduced.tasks[new_i] >= full.tasks[old_i] - 1e-6,
+                "seed {seed}: user {old_i} lost tasks after {leaver} left: \
+                 {:.6} < {:.6}",
+                reduced.tasks[new_i],
+                full.tasks[old_i]
+            );
+        }
+    }
+}
+
+/// Proposition 4 (single-server DRF): with one server, DRFH equalizes
+/// per-server dominant shares exactly like DRF.
+#[test]
+fn prop4_single_server_reduces_to_drf() {
+    for seed in 0..40u64 {
+        let mut rng = Pcg32::seeded(4000 + seed);
+        let cap =
+            ResVec::cpu_mem(rng.uniform(2.0, 10.0), rng.uniform(2.0, 10.0));
+        let cluster = Cluster::from_capacities(&[cap]);
+        let users = random_users(&mut rng, 5);
+        let a = allocator::solve(&cluster, &users);
+        // compare against the closed-form single-server DRF
+        let demands: Vec<ResVec> = users.iter().map(|u| u.demand).collect();
+        let drf = per_server_drf::drf_single_server(&cap, &demands);
+        for i in 0..users.len() {
+            assert!(
+                (a.tasks[i] - drf[i]).abs() < 1e-5,
+                "seed {seed}: user {i}: DRFH {:.6} vs DRF {:.6}",
+                a.tasks[i],
+                drf[i]
+            );
+        }
+    }
+}
+
+/// Proposition 5 (single-resource fairness): with m = 1 the allocation
+/// is max-min fair (equal pool shares when uncapped).
+#[test]
+fn prop5_single_resource_fairness() {
+    for seed in 0..20u64 {
+        let mut rng = Pcg32::seeded(5000 + seed);
+        let k = 1 + rng.below(5);
+        let cluster = Cluster::from_capacities(
+            &(0..k)
+                .map(|_| ResVec::from_slice(&[rng.uniform(1.0, 8.0)]))
+                .collect::<Vec<_>>(),
+        );
+        let n = 2 + rng.below(4);
+        let users: Vec<FluidUser> = (0..n)
+            .map(|_| {
+                FluidUser::unweighted(ResVec::from_slice(&[
+                    rng.uniform(0.1, 2.0)
+                ]))
+            })
+            .collect();
+        let a = allocator::solve(&cluster, &users);
+        for i in 0..n {
+            assert!(
+                (a.g[i] - 1.0 / n as f64).abs() < 1e-6,
+                "seed {seed}: user {i} share {:.6} != 1/{n}",
+                a.g[i]
+            );
+        }
+    }
+}
+
+/// Proposition 6 (bottleneck fairness): users sharing a global dominant
+/// resource get equal shares of it.
+#[test]
+fn prop6_bottleneck_fairness() {
+    let mut checked = 0;
+    for seed in 0..30u64 {
+        let mut rng = Pcg32::seeded(6000 + seed);
+        let cluster = random_cluster(&mut rng, 5);
+        let n = 2 + rng.below(4);
+        // everyone strongly CPU-dominant
+        let users: Vec<FluidUser> = (0..n)
+            .map(|_| {
+                let cpu = rng.uniform(0.5, 1.5);
+                FluidUser::unweighted(ResVec::cpu_mem(
+                    cpu,
+                    cpu * rng.uniform(0.05, 0.3),
+                ))
+            })
+            .collect();
+        let total = cluster.total_capacity();
+        let all_cpu_dom = users.iter().all(|u| {
+            NormalizedDemand::from_absolute(&u.demand, &total).dominant == 0
+        });
+        if !all_cpu_dom {
+            continue;
+        }
+        checked += 1;
+        let a = allocator::solve(&cluster, &users);
+        let g0 = a.g[0];
+        for i in 1..n {
+            assert!(
+                (a.g[i] - g0).abs() < 1e-6,
+                "seed {seed}: unequal bottleneck shares {:?}",
+                a.g
+            );
+        }
+    }
+    assert!(checked >= 10, "too few applicable instances: {checked}");
+}
+
+/// Lemma 1 (non-wastefulness) + feasibility, caps and weights included.
+#[test]
+fn allocations_feasible_and_nonwasteful() {
+    for seed in 0..40u64 {
+        let mut rng = Pcg32::seeded(8000 + seed);
+        let cluster = random_cluster(&mut rng, 6);
+        let mut users = random_users(&mut rng, 6);
+        // mix of capped and uncapped, weighted and unweighted users
+        for u in users.iter_mut() {
+            if rng.f64() < 0.5 {
+                u.task_cap = Some(rng.uniform(0.0, 20.0));
+            }
+            if rng.f64() < 0.3 {
+                u.weight = rng.uniform(0.5, 3.0);
+            }
+        }
+        let a = allocator::solve(&cluster, &users);
+        assert!(a.is_feasible(1e-6), "seed {seed}: infeasible");
+        for (i, u) in users.iter().enumerate() {
+            if let Some(cap) = u.task_cap {
+                assert!(
+                    a.tasks[i] <= cap + 1e-6,
+                    "seed {seed}: user {i} exceeds cap"
+                );
+            }
+        }
+        // dominant share consistency: g_i == dominant_share(alloc_i)
+        for i in 0..users.len() {
+            let g_check: f64 = (0..a.classes.len())
+                .map(|c| a.demands[i].dominant_share_of(&a.alloc_share(i, c)))
+                .sum();
+            assert!(
+                (g_check - a.g[i]).abs() < 1e-6,
+                "seed {seed}: user {i} share mismatch"
+            );
+        }
+    }
+}
+
+/// Weighted DRFH: shares are proportional to weights (uncapped case).
+#[test]
+fn weighted_shares_proportional() {
+    for seed in 0..20u64 {
+        let mut rng = Pcg32::seeded(9000 + seed);
+        let cluster = random_cluster(&mut rng, 5);
+        let mut users = random_users(&mut rng, 4);
+        for u in users.iter_mut() {
+            u.weight = rng.uniform(0.5, 4.0);
+        }
+        let a = allocator::solve(&cluster, &users);
+        let ratio0 = a.g[0] / users[0].weight;
+        for i in 1..users.len() {
+            let ri = a.g[i] / users[i].weight;
+            assert!(
+                (ri - ratio0).abs() < 1e-6 * ratio0.max(1.0),
+                "seed {seed}: weighted shares not proportional {:?}",
+                a.g
+            );
+        }
+    }
+}
+
+/// Paper Sec. III-D: on the Fig. 1 instance the naive per-server DRF
+/// strictly underperforms DRFH for *both* users (6 vs 10 tasks).
+#[test]
+fn naive_per_server_drf_is_dominated() {
+    let cluster = Cluster::fig1_example();
+    let demands =
+        vec![ResVec::cpu_mem(0.2, 1.0), ResVec::cpu_mem(1.0, 0.2)];
+    let users: Vec<FluidUser> =
+        demands.iter().map(|d| FluidUser::unweighted(*d)).collect();
+    let drfh = allocator::solve(&cluster, &users);
+    let naive = per_server_drf::solve(&cluster, &demands);
+    let naive_tasks = naive.tasks_per_user();
+    for i in 0..2 {
+        assert!(
+            drfh.tasks[i] > naive_tasks[i] + 3.0,
+            "user {i}: DRFH {:.1} should beat naive {:.1} by a wide margin",
+            drfh.tasks[i],
+            naive_tasks[i]
+        );
+    }
+}
+
+/// Scheduler-level conservation invariants on a randomized simulation
+/// (the engine is exercised end-to-end in `integration.rs`; here we
+/// assert the invariant family proptest would: usage accounting closes).
+#[test]
+fn sim_conservation_randomized() {
+    use drfh::sched::BestFitDrfh;
+    use drfh::sim::{run, SimOpts};
+    use drfh::workload::{GoogleLikeConfig, TraceGenerator};
+    for seed in 0..6u64 {
+        let mut rng = Pcg32::seeded(10_000 + seed);
+        let cluster = Cluster::google_sample(30 + rng.below(40), &mut rng);
+        let gen = TraceGenerator::new(GoogleLikeConfig {
+            users: 4 + rng.below(8),
+            duration: 3_000.0,
+            jobs_per_user: 4.0,
+            max_tasks_per_job: 60,
+            ..Default::default()
+        });
+        let trace = gen.generate(seed * 17 + 3);
+        let horizon = 2_000.0 + rng.uniform(0.0, 3_000.0);
+        let r = run(
+            cluster,
+            &trace,
+            Box::new(BestFitDrfh::default()),
+            SimOpts { horizon, sample_dt: 50.0, track_user_series: false },
+        );
+        assert!(r.tasks_completed <= r.tasks_placed);
+        assert!(r.tasks_placed <= trace.total_tasks());
+        let done: usize = r.user_tasks.iter().map(|u| u.completed).sum();
+        assert_eq!(done, r.tasks_completed, "seed {seed}");
+        let submitted: usize =
+            r.user_tasks.iter().map(|u| u.submitted).sum();
+        assert!(submitted <= trace.total_tasks());
+        for &v in r.cpu_util.v.iter().chain(&r.mem_util.v) {
+            assert!(
+                (0.0..=1.0 + 1e-9).contains(&v),
+                "seed {seed}: utilization out of range: {v}"
+            );
+        }
+    }
+}
