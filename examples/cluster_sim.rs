@@ -14,7 +14,7 @@
 
 use drfh::cluster::Cluster;
 use drfh::experiments::EvalSetup;
-use drfh::runtime::{artifacts_available, XlaRuntime};
+use drfh::runtime::{artifacts_available, backend_available, XlaRuntime};
 use drfh::sched::{BestFitDrfh, FirstFitDrfh, SlotsScheduler, XlaBestFit};
 use drfh::sim::{run, SimOpts};
 use drfh::util::Pcg32;
@@ -49,7 +49,7 @@ fn main() {
     let mut rows = Vec::new();
     let schedulers: Vec<(&str, Box<dyn drfh::sched::Scheduler>)> = vec![
         ("bestfit-drfh", Box::new(BestFitDrfh::default())),
-        ("firstfit-drfh", Box::new(FirstFitDrfh)),
+        ("firstfit-drfh", Box::new(FirstFitDrfh::default())),
         ("slots-14", Box::new(SlotsScheduler::new(&setup.cluster, 14))),
     ];
     for (name, sched) in schedulers {
@@ -90,7 +90,7 @@ fn main() {
     );
 
     // XLA path: same policy, decisions computed by the AOT kernels
-    if artifacts_available() {
+    if backend_available() && artifacts_available() {
         println!("\n-- XLA-accelerated picker (AOT Pallas/JAX via PJRT) --");
         let rt = Arc::new(XlaRuntime::load_default().expect("artifacts"));
         let mut rng = Pcg32::seeded(9);

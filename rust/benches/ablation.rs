@@ -76,7 +76,7 @@ fn main() {
     let ff = run(
         setup.cluster.clone(),
         &setup.trace,
-        Box::new(FirstFitDrfh),
+        Box::new(FirstFitDrfh::default()),
         setup.opts.clone(),
     );
     println!(

@@ -1,0 +1,145 @@
+//! §Perf headline: indexed vs naive placement hot path on the paper's
+//! Fig. 5 configuration (k = 2,000 Table I servers, 100 users,
+//! saturated Google-like trace).
+//!
+//! The naive path pays O(n + k·m) per decision (rescan every user,
+//! rescan every server); the indexed path (`sched::index`) pays
+//! O(log n + log k) amortized per decision and O(n·m) per
+//! place/complete event. Target: **≥5× end-to-end speedup** at
+//! k = 2,000, with decision parity enforced separately by
+//! `tests/engine_parity.rs` (and placement-count equality asserted
+//! here as a cheap guard).
+//!
+//! Results go to `BENCH_engine.json` at the repo root (override with
+//! `BENCH_OUT=/path.json`) to start the perf trajectory; CI runs the
+//! small-scale smoke via `ENGINE_SCALE_SMOKE=1`.
+//!
+//! Run: `cargo bench --bench engine_scale`
+
+use drfh::experiments::EvalSetup;
+use drfh::sched::{BestFitDrfh, FirstFitDrfh, Scheduler};
+use drfh::sim::run;
+use drfh::util::bench::{bench_n, header, write_suite_json, BenchResult};
+use drfh::util::json::Json;
+
+fn run_case(
+    name: &str,
+    iters: usize,
+    setup: &EvalSetup,
+    mk: impl Fn() -> Box<dyn Scheduler>,
+) -> (BenchResult, usize) {
+    let mut placed = 0usize;
+    let r = bench_n(name, iters, || {
+        let rep = run(
+            setup.cluster.clone(),
+            &setup.trace,
+            mk(),
+            setup.opts.clone(),
+        );
+        placed = rep.tasks_placed;
+        placed
+    });
+    (r, placed)
+}
+
+fn main() {
+    let smoke = std::env::var_os("ENGINE_SCALE_SMOKE").is_some();
+    let (servers, users, duration, iters) = if smoke {
+        (200usize, 20usize, 3_600.0f64, 2usize)
+    } else {
+        (2_000, 100, 21_600.0, 1)
+    };
+    let setup = EvalSetup::with_duration(42, servers, users, duration);
+    println!(
+        "engine_scale: k={servers} n={users} horizon={duration:.0}s \
+         ({} tasks offered){}",
+        setup.trace.total_tasks(),
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    header("engine_scale: full simulation, naive vs indexed");
+    let (bf_naive, placed_bf_naive) =
+        run_case("bestfit-naive", iters, &setup, || {
+            Box::new(BestFitDrfh::naive())
+        });
+    let (bf_idx, placed_bf_idx) =
+        run_case("bestfit-indexed", iters, &setup, || {
+            Box::new(BestFitDrfh::default())
+        });
+    let (ff_naive, placed_ff_naive) =
+        run_case("firstfit-naive", iters, &setup, || {
+            Box::new(FirstFitDrfh::naive())
+        });
+    let (ff_idx, placed_ff_idx) =
+        run_case("firstfit-indexed", iters, &setup, || {
+            Box::new(FirstFitDrfh::default())
+        });
+
+    // cheap parity guard; the real proof is tests/engine_parity.rs
+    assert_eq!(
+        placed_bf_naive, placed_bf_idx,
+        "best-fit indexed/naive placement counts diverged"
+    );
+    assert_eq!(
+        placed_ff_naive, placed_ff_idx,
+        "first-fit indexed/naive placement counts diverged"
+    );
+
+    let speedup_bf =
+        bf_naive.mean.as_secs_f64() / bf_idx.mean.as_secs_f64().max(1e-12);
+    let speedup_ff =
+        ff_naive.mean.as_secs_f64() / ff_idx.mean.as_secs_f64().max(1e-12);
+    let thr = |placed: usize, r: &BenchResult| {
+        placed as f64 / r.mean.as_secs_f64().max(1e-12)
+    };
+    println!(
+        "\nbest-fit : {:>10.0} -> {:>10.0} placements/s  ({speedup_bf:.2}x)",
+        thr(placed_bf_naive, &bf_naive),
+        thr(placed_bf_idx, &bf_idx),
+    );
+    println!(
+        "first-fit: {:>10.0} -> {:>10.0} placements/s  ({speedup_ff:.2}x)",
+        thr(placed_ff_naive, &ff_naive),
+        thr(placed_ff_idx, &ff_idx),
+    );
+    if !smoke && speedup_bf < 5.0 {
+        println!(
+            "WARNING: best-fit speedup {speedup_bf:.2}x below the 5x target"
+        );
+    }
+    if !smoke && speedup_ff < 5.0 {
+        println!(
+            "WARNING: first-fit speedup {speedup_ff:.2}x below the 5x target"
+        );
+    }
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json")
+            .to_string()
+    });
+    let meta = [
+        ("servers", Json::Num(servers as f64)),
+        ("users", Json::Num(users as f64)),
+        ("horizon_s", Json::Num(duration)),
+        ("tasks_offered", Json::Num(setup.trace.total_tasks() as f64)),
+        ("tasks_placed", Json::Num(placed_bf_idx as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("speedup_bestfit", Json::Num(speedup_bf)),
+        ("speedup_firstfit", Json::Num(speedup_ff)),
+        (
+            "placements_per_sec_bestfit_indexed",
+            Json::Num(thr(placed_bf_idx, &bf_idx)),
+        ),
+        (
+            "placements_per_sec_bestfit_naive",
+            Json::Num(thr(placed_bf_naive, &bf_naive)),
+        ),
+    ];
+    let results = [bf_naive, bf_idx, ff_naive, ff_idx];
+    let path = std::path::PathBuf::from(&out);
+    if write_suite_json(&path, "engine_scale", &meta, &results) {
+        println!("\nwrote {}", path.display());
+    } else {
+        println!("\ncould not write {} (read-only fs?)", path.display());
+    }
+}

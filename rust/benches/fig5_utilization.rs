@@ -30,7 +30,7 @@ fn main() {
         run(
             setup.cluster.clone(),
             &setup.trace,
-            Box::new(FirstFitDrfh),
+            Box::new(FirstFitDrfh::default()),
             setup.opts.clone(),
         )
         .tasks_completed

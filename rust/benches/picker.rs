@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo bench --bench picker`
 
-use drfh::runtime::{artifacts_available, picker, XlaRuntime};
+use drfh::runtime::{artifacts_available, backend_available, picker, XlaRuntime};
 use drfh::util::bench::{bench, header};
 use drfh::util::Pcg32;
 use std::time::Duration;
@@ -61,6 +61,10 @@ fn main() {
         );
     }
 
+    if !backend_available() {
+        println!("\n(no PJRT backend linked in — skipping XLA benches)");
+        return;
+    }
     if !artifacts_available() {
         println!("\n(artifacts/ missing — skipping XLA benches; run `make artifacts`)");
         return;

@@ -134,16 +134,30 @@ impl Cluster {
     }
 
     /// Group servers by identical capacity vectors (order-preserving);
-    /// used by the exact fluid allocator.
+    /// used by the exact fluid allocator. Derived from
+    /// [`Cluster::class_members`] so the allocator and the scheduling
+    /// index can never disagree on the class partition.
     pub fn classes(&self) -> Vec<ServerClass> {
-        let mut classes: Vec<ServerClass> = Vec::new();
-        for s in &self.servers {
-            match classes.iter_mut().find(|c| c.capacity == s.capacity) {
-                Some(c) => c.count += 1,
-                None => classes.push(ServerClass {
-                    capacity: s.capacity,
-                    count: 1,
-                }),
+        self.class_members()
+            .into_iter()
+            .map(|(capacity, members)| ServerClass {
+                capacity,
+                count: members.len(),
+            })
+            .collect()
+    }
+
+    /// Group servers by identical capacity, returning each class's
+    /// member indices (order-preserving). The scheduling index
+    /// (`sched::index::ServerIndex`) builds its class buckets from
+    /// this; unlike [`Cluster::classes`] it keeps the membership, not
+    /// just the count.
+    pub fn class_members(&self) -> Vec<(ResVec, Vec<u32>)> {
+        let mut classes: Vec<(ResVec, Vec<u32>)> = Vec::new();
+        for (l, s) in self.servers.iter().enumerate() {
+            match classes.iter_mut().find(|(cap, _)| *cap == s.capacity) {
+                Some((_, members)) => members.push(l as u32),
+                None => classes.push((s.capacity, vec![l as u32])),
             }
         }
         classes

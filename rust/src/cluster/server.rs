@@ -59,6 +59,26 @@ impl Server {
         self.usage.add(demand).le_eps(&self.capacity, FIT_EPS)
     }
 
+    /// Raw headroom on resource `r` (capacity − usage, *unclamped*:
+    /// negative under overcommit). The scheduling index keys off this
+    /// exact expression — see `sched::index`.
+    #[inline]
+    pub fn headroom(&self, r: usize) -> f64 {
+        self.capacity[r] - self.usage[r]
+    }
+
+    /// Smallest per-resource headroom — the upper bound on the
+    /// minimum demand component of any task that fits this server
+    /// (the `BlockedIndex` re-check key).
+    #[inline]
+    pub fn min_headroom(&self) -> f64 {
+        let mut h = f64::INFINITY;
+        for r in 0..self.capacity.dims() {
+            h = h.min(self.headroom(r));
+        }
+        h
+    }
+
     /// Commit resources (no feasibility check — callers decide whether
     /// overcommit is allowed).
     #[inline]

@@ -26,7 +26,7 @@ use crate::sim::SimOpts;
 use crate::util::toml_lite;
 use crate::util::Pcg32;
 use crate::workload::{GoogleLikeConfig, TraceGenerator};
-use anyhow::{bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
@@ -81,7 +81,7 @@ impl ExperimentConfig {
     /// Parse from a TOML string (unset keys keep their defaults).
     pub fn from_toml(s: &str) -> Result<Self> {
         let doc = toml_lite::parse(s)
-            .map_err(|e| anyhow::anyhow!("parsing experiment config: {e}"))?;
+            .map_err(|e| anyhow!("parsing experiment config: {e}"))?;
         let mut cfg = ExperimentConfig::default();
         if let Some(seed) = doc.get("", "seed").and_then(|v| v.as_u64()) {
             cfg.seed = seed;
@@ -157,7 +157,7 @@ impl ExperimentConfig {
     ) -> Result<Box<dyn Scheduler>> {
         Ok(match self.scheduler.policy.as_str() {
             "bestfit" => Box::new(BestFitDrfh::default()),
-            "firstfit" => Box::new(FirstFitDrfh),
+            "firstfit" => Box::new(FirstFitDrfh::default()),
             "slots" => Box::new(SlotsScheduler::new(
                 cluster,
                 self.scheduler.slots_per_max,

@@ -9,7 +9,7 @@
 
 use crate::cluster::{Cluster, ResVec};
 use crate::runtime::{picker, XlaRuntime};
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::thread::JoinHandle;

@@ -28,7 +28,7 @@ pub fn run_fig5(setup: &EvalSetup) -> Fig5Result {
     let first_fit = run(
         setup.cluster.clone(),
         &setup.trace,
-        Box::new(FirstFitDrfh),
+        Box::new(FirstFitDrfh::default()),
         setup.opts.clone(),
     );
     let slots = run(

@@ -11,7 +11,7 @@
 //!
 //! (Hand-rolled argument parsing — clap is unavailable offline.)
 
-use anyhow::{bail, Result};
+use drfh::util::error::{anyhow, bail, Result};
 use drfh::allocator::{self, FluidUser};
 use drfh::cluster::{Cluster, ResVec};
 use drfh::config::ExperimentConfig;
@@ -45,7 +45,7 @@ impl Flags {
             if let Some(key) = a.strip_prefix("--") {
                 let val = args
                     .get(i + 1)
-                    .ok_or_else(|| anyhow::anyhow!("missing value for --{key}"))?;
+                    .ok_or_else(|| anyhow!("missing value for --{key}"))?;
                 flags.push((key.to_string(), val.clone()));
                 i += 2;
             } else {
@@ -60,7 +60,7 @@ impl Flags {
             None => Ok(default),
             Some((_, v)) => v
                 .parse()
-                .map_err(|_| anyhow::anyhow!("bad value for --{key}: '{v}'")),
+                .map_err(|_| anyhow!("bad value for --{key}: '{v}'")),
         }
     }
 
@@ -79,7 +79,7 @@ fn main() -> Result<()> {
         "exp" => {
             let which = args
                 .get(1)
-                .ok_or_else(|| anyhow::anyhow!("exp needs a figure name"))?
+                .ok_or_else(|| anyhow!("exp needs a figure name"))?
                 .clone();
             let flags = Flags::parse(&args[2..])?;
             run_exp(
@@ -94,7 +94,7 @@ fn main() -> Result<()> {
             let flags = Flags::parse(&args[1..])?;
             let cfg = flags
                 .get_str("config")
-                .ok_or_else(|| anyhow::anyhow!("sim needs --config"))?;
+                .ok_or_else(|| anyhow!("sim needs --config"))?;
             run_sim(std::path::Path::new(cfg))
         }
         "solve" => run_solve(),
@@ -231,6 +231,9 @@ fn run_solve() -> Result<()> {
 }
 
 fn run_picker_check(trials: usize, seed: u64) -> Result<()> {
+    if !runtime::backend_available() {
+        bail!("no PJRT backend linked in (stub runtime::xla)");
+    }
     if !runtime::artifacts_available() {
         bail!("artifacts missing; run `make artifacts` first");
     }
@@ -276,10 +279,12 @@ fn run_serve(servers: usize, users: usize, tasks: usize) -> Result<()> {
         })
         .collect();
     let weights = vec![1.0; users];
-    let engine = if runtime::artifacts_available() {
+    let engine = if runtime::backend_available()
+        && runtime::artifacts_available()
+    {
         Engine::Xla(runtime::artifacts_dir())
     } else {
-        println!("(artifacts missing; using native engine)");
+        println!("(XLA backend/artifacts unavailable; using native engine)");
         Engine::Native
     };
     let coord = Coordinator::spawn(&cluster, &demands, &weights, engine);

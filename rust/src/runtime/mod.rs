@@ -8,9 +8,10 @@
 //! proto path rejects; the text parser reassigns ids).
 
 pub mod picker;
+pub mod xla;
 
+use crate::util::error::{anyhow, Context, Result};
 use crate::util::json::{self, Json};
-use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One AOT-compiled `sched_step` shape variant.
@@ -113,6 +114,14 @@ pub fn artifacts_dir() -> PathBuf {
 /// gracefully when `make artifacts` has not run).
 pub fn artifacts_available() -> bool {
     artifacts_dir().join("manifest.json").exists()
+}
+
+/// True when a real PJRT backend is linked in (false under the
+/// `runtime::xla` stub). XLA-dependent tests and the launcher check
+/// this *and* [`artifacts_available`] before exercising the runtime,
+/// so a stub build with artifacts on disk skips instead of panicking.
+pub fn backend_available() -> bool {
+    xla::AVAILABLE
 }
 
 struct CompiledStep {

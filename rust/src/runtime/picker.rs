@@ -56,7 +56,10 @@ pub fn score_servers(
 }
 
 /// Masked argmin of share/weight (first occurrence), mirroring
-/// `kernels/dominant.py`. -1 when no user is eligible.
+/// `kernels/dominant.py`. -1 when no user is eligible. Zero weights
+/// fall back to 1.0 — the f32 twin of `sched::effective_weight`, so
+/// the engine-side and kernel-side rankings agree (asserted in
+/// `sched::tests::share_key_matches_picker_select_user`).
 pub fn select_user(share: &[f32], weight: &[f32], mask: &[bool]) -> i32 {
     let mut best = f32::INFINITY;
     let mut idx = -1i32;

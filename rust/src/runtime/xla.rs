@@ -1,0 +1,131 @@
+//! Stub PJRT surface, API-compatible with the slice of `xla-rs` the
+//! runtime uses (client, executable, literal, HLO-text parsing).
+//!
+//! The build image bakes in the Python-side toolchain but not the
+//! native `xla_extension` bindings, so this module stands in for the
+//! real crate: every entry point type-checks against
+//! [`super::XlaRuntime`] and fails at *runtime* with a clear
+//! "backend unavailable" error. Tests probe
+//! [`super::backend_available`] (false here) alongside
+//! [`super::artifacts_available`] and skip gracefully, so swapping the
+//! real bindings back in is a matter of replacing this `mod xla` with
+//! `use xla;` (and flipping [`AVAILABLE`]) — no call-site changes.
+
+use std::path::Path;
+
+/// Whether a real PJRT backend is linked in. The stub is never
+/// executable, so XLA-dependent tests skip when this is false even if
+/// AOT artifacts are present on disk.
+pub const AVAILABLE: bool = false;
+
+/// Error type mirroring `xla::Error` closely enough for `{e:?}`.
+pub struct Error(pub &'static str);
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "xla backend unavailable: {}", self.0)
+    }
+}
+
+const UNAVAILABLE: &str =
+    "built without native PJRT bindings (stub runtime::xla)";
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Real impl: spin up the PJRT CPU plugin. Stub: unavailable.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+
+    /// Compile a computation on this client.
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Real impl: parse HLO *text* (see `python/compile/aot.py` for why
+    /// text, not proto). Stub: unavailable.
+    pub fn from_text_file(_path: &Path) -> Result<HloModuleProto, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+}
+
+/// An XLA computation wrapping an HLO module (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A compiled, loaded executable (stub: never constructed).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal arguments, returning per-device buffers.
+    pub fn execute<L>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+}
+
+/// A device buffer (stub: never constructed).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+}
+
+/// A host literal (stub: carries no data).
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from host data.
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal), Error> {
+        Err(Error(UNAVAILABLE))
+    }
+
+    pub fn to_tuple4(
+        self,
+    ) -> Result<(Literal, Literal, Literal, Literal), Error> {
+        Err(Error(UNAVAILABLE))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loud_and_early() {
+        let e = PjRtClient::cpu().err().expect("stub must not succeed");
+        assert!(format!("{e:?}").contains("unavailable"));
+        assert!(HloModuleProto::from_text_file(Path::new("x")).is_err());
+    }
+}

@@ -7,7 +7,14 @@
 //! again, so progressive filling continues with the next-lowest user —
 //! matching the fused XLA kernel's "min share among users with a fit"
 //! semantics (see `runtime::picker`).
+//!
+//! §Perf: the default construction runs on the incremental index
+//! ([`index::ShareHeap`] + [`index::PlacementIndex`]) fed by the
+//! engine's place/complete/ready notifications; [`BestFitDrfh::naive`]
+//! keeps the seed's linear scans as the bit-identical reference
+//! (parity proved in `tests/engine_parity.rs`).
 
+use super::index::{self, IndexedCore, ScoreKind};
 use super::{min_share_user, Pick, Scheduler, UserState};
 use crate::cluster::{Cluster, ResVec};
 
@@ -22,16 +29,40 @@ use crate::cluster::{Cluster, ResVec};
 ///   no server, the next-lowest is served instead;
 /// * **strict**: scheduling stalls until the lowest-share user fits,
 ///   keeping shares exactly equalized at the cost of utilization.
-#[derive(Default)]
 pub struct BestFitDrfh {
     /// Stall behind the lowest-share user instead of skipping it.
     pub strict: bool,
+    /// The incremental decision core (default), or `None` for the
+    /// reference linear scans. Both paths emit identical decisions.
+    core: Option<IndexedCore>,
+}
+
+impl Default for BestFitDrfh {
+    fn default() -> Self {
+        BestFitDrfh {
+            strict: false,
+            core: Some(IndexedCore::new(ScoreKind::BestFit)),
+        }
+    }
 }
 
 impl BestFitDrfh {
     /// The strict (exactly-equalizing, non-work-conserving) variant.
+    /// Strict filling ignores the engine's blocked set, so it runs on
+    /// the reference scans.
     pub fn strict_filling() -> Self {
-        BestFitDrfh { strict: true }
+        BestFitDrfh { strict: true, core: None }
+    }
+
+    /// The seed's linear-scan path — the parity reference and the
+    /// naive baseline in `benches/engine_scale.rs`.
+    pub fn naive() -> Self {
+        BestFitDrfh { strict: false, core: None }
+    }
+
+    /// Is this instance on the indexed hot path?
+    pub fn is_indexed(&self) -> bool {
+        self.core.is_some()
     }
 }
 
@@ -49,36 +80,21 @@ pub fn fitness(demand: &ResVec, avail: &ResVec) -> f64 {
 }
 
 /// Best feasible server for `demand`, lowest H then lowest index;
-/// None when nothing fits. (§Perf: flattened hot loop — demand ratios
-/// hoisted, fit check fused with availability computation; identical
-/// decisions to the naive `fits` + `fitness` composition.)
+/// None when nothing fits. (§Perf: the per-server scoring is
+/// [`index::score_server`], shared verbatim with the indexed path so
+/// both argmins — including tie-breaks — are bit-identical.)
 pub fn best_server(cluster: &Cluster, demand: &ResVec) -> Option<usize> {
-    use crate::cluster::FIT_EPS;
-    let m = demand.dims();
-    let dden = if demand[0] != 0.0 { demand[0] } else { 1.0 };
-    let mut dratio = [0.0f64; crate::cluster::MAX_RES];
-    for r in 0..m {
-        dratio[r] = demand[r] / dden;
-    }
+    let dratio = index::dratio_of(demand);
     let mut best_h = f64::INFINITY;
     let mut best_l: Option<usize> = None;
-    'servers: for (l, s) in cluster.servers.iter().enumerate() {
-        let mut avail = [0.0f64; crate::cluster::MAX_RES];
-        for r in 0..m {
-            let a = s.capacity[r] - s.usage[r];
-            if demand[r] > a + FIT_EPS {
-                continue 'servers; // does not fit
+    for (l, s) in cluster.servers.iter().enumerate() {
+        if let Some(h) =
+            index::score_server(ScoreKind::BestFit, demand, &dratio, s, l)
+        {
+            if h.total_cmp(&best_h) == std::cmp::Ordering::Less {
+                best_h = h;
+                best_l = Some(l);
             }
-            avail[r] = if a > 0.0 { a } else { 0.0 };
-        }
-        let aden = if avail[0] != 0.0 { avail[0] } else { 1.0 };
-        let mut h = 0.0;
-        for r in 0..m {
-            h += (dratio[r] - avail[r] / aden).abs();
-        }
-        if h < best_h {
-            best_h = h;
-            best_l = Some(l);
         }
     }
     best_l
@@ -107,11 +123,14 @@ impl Scheduler for BestFitDrfh {
                 },
             };
         }
-        match min_share_user(users, eligible) {
-            None => Pick::Idle,
-            Some(u) => match best_server(cluster, &users[u].demand) {
-                Some(l) => Pick::Place { user: u, server: l },
-                None => Pick::Blocked { user: u },
+        match &mut self.core {
+            Some(core) => core.pick(cluster, users, eligible),
+            None => match min_share_user(users, eligible) {
+                None => Pick::Idle,
+                Some(u) => match best_server(cluster, &users[u].demand) {
+                    Some(l) => Pick::Place { user: u, server: l },
+                    None => Pick::Blocked { user: u },
+                },
             },
         }
     }
@@ -124,6 +143,24 @@ impl Scheduler for BestFitDrfh {
         server: usize,
     ) -> bool {
         cluster.servers[server].fits(&users[user].demand)
+    }
+
+    fn on_place(&mut self, user: usize, server: usize) {
+        if let Some(core) = &mut self.core {
+            core.on_touch(user, server);
+        }
+    }
+
+    fn on_complete(&mut self, user: usize, server: usize) {
+        if let Some(core) = &mut self.core {
+            core.on_touch(user, server);
+        }
+    }
+
+    fn on_ready(&mut self, user: usize) {
+        if let Some(core) = &mut self.core {
+            core.on_ready(user);
+        }
     }
 }
 
@@ -158,52 +195,57 @@ mod tests {
 
     #[test]
     fn routes_fig1_users_to_matching_servers() {
-        let cluster = Cluster::fig1_example();
-        let mut users = users_fixture();
-        let mut sched = BestFitDrfh::default();
-        let all = [true, true];
-        // equal shares: user 0 first (tie), routed to the memory server
-        assert_eq!(
-            sched.pick(&cluster, &users, &all),
-            Pick::Place { user: 0, server: 0 }
-        );
-        users[0].dom_share = 0.5;
-        // now user 1 has the lower share: routed to the CPU server
-        assert_eq!(
-            sched.pick(&cluster, &users, &all),
-            Pick::Place { user: 1, server: 1 }
-        );
+        for mut sched in [BestFitDrfh::default(), BestFitDrfh::naive()] {
+            let cluster = Cluster::fig1_example();
+            let mut users = users_fixture();
+            let all = [true, true];
+            // equal shares: user 0 first (tie), routed to the memory
+            // server
+            assert_eq!(
+                sched.pick(&cluster, &users, &all),
+                Pick::Place { user: 0, server: 0 }
+            );
+            users[0].dom_share = 0.5;
+            sched.on_place(0, 0); // engine would notify; no commit here
+            // now user 1 has the lower share: routed to the CPU server
+            assert_eq!(
+                sched.pick(&cluster, &users, &all),
+                Pick::Place { user: 1, server: 1 }
+            );
+        }
     }
 
     #[test]
     fn blocked_when_min_share_user_fits_nowhere() {
-        let cluster =
-            Cluster::new(vec![Server::new(ResVec::cpu_mem(0.6, 0.6))]);
-        let mut users = users_fixture();
-        users[0].demand = ResVec::cpu_mem(1.0, 1.0);
-        users[1].demand = ResVec::cpu_mem(0.5, 0.5);
-        users[1].dom_share = 0.9;
-        let mut sched = BestFitDrfh::default();
-        // user 0 has min share but no fit -> Blocked
-        assert_eq!(
-            sched.pick(&cluster, &users, &[true, true]),
-            Pick::Blocked { user: 0 }
-        );
-        // engine masks it out; next call places user 1
-        assert_eq!(
-            sched.pick(&cluster, &users, &[false, true]),
-            Pick::Place { user: 1, server: 0 }
-        );
+        for mut sched in [BestFitDrfh::default(), BestFitDrfh::naive()] {
+            let cluster =
+                Cluster::new(vec![Server::new(ResVec::cpu_mem(0.6, 0.6))]);
+            let mut users = users_fixture();
+            users[0].demand = ResVec::cpu_mem(1.0, 1.0);
+            users[1].demand = ResVec::cpu_mem(0.5, 0.5);
+            users[1].dom_share = 0.9;
+            // user 0 has min share but no fit -> Blocked
+            assert_eq!(
+                sched.pick(&cluster, &users, &[true, true]),
+                Pick::Blocked { user: 0 }
+            );
+            // engine masks it out; next call places user 1
+            assert_eq!(
+                sched.pick(&cluster, &users, &[false, true]),
+                Pick::Place { user: 1, server: 0 }
+            );
+        }
     }
 
     #[test]
     fn idle_when_no_pending() {
-        let cluster = Cluster::fig1_example();
-        let mut users = users_fixture();
-        users[0].pending = 0;
-        users[1].pending = 0;
-        let mut sched = BestFitDrfh::default();
-        assert_eq!(sched.pick(&cluster, &users, &[true, true]), Pick::Idle);
+        for mut sched in [BestFitDrfh::default(), BestFitDrfh::naive()] {
+            let cluster = Cluster::fig1_example();
+            let mut users = users_fixture();
+            users[0].pending = 0;
+            users[1].pending = 0;
+            assert_eq!(sched.pick(&cluster, &users, &[true, true]), Pick::Idle);
+        }
     }
 
     #[test]

@@ -2,13 +2,41 @@
 //! chosen user's task on the *first* (lowest-index) server that fits —
 //! the simpler sibling of Best-Fit, kept as an evaluation baseline
 //! (Fig. 5 compares the two).
+//!
+//! §Perf: like Best-Fit, the default construction runs on the
+//! incremental index (the per-user server heaps minimize the server
+//! *index* instead of the H-score); [`FirstFitDrfh::naive`] keeps the
+//! seed's linear scan as the bit-identical reference.
 
+use super::index::{IndexedCore, ScoreKind};
 use super::{min_share_user, Pick, Scheduler, UserState};
 use crate::cluster::{Cluster, ResVec};
 
 /// The First-Fit DRFH policy.
-#[derive(Default)]
-pub struct FirstFitDrfh;
+pub struct FirstFitDrfh {
+    /// The incremental decision core (default), or `None` for the
+    /// reference linear scan. Both paths emit identical decisions.
+    core: Option<IndexedCore>,
+}
+
+impl Default for FirstFitDrfh {
+    fn default() -> Self {
+        FirstFitDrfh { core: Some(IndexedCore::new(ScoreKind::FirstFit)) }
+    }
+}
+
+impl FirstFitDrfh {
+    /// The seed's linear-scan path — the parity reference and the
+    /// naive baseline in `benches/engine_scale.rs`.
+    pub fn naive() -> Self {
+        FirstFitDrfh { core: None }
+    }
+
+    /// Is this instance on the indexed hot path?
+    pub fn is_indexed(&self) -> bool {
+        self.core.is_some()
+    }
+}
 
 /// First server that fits `demand`, by index.
 pub fn first_server(cluster: &Cluster, demand: &ResVec) -> Option<usize> {
@@ -26,11 +54,14 @@ impl Scheduler for FirstFitDrfh {
         users: &[UserState],
         eligible: &[bool],
     ) -> Pick {
-        match min_share_user(users, eligible) {
-            None => Pick::Idle,
-            Some(u) => match first_server(cluster, &users[u].demand) {
-                Some(l) => Pick::Place { user: u, server: l },
-                None => Pick::Blocked { user: u },
+        match &mut self.core {
+            Some(core) => core.pick(cluster, users, eligible),
+            None => match min_share_user(users, eligible) {
+                None => Pick::Idle,
+                Some(u) => match first_server(cluster, &users[u].demand) {
+                    Some(l) => Pick::Place { user: u, server: l },
+                    None => Pick::Blocked { user: u },
+                },
             },
         }
     }
@@ -43,6 +74,24 @@ impl Scheduler for FirstFitDrfh {
         server: usize,
     ) -> bool {
         cluster.servers[server].fits(&users[user].demand)
+    }
+
+    fn on_place(&mut self, user: usize, server: usize) {
+        if let Some(core) = &mut self.core {
+            core.on_touch(user, server);
+        }
+    }
+
+    fn on_complete(&mut self, user: usize, server: usize) {
+        if let Some(core) = &mut self.core {
+            core.on_touch(user, server);
+        }
+    }
+
+    fn on_ready(&mut self, user: usize) {
+        if let Some(core) = &mut self.core {
+            core.on_ready(user);
+        }
     }
 }
 
@@ -67,10 +116,11 @@ mod tests {
             usage: ResVec::zeros(2),
             dom_delta: 0.1,
         }];
-        let mut sched = FirstFitDrfh;
-        assert_eq!(
-            sched.pick(&cluster, &users, &[true]),
-            Pick::Place { user: 0, server: 1 }
-        );
+        for mut sched in [FirstFitDrfh::default(), FirstFitDrfh::naive()] {
+            assert_eq!(
+                sched.pick(&cluster, &users, &[true]),
+                Pick::Place { user: 0, server: 1 }
+            );
+        }
     }
 }

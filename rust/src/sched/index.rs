@@ -1,0 +1,883 @@
+//! Incremental scheduling index: the sublinear placement hot path.
+//!
+//! The naive DRFH policies pay O(n + k·m) per decision — rescan every
+//! user for the minimum weighted dominant share, rescan every server
+//! for the best feasible fit — and the engine pays O(n) more per
+//! completion to re-check blocked users. Over a day-long Google-trace
+//! run (Fig. 5: k = 2,000 servers, hundreds of thousands of
+//! placements) those linear scans dominate wall-clock. This module
+//! replaces them with incrementally maintained structures, while
+//! keeping every *decision* bit-identical to the linear scans (proved
+//! by `tests/engine_parity.rs`):
+//!
+//! * [`ShareHeap`] — a lazy min-heap over weighted dominant-share keys
+//!   `(share_key, user)`. O(log n) amortized per update instead of an
+//!   O(n) rescan per pick.
+//! * [`ServerIndex`] — servers bucketed by capacity class with a lazy
+//!   per-class per-resource *max-free skyline*: a sound upper bound on
+//!   available capacity used to skip entire classes during rebuilds
+//!   and feasibility pre-checks.
+//! * [`PlacementIndex`] — per-user lazy min-heaps over feasible-server
+//!   keys (Best-Fit H-score or First-Fit index). A cluster mutation
+//!   touches one server, so maintaining all n heaps costs O(n·m) score
+//!   probes + O(log k) pushes for the (few) users the server still
+//!   fits — instead of every subsequent pick paying O(k·m).
+//! * [`BlockedIndex`] — blocked users keyed by their minimum demand
+//!   component, so a completion re-checks only users whose smallest
+//!   requirement fits under the freed server's smallest headroom (a
+//!   necessary condition for fitting), not every blocked user.
+//!
+//! ## Invariants
+//!
+//! 1. *Lazy heap freshness*: every heap entry carries the stamp of the
+//!    (user|server) it was pushed for; an entry is live iff its stamp
+//!    matches the current stamp. Mutating a key bumps the stamp and
+//!    (when still relevant) pushes a fresh entry; stale entries are
+//!    discarded on pop. Each live element has exactly one live entry.
+//! 2. *Score identity*: indexed and naive paths share the scoring
+//!    arithmetic ([`score_server`]) and compare keys lexicographically
+//!    by `(key, index)` with `f64::total_cmp`, so argmins — including
+//!    tie-breaks — are identical.
+//! 3. *Skyline soundness*: `ServerIndex` bounds satisfy
+//!    `max_free[c][r] >= max_{l in class c} (capacity_lr - usage_lr)`
+//!    at every refresh point (commits only lower true availability;
+//!    releases are folded in via [`ServerIndex::note_avail`]), so a
+//!    class pruned by the skyline truly contains no fitting server.
+//! 4. *Blocked-key necessity*: if a task with demand D fits a server
+//!    with availability A (componentwise D ≤ A + ε), then
+//!    `min_r D_r ≤ min_r A_r + ε`; filtering blocked users by that key
+//!    never skips one that could fit.
+
+use crate::cluster::{Cluster, ResVec, Server, FIT_EPS, MAX_RES};
+use crate::sched::{Pick, UserState};
+use std::cmp::Ordering;
+use std::collections::{BTreeSet, BinaryHeap};
+
+// ------------------------------------------------------------ heap entry
+
+/// Heap entry ordered ascending by `(key, idx)`; `stamp` carries the
+/// lazy-invalidation epoch and does not participate in the order.
+#[derive(Clone, Copy, Debug)]
+struct MinEntry {
+    key: f64,
+    idx: u32,
+    stamp: u64,
+}
+
+impl PartialEq for MinEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for MinEntry {}
+impl PartialOrd for MinEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for MinEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want the smallest
+        // (key, idx) on top
+        other
+            .key
+            .total_cmp(&self.key)
+            .then_with(|| other.idx.cmp(&self.idx))
+    }
+}
+
+// ------------------------------------------------------------ ShareHeap
+
+/// Lazy min-heap over weighted dominant-share keys.
+///
+/// Mirrors [`super::min_share_user`] exactly: among users with
+/// `eligible[u] && pending > 0`, the one with the smallest
+/// `share_key()`, lowest index on ties.
+#[derive(Default)]
+pub struct ShareHeap {
+    heap: BinaryHeap<MinEntry>,
+    stamp: Vec<u64>,
+    dirty: Vec<u32>,
+    is_dirty: Vec<bool>,
+}
+
+impl ShareHeap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn grow(&mut self, n: usize) {
+        while self.stamp.len() < n {
+            let u = self.stamp.len() as u32;
+            self.stamp.push(0);
+            self.is_dirty.push(true);
+            self.dirty.push(u);
+        }
+    }
+
+    /// Note that `u`'s key or schedulability may have changed; the
+    /// next [`ShareHeap::refresh`] re-inserts it.
+    pub fn mark_dirty(&mut self, u: usize) {
+        if u >= self.stamp.len() {
+            self.grow(u + 1);
+            return;
+        }
+        if !self.is_dirty[u] {
+            self.is_dirty[u] = true;
+            self.dirty.push(u as u32);
+        }
+    }
+
+    /// Drop `u` from the heap (lazy): its entries become stale. Used
+    /// when a user is blocked; it re-enters via [`ShareHeap::mark_dirty`].
+    pub fn remove(&mut self, u: usize) {
+        if u < self.stamp.len() {
+            self.stamp[u] += 1;
+        }
+    }
+
+    /// Flush dirty users: bump their stamp and push a fresh entry for
+    /// those currently schedulable.
+    pub fn refresh(&mut self, users: &[UserState], eligible: &[bool]) {
+        self.grow(users.len());
+        while let Some(u) = self.dirty.pop() {
+            let u = u as usize;
+            self.is_dirty[u] = false;
+            self.stamp[u] += 1;
+            if eligible[u] && users[u].pending > 0 {
+                self.heap.push(MinEntry {
+                    key: users[u].share_key(),
+                    idx: u as u32,
+                    stamp: self.stamp[u],
+                });
+            }
+        }
+        if self.heap.len() > 4 * self.stamp.len() + 64 {
+            let stamp = &self.stamp;
+            self.heap.retain(|e| e.stamp == stamp[e.idx as usize]);
+        }
+    }
+
+    /// Current minimum-key schedulable user (the entry stays in the
+    /// heap). Call [`ShareHeap::refresh`] first.
+    pub fn peek_min(
+        &mut self,
+        users: &[UserState],
+        eligible: &[bool],
+    ) -> Option<usize> {
+        while let Some(top) = self.heap.peek() {
+            let u = top.idx as usize;
+            if top.stamp == self.stamp[u] {
+                if eligible[u] && users[u].pending > 0 {
+                    return Some(u);
+                }
+                // entry is fresh but the user is no longer
+                // schedulable (defensive): drop it; the engine's
+                // on_ready notification re-inserts it later
+                self.stamp[u] += 1;
+            }
+            self.heap.pop();
+        }
+        None
+    }
+}
+
+// ----------------------------------------------------------- ServerIndex
+
+/// A capacity class: servers with identical capacity vectors, plus a
+/// lazy per-resource upper bound on their free capacity.
+#[derive(Clone, Debug)]
+pub struct ClassBucket {
+    pub capacity: ResVec,
+    pub members: Vec<u32>,
+    max_free: [f64; MAX_RES],
+}
+
+impl ClassBucket {
+    /// Could *some* member fit `demand`? Sound: never false when a
+    /// member fits (invariant 3); may be true when none does.
+    pub fn may_fit(&self, demand: &ResVec) -> bool {
+        (0..demand.dims()).all(|r| demand[r] <= self.max_free[r] + FIT_EPS)
+    }
+
+    /// Current skyline bound for resource `r` (testing hook).
+    pub fn max_free(&self, r: usize) -> f64 {
+        self.max_free[r]
+    }
+}
+
+/// Class-bucketed server availability summary (the max-free skyline).
+pub struct ServerIndex {
+    classes: Vec<ClassBucket>,
+    class_of: Vec<u32>,
+    updates: usize,
+    refresh_every: usize,
+}
+
+impl ServerIndex {
+    /// Group `cluster`'s servers by identical capacity and compute the
+    /// exact skyline.
+    pub fn build(cluster: &Cluster) -> Self {
+        let mut class_of = vec![0u32; cluster.len()];
+        let classes: Vec<ClassBucket> = cluster
+            .class_members()
+            .into_iter()
+            .enumerate()
+            .map(|(c, (capacity, members))| {
+                for &l in &members {
+                    class_of[l as usize] = c as u32;
+                }
+                ClassBucket { capacity, members, max_free: [0.0; MAX_RES] }
+            })
+            .collect();
+        let mut idx = ServerIndex {
+            classes,
+            class_of,
+            updates: 0,
+            refresh_every: 8 * cluster.len().max(8),
+        };
+        idx.recompute(cluster);
+        idx
+    }
+
+    pub fn classes(&self) -> &[ClassBucket] {
+        &self.classes
+    }
+
+    pub fn class_of(&self, l: usize) -> usize {
+        self.class_of[l] as usize
+    }
+
+    /// Fold server `l`'s current availability into its class bound.
+    /// Commits leave the bound stale-high (sound); periodically the
+    /// exact skyline is recomputed to restore tightness.
+    pub fn note_avail(&mut self, cluster: &Cluster, l: usize) {
+        let s = &cluster.servers[l];
+        let c = self.class_of[l] as usize;
+        for r in 0..s.capacity.dims() {
+            let a = s.headroom(r);
+            if a > self.classes[c].max_free[r] {
+                self.classes[c].max_free[r] = a;
+            }
+        }
+        self.updates += 1;
+        if self.updates >= self.refresh_every {
+            self.recompute(cluster);
+        }
+    }
+
+    fn recompute(&mut self, cluster: &Cluster) {
+        self.updates = 0;
+        for c in self.classes.iter_mut() {
+            c.max_free = [0.0; MAX_RES];
+            for &l in &c.members {
+                let s = &cluster.servers[l as usize];
+                for r in 0..s.capacity.dims() {
+                    let a = s.headroom(r);
+                    if a > c.max_free[r] {
+                        c.max_free[r] = a;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Sound feasibility pre-check across the whole pool.
+    pub fn may_fit_anywhere(&self, demand: &ResVec) -> bool {
+        self.classes.iter().any(|c| c.may_fit(demand))
+    }
+}
+
+// -------------------------------------------------------------- scoring
+
+/// Which key the placement index minimizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScoreKind {
+    /// Best-Fit DRFH: key = H(i, l) (paper eq. (9)), ties by index.
+    BestFit,
+    /// First-Fit DRFH: key = server index.
+    FirstFit,
+}
+
+/// Per-user demand ratios relative to resource 0 — the hoisted half of
+/// the H-score (paper eq. (9)).
+pub fn dratio_of(demand: &ResVec) -> [f64; MAX_RES] {
+    let m = demand.dims();
+    let dden = if demand[0] != 0.0 { demand[0] } else { 1.0 };
+    let mut dr = [0.0f64; MAX_RES];
+    for r in 0..m {
+        dr[r] = demand[r] / dden;
+    }
+    dr
+}
+
+/// Score server `l` for a demand: `None` when the task does not fit,
+/// `Some(key)` otherwise. The arithmetic (including the FIT_EPS
+/// feasibility predicate and the avail/aden guards) is shared with the
+/// naive scans so indexed argmins are bit-identical (invariant 2).
+pub fn score_server(
+    kind: ScoreKind,
+    demand: &ResVec,
+    dratio: &[f64; MAX_RES],
+    s: &Server,
+    l: usize,
+) -> Option<f64> {
+    let m = demand.dims();
+    match kind {
+        ScoreKind::FirstFit => {
+            if s.fits(demand) {
+                Some(l as f64)
+            } else {
+                None
+            }
+        }
+        ScoreKind::BestFit => {
+            let mut avail = [0.0f64; MAX_RES];
+            for r in 0..m {
+                let a = s.headroom(r);
+                if demand[r] > a + FIT_EPS {
+                    return None; // does not fit
+                }
+                avail[r] = if a > 0.0 { a } else { 0.0 };
+            }
+            let aden = if avail[0] != 0.0 { avail[0] } else { 1.0 };
+            let mut h = 0.0;
+            for r in 0..m {
+                h += (dratio[r] - avail[r] / aden).abs();
+            }
+            Some(h)
+        }
+    }
+}
+
+// --------------------------------------------------------- PlacementIndex
+
+/// Per-user lazy min-heaps over feasible-server keys, maintained
+/// incrementally from place/complete notifications.
+pub struct PlacementIndex {
+    kind: ScoreKind,
+    servers: Option<ServerIndex>,
+    heaps: Vec<BinaryHeap<MinEntry>>,
+    stamp: Vec<u64>,
+    dirty: Vec<u32>,
+    is_dirty: Vec<bool>,
+    dratio: Vec<[f64; MAX_RES]>,
+    k: usize,
+    /// Debug-only guard against reusing one index across different
+    /// same-sized clusters/user sets (see [`IndexedCore`] ownership).
+    #[cfg(debug_assertions)]
+    fingerprint: f64,
+}
+
+/// Capacity+demand fingerprint for the debug reuse guard. Usage is
+/// deliberately excluded — it changes during a run.
+#[cfg(debug_assertions)]
+fn state_fingerprint(cluster: &Cluster, users: &[UserState]) -> f64 {
+    let mut f = 0.0;
+    for s in &cluster.servers {
+        f += s.capacity.sum();
+    }
+    for u in users {
+        f += u.demand.sum() * 1e-3;
+    }
+    f
+}
+
+impl PlacementIndex {
+    pub fn new(kind: ScoreKind) -> Self {
+        PlacementIndex {
+            kind,
+            servers: None,
+            heaps: Vec::new(),
+            stamp: Vec::new(),
+            dirty: Vec::new(),
+            is_dirty: Vec::new(),
+            dratio: Vec::new(),
+            k: 0,
+            #[cfg(debug_assertions)]
+            fingerprint: 0.0,
+        }
+    }
+
+    /// Note that server `l`'s availability changed; the next
+    /// [`PlacementIndex::refresh`] re-scores it for every user.
+    pub fn mark_server_dirty(&mut self, l: usize) {
+        if self.servers.is_none() || l >= self.is_dirty.len() {
+            return; // not built yet — the full build covers it
+        }
+        if !self.is_dirty[l] {
+            self.is_dirty[l] = true;
+            self.dirty.push(l as u32);
+        }
+    }
+
+    fn ensure_built(&mut self, cluster: &Cluster, users: &[UserState]) {
+        if self.servers.is_some()
+            && self.k == cluster.len()
+            && self.heaps.len() == users.len()
+        {
+            #[cfg(debug_assertions)]
+            debug_assert!(
+                (self.fingerprint - state_fingerprint(cluster, users)).abs()
+                    < 1e-9,
+                "PlacementIndex reused across a different cluster/user set; \
+                 construct a fresh policy per simulation"
+            );
+            return;
+        }
+        let k = cluster.len();
+        self.k = k;
+        self.servers = Some(ServerIndex::build(cluster));
+        self.stamp = vec![0; k];
+        self.is_dirty = vec![false; k];
+        self.dirty.clear();
+        self.dratio = users.iter().map(|u| dratio_of(&u.demand)).collect();
+        self.heaps = (0..users.len()).map(|_| BinaryHeap::new()).collect();
+        #[cfg(debug_assertions)]
+        {
+            self.fingerprint = state_fingerprint(cluster, users);
+        }
+        for i in 0..users.len() {
+            self.rebuild_user(cluster, users, i);
+        }
+    }
+
+    /// Rebuild user `i`'s heap from scratch, visiting only classes the
+    /// skyline says could fit (invariant 3 makes the skip sound).
+    fn rebuild_user(
+        &mut self,
+        cluster: &Cluster,
+        users: &[UserState],
+        i: usize,
+    ) {
+        let mut heap = std::mem::take(&mut self.heaps[i]);
+        heap.clear();
+        let demand = &users[i].demand;
+        let sidx = self.servers.as_ref().expect("built");
+        for class in sidx.classes() {
+            if !class.may_fit(demand) {
+                continue;
+            }
+            for &l in &class.members {
+                let l = l as usize;
+                if let Some(key) = score_server(
+                    self.kind,
+                    demand,
+                    &self.dratio[i],
+                    &cluster.servers[l],
+                    l,
+                ) {
+                    heap.push(MinEntry {
+                        key,
+                        idx: l as u32,
+                        stamp: self.stamp[l],
+                    });
+                }
+            }
+        }
+        self.heaps[i] = heap;
+    }
+
+    /// Flush dirty servers: bump their stamp, fold the new availability
+    /// into the skyline, and push fresh entries for users they still
+    /// fit. Must run (via the owning policy's `pick`) after any
+    /// commit/release and before the next [`PlacementIndex::best_server`].
+    pub fn refresh(&mut self, cluster: &Cluster, users: &[UserState]) {
+        self.ensure_built(cluster, users);
+        let had_dirt = !self.dirty.is_empty();
+        while let Some(l) = self.dirty.pop() {
+            let l = l as usize;
+            self.is_dirty[l] = false;
+            self.stamp[l] += 1;
+            self.servers
+                .as_mut()
+                .expect("built")
+                .note_avail(cluster, l);
+            let srv = &cluster.servers[l];
+            let stamp = self.stamp[l];
+            for (i, u) in users.iter().enumerate() {
+                if let Some(key) =
+                    score_server(self.kind, &u.demand, &self.dratio[i], srv, l)
+                {
+                    self.heaps[i].push(MinEntry {
+                        key,
+                        idx: l as u32,
+                        stamp,
+                    });
+                }
+            }
+        }
+        if had_dirt {
+            for i in 0..self.heaps.len() {
+                if self.heaps[i].len() > 2 * self.k + 64 {
+                    self.rebuild_user(cluster, users, i);
+                }
+            }
+        }
+    }
+
+    /// Lowest-key feasible server for user `i` (entry stays in the
+    /// heap), or `None` when nothing fits. Requires a preceding
+    /// [`PlacementIndex::refresh`].
+    pub fn best_server(&mut self, i: usize) -> Option<usize> {
+        let heap = &mut self.heaps[i];
+        while let Some(top) = heap.peek() {
+            if top.stamp == self.stamp[top.idx as usize] {
+                return Some(top.idx as usize);
+            }
+            heap.pop();
+        }
+        None
+    }
+
+    /// The class skyline (testing / diagnostics).
+    pub fn server_index(&self) -> Option<&ServerIndex> {
+        self.servers.as_ref()
+    }
+}
+
+// ----------------------------------------------------------- IndexedCore
+
+/// The shared indexed decision core embedded in the DRFH policies:
+/// [`ShareHeap`] + [`PlacementIndex`] + the blocked-drop protocol.
+/// Best-Fit and First-Fit differ only in the [`ScoreKind`] they
+/// construct this with, so the parity-critical plumbing (refresh
+/// ordering, the `remove`-on-Blocked step, the notification wiring)
+/// lives in exactly one place.
+///
+/// Ownership: a core (and therefore a policy instance) serves ONE
+/// cluster + user set; the demand ratios and heaps snapshot them on
+/// first use. Debug builds assert against reuse with a different
+/// same-sized cluster/user set.
+pub struct IndexedCore {
+    share: ShareHeap,
+    servers: PlacementIndex,
+}
+
+impl IndexedCore {
+    pub fn new(kind: ScoreKind) -> Self {
+        IndexedCore {
+            share: ShareHeap::new(),
+            servers: PlacementIndex::new(kind),
+        }
+    }
+
+    /// One progressive-filling decision, decision-identical to
+    /// `min_share_user` + the naive server scan of the same
+    /// [`ScoreKind`].
+    pub fn pick(
+        &mut self,
+        cluster: &Cluster,
+        users: &[UserState],
+        eligible: &[bool],
+    ) -> Pick {
+        self.share.refresh(users, eligible);
+        self.servers.refresh(cluster, users);
+        match self.share.peek_min(users, eligible) {
+            None => Pick::Idle,
+            Some(u) => match self.servers.best_server(u) {
+                Some(l) => Pick::Place { user: u, server: l },
+                None => {
+                    // drop u from the heap until the engine unblocks
+                    // it (on_ready)
+                    self.share.remove(u);
+                    Pick::Blocked { user: u }
+                }
+            },
+        }
+    }
+
+    /// A task of `user` was placed on / completed at `server`: both
+    /// the user's share key and the server's availability changed.
+    pub fn on_touch(&mut self, user: usize, server: usize) {
+        self.share.mark_dirty(user);
+        self.servers.mark_server_dirty(server);
+    }
+
+    /// `user` (re-)entered the schedulable set.
+    pub fn on_ready(&mut self, user: usize) {
+        self.share.mark_dirty(user);
+    }
+}
+
+// ---------------------------------------------------------- BlockedIndex
+
+/// Total-order f64 wrapper for BTree keys.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct F64Ord(f64);
+
+impl Eq for F64Ord {}
+impl PartialOrd for F64Ord {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for F64Ord {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Blocked users keyed by their minimum demand component, so a freed
+/// server re-checks only users that could possibly fit (invariant 4).
+pub struct BlockedIndex {
+    key: Vec<f64>,
+    set: BTreeSet<(F64Ord, u32)>,
+    flags: Vec<bool>,
+}
+
+impl BlockedIndex {
+    /// `fit_key[u]` = `min_r demand_ur` — the necessary-condition key.
+    pub fn new(fit_key: Vec<f64>) -> Self {
+        let n = fit_key.len();
+        BlockedIndex { key: fit_key, set: BTreeSet::new(), flags: vec![false; n] }
+    }
+
+    pub fn insert(&mut self, u: usize) {
+        if !self.flags[u] {
+            self.flags[u] = true;
+            self.set.insert((F64Ord(self.key[u]), u as u32));
+        }
+    }
+
+    pub fn remove(&mut self, u: usize) {
+        if self.flags[u] {
+            self.flags[u] = false;
+            self.set.remove(&(F64Ord(self.key[u]), u as u32));
+        }
+    }
+
+    pub fn is_blocked(&self, u: usize) -> bool {
+        self.flags[u]
+    }
+
+    pub fn len(&self) -> usize {
+        self.set.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.set.is_empty()
+    }
+
+    /// Blocked users whose fit key is at most `free_min` — a superset
+    /// of those that can fit a server whose smallest per-resource
+    /// headroom is `free_min`; the caller still does the exact check.
+    pub fn candidates(
+        &self,
+        free_min: f64,
+    ) -> impl Iterator<Item = usize> + '_ {
+        self.set
+            .range(..=(F64Ord(free_min), u32::MAX))
+            .map(|&(_, u)| u as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::min_share_user;
+    use crate::util::Pcg32;
+
+    fn mk_user(share: f64, weight: f64, pending: usize) -> UserState {
+        UserState {
+            demand: ResVec::cpu_mem(0.1, 0.1),
+            weight,
+            pending,
+            running: 0,
+            dom_share: share,
+            usage: ResVec::zeros(2),
+            dom_delta: 0.01,
+        }
+    }
+
+    /// ShareHeap agrees with the linear scan through randomized
+    /// key/eligibility churn, including zero-weight users.
+    #[test]
+    fn share_heap_matches_linear_scan() {
+        let mut rng = Pcg32::seeded(42);
+        let n = 12;
+        let mut users: Vec<UserState> = (0..n)
+            .map(|_| {
+                mk_user(
+                    rng.uniform(0.0, 1.0),
+                    if rng.f64() < 0.2 { 0.0 } else { rng.uniform(0.5, 2.0) },
+                    rng.below(3),
+                )
+            })
+            .collect();
+        let mut eligible = vec![true; n];
+        let mut heap = ShareHeap::new();
+        for step in 0..500 {
+            heap.refresh(&users, &eligible);
+            let got = heap.peek_min(&users, &eligible);
+            let want = min_share_user(&users, &eligible);
+            assert_eq!(got, want, "step {step}");
+            // random mutation, mirrored into the heap via the same
+            // notifications the engine fires
+            let u = rng.below(n);
+            match rng.below(4) {
+                0 => {
+                    users[u].dom_share = rng.uniform(0.0, 1.0);
+                    heap.mark_dirty(u);
+                }
+                1 => {
+                    users[u].pending = rng.below(3);
+                    heap.mark_dirty(u);
+                }
+                2 if eligible[u] => {
+                    // block u (engine: Pick::Blocked)
+                    eligible[u] = false;
+                    heap.remove(u);
+                }
+                _ => {
+                    // unblock u (engine: on_ready)
+                    eligible[u] = true;
+                    heap.mark_dirty(u);
+                }
+            }
+        }
+    }
+
+    /// PlacementIndex agrees with the naive scans across random
+    /// commit/release churn, for both score kinds.
+    #[test]
+    fn placement_index_matches_naive_scans() {
+        use crate::sched::best_fit::best_server;
+        use crate::sched::first_fit::first_server;
+        for (kind, seed) in
+            [(ScoreKind::BestFit, 7u64), (ScoreKind::FirstFit, 8u64)]
+        {
+            let mut rng = Pcg32::seeded(seed);
+            let mut cluster = Cluster::google_sample(60, &mut rng);
+            let users: Vec<UserState> = (0..6)
+                .map(|_| {
+                    let d = ResVec::cpu_mem(
+                        rng.uniform(0.05, 0.4),
+                        rng.uniform(0.05, 0.4),
+                    );
+                    UserState {
+                        demand: d,
+                        weight: 1.0,
+                        pending: 1,
+                        running: 0,
+                        dom_share: 0.0,
+                        usage: ResVec::zeros(2),
+                        dom_delta: 0.01,
+                    }
+                })
+                .collect();
+            let mut index = PlacementIndex::new(kind);
+            let mut committed: Vec<(usize, ResVec)> = Vec::new();
+            for step in 0..400 {
+                index.refresh(&cluster, &users);
+                for (i, u) in users.iter().enumerate() {
+                    let want = match kind {
+                        ScoreKind::BestFit => best_server(&cluster, &u.demand),
+                        ScoreKind::FirstFit => {
+                            first_server(&cluster, &u.demand)
+                        }
+                    };
+                    let got = index.best_server(i);
+                    assert_eq!(got, want, "kind {kind:?} step {step} user {i}");
+                    // skyline pre-check is sound: a fit anywhere implies
+                    // may_fit_anywhere (the converse may not hold)
+                    if want.is_some() {
+                        assert!(
+                            index
+                                .server_index()
+                                .expect("built")
+                                .may_fit_anywhere(&u.demand),
+                            "skyline refuted an existing fit (user {i})"
+                        );
+                    }
+                }
+                // random commit or release
+                if !committed.is_empty() && rng.f64() < 0.4 {
+                    let j = rng.below(committed.len());
+                    let (l, d) = committed.swap_remove(j);
+                    cluster.servers[l].release(&d);
+                    index.mark_server_dirty(l);
+                } else {
+                    let l = rng.below(cluster.len());
+                    let d = users[rng.below(users.len())].demand;
+                    if cluster.servers[l].fits(&d) {
+                        cluster.servers[l].commit(&d);
+                        committed.push((l, d));
+                        index.mark_server_dirty(l);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The skyline never under-reports a class's free capacity.
+    #[test]
+    fn server_index_skyline_is_sound() {
+        let mut rng = Pcg32::seeded(5);
+        let mut cluster = Cluster::google_sample(40, &mut rng);
+        let mut idx = ServerIndex::build(&cluster);
+        let d = ResVec::cpu_mem(0.1, 0.1);
+        for _ in 0..600 {
+            let l = rng.below(cluster.len());
+            if rng.f64() < 0.5 && cluster.servers[l].fits(&d) {
+                cluster.servers[l].commit(&d);
+            } else {
+                // release only what is committed
+                if cluster.servers[l].usage[0] >= d[0] {
+                    cluster.servers[l].release(&d);
+                }
+            }
+            idx.note_avail(&cluster, l);
+            for c in 0..idx.classes().len() {
+                let bucket = &idx.classes()[c];
+                for &m in &bucket.members {
+                    assert_eq!(idx.class_of(m as usize), c, "membership map");
+                    let s = &cluster.servers[m as usize];
+                    for r in 0..2 {
+                        let a = s.capacity[r] - s.usage[r];
+                        assert!(
+                            bucket.max_free(r) >= a - 1e-12,
+                            "skyline under-reports class {c} res {r}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Candidate filtering never skips a user that could fit.
+    #[test]
+    fn blocked_index_candidates_are_a_superset() {
+        let mut rng = Pcg32::seeded(9);
+        let demands: Vec<ResVec> = (0..20)
+            .map(|_| {
+                ResVec::cpu_mem(rng.uniform(0.05, 1.0), rng.uniform(0.05, 1.0))
+            })
+            .collect();
+        let keys: Vec<f64> = demands.iter().map(|d| d.min()).collect();
+        let mut idx = BlockedIndex::new(keys);
+        for u in 0..20 {
+            idx.insert(u);
+        }
+        assert_eq!(idx.len(), 20);
+        for _ in 0..200 {
+            let avail =
+                ResVec::cpu_mem(rng.uniform(0.0, 1.2), rng.uniform(0.0, 1.2));
+            let server = Server::new(avail);
+            let free_min = avail.min() + FIT_EPS;
+            let cands: Vec<usize> = idx.candidates(free_min).collect();
+            for (u, d) in demands.iter().enumerate() {
+                if server.fits(d) {
+                    assert!(
+                        cands.contains(&u),
+                        "user {u} fits but was filtered out"
+                    );
+                }
+            }
+        }
+        idx.remove(3);
+        assert!(!idx.is_blocked(3));
+        assert_eq!(idx.len(), 19);
+        assert!(!idx.is_empty());
+    }
+}

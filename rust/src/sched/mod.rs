@@ -5,7 +5,10 @@
 //! it picks the next `(user, server)` placement. The simulation engine
 //! owns all state mutation — committing resources, maintaining dominant
 //! shares, firing events — so policies stay side-effect-free and
-//! trivially swappable.
+//! trivially swappable. Policies that keep incremental state (the
+//! [`index`] structures, the Slots free-slot cursor) are fed by the
+//! notification hooks below; notifications carry *which* entity changed
+//! and policies re-read the authoritative state on the next `pick`.
 //!
 //! ## The blocked-user protocol
 //!
@@ -14,12 +17,39 @@
 //! engine therefore caches a *blocked* set: when `pick` returns
 //! [`Pick::Blocked`], the user is excluded from `eligible` until some
 //! server frees resources, at which point the engine re-checks only
-//! that server via [`Scheduler::can_fit`]. Demands are static per user
-//! (paper Sec. III-A), so a blocked verdict stays valid until capacity
-//! is released.
+//! that server via [`Scheduler::can_fit`] — and, via
+//! [`index::BlockedIndex`], only the blocked users whose minimum
+//! demand component fits under the freed server's smallest headroom.
+//! Demands are static per user (paper Sec. III-A), so a blocked
+//! verdict stays valid until capacity is released. A re-eligible user
+//! is announced to the policy through [`Scheduler::on_ready`].
+//!
+//! ## §Perf: the indexed hot path
+//!
+//! The DRFH policies ship two decision paths with *bit-identical*
+//! outputs (asserted by `tests/engine_parity.rs` on randomized traces
+//! and by the unit parities in [`index`]):
+//!
+//! * the **naive** path — `min_share_user` O(n) + `best_server` /
+//!   `first_server` O(k·m) linear scans, kept as the reference and
+//!   constructed via `BestFitDrfh::naive()` / `FirstFitDrfh::naive()`;
+//! * the **indexed** path (default) — [`index::ShareHeap`] +
+//!   [`index::PlacementIndex`], maintained incrementally from the
+//!   engine notifications, making a pick O(log n + log k) amortized
+//!   and an event O(n·m) instead of every pick paying O(n + k·m).
+//!
+//! Methodology: `benches/engine_scale.rs` times full simulations on
+//! the Fig. 5 configuration (k = 2,000 Google-distribution servers,
+//! saturated 24 h-style trace) for both paths, reports placement
+//! throughput and speedups (warning loudly below the ≥5× end-to-end
+//! target), and writes `BENCH_engine.json`; decision parity is
+//! enforced separately (placement-count guard in the bench, full
+//! pick-stream equality in `tests/engine_parity.rs`) so speed never
+//! buys semantic drift.
 
 pub mod best_fit;
 pub mod first_fit;
+pub mod index;
 pub mod slots;
 pub mod xla;
 
@@ -50,11 +80,25 @@ pub struct UserState {
     pub dom_delta: f64,
 }
 
+/// Guarded fair-share weight: a zero weight falls back to 1.0 instead
+/// of producing inf/NaN share keys. This is the single source of truth
+/// for zero-weight semantics — `runtime::picker::select_user` and the
+/// Pallas kernel (`kernels/dominant.py`: `where(weight != 0, weight,
+/// 1.0)`) implement the same rule in f32.
+#[inline]
+pub fn effective_weight(w: f64) -> f64 {
+    if w != 0.0 {
+        w
+    } else {
+        1.0
+    }
+}
+
 impl UserState {
     /// Weighted progressive-filling key: lowest goes first.
     #[inline]
     pub fn share_key(&self) -> f64 {
-        self.dom_share / self.weight
+        self.dom_share / effective_weight(self.weight)
     }
 }
 
@@ -106,10 +150,25 @@ pub trait Scheduler {
     /// Notification: a task released capacity on `server`. Lets
     /// policies maintain incremental state (the Slots free-slot cursor).
     fn on_free(&mut self, _server: usize) {}
+
+    /// Notification: the engine committed one task of `user` onto
+    /// `server` (fired after the commit). `user`'s share/pending and
+    /// `server`'s availability changed.
+    fn on_place(&mut self, _user: usize, _server: usize) {}
+
+    /// Notification: one task of `user` completed on `server` (fired
+    /// after the release, alongside [`Scheduler::on_free`]). `user`'s
+    /// share and `server`'s availability changed.
+    fn on_complete(&mut self, _user: usize, _server: usize) {}
+
+    /// Notification: `user` (re-)entered the schedulable set — new
+    /// work arrived or the engine unblocked it after a completion.
+    fn on_ready(&mut self, _user: usize) {}
 }
 
 /// Lowest weighted-share eligible user (first on ties) — the
-/// progressive-filling selection shared by the DRFH policies.
+/// progressive-filling selection shared by the DRFH policies (naive
+/// reference path; the indexed path is [`index::ShareHeap`]).
 pub fn min_share_user(users: &[UserState], eligible: &[bool]) -> Option<usize> {
     let mut best: Option<usize> = None;
     for i in 0..users.len() {
@@ -156,5 +215,50 @@ mod tests {
         let mut u = user(0.4, 1);
         u.weight = 2.0;
         assert!((u.share_key() - 0.2).abs() < 1e-12);
+    }
+
+    /// Zero weights must not poison the ordering with inf/NaN: the key
+    /// falls back to weight 1.0, matching `picker::select_user` and the
+    /// Pallas kernel.
+    #[test]
+    fn zero_weight_uses_guarded_semantics() {
+        assert_eq!(effective_weight(0.0), 1.0);
+        assert_eq!(effective_weight(2.5), 2.5);
+        let mut u = user(0.4, 1);
+        u.weight = 0.0;
+        assert!(u.share_key().is_finite());
+        assert!((u.share_key() - 0.4).abs() < 1e-12);
+
+        // a zero-weight user is ranked as if weight were 1.0
+        let mut zero_w = user(0.3, 1);
+        zero_w.weight = 0.0;
+        let users = vec![user(0.4, 1), zero_w, user(0.35, 1)];
+        assert_eq!(min_share_user(&users, &[true; 3]), Some(1));
+    }
+
+    /// The f64 policy ranking and the f32 picker ranking agree on
+    /// zero-weight handling.
+    #[test]
+    fn share_key_matches_picker_select_user() {
+        let shares = [0.5f64, 0.3, 0.4, 0.2];
+        let weights = [1.0f64, 0.0, 2.0, 0.5];
+        let users: Vec<UserState> = shares
+            .iter()
+            .zip(&weights)
+            .map(|(&s, &w)| {
+                let mut u = user(s, 1);
+                u.weight = w;
+                u
+            })
+            .collect();
+        let native = min_share_user(&users, &[true; 4]);
+        let share32: Vec<f32> = shares.iter().map(|&s| s as f32).collect();
+        let weight32: Vec<f32> = weights.iter().map(|&w| w as f32).collect();
+        let picked = crate::runtime::picker::select_user(
+            &share32,
+            &weight32,
+            &[true; 4],
+        );
+        assert_eq!(native, Some(picked as usize));
     }
 }

@@ -13,7 +13,7 @@
 //! schedulers: the single-resource abstraction ignores both server and
 //! demand heterogeneity.
 
-use super::{Pick, Scheduler, UserState};
+use super::{effective_weight, Pick, Scheduler, UserState};
 use crate::cluster::{Cluster, ResVec};
 
 /// The Slots policy.
@@ -84,15 +84,19 @@ impl Scheduler for SlotsScheduler {
         eligible: &[bool],
     ) -> Pick {
         // fair sharing over slot counts: serve the pending user with the
-        // fewest weighted running tasks (1 task = 1 slot)
+        // fewest weighted running tasks (1 task = 1 slot); zero weights
+        // use the shared guarded fallback (see `sched::effective_weight`)
         let mut best: Option<usize> = None;
         for i in 0..users.len() {
             if !eligible[i] || users[i].pending == 0 {
                 continue;
             }
-            let key = users[i].running as f64 / users[i].weight;
+            let key = users[i].running as f64 / effective_weight(users[i].weight);
             match best {
-                Some(b) if users[b].running as f64 / users[b].weight <= key => {}
+                Some(b)
+                    if users[b].running as f64
+                        / effective_weight(users[b].weight)
+                        <= key => {}
                 _ => best = Some(i),
             }
         }

@@ -21,9 +21,26 @@
 //! changes (placements/completions) reschedule the server's next
 //! completion event; stale events are skipped via a per-server
 //! generation counter.
+//!
+//! ## §Perf: indexed hot path
+//!
+//! The engine feeds the policies' incremental indexes
+//! (`sched::index`) through three notifications — `on_place` after a
+//! commit, `on_complete`/`on_free` after a release, and `on_ready`
+//! when a user (re-)enters the schedulable set — and keeps its own
+//! blocked set in a `sched::index::BlockedIndex`: a completion on
+//! server `l` re-checks only the blocked users whose minimum demand
+//! component fits under `l`'s smallest per-resource headroom (a
+//! necessary condition for fitting), instead of scanning every
+//! blocked user. The candidate set is a provable superset of the
+//! users the old linear scan would have unblocked and each candidate
+//! still passes the exact `Scheduler::can_fit` check, so the
+//! unblocked *set* — and therefore every subsequent decision — is
+//! identical (asserted end-to-end by `tests/engine_parity.rs`).
 
 use crate::cluster::{Cluster, ResVec};
 use crate::metrics::{JobRecord, TimeSeries, UserTaskCounts};
+use crate::sched::index::BlockedIndex;
 use crate::sched::{Pick, Scheduler, UserState};
 use crate::workload::Trace;
 use std::cmp::Ordering;
@@ -199,7 +216,10 @@ pub struct Simulation<'a> {
     now: f64,
 
     eligible: Vec<bool>,
-    blocked: Vec<bool>,
+    blocked: BlockedIndex,
+    /// Scratch buffer for unblock candidates (avoids per-completion
+    /// allocation).
+    scratch_unblock: Vec<usize>,
 
     report: SimReport,
     total: ResVec,
@@ -234,6 +254,9 @@ impl<'a> Simulation<'a> {
         let n = users.len();
         let k = cluster.len();
         let name = scheduler.name().to_string();
+        // blocked-user fit keys: min_r demand_r (see BlockedIndex docs)
+        let fit_keys: Vec<f64> =
+            users.iter().map(|u| u.demand.min()).collect();
 
         let mut sim = Simulation {
             cluster,
@@ -256,7 +279,8 @@ impl<'a> Simulation<'a> {
             seq: 0,
             now: 0.0,
             eligible: vec![true; n],
-            blocked: vec![false; n],
+            blocked: BlockedIndex::new(fit_keys),
+            scratch_unblock: Vec::new(),
             report: SimReport {
                 scheduler: name,
                 cpu_util: TimeSeries::default(),
@@ -346,6 +370,11 @@ impl<'a> Simulation<'a> {
         });
         self.users[user].pending += self.jobs[j].num_tasks;
         self.report.user_tasks[user].submitted += self.jobs[j].num_tasks;
+        // a blocked user stays blocked (its demand is static); for the
+        // rest, let indexed policies re-insert the user
+        if !self.blocked.is_blocked(user) {
+            self.scheduler.on_ready(user);
+        }
         true
     }
 
@@ -377,6 +406,7 @@ impl<'a> Simulation<'a> {
         self.cluster.servers[l].release(&demand);
         self.cluster.servers[l].tasks -= 1;
         self.scheduler.on_free(l);
+        self.scheduler.on_complete(u, l);
         self.users[u].running -= 1;
         self.users[u].dom_share -= self.users[u].dom_delta;
         if self.users[u].dom_share < 0.0 {
@@ -412,15 +442,34 @@ impl<'a> Simulation<'a> {
         }
     }
 
+    /// Re-check blocked users against server `l` after it freed
+    /// capacity. Candidates are pre-filtered by the BlockedIndex
+    /// necessary condition (min demand component vs. `l`'s smallest
+    /// headroom); the exact `can_fit` verdict is unchanged, so the
+    /// unblocked set matches the old full scan. The filter is only
+    /// sound for demand-based `can_fit`; overcommitting policies
+    /// (Slots — slot-based fits, headroom may be negative) re-check
+    /// every blocked user, as before.
     fn unblock_for_server(&mut self, l: usize) {
-        for u in 0..self.users.len() {
-            if self.blocked[u]
-                && self.scheduler.can_fit(&self.cluster, &self.users, u, l)
-            {
-                self.blocked[u] = false;
+        if self.blocked.is_empty() {
+            return;
+        }
+        let free_min = if self.scheduler.allows_overcommit() {
+            f64::INFINITY
+        } else {
+            self.cluster.servers[l].min_headroom() + crate::cluster::FIT_EPS
+        };
+        let mut cands = std::mem::take(&mut self.scratch_unblock);
+        cands.clear();
+        cands.extend(self.blocked.candidates(free_min));
+        for &u in &cands {
+            if self.scheduler.can_fit(&self.cluster, &self.users, u, l) {
+                self.blocked.remove(u);
                 self.eligible[u] = true;
+                self.scheduler.on_ready(u);
             }
         }
+        self.scratch_unblock = cands;
     }
 
     fn schedule_loop(&mut self) {
@@ -431,7 +480,7 @@ impl<'a> Simulation<'a> {
             {
                 Pick::Idle => break,
                 Pick::Blocked { user } => {
-                    self.blocked[user] = true;
+                    self.blocked.insert(user);
                     self.eligible[user] = false;
                 }
                 Pick::Place { user, server } => {
@@ -464,6 +513,7 @@ impl<'a> Simulation<'a> {
         self.users[u].usage.add_assign(&demand);
         self.cluster.servers[l].commit(&demand);
         self.cluster.servers[l].tasks += 1;
+        self.scheduler.on_place(u, l);
         self.report.tasks_placed += 1;
 
         self.servers[l].advance(self.now);

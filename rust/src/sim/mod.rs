@@ -69,7 +69,7 @@ mod tests {
         let r = run(
             cluster,
             &one_user_trace(3, 10.0),
-            Box::new(FirstFitDrfh),
+            Box::new(FirstFitDrfh::default()),
             SimOpts { horizon: 100.0, sample_dt: 1.0, track_user_series: false },
         );
         assert!((r.jobs[0].finish - 10.0).abs() < 1e-6);

@@ -1,7 +1,11 @@
 //! Tiny benchmark harness (substrate — criterion is unavailable
 //! offline). Prints mean / p50 / min over timed iterations, sized to a
-//! wall-clock budget. Used by every `rust/benches/*.rs` target.
+//! wall-clock budget, and can emit machine-readable JSON
+//! (`BENCH_engine.json` et al.) so the perf trajectory is diffable
+//! across PRs. Used by every `rust/benches/*.rs` target.
 
+use crate::util::json::Json;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark case.
@@ -15,6 +19,22 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// One JSON object per case: nanosecond-resolution timings plus
+    /// the iteration count (built on `util::json`, the crate's one
+    /// JSON writer).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(self.name.clone()));
+        o.insert("iters".to_string(), Json::Num(self.iters as f64));
+        o.insert(
+            "mean_ns".to_string(),
+            Json::Num(self.mean.as_nanos() as f64),
+        );
+        o.insert("p50_ns".to_string(), Json::Num(self.p50.as_nanos() as f64));
+        o.insert("min_ns".to_string(), Json::Num(self.min.as_nanos() as f64));
+        Json::Obj(o)
+    }
+
     pub fn print(&self) {
         println!(
             "{:<44} {:>12} {:>12} {:>12}   ({} iters)",
@@ -48,6 +68,81 @@ pub fn header(group: &str) {
         "{:<44} {:>12} {:>12} {:>12}",
         "case", "mean", "p50", "min"
     );
+}
+
+/// Serialize a bench suite to a JSON document:
+/// `{"suite": ..., "meta": {...}, "results": [...]}`. `meta` carries
+/// config and derived figures (speedups, throughput) as typed
+/// [`Json`] values.
+pub fn suite_json(
+    suite: &str,
+    meta: &[(&str, Json)],
+    results: &[BenchResult],
+) -> String {
+    let mut doc = BTreeMap::new();
+    doc.insert("suite".to_string(), Json::Str(suite.to_string()));
+    doc.insert(
+        "meta".to_string(),
+        Json::Obj(
+            meta.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+        ),
+    );
+    doc.insert(
+        "results".to_string(),
+        Json::Arr(results.iter().map(|r| r.to_json()).collect()),
+    );
+    Json::Obj(doc).to_string()
+}
+
+/// Write a bench suite JSON document, creating parent dirs on demand.
+/// Best-effort like `experiments::write_csv`: returns whether the
+/// write succeeded so callers can log the destination.
+pub fn write_suite_json(
+    path: &std::path::Path,
+    suite: &str,
+    meta: &[(&str, Json)],
+    results: &[BenchResult],
+) -> bool {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty()
+            && std::fs::create_dir_all(dir).is_err()
+        {
+            return false;
+        }
+    }
+    std::fs::write(path, suite_json(suite, meta, results)).is_ok()
+}
+
+/// Time `f` for exactly `iters` iterations — for heavyweight
+/// end-to-end cases where the budget-based loop of [`bench`] would
+/// run far too long. Warms up once first, except at `iters == 1`
+/// where a warmup would double a deliberately slow single-shot case.
+pub fn bench_n<T>(
+    name: &str,
+    iters: usize,
+    mut f: impl FnMut() -> T,
+) -> BenchResult {
+    let iters = iters.max(1);
+    if iters > 1 {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: total / samples.len() as u32,
+        p50: samples[samples.len() / 2],
+        min: samples[0],
+    };
+    res.print();
+    res
 }
 
 /// Time `f` repeatedly within `budget` (at least 3 runs, at most
@@ -93,6 +188,35 @@ mod tests {
         let r = bench("noop", Duration::from_millis(1), 100, || 1 + 1);
         assert!(r.iters >= 3);
         assert!(r.min <= r.mean);
+    }
+
+    #[test]
+    fn bench_n_runs_exact_iters() {
+        let r = bench_n("noop", 5, || 2 + 2);
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn json_output_is_wellformed() {
+        let r = bench_n("case \"a\"", 1, || 1);
+        let doc = suite_json(
+            "engine_scale",
+            &[("servers", Json::Num(2000.0))],
+            &[r],
+        );
+        // parseable by the in-tree JSON parser
+        let v = crate::util::json::parse(&doc).expect("valid JSON");
+        assert_eq!(
+            v.get("suite").and_then(|s| s.as_str()),
+            Some("engine_scale")
+        );
+        assert_eq!(
+            v.get("meta")
+                .and_then(|m| m.get("servers"))
+                .and_then(|s| s.as_usize()),
+            Some(2000)
+        );
+        assert_eq!(v.get("results").and_then(|r| r.as_arr()).map(|a| a.len()), Some(1));
     }
 
     #[test]

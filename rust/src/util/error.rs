@@ -1,0 +1,128 @@
+//! Minimal `anyhow`-style error handling (substrate — crates.io is
+//! unavailable offline).
+//!
+//! Provides the small API surface the crate actually uses: a
+//! string-backed [`Error`], a defaulted [`Result`] alias, the
+//! [`anyhow!`](crate::anyhow) / [`bail!`](crate::bail) macros, and a
+//! [`Context`] extension trait for decorating foreign errors. The
+//! semantics match `anyhow` closely enough that swapping the real crate
+//! back in is a one-line import change.
+
+use std::fmt;
+
+/// A boxed, human-readable error message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error { msg: m.into() }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+/// `Result` defaulted to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+// Make `use crate::util::error::{anyhow, bail}` work: `#[macro_export]`
+// puts the macros at the crate root; re-export them here so call sites
+// can import them alongside `Result` and `Context`.
+pub use crate::{anyhow, bail};
+
+/// Attach context to an error, like `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+
+    /// Wrap the error with a lazily computed context message.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 42)
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e = anyhow!("x = {}", 7);
+        assert_eq!(format!("{e}"), "x = 7");
+        assert_eq!(format!("{e:?}"), "x = 7");
+        assert!(matches!(fails(), Err(_)));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(
+            std::io::Error::new(std::io::ErrorKind::NotFound, "missing"),
+        );
+        let e = r.with_context(|| "reading file").unwrap_err();
+        assert!(format!("{e}").starts_with("reading file: "));
+        let o: Option<u32> = None;
+        let e = o.context("empty").unwrap_err();
+        assert_eq!(format!("{e}"), "empty");
+    }
+}

@@ -1,8 +1,9 @@
 //! Shared utilities built in-tree (this image has no crates.io access):
-//! deterministic RNG, statistics, JSON and TOML-subset parsing, and a
-//! tiny benchmark harness.
+//! deterministic RNG, statistics, JSON and TOML-subset parsing, a tiny
+//! benchmark harness, and `anyhow`-style error handling.
 
 pub mod bench;
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod stats;

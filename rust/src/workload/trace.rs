@@ -198,8 +198,11 @@ impl Trace {
             if !u.demand.all_positive() {
                 return Err(format!("user {i} has non-positive demand"));
             }
-            if !(u.weight > 0.0) {
-                return Err(format!("user {i} has non-positive weight"));
+            // zero weights are legal: every consumer ranks through the
+            // guarded `sched::effective_weight` (0 -> 1.0), matching
+            // the f32 picker and the Pallas kernel
+            if !(u.weight >= 0.0) {
+                return Err(format!("user {i} has negative weight"));
             }
         }
         Ok(())

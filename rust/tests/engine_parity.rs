@@ -1,0 +1,271 @@
+//! Decision parity: the indexed scheduling core (`sched::index`) must
+//! emit a placement sequence *bit-identical* to the seed's linear-scan
+//! path — same `Pick` stream, same blocked/unblocked churn, same
+//! metrics — on randomized traces that exercise saturation (blocking),
+//! completions (unblocking), and weighted users.
+//!
+//! The wrapper records every `pick` outcome flowing through the
+//! engine, so the comparison covers the full blocked-user protocol,
+//! not just aggregate counts.
+
+use drfh::cluster::{Cluster, ResVec};
+use drfh::sched::{BestFitDrfh, FirstFitDrfh, Pick, Scheduler, UserState};
+use drfh::sim::{run, SimOpts};
+use drfh::util::Pcg32;
+use drfh::workload::{
+    GoogleLikeConfig, JobSpec, TaskSpec, Trace, TraceGenerator, UserSpec,
+};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Records every `pick` outcome while delegating everything (including
+/// the incremental-index notifications) to the wrapped policy.
+struct Recording<S> {
+    inner: S,
+    log: Rc<RefCell<Vec<Pick>>>,
+}
+
+impl<S: Scheduler> Scheduler for Recording<S> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn pick(
+        &mut self,
+        cluster: &Cluster,
+        users: &[UserState],
+        eligible: &[bool],
+    ) -> Pick {
+        let p = self.inner.pick(cluster, users, eligible);
+        self.log.borrow_mut().push(p);
+        p
+    }
+
+    fn can_fit(
+        &self,
+        cluster: &Cluster,
+        users: &[UserState],
+        user: usize,
+        server: usize,
+    ) -> bool {
+        self.inner.can_fit(cluster, users, user, server)
+    }
+
+    fn allows_overcommit(&self) -> bool {
+        self.inner.allows_overcommit()
+    }
+
+    fn on_free(&mut self, server: usize) {
+        self.inner.on_free(server);
+    }
+
+    fn on_place(&mut self, user: usize, server: usize) {
+        self.inner.on_place(user, server);
+    }
+
+    fn on_complete(&mut self, user: usize, server: usize) {
+        self.inner.on_complete(user, server);
+    }
+
+    fn on_ready(&mut self, user: usize) {
+        self.inner.on_ready(user);
+    }
+}
+
+/// Run `trace` through both paths of a policy pair and assert the full
+/// decision streams (and headline metrics) are identical.
+fn assert_parity<A, B>(
+    label: &str,
+    cluster: &Cluster,
+    trace: &Trace,
+    opts: &SimOpts,
+    indexed: A,
+    naive: B,
+) where
+    A: Scheduler + 'static,
+    B: Scheduler + 'static,
+{
+    let log_a = Rc::new(RefCell::new(Vec::new()));
+    let log_b = Rc::new(RefCell::new(Vec::new()));
+    let ra = run(
+        cluster.clone(),
+        trace,
+        Box::new(Recording { inner: indexed, log: log_a.clone() }),
+        opts.clone(),
+    );
+    let rb = run(
+        cluster.clone(),
+        trace,
+        Box::new(Recording { inner: naive, log: log_b.clone() }),
+        opts.clone(),
+    );
+    let a = log_a.borrow();
+    let b = log_b.borrow();
+    assert_eq!(a.len(), b.len(), "{label}: pick-stream lengths differ");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x, y, "{label}: decision {i} diverged");
+    }
+    assert_eq!(ra.tasks_placed, rb.tasks_placed, "{label}: placed");
+    assert_eq!(ra.tasks_completed, rb.tasks_completed, "{label}: completed");
+    assert_eq!(ra.cpu_util.v, rb.cpu_util.v, "{label}: cpu util series");
+    assert_eq!(ra.mem_util.v, rb.mem_util.v, "{label}: mem util series");
+    assert!(ra.tasks_placed > 0, "{label}: degenerate run placed nothing");
+}
+
+/// The constructors must select the path their name promises — the
+/// parity runs below are meaningless if both sides are the same path.
+#[test]
+fn constructors_select_the_expected_path() {
+    assert!(BestFitDrfh::default().is_indexed());
+    assert!(!BestFitDrfh::naive().is_indexed());
+    assert!(!BestFitDrfh::strict_filling().is_indexed());
+    assert!(FirstFitDrfh::default().is_indexed());
+    assert!(!FirstFitDrfh::naive().is_indexed());
+}
+
+/// Randomized Google-like traces on a deliberately tight cluster so
+/// blocking/unblocking dominates — the paths that could diverge.
+#[test]
+fn randomized_traces_bestfit() {
+    for seed in 0..5u64 {
+        let mut rng = Pcg32::seeded(9_100 + seed);
+        let cluster = Cluster::google_sample(30 + rng.below(50), &mut rng);
+        let gen = TraceGenerator::new(GoogleLikeConfig {
+            users: 4 + rng.below(8),
+            duration: 4_000.0,
+            jobs_per_user: 6.0,
+            max_tasks_per_job: 80,
+            ..Default::default()
+        });
+        let trace = gen.generate(seed * 31 + 7);
+        let opts = SimOpts {
+            horizon: 4_000.0,
+            sample_dt: 100.0,
+            track_user_series: false,
+        };
+        assert_parity(
+            &format!("bestfit seed {seed}"),
+            &cluster,
+            &trace,
+            &opts,
+            BestFitDrfh::default(),
+            BestFitDrfh::naive(),
+        );
+    }
+}
+
+#[test]
+fn randomized_traces_firstfit() {
+    for seed in 0..5u64 {
+        let mut rng = Pcg32::seeded(9_500 + seed);
+        let cluster = Cluster::google_sample(30 + rng.below(50), &mut rng);
+        let gen = TraceGenerator::new(GoogleLikeConfig {
+            users: 4 + rng.below(8),
+            duration: 4_000.0,
+            jobs_per_user: 6.0,
+            max_tasks_per_job: 80,
+            ..Default::default()
+        });
+        let trace = gen.generate(seed * 37 + 5);
+        let opts = SimOpts {
+            horizon: 4_000.0,
+            sample_dt: 100.0,
+            track_user_series: false,
+        };
+        assert_parity(
+            &format!("firstfit seed {seed}"),
+            &cluster,
+            &trace,
+            &opts,
+            FirstFitDrfh::default(),
+            FirstFitDrfh::naive(),
+        );
+    }
+}
+
+/// Heavily saturated hand-built instance: more demand than capacity,
+/// long and short tasks, so every completion re-opens the blocked set.
+#[test]
+fn saturated_blocking_churn() {
+    let mut rng = Pcg32::seeded(777);
+    let cluster = Cluster::google_sample(12, &mut rng);
+    let users: Vec<UserSpec> = (0..6)
+        .map(|_| UserSpec {
+            demand: ResVec::cpu_mem(
+                rng.uniform(0.1, 0.45),
+                rng.uniform(0.1, 0.45),
+            ),
+            weight: rng.uniform(0.5, 2.0),
+        })
+        .collect();
+    let jobs: Vec<JobSpec> = (0..18)
+        .map(|j| JobSpec {
+            id: j,
+            user: j % 6,
+            submit: (j as f64) * 40.0,
+            tasks: vec![
+                TaskSpec { duration: 150.0 + 70.0 * (j % 5) as f64 };
+                25
+            ],
+        })
+        .collect();
+    let trace = Trace { users, jobs };
+    let opts = SimOpts {
+        horizon: 5_000.0,
+        sample_dt: 50.0,
+        track_user_series: false,
+    };
+    assert_parity(
+        "saturated bestfit",
+        &cluster,
+        &trace,
+        &opts,
+        BestFitDrfh::default(),
+        BestFitDrfh::naive(),
+    );
+    assert_parity(
+        "saturated firstfit",
+        &cluster,
+        &trace,
+        &opts,
+        FirstFitDrfh::default(),
+        FirstFitDrfh::naive(),
+    );
+}
+
+/// Weighted users including a zero-weight one: both paths must apply
+/// the same guarded `effective_weight` semantics.
+#[test]
+fn zero_weight_user_parity() {
+    let cluster = Cluster::from_capacities(&[
+        ResVec::cpu_mem(4.0, 4.0),
+        ResVec::cpu_mem(2.0, 6.0),
+    ]);
+    let users = vec![
+        UserSpec { demand: ResVec::cpu_mem(0.5, 0.5), weight: 0.0 },
+        UserSpec { demand: ResVec::cpu_mem(0.4, 0.6), weight: 2.0 },
+        UserSpec { demand: ResVec::cpu_mem(0.6, 0.4), weight: 1.0 },
+    ];
+    let jobs: Vec<JobSpec> = (0..3)
+        .map(|u| JobSpec {
+            id: u,
+            user: u,
+            submit: 0.0,
+            tasks: vec![TaskSpec { duration: 200.0 }; 30],
+        })
+        .collect();
+    let trace = Trace { users, jobs };
+    let opts = SimOpts {
+        horizon: 2_000.0,
+        sample_dt: 50.0,
+        track_user_series: false,
+    };
+    assert_parity(
+        "zero-weight bestfit",
+        &cluster,
+        &trace,
+        &opts,
+        BestFitDrfh::default(),
+        BestFitDrfh::naive(),
+    );
+}

@@ -81,7 +81,7 @@ fn all_schedulers_run_same_trace() {
     let slots = SlotsScheduler::new(&cluster, 14);
     for report in [
         run(cluster.clone(), &trace, Box::new(BestFitDrfh::default()), opts.clone()),
-        run(cluster.clone(), &trace, Box::new(FirstFitDrfh), opts.clone()),
+        run(cluster.clone(), &trace, Box::new(FirstFitDrfh::default()), opts.clone()),
         run(cluster.clone(), &trace, Box::new(slots), opts.clone()),
     ] {
         assert!(report.tasks_completed <= report.tasks_placed);

@@ -6,10 +6,16 @@
 //! Skips (with a message) when `make artifacts` has not produced the
 //! AOT bundle.
 
-use drfh::runtime::{artifacts_available, picker, XlaRuntime};
+use drfh::runtime::{
+    artifacts_available, backend_available, picker, XlaRuntime,
+};
 use drfh::util::Pcg32;
 
 fn runtime_or_skip() -> Option<XlaRuntime> {
+    if !backend_available() {
+        eprintln!("SKIP: built without a real PJRT backend (stub runtime::xla)");
+        return None;
+    }
     if !artifacts_available() {
         eprintln!("SKIP: artifacts/ missing; run `make artifacts`");
         return None;
