@@ -15,32 +15,40 @@
 
 use drfh::allocator::{self, FluidUser};
 use drfh::cluster::{Cluster, ResVec, ServerClass};
-use drfh::experiments::EvalSetup;
-use drfh::sched::{BestFitDrfh, FirstFitDrfh};
-use drfh::sim::run;
+use drfh::experiments::{runner, EvalSetup};
+use drfh::sched::{BestFitDrfh, FirstFitDrfh, Scheduler};
 use drfh::util::bench::{bench, header};
 use drfh::util::{stats, Pcg32};
 use std::time::Duration;
 
 fn main() {
-    // ---- 1. strict vs work-conserving filling --------------------
+    // ---- 1+2. filling variant & placement heuristic --------------
+    // three independent runs on clones of one setup, fanned out
+    // through the parallel runtime with per-job options: the two
+    // filling variants track user series (the Jain index needs them),
+    // First-Fit keeps the untracked opts exactly as the old
+    // sequential loop ran it
     let setup = EvalSetup::with_duration(42, 300, 30, 21_600.0);
     let opts = drfh::sim::SimOpts {
         track_user_series: true,
         ..setup.opts.clone()
     };
-    let wc = run(
-        setup.cluster.clone(),
-        &setup.trace,
-        Box::new(BestFitDrfh::default()),
-        opts.clone(),
-    );
-    let strict = run(
-        setup.cluster.clone(),
-        &setup.trace,
-        Box::new(BestFitDrfh::strict_filling()),
-        opts.clone(),
-    );
+    let (cluster, trace) = (&setup.cluster, &setup.trace);
+    let sim_job = |sched: fn() -> Box<dyn Scheduler>,
+                   o: &drfh::sim::SimOpts| {
+        let o = o.clone();
+        let job: runner::Job<'_, drfh::sim::SimReport> =
+            Box::new(move || drfh::sim::run(cluster.clone(), trace, sched(), o));
+        job
+    };
+    let mut reports = runner::run_parallel(vec![
+        sim_job(|| Box::new(BestFitDrfh::default()), &opts),
+        sim_job(|| Box::new(BestFitDrfh::strict_filling()), &opts),
+        sim_job(|| Box::new(FirstFitDrfh::default()), &setup.opts),
+    ]);
+    let ff = reports.pop().expect("first-fit report");
+    let strict = reports.pop().expect("strict report");
+    let wc = reports.pop().expect("work-conserving report");
     let jain = |r: &drfh::sim::SimReport| {
         // Jain index over mean dominant shares of users with work
         let shares: Vec<f64> = r
@@ -73,12 +81,6 @@ fn main() {
 
     // ---- 2. Best-Fit vs First-Fit --------------------------------
     println!("\n== ablation 2: placement heuristic ==");
-    let ff = run(
-        setup.cluster.clone(),
-        &setup.trace,
-        Box::new(FirstFitDrfh::default()),
-        setup.opts.clone(),
-    );
     println!(
         "best-fit: cpu {:.1}% tasks {};  first-fit: cpu {:.1}% tasks {}",
         wc.avg_cpu_util * 100.0,

@@ -10,13 +10,19 @@
 //! `tests/engine_parity.rs` (and placement-count equality asserted
 //! here as a cheap guard).
 //!
+//! A second section times the paper's standard 3-policy comparison
+//! (Best-Fit / First-Fit / Slots-14, the Fig. 5 sweep) sequentially
+//! vs through `experiments::runner`'s scoped-thread fan-out — target
+//! **≥2.5× wall-clock** on a ≥4-core box (the sweep has 3 jobs, so
+//! the ceiling is 3×; 2-core CI smoke machines warn instead of fail).
+//!
 //! Results go to `BENCH_engine.json` at the repo root (override with
 //! `BENCH_OUT=/path.json`) to start the perf trajectory; CI runs the
 //! small-scale smoke via `ENGINE_SCALE_SMOKE=1`.
 //!
 //! Run: `cargo bench --bench engine_scale`
 
-use drfh::experiments::EvalSetup;
+use drfh::experiments::{fig5, runner, EvalSetup};
 use drfh::sched::{BestFitDrfh, FirstFitDrfh, Scheduler};
 use drfh::sim::run;
 use drfh::util::bench::{bench_n, header, write_suite_json, BenchResult};
@@ -113,6 +119,55 @@ fn main() {
         );
     }
 
+    // ---- 3-policy sweep: sequential vs parallel ------------------
+    header("engine_scale: 3-policy sweep (fig5 set), sequential vs parallel");
+    let mut placed_seq: Vec<usize> = Vec::new();
+    let seq_sweep = bench_n("sweep-sequential", iters, || {
+        placed_seq = runner::sweep_sequential(
+            &setup.cluster,
+            &setup.trace,
+            &setup.opts,
+            &fig5::standard_factories(),
+        )
+        .iter()
+        .map(|r| r.tasks_placed)
+        .collect();
+        placed_seq.iter().sum::<usize>()
+    });
+    let mut placed_par: Vec<usize> = Vec::new();
+    let par_sweep = bench_n("sweep-parallel", iters, || {
+        placed_par = runner::sweep(
+            &setup.cluster,
+            &setup.trace,
+            &setup.opts,
+            fig5::standard_factories(),
+        )
+        .iter()
+        .map(|r| r.tasks_placed)
+        .collect();
+        placed_par.iter().sum::<usize>()
+    });
+    // cheap parity guard, like the indexed/naive section: the fan-out
+    // must return the same per-variant results in the same order
+    assert_eq!(
+        placed_seq, placed_par,
+        "parallel sweep per-variant placements diverged from sequential"
+    );
+    let placed_sweep: usize = placed_par.iter().sum();
+    let speedup_sweep = seq_sweep.mean.as_secs_f64()
+        / par_sweep.mean.as_secs_f64().max(1e-12);
+    let sweep_workers = runner::worker_count(3);
+    println!(
+        "\n3-policy sweep: {speedup_sweep:.2}x parallel speedup \
+         ({sweep_workers} worker threads)"
+    );
+    if !smoke && speedup_sweep < 2.5 {
+        println!(
+            "WARNING: sweep speedup {speedup_sweep:.2}x below the 2.5x \
+             target (needs >= 3 idle cores)"
+        );
+    }
+
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json")
             .to_string()
@@ -126,6 +181,12 @@ fn main() {
         ("smoke", Json::Bool(smoke)),
         ("speedup_bestfit", Json::Num(speedup_bf)),
         ("speedup_firstfit", Json::Num(speedup_ff)),
+        ("speedup_sweep_parallel", Json::Num(speedup_sweep)),
+        (
+            "sweep_tasks_placed_total",
+            Json::Num(placed_sweep as f64),
+        ),
+        ("sweep_worker_threads", Json::Num(sweep_workers as f64)),
         (
             "placements_per_sec_bestfit_indexed",
             Json::Num(thr(placed_bf_idx, &bf_idx)),
@@ -135,7 +196,7 @@ fn main() {
             Json::Num(thr(placed_bf_naive, &bf_naive)),
         ),
     ];
-    let results = [bf_naive, bf_idx, ff_naive, ff_idx];
+    let results = [bf_naive, bf_idx, ff_naive, ff_idx, seq_sweep, par_sweep];
     let path = std::path::PathBuf::from(&out);
     if write_suite_json(&path, "engine_scale", &meta, &results) {
         println!("\nwrote {}", path.display());

@@ -1,7 +1,10 @@
 //! Regenerates paper Table II (Slots scheduler utilization vs slot
-//! size) and times one sweep point.
+//! size — the 5-point sweep now fans out through
+//! `experiments::runner`) and times one sweep point on the indexed
+//! vs naive Slots user-selection paths.
 //!
 //! Run: `cargo bench --bench table2_slots`
+//! CI smoke: `TABLE2_SMOKE=1 cargo bench --bench table2_slots`
 //! Full-scale sweep: `drfh exp table2 --servers 2000`
 
 use drfh::experiments::{table2, EvalSetup};
@@ -12,26 +15,65 @@ use std::time::Duration;
 
 fn main() {
     // bench-scale setup: 300 servers / 30 users / 6 h keeps the sweep
-    // shape while finishing quickly (scale with `drfh exp table2`)
-    let setup = EvalSetup::with_duration(42, 300, 30, 21_600.0);
+    // shape while finishing quickly (scale with `drfh exp table2`);
+    // TABLE2_SMOKE trims it further for CI.
+    let smoke = std::env::var_os("TABLE2_SMOKE").is_some();
+    let setup = if smoke {
+        EvalSetup::with_duration(42, 120, 12, 7_200.0)
+    } else {
+        EvalSetup::with_duration(42, 300, 30, 21_600.0)
+    };
     let rows = table2::run_table2(&setup);
     table2::print(&rows);
 
-    header("table2: one slots-scheduler simulation");
+    header("table2: one slots-scheduler simulation, indexed vs naive");
+    let (budget, iters) = if smoke {
+        (Duration::from_millis(500), 3)
+    } else {
+        (Duration::from_secs(5), 20)
+    };
     for &slots in &[10usize, 14, 20] {
-        bench(
-            &format!("slots={slots} sim (300 servers, 6 h)"),
-            Duration::from_secs(5),
-            20,
+        let mut counts_indexed = (0usize, 0usize);
+        let indexed = bench(
+            &format!("slots={slots} indexed users"),
+            budget,
+            iters,
             || {
-                run(
+                let r = run(
                     setup.cluster.clone(),
                     &setup.trace,
                     Box::new(SlotsScheduler::new(&setup.cluster, slots)),
                     setup.opts.clone(),
-                )
-                .tasks_completed
+                );
+                counts_indexed = (r.tasks_placed, r.tasks_completed);
+                counts_indexed
             },
+        );
+        let mut counts_naive = (0usize, 0usize);
+        let naive = bench(
+            &format!("slots={slots} naive users"),
+            budget,
+            iters,
+            || {
+                let r = run(
+                    setup.cluster.clone(),
+                    &setup.trace,
+                    Box::new(SlotsScheduler::naive(&setup.cluster, slots)),
+                    setup.opts.clone(),
+                );
+                counts_naive = (r.tasks_placed, r.tasks_completed);
+                counts_naive
+            },
+        );
+        // cheap parity guard on the runs the bench just timed; the
+        // full pick-stream proof lives in tests/engine_parity.rs
+        assert_eq!(
+            counts_indexed, counts_naive,
+            "slots={slots}: indexed/naive diverged"
+        );
+        println!(
+            "slots={slots}: indexed {:.2}x vs naive (identical decisions)",
+            naive.p50.as_secs_f64() / indexed.p50.as_secs_f64().max(1e-12)
         );
     }
 }

@@ -17,6 +17,7 @@
 
 use super::NormalizedDemand;
 use crate::cluster::{Cluster, ResVec, ServerClass};
+use crate::sched::effective_weight;
 use crate::solver::{self, Lp, LpResult};
 
 /// A user as seen by the fluid allocator.
@@ -111,6 +112,12 @@ pub fn solve_classes(
     let n = users.len();
     let nc = classes.len();
     let m = total.dims();
+    // Guarded weights throughout: trace validation allows weight 0
+    // (ranked as weight 1.0 everywhere via `sched::effective_weight`);
+    // the raw value here would put inf in the delta cap and a zero
+    // growth coefficient in the equality rows, freezing the user at 0.
+    let weights: Vec<f64> =
+        users.iter().map(|u| effective_weight(u.weight)).collect();
     let demands: Vec<NormalizedDemand> = users
         .iter()
         .map(|u| NormalizedDemand::from_absolute(&u.demand, total))
@@ -178,7 +185,7 @@ pub fn solve_classes(
         let mut delta_max = f64::INFINITY;
         for i in 0..n {
             if !saturated[i] && caps[i].is_finite() {
-                delta_max = delta_max.min((caps[i] - frozen[i]) / users[i].weight);
+                delta_max = delta_max.min((caps[i] - frozen[i]) / weights[i]);
             }
         }
         if delta_max.is_finite() {
@@ -200,7 +207,7 @@ pub fn solve_classes(
                 a_eq.push(row);
                 b_eq.push(frozen[i]);
             } else {
-                row[dvar] = -users[i].weight;
+                row[dvar] = -weights[i];
                 a_eq.push(row);
                 b_eq.push(frozen[i]);
             }
@@ -223,7 +230,7 @@ pub fn solve_classes(
         let mut newly = 0;
         for i in 0..n {
             if !saturated[i] {
-                frozen[i] += users[i].weight * delta;
+                frozen[i] += weights[i] * delta;
                 if caps[i].is_finite() && frozen[i] >= caps[i] - 1e-9 {
                     frozen[i] = caps[i];
                     saturated[i] = true;
@@ -326,6 +333,30 @@ mod tests {
             a.g
         );
         assert!(a.is_feasible(1e-9));
+    }
+
+    /// Regression: a legal weight-0 user (trace validation allows
+    /// them) must rank as weight 1.0 — the raw weight put `inf` in the
+    /// delta cap and a zero growth coefficient in the user's equality
+    /// row, freezing it at zero dominant share.
+    #[test]
+    fn zero_weight_user_uses_guarded_semantics() {
+        let cluster = Cluster::fig1_example();
+        let mut users = fig1_users();
+        users[0].weight = 0.0;
+        let a = solve(&cluster, &users);
+        assert!(a.g.iter().all(|g| g.is_finite()), "g = {:?}", a.g);
+        assert!(a.is_feasible(1e-9));
+        // effective weights (1.0, 1.0): same optimum as the unweighted
+        // Fig. 3 instance, g = 5/7 each
+        assert!((a.g[0] - 5.0 / 7.0).abs() < 1e-6, "g1 = {}", a.g[0]);
+        assert!((a.g[1] - 5.0 / 7.0).abs() < 1e-6, "g2 = {}", a.g[1]);
+
+        // capped weight-0 user: the cap still binds at the guarded rate
+        users[0].task_cap = Some(2.0);
+        let a = solve(&cluster, &users);
+        assert!((a.tasks[0] - 2.0).abs() < 1e-5, "tasks = {:?}", a.tasks);
+        assert!(a.tasks[1] > 10.0, "user 2 should absorb the release");
     }
 
     #[test]

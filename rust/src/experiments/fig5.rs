@@ -4,9 +4,11 @@
 //! Paper reference: both DRFH variants sustain much higher utilization
 //! than Slots at all times, and Best-Fit uniformly beats First-Fit.
 
+use super::runner::{self, SchedFactory};
 use super::{write_csv, EvalSetup};
-use crate::sched::{BestFitDrfh, FirstFitDrfh, SlotsScheduler};
-use crate::sim::{run, SimReport};
+use crate::cluster::Cluster;
+use crate::sched::{BestFitDrfh, FirstFitDrfh, Scheduler, SlotsScheduler};
+use crate::sim::SimReport;
 
 /// Reports for the three policies on the identical cluster + trace.
 #[derive(Clone, Debug)]
@@ -16,27 +18,48 @@ pub struct Fig5Result {
     pub slots: SimReport,
 }
 
-/// Run the three-way comparison (slots at the paper's best setting,
-/// 14 per maximum server).
+/// The standard 3-policy comparison set (slots at the paper's best
+/// setting, 14 per maximum server) — shared with
+/// `benches/engine_scale.rs`, which times this exact sweep.
+pub fn standard_factories() -> Vec<SchedFactory> {
+    vec![
+        Box::new(|_: &Cluster| {
+            Box::new(BestFitDrfh::default()) as Box<dyn Scheduler>
+        }),
+        Box::new(|_: &Cluster| {
+            Box::new(FirstFitDrfh::default()) as Box<dyn Scheduler>
+        }),
+        Box::new(|c: &Cluster| {
+            Box::new(SlotsScheduler::new(c, 14)) as Box<dyn Scheduler>
+        }),
+    ]
+}
+
+/// The Best-Fit vs Slots-14 head-to-head (the pair Fig. 6 and Fig. 7
+/// both evaluate) — kept next to [`standard_factories`] so the
+/// comparison settings can't silently diverge between harnesses.
+pub fn bestfit_vs_slots_factories() -> Vec<SchedFactory> {
+    vec![
+        Box::new(|_: &Cluster| {
+            Box::new(BestFitDrfh::default()) as Box<dyn Scheduler>
+        }),
+        Box::new(|c: &Cluster| {
+            Box::new(SlotsScheduler::new(c, 14)) as Box<dyn Scheduler>
+        }),
+    ]
+}
+
+/// Run the three-way comparison, one variant per worker thread.
 pub fn run_fig5(setup: &EvalSetup) -> Fig5Result {
-    let best_fit = run(
-        setup.cluster.clone(),
+    let mut reports = runner::sweep(
+        &setup.cluster,
         &setup.trace,
-        Box::new(BestFitDrfh::default()),
-        setup.opts.clone(),
+        &setup.opts,
+        standard_factories(),
     );
-    let first_fit = run(
-        setup.cluster.clone(),
-        &setup.trace,
-        Box::new(FirstFitDrfh::default()),
-        setup.opts.clone(),
-    );
-    let slots = run(
-        setup.cluster.clone(),
-        &setup.trace,
-        Box::new(SlotsScheduler::new(&setup.cluster, 14)),
-        setup.opts.clone(),
-    );
+    let slots = reports.pop().expect("slots report");
+    let first_fit = reports.pop().expect("first-fit report");
+    let best_fit = reports.pop().expect("best-fit report");
     Fig5Result { best_fit, first_fit, slots }
 }
 

@@ -5,10 +5,10 @@
 //! Paper reference: no improvement for small jobs, large reductions for
 //! jobs with many tasks (the bigger the job, the bigger the win).
 
+use super::fig5::bestfit_vs_slots_factories;
+use super::runner;
 use super::{write_csv, EvalSetup};
 use crate::metrics::{jct_reduction_by_bucket, JobRecord};
-use crate::sched::{BestFitDrfh, SlotsScheduler};
-use crate::sim::run;
 use crate::util::stats;
 use std::collections::HashMap;
 
@@ -22,20 +22,17 @@ pub struct Fig6Result {
     pub slots_jobs: Vec<JobRecord>,
 }
 
-/// Run Best-Fit and Slots on the same setup and match completed jobs.
+/// Run Best-Fit and Slots on the same setup (in parallel) and match
+/// completed jobs.
 pub fn run_fig6(setup: &EvalSetup) -> Fig6Result {
-    let bf = run(
-        setup.cluster.clone(),
+    let mut reports = runner::sweep(
+        &setup.cluster,
         &setup.trace,
-        Box::new(BestFitDrfh::default()),
-        setup.opts.clone(),
+        &setup.opts,
+        bestfit_vs_slots_factories(),
     );
-    let slots = run(
-        setup.cluster.clone(),
-        &setup.trace,
-        Box::new(SlotsScheduler::new(&setup.cluster, 14)),
-        setup.opts.clone(),
-    );
+    let slots = reports.pop().expect("slots report");
+    let bf = reports.pop().expect("best-fit report");
     let by_id: HashMap<usize, &JobRecord> =
         slots.jobs.iter().map(|j| (j.job, j)).collect();
     let matched = bf

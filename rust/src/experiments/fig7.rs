@@ -5,9 +5,9 @@
 //! user; ~20% of users complete *all* tasks under Best-Fit but not
 //! under Slots.
 
+use super::fig5::bestfit_vs_slots_factories;
+use super::runner;
 use super::{write_csv, EvalSetup};
-use crate::sched::{BestFitDrfh, SlotsScheduler};
-use crate::sim::run;
 
 #[derive(Clone, Debug)]
 pub struct Fig7Result {
@@ -35,18 +35,14 @@ impl Fig7Result {
 }
 
 pub fn run_fig7(setup: &EvalSetup) -> Fig7Result {
-    let bf = run(
-        setup.cluster.clone(),
+    let mut reports = runner::sweep(
+        &setup.cluster,
         &setup.trace,
-        Box::new(BestFitDrfh::default()),
-        setup.opts.clone(),
+        &setup.opts,
+        bestfit_vs_slots_factories(),
     );
-    let slots = run(
-        setup.cluster.clone(),
-        &setup.trace,
-        Box::new(SlotsScheduler::new(&setup.cluster, 14)),
-        setup.opts.clone(),
-    );
+    let slots = reports.pop().expect("slots report");
+    let bf = reports.pop().expect("best-fit report");
     let users = bf
         .user_tasks
         .iter()

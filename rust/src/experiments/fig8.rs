@@ -6,10 +6,11 @@
 //! Paper reference: pooling benefits most users; only ~2% complete
 //! fewer tasks in the shared system, and only slightly.
 
+use super::runner::{self, Job};
 use super::{write_csv, EvalSetup};
 use crate::cluster::Cluster;
 use crate::sched::BestFitDrfh;
-use crate::sim::run;
+use crate::sim::{run, SimReport};
 use crate::util::Pcg32;
 use crate::workload::Trace;
 
@@ -40,7 +41,9 @@ impl Fig8Result {
 }
 
 /// Run the shared cloud once, then every user alone on its k/n-server
-/// dedicated cloud, and compare completion ratios.
+/// dedicated cloud (all dedicated runs in parallel — at full scale
+/// this is the n = 100 long tail of the harness), and compare
+/// completion ratios.
 pub fn run_fig8(setup: &EvalSetup) -> Fig8Result {
     let shared = run(
         setup.cluster.clone(),
@@ -50,34 +53,48 @@ pub fn run_fig8(setup: &EvalSetup) -> Fig8Result {
     );
     let n = setup.trace.users.len();
     let dc_size = (setup.cluster.len() / n).max(1);
-    let mut users = Vec::new();
-    for u in 0..n {
-        if shared.user_tasks[u].submitted == 0 {
-            continue;
-        }
-        // dedicated cloud: k/n servers from the same distribution
-        let mut rng = Pcg32::new(setup.seed ^ 0xdc, u as u64 + 1);
-        let dc = Cluster::google_sample(dc_size, &mut rng);
-        // the user's own jobs only (submit times preserved)
-        let trace_u = Trace {
-            users: setup.trace.users.clone(),
-            jobs: setup
-                .trace
-                .jobs
-                .iter()
-                .filter(|j| j.user == u)
-                .cloned()
-                .collect(),
-        };
-        let dedicated =
-            run(dc, &trace_u, Box::new(BestFitDrfh::default()), setup.opts.clone());
-        users.push((
-            u,
-            shared.user_tasks[u].submitted,
-            shared.user_tasks[u].ratio(),
-            dedicated.user_tasks[u].ratio(),
-        ));
-    }
+    let active: Vec<usize> =
+        (0..n).filter(|&u| shared.user_tasks[u].submitted > 0).collect();
+    let jobs: Vec<Job<'_, SimReport>> = active
+        .iter()
+        .map(|&u| {
+            let job: Job<'_, SimReport> = Box::new(move || {
+                // dedicated cloud: k/n servers from the same distribution
+                let mut rng = Pcg32::new(setup.seed ^ 0xdc, u as u64 + 1);
+                let dc = Cluster::google_sample(dc_size, &mut rng);
+                // the user's own jobs only (submit times preserved)
+                let trace_u = Trace {
+                    users: setup.trace.users.clone(),
+                    jobs: setup
+                        .trace
+                        .jobs
+                        .iter()
+                        .filter(|j| j.user == u)
+                        .cloned()
+                        .collect(),
+                };
+                run(
+                    dc,
+                    &trace_u,
+                    Box::new(BestFitDrfh::default()),
+                    setup.opts.clone(),
+                )
+            });
+            job
+        })
+        .collect();
+    let users = active
+        .iter()
+        .zip(runner::run_parallel(jobs))
+        .map(|(&u, dedicated)| {
+            (
+                u,
+                shared.user_tasks[u].submitted,
+                shared.user_tasks[u].ratio(),
+                dedicated.user_tasks[u].ratio(),
+            )
+        })
+        .collect();
     Fig8Result { users }
 }
 

@@ -3,12 +3,17 @@
 //! the synthetic Google-like substrate and prints paper-vs-measured
 //! summaries; see DESIGN.md §5 for the index and EXPERIMENTS.md for
 //! recorded results.
+//!
+//! §Perf: every multi-variant harness fans its independent simulation
+//! runs out through [`runner`] (scoped threads, per-thread scheduler
+//! factories); results are bit-identical to the old sequential loops.
 
 pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod runner;
 pub mod table2;
 
 use crate::cluster::Cluster;

@@ -1,0 +1,206 @@
+//! Parallel sweep runtime: fan policy variants (or any independent
+//! simulation jobs) out across scoped threads.
+//!
+//! Every multi-policy harness (Fig. 5–8, Table II, the ablations) used
+//! to run its variants sequentially on clones of the same cluster +
+//! trace; the runs are completely independent, so on the standard
+//! 3-policy comparison a thread-per-variant fan-out cuts wall-clock by
+//! ~3× (and more on the 5-point Table II sweep and Fig. 8's per-user
+//! dedicated clouds). `benches/engine_scale.rs` measures the speedup
+//! and records it in `BENCH_engine.json`.
+//!
+//! ## Why factories, not schedulers
+//!
+//! [`crate::sched::Scheduler`] is deliberately `!Send` — the XLA
+//! policy wraps PJRT handles that must stay on their creating thread —
+//! so a scheduler can never cross the spawn boundary. The runner
+//! instead ships a `Send` *factory* ([`SchedFactory`]) to each worker,
+//! which builds the scheduler on the thread that will run it (from the
+//! worker's own cluster clone, so constructors like
+//! `SlotsScheduler::new(&cluster, 14)` see the cluster they will
+//! schedule).
+//!
+//! ## Determinism
+//!
+//! Each job runs on its own cluster clone with its own scheduler
+//! instance and the simulator is single-threaded and seed-driven, so
+//! results are identical to a sequential sweep regardless of worker
+//! interleaving — [`sweep_sequential`] exists only as the wall-clock
+//! baseline (and as the `DRFH_SEQ=1` escape hatch for debugging).
+
+use crate::cluster::Cluster;
+use crate::sched::Scheduler;
+use crate::sim::{run, SimOpts, SimReport};
+use crate::workload::Trace;
+use std::sync::Mutex;
+
+/// Builds one scheduler on the worker thread that will run it. The
+/// factory must be `Send` (it crosses the spawn boundary); the
+/// scheduler it returns never does.
+pub type SchedFactory =
+    Box<dyn Fn(&Cluster) -> Box<dyn Scheduler> + Send + Sync>;
+
+/// One independent simulation job (fig8-style harnesses build their
+/// own per-job cluster/trace inside the closure).
+pub type Job<'env, T> = Box<dyn FnOnce() -> T + Send + 'env>;
+
+/// Run independent jobs across scoped worker threads and return their
+/// results in job order. Worker count is `available_parallelism`
+/// capped at the job count (override with `DRFH_SWEEP_THREADS`);
+/// `DRFH_SEQ=1` forces in-place sequential execution.
+pub fn run_parallel<'env, T: Send>(jobs: Vec<Job<'env, T>>) -> Vec<T> {
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = worker_count(n);
+    if workers <= 1 {
+        return jobs.into_iter().map(|job| job()).collect();
+    }
+    // LIFO work queue + slot-indexed results: completion order is
+    // irrelevant, the output is re-assembled by job index.
+    let queue: Mutex<Vec<(usize, Job<'env, T>)>> =
+        Mutex::new(jobs.into_iter().enumerate().rev().collect());
+    let out: Mutex<Vec<Option<T>>> =
+        Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            // handles are auto-joined when the scope ends
+            let _worker = s.spawn(|| loop {
+                let next = queue.lock().expect("queue poisoned").pop();
+                let Some((i, job)) = next else { break };
+                let r = job();
+                out.lock().expect("results poisoned")[i] = Some(r);
+            });
+        }
+    });
+    out.into_inner()
+        .expect("results poisoned")
+        .into_iter()
+        .map(|r| r.expect("worker exited before finishing its job"))
+        .collect()
+}
+
+/// Worker threads [`run_parallel`] will actually use for `jobs` jobs:
+/// `available_parallelism` capped at the job count and the
+/// `DRFH_SWEEP_THREADS` override, 1 under `DRFH_SEQ=1`. Public so
+/// benches can report the true denominator next to their speedups.
+pub fn worker_count(jobs: usize) -> usize {
+    if std::env::var_os("DRFH_SEQ").is_some() {
+        return 1;
+    }
+    let hw = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    let cap = std::env::var("DRFH_SWEEP_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(hw);
+    cap.clamp(1, jobs.max(1))
+}
+
+/// Run every policy variant on its own clone of `cluster` + `trace`
+/// in parallel; reports come back in factory order.
+pub fn sweep(
+    cluster: &Cluster,
+    trace: &Trace,
+    opts: &SimOpts,
+    factories: Vec<SchedFactory>,
+) -> Vec<SimReport> {
+    let jobs: Vec<Job<'_, SimReport>> = factories
+        .into_iter()
+        .map(|f| {
+            let job: Job<'_, SimReport> = Box::new(move || {
+                let c = cluster.clone();
+                let sched = f(&c);
+                run(c, trace, sched, opts.clone())
+            });
+            job
+        })
+        .collect();
+    run_parallel(jobs)
+}
+
+/// The sequential reference sweep: identical results, one variant at a
+/// time. Kept as the wall-clock baseline for `benches/engine_scale.rs`.
+pub fn sweep_sequential(
+    cluster: &Cluster,
+    trace: &Trace,
+    opts: &SimOpts,
+    factories: &[SchedFactory],
+) -> Vec<SimReport> {
+    factories
+        .iter()
+        .map(|f| {
+            let c = cluster.clone();
+            let sched = f(&c);
+            run(c, trace, sched, opts.clone())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::EvalSetup;
+    use crate::sched::{BestFitDrfh, FirstFitDrfh, SlotsScheduler};
+
+    fn three_factories() -> Vec<SchedFactory> {
+        vec![
+            Box::new(|_: &Cluster| {
+                Box::new(BestFitDrfh::default()) as Box<dyn Scheduler>
+            }),
+            Box::new(|_: &Cluster| {
+                Box::new(FirstFitDrfh::default()) as Box<dyn Scheduler>
+            }),
+            Box::new(|c: &Cluster| {
+                Box::new(SlotsScheduler::new(c, 14)) as Box<dyn Scheduler>
+            }),
+        ]
+    }
+
+    #[test]
+    fn run_parallel_preserves_job_order() {
+        let jobs: Vec<Job<'static, usize>> = (0..17)
+            .map(|i| {
+                let job: Job<'static, usize> = Box::new(move || i * i);
+                job
+            })
+            .collect();
+        let got = run_parallel(jobs);
+        assert_eq!(got, (0..17).map(|i| i * i).collect::<Vec<_>>());
+        assert!(run_parallel::<u8>(Vec::new()).is_empty());
+    }
+
+    /// The parallel sweep is bit-identical to the sequential one: same
+    /// per-variant placement counts, completions, and utilization
+    /// series, in factory order.
+    #[test]
+    fn sweep_matches_sequential_reference() {
+        let setup = EvalSetup::with_duration(29, 60, 6, 4_000.0);
+        let par = sweep(
+            &setup.cluster,
+            &setup.trace,
+            &setup.opts,
+            three_factories(),
+        );
+        let seq = sweep_sequential(
+            &setup.cluster,
+            &setup.trace,
+            &setup.opts,
+            &three_factories(),
+        );
+        assert_eq!(par.len(), 3);
+        for (p, s) in par.iter().zip(&seq) {
+            assert_eq!(p.scheduler, s.scheduler);
+            assert_eq!(p.tasks_placed, s.tasks_placed);
+            assert_eq!(p.tasks_completed, s.tasks_completed);
+            assert_eq!(p.cpu_util.v, s.cpu_util.v);
+            assert_eq!(p.mem_util.v, s.mem_util.v);
+        }
+        // the three variants are genuinely different policies
+        assert_eq!(par[0].scheduler, "bestfit-drfh");
+        assert_eq!(par[1].scheduler, "firstfit-drfh");
+        assert_eq!(par[2].scheduler, "slots");
+    }
+}

@@ -7,9 +7,10 @@
 //! stranded; too many overcommit servers and the processor-sharing
 //! slowdown wastes throughput.
 
+use super::runner::{self, SchedFactory};
 use super::{write_csv, EvalSetup};
-use crate::sched::SlotsScheduler;
-use crate::sim::run;
+use crate::cluster::Cluster;
+use crate::sched::{Scheduler, SlotsScheduler};
 
 /// One row of Table II.
 #[derive(Clone, Debug)]
@@ -21,23 +22,24 @@ pub struct SlotRow {
 
 pub const SLOT_SIZES: [usize; 5] = [10, 12, 14, 16, 20];
 
-/// Run the sweep on a shared setup.
+/// Run the sweep on a shared setup, one slot size per worker thread.
 pub fn run_table2(setup: &EvalSetup) -> Vec<SlotRow> {
-    SLOT_SIZES
+    let factories: Vec<SchedFactory> = SLOT_SIZES
         .iter()
         .map(|&slots| {
-            let sched = SlotsScheduler::new(&setup.cluster, slots);
-            let report = run(
-                setup.cluster.clone(),
-                &setup.trace,
-                Box::new(sched),
-                setup.opts.clone(),
-            );
-            SlotRow {
-                slots,
-                cpu_util: report.avg_cpu_util,
-                mem_util: report.avg_mem_util,
-            }
+            let f: SchedFactory = Box::new(move |c: &Cluster| {
+                Box::new(SlotsScheduler::new(c, slots)) as Box<dyn Scheduler>
+            });
+            f
+        })
+        .collect();
+    runner::sweep(&setup.cluster, &setup.trace, &setup.opts, factories)
+        .into_iter()
+        .zip(SLOT_SIZES)
+        .map(|(report, slots)| SlotRow {
+            slots,
+            cpu_util: report.avg_cpu_util,
+            mem_util: report.avg_mem_util,
         })
         .collect()
 }

@@ -15,7 +15,7 @@
 //! (parity proved in `tests/engine_parity.rs`).
 
 use super::index::{self, IndexedCore, ScoreKind};
-use super::{min_share_user, Pick, Scheduler, UserState};
+use super::{drain_by_picks, min_share_user, DrainCtx, Pick, Scheduler, UserState};
 use crate::cluster::{Cluster, ResVec};
 
 /// The Best-Fit DRFH policy.
@@ -133,6 +133,16 @@ impl Scheduler for BestFitDrfh {
                 },
             },
         }
+    }
+
+    /// Batched wave: one index refresh for the whole wave (strict and
+    /// naive configurations stay on the single-pick reference loop).
+    fn drain(&mut self, ctx: &mut dyn DrainCtx) {
+        if self.strict || self.core.is_none() {
+            drain_by_picks(self, ctx);
+            return;
+        }
+        self.core.as_mut().expect("indexed core").drain(ctx);
     }
 
     fn can_fit(

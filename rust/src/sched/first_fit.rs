@@ -9,7 +9,7 @@
 //! seed's linear scan as the bit-identical reference.
 
 use super::index::{IndexedCore, ScoreKind};
-use super::{min_share_user, Pick, Scheduler, UserState};
+use super::{drain_by_picks, min_share_user, DrainCtx, Pick, Scheduler, UserState};
 use crate::cluster::{Cluster, ResVec};
 
 /// The First-Fit DRFH policy.
@@ -64,6 +64,16 @@ impl Scheduler for FirstFitDrfh {
                 },
             },
         }
+    }
+
+    /// Batched wave: one index refresh for the whole wave (the naive
+    /// configuration stays on the single-pick reference loop).
+    fn drain(&mut self, ctx: &mut dyn DrainCtx) {
+        if self.core.is_none() {
+            drain_by_picks(self, ctx);
+            return;
+        }
+        self.core.as_mut().expect("indexed core").drain(ctx);
     }
 
     fn can_fit(

@@ -49,7 +49,7 @@
 //!    never skips one that could fit.
 
 use crate::cluster::{Cluster, ResVec, Server, FIT_EPS, MAX_RES};
-use crate::sched::{Pick, UserState};
+use crate::sched::{DrainCtx, Pick, UserState};
 use std::cmp::Ordering;
 use std::collections::{BTreeSet, BinaryHeap};
 
@@ -139,6 +139,20 @@ impl ShareHeap {
     /// Flush dirty users: bump their stamp and push a fresh entry for
     /// those currently schedulable.
     pub fn refresh(&mut self, users: &[UserState], eligible: &[bool]) {
+        self.refresh_with(users, eligible, UserState::share_key);
+    }
+
+    /// [`ShareHeap::refresh`] under a caller-chosen key. The heap is
+    /// key-agnostic — the DRFH policies rank by `share_key`, the Slots
+    /// baseline by weighted running-slot count — but one instance must
+    /// be fed a single key function for its whole life (mixed keys
+    /// would interleave incomparable entries).
+    pub fn refresh_with(
+        &mut self,
+        users: &[UserState],
+        eligible: &[bool],
+        key: impl Fn(&UserState) -> f64,
+    ) {
         self.grow(users.len());
         while let Some(u) = self.dirty.pop() {
             let u = u as usize;
@@ -146,12 +160,35 @@ impl ShareHeap {
             self.stamp[u] += 1;
             if eligible[u] && users[u].pending > 0 {
                 self.heap.push(MinEntry {
-                    key: users[u].share_key(),
+                    key: key(&users[u]),
                     idx: u as u32,
                     stamp: self.stamp[u],
                 });
             }
         }
+        self.compact();
+    }
+
+    /// Re-key `u` mid-drain, right after the engine committed its
+    /// placement: equivalent to `mark_dirty(u)` + `refresh`, minus the
+    /// dirty-list bookkeeping (the wave's opening refresh already ran,
+    /// so nothing else is dirty). `schedulable` is the caller's read
+    /// of `eligible[u] && pending > 0` post-commit.
+    pub fn reinsert(&mut self, u: usize, key: f64, schedulable: bool) {
+        debug_assert!(u < self.stamp.len(), "reinsert before refresh");
+        self.stamp[u] += 1;
+        if schedulable {
+            self.heap.push(MinEntry {
+                key,
+                idx: u as u32,
+                stamp: self.stamp[u],
+            });
+        }
+        self.compact();
+    }
+
+    /// Drop stale entries once the heap outgrows the live set.
+    fn compact(&mut self) {
         if self.heap.len() > 4 * self.stamp.len() + 64 {
             let stamp = &self.stamp;
             self.heap.retain(|e| e.stamp == stamp[e.idx as usize]);
@@ -488,30 +525,60 @@ impl PlacementIndex {
         while let Some(l) = self.dirty.pop() {
             let l = l as usize;
             self.is_dirty[l] = false;
-            self.stamp[l] += 1;
-            self.servers
-                .as_mut()
-                .expect("built")
-                .note_avail(cluster, l);
-            let srv = &cluster.servers[l];
-            let stamp = self.stamp[l];
-            for (i, u) in users.iter().enumerate() {
-                if let Some(key) =
-                    score_server(self.kind, &u.demand, &self.dratio[i], srv, l)
-                {
-                    self.heaps[i].push(MinEntry {
-                        key,
-                        idx: l as u32,
-                        stamp,
-                    });
-                }
-            }
+            self.rescore_one(cluster, users, l);
         }
         if had_dirt {
-            for i in 0..self.heaps.len() {
-                if self.heaps[i].len() > 2 * self.k + 64 {
-                    self.rebuild_user(cluster, users, i);
-                }
+            self.compact(cluster, users);
+        }
+    }
+
+    /// Re-score server `l` mid-drain, right after the engine committed
+    /// a placement onto it: equivalent to `mark_server_dirty(l)` +
+    /// `refresh`, minus the dirty-flag bookkeeping (the wave's opening
+    /// refresh already ran, so no other server is dirty). Requires a
+    /// preceding [`PlacementIndex::refresh`] to have built the index.
+    pub fn rescore_server(
+        &mut self,
+        cluster: &Cluster,
+        users: &[UserState],
+        l: usize,
+    ) {
+        debug_assert!(
+            self.servers.is_some() && l < self.stamp.len(),
+            "rescore_server before refresh"
+        );
+        self.rescore_one(cluster, users, l);
+        self.compact(cluster, users);
+    }
+
+    /// Bump `l`'s stamp, fold its availability into the skyline, and
+    /// push fresh entries for every user it still fits.
+    fn rescore_one(&mut self, cluster: &Cluster, users: &[UserState], l: usize) {
+        self.stamp[l] += 1;
+        self.servers
+            .as_mut()
+            .expect("built")
+            .note_avail(cluster, l);
+        let srv = &cluster.servers[l];
+        let stamp = self.stamp[l];
+        for (i, u) in users.iter().enumerate() {
+            if let Some(key) =
+                score_server(self.kind, &u.demand, &self.dratio[i], srv, l)
+            {
+                self.heaps[i].push(MinEntry {
+                    key,
+                    idx: l as u32,
+                    stamp,
+                });
+            }
+        }
+    }
+
+    /// Rebuild any per-user heap that has outgrown its live set.
+    fn compact(&mut self, cluster: &Cluster, users: &[UserState]) {
+        for i in 0..self.heaps.len() {
+            if self.heaps[i].len() > 2 * self.k + 64 {
+                self.rebuild_user(cluster, users, i);
             }
         }
     }
@@ -584,6 +651,41 @@ impl IndexedCore {
                     Pick::Blocked { user: u }
                 }
             },
+        }
+    }
+
+    /// One batched event wave ([`crate::sched::Scheduler::drain`]):
+    /// refresh the
+    /// indexes once, then keep them current inline after each commit —
+    /// re-key the placed user, re-score the touched server — instead
+    /// of re-entering the dirty-flag machinery per decision. Each
+    /// inline update is operation-for-operation what `mark_dirty` +
+    /// `refresh` would have done for the single entity that changed,
+    /// so the decision stream is identical to a [`IndexedCore::pick`]
+    /// loop (asserted end-to-end by `tests/engine_parity.rs`).
+    pub fn drain(&mut self, ctx: &mut dyn DrainCtx) {
+        self.share.refresh(ctx.users(), ctx.eligible());
+        self.servers.refresh(ctx.cluster(), ctx.users());
+        loop {
+            let Some(u) = self.share.peek_min(ctx.users(), ctx.eligible())
+            else {
+                return;
+            };
+            match self.servers.best_server(u) {
+                Some(l) => {
+                    ctx.place(u, l);
+                    let users = ctx.users();
+                    let schedulable =
+                        ctx.eligible()[u] && users[u].pending > 0;
+                    let key = users[u].share_key();
+                    self.share.reinsert(u, key, schedulable);
+                    self.servers.rescore_server(ctx.cluster(), ctx.users(), l);
+                }
+                None => {
+                    self.share.remove(u);
+                    ctx.block(u);
+                }
+            }
         }
     }
 

@@ -24,6 +24,38 @@
 //! verdict stays valid until capacity is released. A re-eligible user
 //! is announced to the policy through [`Scheduler::on_ready`].
 //!
+//! ## The batched-drain protocol
+//!
+//! The engine no longer asks for decisions one `pick` at a time: at
+//! every event wave it hands the policy a [`DrainCtx`] and calls
+//! [`Scheduler::drain`] once, and the policy places *all* placeable
+//! work before returning. State ownership is unchanged — the policy
+//! still never mutates cluster/user state directly; it calls
+//! [`DrainCtx::place`] / [`DrainCtx::block`] and the engine commits
+//! the placement (resources, queues, dominant shares, completion
+//! events) before the call returns, so the policy always reads
+//! post-commit state through the ctx accessors.
+//!
+//! Two implementations exist, with *bit-identical* decision streams
+//! (asserted by `tests/engine_parity.rs`):
+//!
+//! * the **default** ([`drain_by_picks`]) — a loop over
+//!   [`Scheduler::pick`], one virtual call and one index refresh per
+//!   decision; this is the parity reference, and what naive policies
+//!   and the XLA wrapper run;
+//! * the **batched** override (Best-Fit / First-Fit via
+//!   [`index::IndexedCore::drain`]) — one [`index::ShareHeap`] /
+//!   [`index::PlacementIndex`] refresh per event wave, then the
+//!   per-placement bookkeeping is applied inline (re-key the placed
+//!   user, re-score the touched server) without re-entering the
+//!   dirty-flag machinery, amortizing the refresh bookkeeping across
+//!   the whole wave.
+//!
+//! Inside one drain the engine does not fire `on_place` (the policy
+//! made the decision and already knows); the default loop self-
+//! notifies so indexed policies that do not override `drain` keep
+//! their incremental state current.
+//!
 //! ## §Perf: the indexed hot path
 //!
 //! The DRFH policies ship two decision paths with *bit-identical*
@@ -114,6 +146,54 @@ pub enum Pick {
     Idle,
 }
 
+/// The engine surface a batched [`Scheduler::drain`] works against.
+///
+/// The engine owns all state mutation: the policy reads the current
+/// state through the accessors and commits decisions through
+/// [`DrainCtx::place`] / [`DrainCtx::block`]. Both mutators return
+/// with the engine state already updated, so the next accessor call
+/// observes the commit (exactly what a fresh `pick` invocation would
+/// have seen under the single-pick protocol).
+pub trait DrainCtx {
+    /// Current cluster state (post any commits this drain).
+    fn cluster(&self) -> &Cluster;
+    /// Current per-user scheduling state.
+    fn users(&self) -> &[UserState];
+    /// Eligibility mask (blocked users are excluded by the engine).
+    fn eligible(&self) -> &[bool];
+    /// Commit one task of `user` onto `server`: resources, queues,
+    /// dominant share, and the completion event are all updated
+    /// before this returns. The engine does NOT echo `on_place` back
+    /// during a drain — the deciding policy updates its own state.
+    fn place(&mut self, user: usize, server: usize);
+    /// `user` fits on no server right now: the engine removes it from
+    /// `eligible` until some server frees capacity (the blocked-user
+    /// protocol above), then announces it via [`Scheduler::on_ready`].
+    fn block(&mut self, user: usize);
+}
+
+/// The reference drain: a loop of single [`Scheduler::pick`] calls,
+/// exactly the engine's pre-batching `schedule_loop`. This is the
+/// default [`Scheduler::drain`] body (kept callable by policies whose
+/// override only covers some configurations) and the parity baseline
+/// the batched implementations are asserted against.
+pub fn drain_by_picks<S: Scheduler + ?Sized>(
+    sched: &mut S,
+    ctx: &mut dyn DrainCtx,
+) {
+    loop {
+        match sched.pick(ctx.cluster(), ctx.users(), ctx.eligible()) {
+            Pick::Idle => return,
+            Pick::Blocked { user } => ctx.block(user),
+            Pick::Place { user, server } => {
+                ctx.place(user, server);
+                // self-notify: the engine is silent during a drain
+                sched.on_place(user, server);
+            }
+        }
+    }
+}
+
 /// A scheduling policy. (Not `Send`: the XLA-backed policy wraps PJRT
 /// handles that must stay on their creating thread.)
 pub trait Scheduler {
@@ -139,6 +219,17 @@ pub trait Scheduler {
         user: usize,
         server: usize,
     ) -> bool;
+
+    /// Batched decision path: place every placeable task for this
+    /// event wave through `ctx`, returning once nothing further can
+    /// be placed. Decisions MUST match what a loop of `pick` calls
+    /// would produce (enforced by `tests/engine_parity.rs`); the
+    /// default body is exactly that loop ([`drain_by_picks`]).
+    /// Policies with incremental indexes override this to refresh
+    /// once per wave instead of once per decision.
+    fn drain(&mut self, ctx: &mut dyn DrainCtx) {
+        drain_by_picks(self, ctx);
+    }
 
     /// May placements exceed server capacity? Only the Slots baseline
     /// says yes (it ignores real demands); the engine then applies the

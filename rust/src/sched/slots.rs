@@ -12,9 +12,26 @@
 //! This is exactly the pathology the paper attributes to slot
 //! schedulers: the single-resource abstraction ignores both server and
 //! demand heterogeneity.
+//!
+//! §Perf: both halves of a pick are indexed. The server side is the
+//! `free_hint` cursor (below); the user side reuses the
+//! [`ShareHeap`] machinery keyed on the weighted running-slot count
+//! `running / effective_weight` instead of the naive O(n) scan per
+//! pick, which dominated Table II sweeps at k = 12,583.
+//! [`SlotsScheduler::naive`] keeps the linear scan as the
+//! bit-identical reference (parity in `tests/engine_parity.rs`).
 
+use super::index::ShareHeap;
 use super::{effective_weight, Pick, Scheduler, UserState};
 use crate::cluster::{Cluster, ResVec};
+
+/// The fair-sharing key: weighted running-slot count (1 task = 1
+/// slot). The single place both the naive scan and the heap compute
+/// it, so their argmins are bit-identical.
+#[inline]
+fn slot_key(u: &UserState) -> f64 {
+    u.running as f64 / effective_weight(u.weight)
+}
 
 /// The Slots policy.
 pub struct SlotsScheduler {
@@ -28,6 +45,9 @@ pub struct SlotsScheduler {
     /// by `on_free`, so it always lower-bounds the true first free
     /// slot and the picked server is identical to a full scan).
     free_hint: usize,
+    /// Lazy min-heap over `slot_key` (default), or `None` for the
+    /// naive O(n) user scan. Both paths emit identical decisions.
+    users_heap: Option<ShareHeap>,
 }
 
 impl SlotsScheduler {
@@ -58,7 +78,23 @@ impl SlotsScheduler {
                 n.max(1) // every server offers at least one slot
             })
             .collect();
-        SlotsScheduler { slots_per_max, slots_total, free_hint: 0 }
+        SlotsScheduler {
+            slots_per_max,
+            slots_total,
+            free_hint: 0,
+            users_heap: Some(ShareHeap::new()),
+        }
+    }
+
+    /// The seed's linear-scan user selection — the parity reference
+    /// and the naive baseline in `benches/table2_slots.rs`.
+    pub fn naive(cluster: &Cluster, slots_per_max: usize) -> Self {
+        SlotsScheduler { users_heap: None, ..Self::new(cluster, slots_per_max) }
+    }
+
+    /// Is this instance on the indexed user-selection path?
+    pub fn is_indexed(&self) -> bool {
+        self.users_heap.is_some()
     }
 
     /// Slot capacity of server `l`.
@@ -86,20 +122,27 @@ impl Scheduler for SlotsScheduler {
         // fair sharing over slot counts: serve the pending user with the
         // fewest weighted running tasks (1 task = 1 slot); zero weights
         // use the shared guarded fallback (see `sched::effective_weight`)
-        let mut best: Option<usize> = None;
-        for i in 0..users.len() {
-            if !eligible[i] || users[i].pending == 0 {
-                continue;
+        let best = match &mut self.users_heap {
+            Some(heap) => {
+                heap.refresh_with(users, eligible, slot_key);
+                heap.peek_min(users, eligible)
             }
-            let key = users[i].running as f64 / effective_weight(users[i].weight);
-            match best {
-                Some(b)
-                    if users[b].running as f64
-                        / effective_weight(users[b].weight)
-                        <= key => {}
-                _ => best = Some(i),
+            None => {
+                let mut best: Option<usize> = None;
+                for i in 0..users.len() {
+                    if !eligible[i] || users[i].pending == 0 {
+                        continue;
+                    }
+                    match best {
+                        Some(b)
+                            if slot_key(&users[b])
+                                <= slot_key(&users[i]) => {}
+                        _ => best = Some(i),
+                    }
+                }
+                best
             }
-        }
+        };
         let Some(u) = best else { return Pick::Idle };
         // first server with a free slot (resource demands NOT checked),
         // scanning from the cursor — everything before it is full
@@ -112,6 +155,11 @@ impl Scheduler for SlotsScheduler {
         if l < k {
             Pick::Place { user: u, server: l }
         } else {
+            // drop u from the heap until the engine unblocks it
+            // (on_ready), mirroring the IndexedCore blocked protocol
+            if let Some(heap) = &mut self.users_heap {
+                heap.remove(u);
+            }
             Pick::Blocked { user: u }
         }
     }
@@ -133,6 +181,24 @@ impl Scheduler for SlotsScheduler {
     fn on_free(&mut self, server: usize) {
         if server < self.free_hint {
             self.free_hint = server;
+        }
+    }
+
+    fn on_place(&mut self, user: usize, _server: usize) {
+        if let Some(heap) = &mut self.users_heap {
+            heap.mark_dirty(user); // running/pending changed
+        }
+    }
+
+    fn on_complete(&mut self, user: usize, _server: usize) {
+        if let Some(heap) = &mut self.users_heap {
+            heap.mark_dirty(user); // running changed
+        }
+    }
+
+    fn on_ready(&mut self, user: usize) {
+        if let Some(heap) = &mut self.users_heap {
+            heap.mark_dirty(user);
         }
     }
 }
@@ -169,9 +235,19 @@ mod tests {
     }
 
     #[test]
+    fn constructors_select_the_expected_path() {
+        let cluster = Cluster::from_capacities(&[ResVec::cpu_mem(1.0, 1.0)]);
+        assert!(SlotsScheduler::new(&cluster, 4).is_indexed());
+        assert!(!SlotsScheduler::naive(&cluster, 4).is_indexed());
+        assert_eq!(
+            SlotsScheduler::naive(&cluster, 4).total_slots(),
+            SlotsScheduler::new(&cluster, 4).total_slots()
+        );
+    }
+
+    #[test]
     fn fairness_by_running_count() {
         let cluster = Cluster::from_capacities(&[ResVec::cpu_mem(1.0, 1.0)]);
-        let mut s = SlotsScheduler::new(&cluster, 4);
         let mk = |pending, running| UserState {
             demand: ResVec::cpu_mem(0.1, 0.1),
             weight: 1.0,
@@ -182,17 +258,46 @@ mod tests {
             dom_delta: 0.1,
         };
         let users = vec![mk(1, 3), mk(1, 1)];
-        assert_eq!(
-            s.pick(&cluster, &users, &[true, true]),
-            Pick::Place { user: 1, server: 0 }
-        );
+        for mut s in
+            [SlotsScheduler::new(&cluster, 4), SlotsScheduler::naive(&cluster, 4)]
+        {
+            assert_eq!(
+                s.pick(&cluster, &users, &[true, true]),
+                Pick::Place { user: 1, server: 0 }
+            );
+        }
+    }
+
+    /// A zero-weight user ranks through the guarded fallback on both
+    /// user-selection paths.
+    #[test]
+    fn zero_weight_ranks_identically() {
+        let cluster = Cluster::from_capacities(&[ResVec::cpu_mem(1.0, 1.0)]);
+        let mk = |running, weight| UserState {
+            demand: ResVec::cpu_mem(0.1, 0.1),
+            weight,
+            pending: 1,
+            running,
+            dom_share: 0.0,
+            usage: ResVec::zeros(2),
+            dom_delta: 0.1,
+        };
+        // weight 0 -> effective 1.0: key 2.0 beats user 0's 3.0
+        let users = vec![mk(3, 1.0), mk(2, 0.0)];
+        for mut s in
+            [SlotsScheduler::new(&cluster, 4), SlotsScheduler::naive(&cluster, 4)]
+        {
+            assert_eq!(
+                s.pick(&cluster, &users, &[true, true]),
+                Pick::Place { user: 1, server: 0 }
+            );
+        }
     }
 
     #[test]
     fn blocked_when_no_free_slots() {
         let mut cluster =
             Cluster::new(vec![Server::new(ResVec::cpu_mem(1.0, 1.0))]);
-        let mut s = SlotsScheduler::new(&cluster, 2);
         cluster.servers[0].tasks = 2; // both slots taken
         let users = vec![UserState {
             demand: ResVec::cpu_mem(0.1, 0.1),
@@ -203,13 +308,18 @@ mod tests {
             usage: ResVec::zeros(2),
             dom_delta: 0.1,
         }];
-        assert_eq!(
-            s.pick(&cluster, &users, &[true]),
-            Pick::Blocked { user: 0 }
-        );
-        assert!(!s.can_fit(&cluster, &users, 0, 0));
-        cluster.servers[0].tasks = 1;
-        assert!(s.can_fit(&cluster, &users, 0, 0));
-        assert!(s.allows_overcommit());
+        for mut s in
+            [SlotsScheduler::new(&cluster, 2), SlotsScheduler::naive(&cluster, 2)]
+        {
+            assert_eq!(
+                s.pick(&cluster, &users, &[true]),
+                Pick::Blocked { user: 0 }
+            );
+            assert!(!s.can_fit(&cluster, &users, 0, 0));
+            cluster.servers[0].tasks = 1;
+            assert!(s.can_fit(&cluster, &users, 0, 0));
+            assert!(s.allows_overcommit());
+            cluster.servers[0].tasks = 2; // restore for the next path
+        }
     }
 }

@@ -22,6 +22,20 @@
 //! completion event; stale events are skipped via a per-server
 //! generation counter.
 //!
+//! ## §Perf: batched drain
+//!
+//! Scheduling opportunities are handed to the policy one *event wave*
+//! at a time: `schedule_loop` builds an [`EngineCtx`] over the
+//! engine's state and calls [`Scheduler::drain`] once, and the policy
+//! commits every placeable task through [`DrainCtx::place`] /
+//! [`DrainCtx::block`] before returning. The engine still owns all
+//! state mutation (the ctx methods are the old `place`/block bodies);
+//! what moved is the control loop, so indexed policies can refresh
+//! their structures once per wave instead of once per decision. The
+//! engine stays silent on `on_place` during a drain — the deciding
+//! policy already knows — while completions between waves keep firing
+//! `on_complete`/`on_free`/`on_ready` as before.
+//!
 //! ## §Perf: indexed hot path
 //!
 //! The engine feeds the policies' incremental indexes
@@ -41,7 +55,7 @@
 use crate::cluster::{Cluster, ResVec};
 use crate::metrics::{JobRecord, TimeSeries, UserTaskCounts};
 use crate::sched::index::BlockedIndex;
-use crate::sched::{Pick, Scheduler, UserState};
+use crate::sched::{DrainCtx, Scheduler, UserState};
 use crate::workload::Trace;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -312,8 +326,7 @@ impl<'a> Simulation<'a> {
     }
 
     fn push_event(&mut self, time: f64, kind: EventKind) {
-        self.seq += 1;
-        self.events.push(Event { time, seq: self.seq, kind });
+        push_event_into(&mut self.events, &mut self.seq, time, kind);
     }
 
     /// Run to completion (horizon or event exhaustion) and return the
@@ -408,10 +421,13 @@ impl<'a> Simulation<'a> {
         self.scheduler.on_free(l);
         self.scheduler.on_complete(u, l);
         self.users[u].running -= 1;
-        self.users[u].dom_share -= self.users[u].dom_delta;
-        if self.users[u].dom_share < 0.0 {
-            self.users[u].dom_share = 0.0;
-        }
+        // Recompute, never accumulate: repeated `+= dom_delta` /
+        // `-= dom_delta` cycles drift (float addition is not exactly
+        // invertible), biasing the very key schedulers sort by. The
+        // product form is exact for any running count and needs no
+        // negative clamp.
+        self.users[u].dom_share =
+            self.users[u].running as f64 * self.users[u].dom_delta;
         self.users[u].usage.sub_assign(&demand);
         self.report.tasks_completed += 1;
         self.report.user_tasks[u].completed += 1;
@@ -431,15 +447,14 @@ impl<'a> Simulation<'a> {
     /// Recompute a server's PS rate and (re)schedule its next
     /// completion check.
     fn refresh_server(&mut self, l: usize) {
-        let srv = &mut self.servers[l];
-        srv.rate = self.cluster.servers[l].rate();
-        srv.gen += 1;
-        if let Some(top) = srv.running.peek() {
-            let dt = (top.vfinish - srv.vtime).max(0.0) / srv.rate;
-            let eta = self.now + dt;
-            let gen = srv.gen;
-            self.push_event(eta, EventKind::ServerCheck { server: l, gen });
-        }
+        refresh_server_at(
+            &self.cluster,
+            &mut self.servers,
+            &mut self.events,
+            &mut self.seq,
+            self.now,
+            l,
+        );
     }
 
     /// Re-check blocked users against server `l` after it freed
@@ -472,60 +487,27 @@ impl<'a> Simulation<'a> {
         self.scratch_unblock = cands;
     }
 
+    /// One scheduling opportunity: hand the whole event wave to the
+    /// policy through [`Scheduler::drain`]. The [`EngineCtx`] borrows
+    /// every engine field except the scheduler itself, so the policy
+    /// can read post-commit state and commit further decisions while
+    /// it holds the ctx.
     fn schedule_loop(&mut self) {
-        loop {
-            match self
-                .scheduler
-                .pick(&self.cluster, &self.users, &self.eligible)
-            {
-                Pick::Idle => break,
-                Pick::Blocked { user } => {
-                    self.blocked.insert(user);
-                    self.eligible[user] = false;
-                }
-                Pick::Place { user, server } => {
-                    self.place(user, server);
-                }
-            }
-        }
-    }
-
-    fn place(&mut self, u: usize, l: usize) {
-        let demand = self.users[u].demand;
-        if !self.scheduler.allows_overcommit() {
-            debug_assert!(
-                self.cluster.servers[l].fits(&demand),
-                "scheduler violated capacity"
-            );
-        }
-        // round-robin across the user's jobs: take one task from the
-        // front job, then rotate it to the back if it has more
-        let mut jq =
-            self.queues[u].pop_front().expect("placement without pending");
-        let duration = jq.tasks.pop_front().expect("empty job queue");
-        let job = jq.job;
-        if !jq.tasks.is_empty() {
-            self.queues[u].push_back(jq);
-        }
-        self.users[u].pending -= 1;
-        self.users[u].running += 1;
-        self.users[u].dom_share += self.users[u].dom_delta;
-        self.users[u].usage.add_assign(&demand);
-        self.cluster.servers[l].commit(&demand);
-        self.cluster.servers[l].tasks += 1;
-        self.scheduler.on_place(u, l);
-        self.report.tasks_placed += 1;
-
-        self.servers[l].advance(self.now);
-        self.seq += 1;
-        let entry = RunEntry {
-            vfinish: self.servers[l].vtime + duration,
-            seq: self.seq,
-            user: u as u32,
-            job,
+        let overcommit = self.scheduler.allows_overcommit();
+        let mut ctx = EngineCtx {
+            cluster: &mut self.cluster,
+            users: &mut self.users,
+            eligible: &mut self.eligible,
+            blocked: &mut self.blocked,
+            queues: &mut self.queues,
+            servers: &mut self.servers,
+            events: &mut self.events,
+            seq: &mut self.seq,
+            now: self.now,
+            report: &mut self.report,
+            overcommit,
         };
-        self.servers[l].running.push(entry);
-        self.refresh_server(l);
+        self.scheduler.drain(&mut ctx);
     }
 
     fn on_sample(&mut self) {
@@ -549,6 +531,128 @@ impl<'a> Simulation<'a> {
         if next <= self.opts.horizon {
             self.push_event(next, EventKind::Sample);
         }
+    }
+}
+
+// ------------------------------------------------------- drain plumbing
+
+fn push_event_into(
+    events: &mut BinaryHeap<Event>,
+    seq: &mut u64,
+    time: f64,
+    kind: EventKind,
+) {
+    *seq += 1;
+    events.push(Event { time, seq: *seq, kind });
+}
+
+/// Recompute server `l`'s PS rate and (re)schedule its next completion
+/// check — shared between the completion path ([`Simulation`] methods)
+/// and the drain path ([`EngineCtx::place`]).
+fn refresh_server_at(
+    cluster: &Cluster,
+    servers: &mut [ServerSim],
+    events: &mut BinaryHeap<Event>,
+    seq: &mut u64,
+    now: f64,
+    l: usize,
+) {
+    let srv = &mut servers[l];
+    srv.rate = cluster.servers[l].rate();
+    srv.gen += 1;
+    if let Some(top) = srv.running.peek() {
+        let dt = (top.vfinish - srv.vtime).max(0.0) / srv.rate;
+        let eta = now + dt;
+        let gen = srv.gen;
+        push_event_into(events, seq, eta, EventKind::ServerCheck {
+            server: l,
+            gen,
+        });
+    }
+}
+
+/// The engine's side of the batched-drain protocol: disjoint mutable
+/// borrows of every [`Simulation`] field a placement touches, so the
+/// scheduler (the one field *not* borrowed) can be called with the ctx.
+struct EngineCtx<'e> {
+    cluster: &'e mut Cluster,
+    users: &'e mut [UserState],
+    eligible: &'e mut [bool],
+    blocked: &'e mut BlockedIndex,
+    queues: &'e mut [VecDeque<JobQueue>],
+    servers: &'e mut [ServerSim],
+    events: &'e mut BinaryHeap<Event>,
+    seq: &'e mut u64,
+    now: f64,
+    report: &'e mut SimReport,
+    overcommit: bool,
+}
+
+impl DrainCtx for EngineCtx<'_> {
+    fn cluster(&self) -> &Cluster {
+        &*self.cluster
+    }
+
+    fn users(&self) -> &[UserState] {
+        &*self.users
+    }
+
+    fn eligible(&self) -> &[bool] {
+        &*self.eligible
+    }
+
+    /// Commit one task of `u` onto `l` (the pre-batching
+    /// `Simulation::place`, minus the `on_place` echo — the deciding
+    /// policy updates its own state).
+    fn place(&mut self, u: usize, l: usize) {
+        let demand = self.users[u].demand;
+        if !self.overcommit {
+            debug_assert!(
+                self.cluster.servers[l].fits(&demand),
+                "scheduler violated capacity"
+            );
+        }
+        // round-robin across the user's jobs: take one task from the
+        // front job, then rotate it to the back if it has more
+        let mut jq =
+            self.queues[u].pop_front().expect("placement without pending");
+        let duration = jq.tasks.pop_front().expect("empty job queue");
+        let job = jq.job;
+        if !jq.tasks.is_empty() {
+            self.queues[u].push_back(jq);
+        }
+        self.users[u].pending -= 1;
+        self.users[u].running += 1;
+        // recompute, never accumulate — see `complete_task`
+        self.users[u].dom_share =
+            self.users[u].running as f64 * self.users[u].dom_delta;
+        self.users[u].usage.add_assign(&demand);
+        self.cluster.servers[l].commit(&demand);
+        self.cluster.servers[l].tasks += 1;
+        self.report.tasks_placed += 1;
+
+        self.servers[l].advance(self.now);
+        *self.seq += 1;
+        let entry = RunEntry {
+            vfinish: self.servers[l].vtime + duration,
+            seq: *self.seq,
+            user: u as u32,
+            job,
+        };
+        self.servers[l].running.push(entry);
+        refresh_server_at(
+            self.cluster,
+            self.servers,
+            self.events,
+            self.seq,
+            self.now,
+            l,
+        );
+    }
+
+    fn block(&mut self, u: usize) {
+        self.blocked.insert(u);
+        self.eligible[u] = false;
     }
 }
 

@@ -20,13 +20,17 @@ pub fn std_dev(xs: &[f64]) -> f64 {
         .sqrt()
 }
 
-/// Linear-interpolated percentile, p in [0, 100].
+/// Linear-interpolated percentile, p in [0, 100]. NaN-tolerant: sorts
+/// with `total_cmp` instead of panicking mid-sort (NaNs group at the
+/// extremes by sign bit — positive NaNs last, negative NaNs first —
+/// so a NaN-bearing input yields NaN percentiles at the affected end
+/// rather than a panic).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -44,7 +48,7 @@ pub fn cdf_points(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
         return vec![];
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp); // NaN-tolerant, like `percentile`
     let n = v.len();
     (0..points)
         .map(|i| {
@@ -78,7 +82,10 @@ pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
     let w = (hi - lo) / bins as f64;
     for &x in xs {
         if x >= lo && x < hi {
-            h[((x - lo) / w) as usize] += 1;
+            // `(x - lo) / w` can round up to exactly `bins` for x just
+            // below hi (e.g. lo 0, hi 3.5, bins 5, x = 3.5 - 1 ulp):
+            // clamp the index instead of walking off the array
+            h[(((x - lo) / w) as usize).min(bins - 1)] += 1;
         } else if (x - hi).abs() < 1e-12 {
             h[bins - 1] += 1;
         }
@@ -127,5 +134,41 @@ mod tests {
     fn histogram_counts() {
         let h = histogram(&[0.1, 0.2, 0.9, 1.0], 0.0, 1.0, 2);
         assert_eq!(h, vec![2, 2]);
+    }
+
+    /// Regression: x one ulp below hi used to compute bin index ==
+    /// bins and panic on `h[bins]` (float division rounds up); the
+    /// index is clamped into the last bin. Both literals are exact
+    /// f64 values verified to trigger the rounding.
+    #[test]
+    fn histogram_clamps_rounded_up_bin() {
+        // (x - lo) / w == 5.0 exactly for x = nextafter(3.5, -inf)
+        let h = histogram(&[3.4999999999999996], 0.0, 3.5, 5);
+        assert_eq!(h.iter().sum::<usize>(), 1);
+        assert_eq!(h[4], 1);
+        // and == 10.0 for x = nextafter(7.0, -inf)
+        let h = histogram(&[6.999999999999999], 0.0, 7.0, 10);
+        assert_eq!(h.iter().sum::<usize>(), 1);
+        assert_eq!(h[9], 1);
+    }
+
+    /// Regression: NaN samples used to panic `partial_cmp().unwrap()`
+    /// inside the sort; `total_cmp` groups them at the sign-matching
+    /// extreme instead. Both NaN signs are covered — runtime NaNs
+    /// (e.g. `0.0/0.0` on x86-64) often carry the sign bit.
+    #[test]
+    fn percentile_and_cdf_tolerate_nan() {
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!(percentile(&xs, 100.0).is_nan()); // +NaN ranks last
+        let cdf = cdf_points(&xs, 4);
+        assert_eq!(cdf.len(), 4);
+        assert_eq!(cdf[0].0, 1.0); // finite values keep their order
+        // negative NaN ranks first: the low end goes NaN, the high
+        // end stays finite — and still no panic
+        let neg = [3.0, -f64::NAN, 1.0, 2.0];
+        assert!(percentile(&neg, 0.0).is_nan());
+        assert_eq!(percentile(&neg, 100.0), 3.0);
+        assert_eq!(cdf_points(&neg, 4).len(), 4);
     }
 }

@@ -1,15 +1,23 @@
-//! Decision parity: the indexed scheduling core (`sched::index`) must
-//! emit a placement sequence *bit-identical* to the seed's linear-scan
-//! path — same `Pick` stream, same blocked/unblocked churn, same
-//! metrics — on randomized traces that exercise saturation (blocking),
-//! completions (unblocking), and weighted users.
+//! Decision parity: the indexed scheduling core (`sched::index`), the
+//! batched drain path (`Scheduler::drain`), and the indexed Slots
+//! user selection must emit decision streams *bit-identical* to the
+//! seed's single-pick linear-scan path — same committed placements,
+//! same blocked/unblocked churn, same metrics — on randomized traces
+//! that exercise saturation (blocking), completions (unblocking), and
+//! weighted users.
 //!
-//! The wrapper records every `pick` outcome flowing through the
-//! engine, so the comparison covers the full blocked-user protocol,
-//! not just aggregate counts.
+//! Since the engine drives policies through `Scheduler::drain`, the
+//! recording wrapper logs at the [`DrainCtx`] boundary — every
+//! `place`/`block` the policy commits flows through it — so the
+//! comparison covers the full blocked-user protocol for both the
+//! batched override and the default pick-loop, not just aggregate
+//! counts.
 
 use drfh::cluster::{Cluster, ResVec};
-use drfh::sched::{BestFitDrfh, FirstFitDrfh, Pick, Scheduler, UserState};
+use drfh::sched::{
+    BestFitDrfh, DrainCtx, FirstFitDrfh, Pick, Scheduler, SlotsScheduler,
+    UserState,
+};
 use drfh::sim::{run, SimOpts};
 use drfh::util::Pcg32;
 use drfh::workload::{
@@ -18,11 +26,50 @@ use drfh::workload::{
 use std::cell::RefCell;
 use std::rc::Rc;
 
-/// Records every `pick` outcome while delegating everything (including
-/// the incremental-index notifications) to the wrapped policy.
+/// One committed decision observed at the engine boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Op {
+    Place { user: usize, server: usize },
+    Block { user: usize },
+}
+
+/// Logs every `place`/`block` a drained policy commits while
+/// delegating to the engine's real ctx.
+struct RecordingCtx<'c> {
+    inner: &'c mut dyn DrainCtx,
+    log: Rc<RefCell<Vec<Op>>>,
+}
+
+impl DrainCtx for RecordingCtx<'_> {
+    fn cluster(&self) -> &Cluster {
+        self.inner.cluster()
+    }
+
+    fn users(&self) -> &[UserState] {
+        self.inner.users()
+    }
+
+    fn eligible(&self) -> &[bool] {
+        self.inner.eligible()
+    }
+
+    fn place(&mut self, user: usize, server: usize) {
+        self.log.borrow_mut().push(Op::Place { user, server });
+        self.inner.place(user, server);
+    }
+
+    fn block(&mut self, user: usize) {
+        self.log.borrow_mut().push(Op::Block { user });
+        self.inner.block(user);
+    }
+}
+
+/// Records the decision stream while delegating everything (including
+/// the drain override and the incremental-index notifications) to the
+/// wrapped policy.
 struct Recording<S> {
     inner: S,
-    log: Rc<RefCell<Vec<Pick>>>,
+    log: Rc<RefCell<Vec<Op>>>,
 }
 
 impl<S: Scheduler> Scheduler for Recording<S> {
@@ -36,9 +83,12 @@ impl<S: Scheduler> Scheduler for Recording<S> {
         users: &[UserState],
         eligible: &[bool],
     ) -> Pick {
-        let p = self.inner.pick(cluster, users, eligible);
-        self.log.borrow_mut().push(p);
-        p
+        self.inner.pick(cluster, users, eligible)
+    }
+
+    fn drain(&mut self, ctx: &mut dyn DrainCtx) {
+        let mut rctx = RecordingCtx { inner: ctx, log: self.log.clone() };
+        self.inner.drain(&mut rctx);
     }
 
     fn can_fit(
@@ -72,15 +122,68 @@ impl<S: Scheduler> Scheduler for Recording<S> {
     }
 }
 
-/// Run `trace` through both paths of a policy pair and assert the full
+/// Forces the single-pick reference drain over any policy: delegates
+/// everything EXCEPT `drain`, which falls back to the trait default
+/// (`drain_by_picks`). Wrapping an indexed policy in this yields the
+/// indexed per-decision path the engine ran before batching.
+struct SinglePick<S>(S);
+
+impl<S: Scheduler> Scheduler for SinglePick<S> {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn pick(
+        &mut self,
+        cluster: &Cluster,
+        users: &[UserState],
+        eligible: &[bool],
+    ) -> Pick {
+        self.0.pick(cluster, users, eligible)
+    }
+
+    // NOTE: no `drain` override — the default pick-loop runs.
+
+    fn can_fit(
+        &self,
+        cluster: &Cluster,
+        users: &[UserState],
+        user: usize,
+        server: usize,
+    ) -> bool {
+        self.0.can_fit(cluster, users, user, server)
+    }
+
+    fn allows_overcommit(&self) -> bool {
+        self.0.allows_overcommit()
+    }
+
+    fn on_free(&mut self, server: usize) {
+        self.0.on_free(server);
+    }
+
+    fn on_place(&mut self, user: usize, server: usize) {
+        self.0.on_place(user, server);
+    }
+
+    fn on_complete(&mut self, user: usize, server: usize) {
+        self.0.on_complete(user, server);
+    }
+
+    fn on_ready(&mut self, user: usize) {
+        self.0.on_ready(user);
+    }
+}
+
+/// Run `trace` through both sides of a policy pair and assert the full
 /// decision streams (and headline metrics) are identical.
 fn assert_parity<A, B>(
     label: &str,
     cluster: &Cluster,
     trace: &Trace,
     opts: &SimOpts,
-    indexed: A,
-    naive: B,
+    fast: A,
+    reference: B,
 ) where
     A: Scheduler + 'static,
     B: Scheduler + 'static,
@@ -90,26 +193,48 @@ fn assert_parity<A, B>(
     let ra = run(
         cluster.clone(),
         trace,
-        Box::new(Recording { inner: indexed, log: log_a.clone() }),
+        Box::new(Recording { inner: fast, log: log_a.clone() }),
         opts.clone(),
     );
     let rb = run(
         cluster.clone(),
         trace,
-        Box::new(Recording { inner: naive, log: log_b.clone() }),
+        Box::new(Recording { inner: reference, log: log_b.clone() }),
         opts.clone(),
     );
     let a = log_a.borrow();
     let b = log_b.borrow();
-    assert_eq!(a.len(), b.len(), "{label}: pick-stream lengths differ");
     for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
         assert_eq!(x, y, "{label}: decision {i} diverged");
     }
+    assert_eq!(a.len(), b.len(), "{label}: decision-stream lengths differ");
     assert_eq!(ra.tasks_placed, rb.tasks_placed, "{label}: placed");
     assert_eq!(ra.tasks_completed, rb.tasks_completed, "{label}: completed");
     assert_eq!(ra.cpu_util.v, rb.cpu_util.v, "{label}: cpu util series");
     assert_eq!(ra.mem_util.v, rb.mem_util.v, "{label}: mem util series");
     assert!(ra.tasks_placed > 0, "{label}: degenerate run placed nothing");
+}
+
+fn random_setup(
+    rng_seed: u64,
+    trace_seed: u64,
+) -> (Cluster, Trace, SimOpts) {
+    let mut rng = Pcg32::seeded(rng_seed);
+    let cluster = Cluster::google_sample(30 + rng.below(50), &mut rng);
+    let gen = TraceGenerator::new(GoogleLikeConfig {
+        users: 4 + rng.below(8),
+        duration: 4_000.0,
+        jobs_per_user: 6.0,
+        max_tasks_per_job: 80,
+        ..Default::default()
+    });
+    let trace = gen.generate(trace_seed);
+    let opts = SimOpts {
+        horizon: 4_000.0,
+        sample_dt: 100.0,
+        track_user_series: false,
+    };
+    (cluster, trace, opts)
 }
 
 /// The constructors must select the path their name promises — the
@@ -121,28 +246,19 @@ fn constructors_select_the_expected_path() {
     assert!(!BestFitDrfh::strict_filling().is_indexed());
     assert!(FirstFitDrfh::default().is_indexed());
     assert!(!FirstFitDrfh::naive().is_indexed());
+    let cluster = Cluster::fig1_example();
+    assert!(SlotsScheduler::new(&cluster, 14).is_indexed());
+    assert!(!SlotsScheduler::naive(&cluster, 14).is_indexed());
 }
 
 /// Randomized Google-like traces on a deliberately tight cluster so
 /// blocking/unblocking dominates — the paths that could diverge.
+/// Batched indexed drain vs the seed's naive single-pick scans.
 #[test]
 fn randomized_traces_bestfit() {
     for seed in 0..5u64 {
-        let mut rng = Pcg32::seeded(9_100 + seed);
-        let cluster = Cluster::google_sample(30 + rng.below(50), &mut rng);
-        let gen = TraceGenerator::new(GoogleLikeConfig {
-            users: 4 + rng.below(8),
-            duration: 4_000.0,
-            jobs_per_user: 6.0,
-            max_tasks_per_job: 80,
-            ..Default::default()
-        });
-        let trace = gen.generate(seed * 31 + 7);
-        let opts = SimOpts {
-            horizon: 4_000.0,
-            sample_dt: 100.0,
-            track_user_series: false,
-        };
+        let (cluster, trace, opts) =
+            random_setup(9_100 + seed, seed * 31 + 7);
         assert_parity(
             &format!("bestfit seed {seed}"),
             &cluster,
@@ -157,21 +273,8 @@ fn randomized_traces_bestfit() {
 #[test]
 fn randomized_traces_firstfit() {
     for seed in 0..5u64 {
-        let mut rng = Pcg32::seeded(9_500 + seed);
-        let cluster = Cluster::google_sample(30 + rng.below(50), &mut rng);
-        let gen = TraceGenerator::new(GoogleLikeConfig {
-            users: 4 + rng.below(8),
-            duration: 4_000.0,
-            jobs_per_user: 6.0,
-            max_tasks_per_job: 80,
-            ..Default::default()
-        });
-        let trace = gen.generate(seed * 37 + 5);
-        let opts = SimOpts {
-            horizon: 4_000.0,
-            sample_dt: 100.0,
-            track_user_series: false,
-        };
+        let (cluster, trace, opts) =
+            random_setup(9_500 + seed, seed * 37 + 5);
         assert_parity(
             &format!("firstfit seed {seed}"),
             &cluster,
@@ -180,6 +283,55 @@ fn randomized_traces_firstfit() {
             FirstFitDrfh::default(),
             FirstFitDrfh::naive(),
         );
+    }
+}
+
+/// Batched drain vs single-pick drain over the SAME indexed policy:
+/// isolates the wave batching itself (the indexed-vs-naive runs above
+/// change two variables at once).
+#[test]
+fn batched_vs_single_pick_drain() {
+    for seed in 0..4u64 {
+        let (cluster, trace, opts) =
+            random_setup(9_900 + seed, seed * 41 + 3);
+        assert_parity(
+            &format!("batched bestfit seed {seed}"),
+            &cluster,
+            &trace,
+            &opts,
+            BestFitDrfh::default(),
+            SinglePick(BestFitDrfh::default()),
+        );
+        assert_parity(
+            &format!("batched firstfit seed {seed}"),
+            &cluster,
+            &trace,
+            &opts,
+            FirstFitDrfh::default(),
+            SinglePick(FirstFitDrfh::default()),
+        );
+    }
+}
+
+/// Indexed vs naive Slots user selection on randomized traces —
+/// overcommit plus the processor-sharing slowdown makes completion
+/// (and thus unblock) timing especially sensitive to any ranking
+/// drift.
+#[test]
+fn randomized_traces_slots() {
+    for seed in 0..4u64 {
+        let (cluster, trace, opts) =
+            random_setup(9_700 + seed, seed * 43 + 11);
+        for slots in [10usize, 14] {
+            assert_parity(
+                &format!("slots-{slots} seed {seed}"),
+                &cluster,
+                &trace,
+                &opts,
+                SlotsScheduler::new(&cluster, slots),
+                SlotsScheduler::naive(&cluster, slots),
+            );
+        }
     }
 }
 
@@ -231,6 +383,14 @@ fn saturated_blocking_churn() {
         FirstFitDrfh::default(),
         FirstFitDrfh::naive(),
     );
+    assert_parity(
+        "saturated slots",
+        &cluster,
+        &trace,
+        &opts,
+        SlotsScheduler::new(&cluster, 14),
+        SlotsScheduler::naive(&cluster, 14),
+    );
 }
 
 /// Weighted users including a zero-weight one: both paths must apply
@@ -268,4 +428,144 @@ fn zero_weight_user_parity() {
         BestFitDrfh::default(),
         BestFitDrfh::naive(),
     );
+    assert_parity(
+        "zero-weight slots",
+        &cluster,
+        &trace,
+        &opts,
+        SlotsScheduler::new(&cluster, 14),
+        SlotsScheduler::naive(&cluster, 14),
+    );
+}
+
+// --------------------------------------------------- dom_share drift
+
+/// Asserts `dom_share == running * dom_delta` bit-exactly for every
+/// user at every decision the engine commits.
+struct AssertShares<S>(S);
+
+struct AssertSharesCtx<'c> {
+    inner: &'c mut dyn DrainCtx,
+}
+
+impl AssertSharesCtx<'_> {
+    fn check(&self) {
+        for (i, u) in self.inner.users().iter().enumerate() {
+            let want = u.running as f64 * u.dom_delta;
+            assert!(
+                u.dom_share.to_bits() == want.to_bits(),
+                "user {i}: dom_share {} != running({}) * dom_delta({}) = {}",
+                u.dom_share,
+                u.running,
+                u.dom_delta,
+                want
+            );
+        }
+    }
+}
+
+impl DrainCtx for AssertSharesCtx<'_> {
+    fn cluster(&self) -> &Cluster {
+        self.inner.cluster()
+    }
+
+    fn users(&self) -> &[UserState] {
+        self.inner.users()
+    }
+
+    fn eligible(&self) -> &[bool] {
+        self.inner.eligible()
+    }
+
+    fn place(&mut self, user: usize, server: usize) {
+        self.check();
+        self.inner.place(user, server);
+        self.check();
+    }
+
+    fn block(&mut self, user: usize) {
+        self.inner.block(user);
+    }
+}
+
+impl<S: Scheduler> Scheduler for AssertShares<S> {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn pick(
+        &mut self,
+        cluster: &Cluster,
+        users: &[UserState],
+        eligible: &[bool],
+    ) -> Pick {
+        self.0.pick(cluster, users, eligible)
+    }
+
+    fn drain(&mut self, ctx: &mut dyn DrainCtx) {
+        let mut actx = AssertSharesCtx { inner: ctx };
+        actx.check(); // completions since the last wave stayed exact
+        self.0.drain(&mut actx);
+    }
+
+    fn can_fit(
+        &self,
+        cluster: &Cluster,
+        users: &[UserState],
+        user: usize,
+        server: usize,
+    ) -> bool {
+        self.0.can_fit(cluster, users, user, server)
+    }
+
+    fn allows_overcommit(&self) -> bool {
+        self.0.allows_overcommit()
+    }
+
+    fn on_free(&mut self, server: usize) {
+        self.0.on_free(server);
+    }
+
+    fn on_place(&mut self, user: usize, server: usize) {
+        self.0.on_place(user, server);
+    }
+
+    fn on_complete(&mut self, user: usize, server: usize) {
+        self.0.on_complete(user, server);
+    }
+
+    fn on_ready(&mut self, user: usize) {
+        self.0.on_ready(user);
+    }
+}
+
+/// Regression for the dominant-share drift: the engine used to
+/// accumulate `dom_share += / -= dom_delta` (clamping negatives), so
+/// thousands of place/complete cycles biased the very key schedulers
+/// sort by. The engine now recomputes `running * dom_delta` on every
+/// transition; over a long saturated run with heavy churn the
+/// identity must hold *bit-exactly* at every decision boundary.
+#[test]
+fn dom_share_stays_exact_over_long_runs() {
+    for seed in [5u64, 6] {
+        let (cluster, trace, opts) = random_setup(8_000 + seed, seed * 17);
+        let report = run(
+            cluster.clone(),
+            &trace,
+            Box::new(AssertShares(BestFitDrfh::default())),
+            opts.clone(),
+        );
+        assert!(
+            report.tasks_completed > 100,
+            "need churn to exercise drift, got {}",
+            report.tasks_completed
+        );
+        // same invariant through the single-pick path
+        run(
+            cluster,
+            &trace,
+            Box::new(AssertShares(SinglePick(BestFitDrfh::naive()))),
+            opts,
+        );
+    }
 }
