@@ -1,78 +1,399 @@
-//! §Perf bench: the exact fluid DRFH allocator (LP on server classes)
-//! as users and cluster size grow, plus the per-server DRF baseline.
+//! §Perf bench: the exact fluid DRFH allocator — one-shot solves as
+//! users and cluster size grow, the per-server DRF baseline, and the
+//! headline case: **event-stream incremental vs from-scratch** dynamic
+//! DRFH (join/depart/cap/weight churn, re-equalized after every
+//! event). The warm-started path must beat the from-scratch re-solves
+//! on the k = 2000 configs; because container timers are unreliable,
+//! the deterministic simplex **search-pivot counts** are recorded next
+//! to the wall-clock numbers and are the primary savings metric.
+//!
+//! All case groups fan out on `experiments::runner` (quiet timing on
+//! the workers, rows printed after each fan-out). Results go to
+//! `BENCH_allocator.json` at the repo root (override with
+//! `BENCH_OUT=/path.json`); CI runs `ALLOC_SMOKE=1` for a small-scale
+//! smoke pass.
 //!
 //! Run: `cargo bench --bench allocator_scale`
 
+use drfh::allocator::incremental::{IncrementalDrfh, UserId};
 use drfh::allocator::{self, per_server_drf, FluidUser};
 use drfh::cluster::{Cluster, ResVec};
-use drfh::util::bench::{bench, header};
+use drfh::experiments::runner::{self, Job};
+use drfh::util::bench::{bench_n_quiet, header, write_suite_json, BenchResult};
+use drfh::util::json::Json;
 use drfh::util::Pcg32;
-use std::time::Duration;
+
+/// One dynamic-sharing event. Indices are taken modulo the live user
+/// count at apply time, so warm and scratch appliers stay in lockstep.
+#[derive(Clone, Debug)]
+enum Ev {
+    Join(FluidUser),
+    Depart(usize),
+    SetCap(usize, Option<f64>),
+    SetWeight(usize, f64),
+}
+
+fn random_user(rng: &mut Pcg32) -> FluidUser {
+    FluidUser {
+        demand: ResVec::cpu_mem(
+            rng.uniform(0.02, 0.5),
+            rng.uniform(0.02, 0.5),
+        ),
+        weight: if rng.f64() < 0.3 { rng.uniform(0.5, 3.0) } else { 1.0 },
+        task_cap: if rng.f64() < 0.4 {
+            Some(rng.uniform(5.0, 400.0))
+        } else {
+            None
+        },
+    }
+}
+
+fn event_stream(
+    seed: u64,
+    initial: usize,
+    events: usize,
+) -> (Vec<FluidUser>, Vec<Ev>) {
+    let mut rng = Pcg32::seeded(seed);
+    let init: Vec<FluidUser> =
+        (0..initial).map(|_| random_user(&mut rng)).collect();
+    let mut n = initial;
+    let mut evs = Vec::with_capacity(events);
+    for _ in 0..events {
+        let r = rng.f64();
+        if (r < 0.30 && n < 2 * initial) || n <= 2 {
+            evs.push(Ev::Join(random_user(&mut rng)));
+            n += 1;
+        } else if r < 0.50 {
+            evs.push(Ev::Depart(rng.below(n)));
+            n -= 1;
+        } else if r < 0.75 {
+            let cap = if rng.f64() < 0.5 {
+                Some(rng.uniform(5.0, 400.0))
+            } else {
+                None
+            };
+            evs.push(Ev::SetCap(rng.below(n), cap));
+        } else {
+            evs.push(Ev::SetWeight(rng.below(n), rng.uniform(0.25, 4.0)));
+        }
+    }
+    (init, evs)
+}
+
+/// Warm path: one solver/basis across the whole stream. Returns a
+/// trajectory checksum (Σ of all dominant shares) and total search
+/// pivots.
+fn run_warm(cluster: &Cluster, init: &[FluidUser], evs: &[Ev]) -> (f64, u64) {
+    let mut inc = IncrementalDrfh::new(cluster);
+    let mut ids: Vec<UserId> =
+        init.iter().map(|u| inc.add_user(u.clone())).collect();
+    let mut check = 0.0f64;
+    let mut pivots = 0u64;
+    let a = inc.allocate();
+    pivots += a.lp_pivots;
+    check += a.g.iter().sum::<f64>();
+    for ev in evs {
+        match ev {
+            Ev::Join(u) => ids.push(inc.add_user(u.clone())),
+            Ev::Depart(i) => {
+                let id = ids.remove(i % ids.len());
+                inc.remove_user(id);
+            }
+            Ev::SetCap(i, cap) => inc.set_cap(ids[i % ids.len()], *cap),
+            Ev::SetWeight(i, w) => inc.set_weight(ids[i % ids.len()], *w),
+        }
+        let a = inc.allocate();
+        pivots += a.lp_pivots;
+        check += a.g.iter().sum::<f64>();
+    }
+    (check, pivots)
+}
+
+/// From-scratch reference: identical event applications on a plain
+/// user vector, full `allocator::solve` after every event.
+fn run_scratch(
+    cluster: &Cluster,
+    init: &[FluidUser],
+    evs: &[Ev],
+) -> (f64, u64) {
+    let mut users: Vec<FluidUser> = init.to_vec();
+    let mut check = 0.0f64;
+    let mut pivots = 0u64;
+    let a = allocator::solve(cluster, &users);
+    pivots += a.lp_pivots;
+    check += a.g.iter().sum::<f64>();
+    for ev in evs {
+        match ev {
+            Ev::Join(u) => users.push(u.clone()),
+            Ev::Depart(i) => {
+                let i = i % users.len();
+                users.remove(i);
+            }
+            Ev::SetCap(i, cap) => {
+                let i = i % users.len();
+                users[i].task_cap = *cap;
+            }
+            Ev::SetWeight(i, w) => {
+                let i = i % users.len();
+                users[i].weight = *w;
+            }
+        }
+        let a = allocator::solve(cluster, &users);
+        pivots += a.lp_pivots;
+        check += a.g.iter().sum::<f64>();
+    }
+    (check, pivots)
+}
+
+struct StreamCase {
+    tag: String,
+    warm: BenchResult,
+    scratch: BenchResult,
+    warm_pivots: u64,
+    scratch_pivots: u64,
+}
+
+fn stream_case(
+    servers: usize,
+    users: usize,
+    events: usize,
+    iters: usize,
+    seed: u64,
+) -> StreamCase {
+    let mut rng = Pcg32::seeded(seed);
+    let cluster = Cluster::google_sample(servers, &mut rng);
+    let (init, evs) = event_stream(seed * 31 + 7, users, events);
+    let mut warm_pivots = 0u64;
+    let mut warm_check = 0.0f64;
+    let warm = bench_n_quiet(
+        &format!("stream-warm k={servers} n={users} e={events}"),
+        iters,
+        || {
+            let (c, p) = run_warm(&cluster, &init, &evs);
+            warm_check = c;
+            warm_pivots = p;
+            p
+        },
+    );
+    let mut scratch_pivots = 0u64;
+    let mut scratch_check = 0.0f64;
+    let scratch = bench_n_quiet(
+        &format!("stream-scratch k={servers} n={users} e={events}"),
+        iters,
+        || {
+            let (c, p) = run_scratch(&cluster, &init, &evs);
+            scratch_check = c;
+            scratch_pivots = p;
+            p
+        },
+    );
+    // cheap parity guard (tests/incremental_parity.rs is the real proof)
+    assert!(
+        (warm_check - scratch_check).abs()
+            <= 1e-6 * (1.0 + warm_check.abs()),
+        "k={servers} n={users}: trajectory checksum diverged: \
+         warm {warm_check} vs scratch {scratch_check}"
+    );
+    StreamCase {
+        tag: format!("k{servers}_n{users}"),
+        warm,
+        scratch,
+        warm_pivots,
+        scratch_pivots,
+    }
+}
 
 fn main() {
-    let budget = Duration::from_millis(1000);
-    header("exact fluid DRFH solve (Table I classes)");
-    for &(servers, users) in
-        &[(100usize, 5usize), (500, 20), (2000, 50), (2000, 100), (12583, 100)]
-    {
-        let mut rng = Pcg32::seeded(7);
-        let cluster = if servers == 12_583 {
-            Cluster::google_full()
-        } else {
-            Cluster::google_sample(servers, &mut rng)
-        };
-        let fluid_users: Vec<FluidUser> = (0..users)
-            .map(|_| {
-                FluidUser::unweighted(ResVec::cpu_mem(
-                    rng.uniform(0.02, 0.5),
-                    rng.uniform(0.02, 0.5),
-                ))
-            })
-            .collect();
-        bench(
-            &format!("drfh solve k={servers} n={users}"),
-            budget,
-            1_000,
-            || allocator::solve(&cluster, &fluid_users),
-        );
+    let smoke = std::env::var_os("ALLOC_SMOKE").is_some();
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut meta: Vec<(String, Json)> = vec![
+        ("smoke".to_string(), Json::Bool(smoke)),
+        ("estimated".to_string(), Json::Bool(false)),
+    ];
+
+    // ---- one-shot solves, fanned out on the sweep runtime ---------
+    let one_shot: &[(usize, usize)] = if smoke {
+        &[(200, 8)]
+    } else {
+        &[(100, 5), (500, 20), (2000, 50), (2000, 100), (12_583, 100)]
+    };
+    let iters = if smoke { 2 } else { 5 };
+    header("exact fluid DRFH one-shot solve (Table I classes)");
+    let jobs: Vec<Job<'_, (BenchResult, u64)>> = one_shot
+        .iter()
+        .map(|&(servers, users)| {
+            let job: Job<'_, (BenchResult, u64)> = Box::new(move || {
+                let mut rng = Pcg32::seeded(7);
+                let cluster = if servers == 12_583 {
+                    Cluster::google_full()
+                } else {
+                    Cluster::google_sample(servers, &mut rng)
+                };
+                let fluid: Vec<FluidUser> = (0..users)
+                    .map(|_| {
+                        FluidUser::unweighted(ResVec::cpu_mem(
+                            rng.uniform(0.02, 0.5),
+                            rng.uniform(0.02, 0.5),
+                        ))
+                    })
+                    .collect();
+                let mut pivots = 0u64;
+                let r = bench_n_quiet(
+                    &format!("drfh solve k={servers} n={users}"),
+                    iters,
+                    || {
+                        let a = allocator::solve(&cluster, &fluid);
+                        pivots = a.lp_pivots;
+                        a.g.len()
+                    },
+                );
+                (r, pivots)
+            });
+            job
+        })
+        .collect();
+    for (r, pivots) in runner::run_parallel(jobs) {
+        r.print();
+        println!("{:<44} {pivots} search pivots per solve", "");
+        results.push(r);
     }
 
+    // ---- event streams: incremental vs from-scratch ---------------
+    let streams: &[(usize, usize, usize)] = if smoke {
+        &[(200, 8, 12)]
+    } else {
+        &[(2000, 50, 60), (2000, 100, 60)]
+    };
+    let stream_iters = if smoke { 1 } else { 3 };
+    header("dynamic DRFH event streams: incremental vs from-scratch");
+    let jobs: Vec<Job<'_, StreamCase>> = streams
+        .iter()
+        .map(|&(k, n, e)| {
+            let job: Job<'_, StreamCase> = Box::new(move || {
+                stream_case(k, n, e, stream_iters, 40 + n as u64)
+            });
+            job
+        })
+        .collect();
+    for case in runner::run_parallel(jobs) {
+        case.warm.print();
+        case.scratch.print();
+        let speedup = case.scratch.mean.as_secs_f64()
+            / case.warm.mean.as_secs_f64().max(1e-12);
+        let pivot_ratio = case.scratch_pivots as f64
+            / case.warm_pivots.max(1) as f64;
+        println!(
+            "{:<44} pivots {} -> {} ({pivot_ratio:.1}x fewer), \
+             {speedup:.2}x wall-clock",
+            format!("  {}", case.tag),
+            case.scratch_pivots,
+            case.warm_pivots
+        );
+        if case.warm_pivots >= case.scratch_pivots {
+            println!(
+                "WARNING: {} warm path did not reduce search pivots",
+                case.tag
+            );
+        }
+        meta.push((
+            format!("stream_{}_pivots_warm", case.tag),
+            Json::Num(case.warm_pivots as f64),
+        ));
+        meta.push((
+            format!("stream_{}_pivots_scratch", case.tag),
+            Json::Num(case.scratch_pivots as f64),
+        ));
+        meta.push((
+            format!("stream_{}_pivot_ratio", case.tag),
+            Json::Num(pivot_ratio),
+        ));
+        meta.push((
+            format!("stream_{}_speedup_wallclock", case.tag),
+            Json::Num(speedup),
+        ));
+        results.push(case.warm);
+        results.push(case.scratch);
+    }
+
+    // ---- finite caps (progressive rounds) -------------------------
+    let capped: &[usize] = if smoke { &[8] } else { &[20, 50] };
+    let capped_servers = if smoke { 200 } else { 1000 };
     header("exact solve with finite caps (progressive rounds)");
-    for &users in &[20usize, 50] {
-        let mut rng = Pcg32::seeded(11);
-        let cluster = Cluster::google_sample(1000, &mut rng);
-        let fluid_users: Vec<FluidUser> = (0..users)
-            .map(|i| FluidUser {
-                demand: ResVec::cpu_mem(
-                    rng.uniform(0.02, 0.5),
-                    rng.uniform(0.02, 0.5),
-                ),
-                weight: 1.0,
-                task_cap: Some(10.0 + i as f64 * 40.0),
-            })
-            .collect();
-        bench(
-            &format!("drfh solve capped k=1000 n={users}"),
-            budget,
-            1_000,
-            || allocator::solve(&cluster, &fluid_users),
-        );
+    let jobs: Vec<Job<'_, BenchResult>> = capped
+        .iter()
+        .map(|&users| {
+            let job: Job<'_, BenchResult> = Box::new(move || {
+                let mut rng = Pcg32::seeded(11);
+                let cluster =
+                    Cluster::google_sample(capped_servers, &mut rng);
+                let fluid: Vec<FluidUser> = (0..users)
+                    .map(|i| FluidUser {
+                        demand: ResVec::cpu_mem(
+                            rng.uniform(0.02, 0.5),
+                            rng.uniform(0.02, 0.5),
+                        ),
+                        weight: 1.0,
+                        task_cap: Some(10.0 + i as f64 * 40.0),
+                    })
+                    .collect();
+                bench_n_quiet(
+                    &format!(
+                        "drfh solve capped k={capped_servers} n={users}"
+                    ),
+                    iters,
+                    || allocator::solve(&cluster, &fluid).lp_solves,
+                )
+            });
+            job
+        })
+        .collect();
+    for r in runner::run_parallel(jobs) {
+        r.print();
+        results.push(r);
     }
 
+    // ---- naive per-server DRF baseline (Sec. III-D) ---------------
+    let per_server: &[usize] = if smoke { &[200] } else { &[500, 2000] };
     header("naive per-server DRF baseline (Sec. III-D)");
-    for &servers in &[500usize, 2000] {
-        let mut rng = Pcg32::seeded(13);
-        let cluster = Cluster::google_sample(servers, &mut rng);
-        let demands: Vec<ResVec> = (0..50)
-            .map(|_| {
-                ResVec::cpu_mem(rng.uniform(0.02, 0.5), rng.uniform(0.02, 0.5))
-            })
-            .collect();
-        bench(
-            &format!("per-server drf k={servers} n=50"),
-            budget,
-            1_000,
-            || per_server_drf::solve(&cluster, &demands),
-        );
+    let jobs: Vec<Job<'_, BenchResult>> = per_server
+        .iter()
+        .map(|&servers| {
+            let job: Job<'_, BenchResult> = Box::new(move || {
+                let mut rng = Pcg32::seeded(13);
+                let cluster = Cluster::google_sample(servers, &mut rng);
+                let demands: Vec<ResVec> = (0..50)
+                    .map(|_| {
+                        ResVec::cpu_mem(
+                            rng.uniform(0.02, 0.5),
+                            rng.uniform(0.02, 0.5),
+                        )
+                    })
+                    .collect();
+                bench_n_quiet(
+                    &format!("per-server drf k={servers} n=50"),
+                    iters,
+                    || per_server_drf::solve(&cluster, &demands),
+                )
+            });
+            job
+        })
+        .collect();
+    for r in runner::run_parallel(jobs) {
+        r.print();
+        results.push(r);
+    }
+
+    // ---- JSON trajectory ------------------------------------------
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_allocator.json")
+            .to_string()
+    });
+    let meta_refs: Vec<(&str, Json)> =
+        meta.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    let path = std::path::PathBuf::from(&out);
+    if write_suite_json(&path, "allocator_scale", &meta_refs, &results) {
+        println!("\nwrote {}", path.display());
+    } else {
+        println!("\ncould not write {} (read-only fs?)", path.display());
     }
 }

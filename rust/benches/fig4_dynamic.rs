@@ -1,19 +1,36 @@
-//! Regenerates paper Fig. 4 (dynamic allocation with users joining and
-//! departing) and times the run.
+//! Regenerates paper Fig. 4 — the discrete dynamic-allocation run and
+//! its fluid counterpart (warm-started incremental allocator) — fanned
+//! out on `experiments::runner`, then times both end to end.
 //!
 //! Run: `cargo bench --bench fig4_dynamic`
 
-use drfh::experiments::fig4;
-use drfh::util::bench::{bench, header};
-use std::time::Duration;
+use drfh::experiments::runner::{self, Job};
+use drfh::experiments::{fig4, fig4_fluid};
+use drfh::util::bench::{bench_n, header};
+
+enum Out {
+    Discrete(fig4::Fig4Result),
+    Fluid(fig4_fluid::Fig4FluidResult),
+}
 
 fn main() {
-    // regenerate the figure once, with the full printed summary
-    let res = fig4::run_fig4(42);
-    fig4::print(&res);
+    // regenerate both variants once (in parallel), with full summaries
+    let jobs: Vec<Job<'static, Out>> = vec![
+        Box::new(|| Out::Discrete(fig4::run_fig4(42))),
+        Box::new(|| Out::Fluid(fig4_fluid::run_fig4_fluid(42))),
+    ];
+    for out in runner::run_parallel(jobs) {
+        match out {
+            Out::Discrete(res) => fig4::print(&res),
+            Out::Fluid(res) => fig4_fluid::print(&res),
+        }
+    }
 
-    header("fig4: full dynamic-allocation run (100 servers, 2000 s)");
-    bench("fig4 run", Duration::from_secs(5), 50, || {
+    header("fig4: dynamic allocation (100 servers), discrete vs fluid");
+    bench_n("fig4 discrete run (2000 s)", 3, || {
         fig4::run_fig4(42).report.tasks_placed
+    });
+    bench_n("fig4 fluid run (incremental + scratch)", 3, || {
+        fig4_fluid::run_fig4_fluid(42).warm_pivots
     });
 }

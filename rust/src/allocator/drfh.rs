@@ -14,6 +14,12 @@
 //! filling rounds: all unsaturated users' dominant shares grow at rates
 //! proportional to their weights until one hits its cap, which freezes
 //! it; repeat until no user can grow.
+//!
+//! [`solve`] re-solves each round's LP from scratch. It is the
+//! from-scratch parity reference (the `::naive()` convention of
+//! `sched::index`) for [`super::incremental::IncrementalDrfh`], which
+//! maintains the same LP statefully and re-solves from a warm simplex
+//! basis across rounds and join/departure/cap/weight events.
 
 use super::NormalizedDemand;
 use crate::cluster::{Cluster, ResVec, ServerClass};
@@ -52,6 +58,12 @@ pub struct FluidAllocation {
     pub g: Vec<f64>,
     /// Number of (fractional) tasks each user schedules.
     pub tasks: Vec<f64>,
+    /// Simplex search pivots spent across the progressive-filling
+    /// rounds that produced this allocation (warm-start savings show
+    /// up here — see `allocator::incremental`).
+    pub lp_pivots: u64,
+    /// Number of LP solves (one per progressive-filling round).
+    pub lp_solves: u32,
 }
 
 impl FluidAllocation {
@@ -148,6 +160,8 @@ pub fn solve_classes(
     let mut frozen = vec![0.0f64; n];
     let mut saturated = vec![false; n];
     let mut x = vec![vec![0.0f64; nc]; n];
+    let mut lp_pivots = 0u64;
+    let mut lp_solves = 0u32;
 
     // Users already at cap 0 are trivially saturated.
     for i in 0..n {
@@ -215,7 +229,11 @@ pub fn solve_classes(
 
         let lp = Lp { n: nv, c: c_obj, a_ub, b_ub, a_eq, b_eq };
         let (sol, delta) = match solver::solve(&lp) {
-            LpResult::Optimal { x, obj } => (x, obj),
+            LpResult::Optimal { x, obj, pivots } => {
+                lp_pivots += pivots.search() as u64;
+                lp_solves += 1;
+                (x, obj)
+            }
             other => panic!("DRFH round LP not optimal: {other:?}"),
         };
         // commit
@@ -256,6 +274,8 @@ pub fn solve_classes(
         x,
         g,
         tasks,
+        lp_pivots,
+        lp_solves,
     }
 }
 

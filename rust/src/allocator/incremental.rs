@@ -1,0 +1,568 @@
+//! Event-driven dynamic DRFH: the exact fluid allocation (paper
+//! eq. (7) + the progressive-filling rounds of Sec. V-A) maintained
+//! *incrementally* across user churn.
+//!
+//! [`IncrementalDrfh`] owns one [`crate::solver::Solver`] for the whole
+//! lifetime of the cluster and caches everything that survives events:
+//! the server-class aggregation, normalized demands, the class capacity
+//! rows, and — crucially — the simplex **basis**. `add_user`,
+//! `remove_user`, `set_cap` and `set_weight` mutate the standing LP in
+//! place; every [`IncrementalDrfh::allocate`] then runs the *same*
+//! progressive-filling rounds as the from-scratch reference
+//! ([`crate::allocator::solve`]) but re-solves each round warm from the
+//! previous basis instead of rebuilding a tableau and running a full
+//! two-phase solve. On dynamic-sharing sweeps (Fig. 4 style) this makes
+//! consecutive solves near-incremental: a handful of dual/primal repair
+//! pivots per event instead of hundreds of phase-1/phase-2 pivots.
+//!
+//! ## LP shape and basis-reuse invariants
+//!
+//! Variables: one `x_ic` per (user slot, server class) — the dominant
+//! share user *i* draws from class *c* — plus one shared *cumulative*
+//! growth variable `G` (the filling level since the current
+//! `allocate()` began; the objective). Rows:
+//!
+//! * class capacity rows `Σ_i x_ic · d_ir <= cap_cr` — created once,
+//!   never touched except to rewire a slot's demand coefficients;
+//! * per slot, the user's growth equality — `Σ_c x_ic − w_i G = 0`
+//!   while the user is actively filling, `Σ_c x_ic = cap_i` once its
+//!   task cap saturates — split into a **pair of `<=` rows**
+//!   (`row_up` / `row_lo`). The pairing is what keeps every event
+//!   warm-startable: appending or re-targeting a `<=` row only
+//!   adds/retunes a slack, which the dual simplex repairs from the
+//!   current basis, whereas a true equality row would need a fresh
+//!   phase-1 artificial (see `solver::simplex` docs);
+//! * one `G <= g_max` cap row whose rhs is retuned every round. When
+//!   no finite task cap remains among the active users the row must
+//!   not bind, and its stand-in rhs must stay **O(1)**: `G` provably
+//!   never exceeds `1/max_active_weight` (an active user's dominant
+//!   share `w·G` is at most the whole pool), so `2/max_active_weight`
+//!   is slack and scale-safe. A huge sentinel (say 1e12) would be
+//!   numerically catastrophic here: whenever a warm refactorization
+//!   pivots `G` on the cap row, the sentinel rhs is eliminated into
+//!   every row containing `G` and its absorption error (~1e12 · ε)
+//!   wipes out the 1e-9 parity budget.
+//!
+//! The growth variable is *cumulative* (`Σx = w·G`, not
+//! `Σx = f + w·δ` with per-round resets) precisely so that active
+//! rows keep `rhs = 0` across rounds and the round-*r* optimum stays
+//! feasible — literally the same point — after a saturation switch:
+//! the newly saturated user's rows flip to `Σ_c x_ic = cap_i`, which
+//! the current solution already satisfies (`w·G* = cap_i` up to the
+//! clamp epsilon). The refactorized basis is therefore primal
+//! feasible and the next round continues with ordinary warm primal
+//! pivots instead of falling back to a cold solve; only the *first*
+//! round after user churn may go cold (its coefficient edits can lose
+//! both feasibilities).
+//!
+//! Departed users keep their slot: the pair rows get `rhs 0` and a zero
+//! `δ` coefficient, which pins `Σ_c x_ic = 0` (hence every `x_ic = 0`,
+//! releasing the capacity) without deactivating anything — the basis
+//! stays valid and the slot is rewired on the next join. Saturation
+//! (a user hitting its task cap mid-filling) likewise only edits the
+//! pair rows' `δ` coefficient and rhs.
+//!
+//! Parity: the round structure, `delta_max` computation, saturation
+//! thresholds and termination tests mirror `drfh::solve_classes`
+//! line-for-line, and each round's LP has the identical feasible set,
+//! so the per-user dominant shares `g` (unique across alternate LP
+//! optima) match the from-scratch path to solver precision;
+//! `tests/incremental_parity.rs` enforces this across randomized event
+//! sequences. The per-class split `x` may differ between the two paths
+//! when the optimum is non-unique — both splits are optimal.
+
+use super::drfh::{FluidAllocation, FluidUser};
+use super::NormalizedDemand;
+use crate::cluster::{Cluster, ResVec, ServerClass};
+use crate::sched::effective_weight;
+use crate::solver::{LpResult, RowId, SolveStats, Solver, VarId};
+
+/// Placeholder rhs for the growth-cap row at construction; every
+/// `allocate()` round overwrites it before solving.
+const GROWTH_CAP_INIT: f64 = 1.0;
+
+/// Handle to a user slot inside an [`IncrementalDrfh`]. Stays valid
+/// until `remove_user`; never reused while the user is present.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct UserId(usize);
+
+#[derive(Clone, Debug)]
+struct SlotUser {
+    spec: FluidUser,
+    demand: NormalizedDemand,
+    /// Guarded weight (`sched::effective_weight`).
+    weight: f64,
+    /// Task cap in dominant-share units (`inf` when uncapped).
+    cap: f64,
+}
+
+#[derive(Clone, Debug)]
+struct Slot {
+    /// One x_ic variable per server class.
+    vars: Vec<VarId>,
+    /// `Σ_c x_ic − w δ <= f`
+    row_up: RowId,
+    /// `−Σ_c x_ic + w δ <= −f`
+    row_lo: RowId,
+    user: Option<SlotUser>,
+}
+
+/// The warm-started incremental fluid DRFH allocator. See module docs.
+#[derive(Clone, Debug)]
+pub struct IncrementalDrfh {
+    classes: Vec<ServerClass>,
+    total: ResVec,
+    m: usize,
+    solver: Solver,
+    delta: VarId,
+    delta_cap: RowId,
+    /// Class capacity rows, `[class][resource]`.
+    cap_rows: Vec<Vec<RowId>>,
+    slots: Vec<Slot>,
+    /// Free (departed) slot indices, reused LIFO.
+    free: Vec<usize>,
+    /// Occupied slots in insertion order — the user order of every
+    /// [`FluidAllocation`] this allocator returns.
+    order: Vec<usize>,
+}
+
+impl IncrementalDrfh {
+    /// Build the standing LP skeleton for `cluster` (classes + totals
+    /// are cached; the cluster itself is not retained).
+    pub fn new(cluster: &Cluster) -> Self {
+        Self::from_classes(cluster.classes(), cluster.total_capacity())
+    }
+
+    /// Same, over pre-aggregated server classes.
+    pub fn from_classes(classes: Vec<ServerClass>, total: ResVec) -> Self {
+        let m = total.dims();
+        let mut solver = Solver::new();
+        let delta = solver.add_var(1.0);
+        let mut cap_rows = Vec::with_capacity(classes.len());
+        for class in &classes {
+            let mut rows = Vec::with_capacity(m);
+            for r in 0..m {
+                let cap_share =
+                    class.capacity[r] * class.count as f64 / total[r];
+                rows.push(solver.add_row_le(&[], cap_share));
+            }
+            cap_rows.push(rows);
+        }
+        let delta_cap = solver.add_row_le(&[(delta, 1.0)], GROWTH_CAP_INIT);
+        IncrementalDrfh {
+            classes,
+            total,
+            m,
+            solver,
+            delta,
+            delta_cap,
+            cap_rows,
+            slots: Vec::new(),
+            free: Vec::new(),
+            order: Vec::new(),
+        }
+    }
+
+    /// Number of present users.
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// The server classes the standing LP is expressed over.
+    pub fn classes(&self) -> &[ServerClass] {
+        &self.classes
+    }
+
+    /// Pool totals (absolute units).
+    pub fn total(&self) -> &ResVec {
+        &self.total
+    }
+
+    /// Present users in allocation order — a ready-made argument for
+    /// the from-scratch reference `allocator::solve`.
+    pub fn users(&self) -> Vec<FluidUser> {
+        self.order
+            .iter()
+            .map(|&si| self.slots[si].user.as_ref().unwrap().spec.clone())
+            .collect()
+    }
+
+    /// Cumulative solver accounting (warm/cold solves, pivots, ...).
+    pub fn solver_stats(&self) -> SolveStats {
+        self.solver.stats()
+    }
+
+    /// Join event. Reuses a departed slot's variables and pair rows
+    /// when one is free; otherwise appends fresh ones (which keeps the
+    /// warm basis either way).
+    pub fn add_user(&mut self, user: FluidUser) -> UserId {
+        let demand = NormalizedDemand::from_absolute(&user.demand, &self.total);
+        let weight = effective_weight(user.weight);
+        let cap = user
+            .task_cap
+            .map(|t| t * demand.share[demand.dominant])
+            .unwrap_or(f64::INFINITY);
+        let nc = self.classes.len();
+        let si = match self.free.pop() {
+            Some(si) => si,
+            None => {
+                let vars: Vec<VarId> =
+                    (0..nc).map(|_| self.solver.add_var(0.0)).collect();
+                let up: Vec<(VarId, f64)> =
+                    vars.iter().map(|&v| (v, 1.0)).collect();
+                let lo: Vec<(VarId, f64)> =
+                    vars.iter().map(|&v| (v, -1.0)).collect();
+                let row_up = self.solver.add_row_le(&up, 0.0);
+                let row_lo = self.solver.add_row_le(&lo, 0.0);
+                self.slots.push(Slot { vars, row_up, row_lo, user: None });
+                self.slots.len() - 1
+            }
+        };
+        // (re)wire the slot's demand coefficients into the capacity rows
+        for c in 0..nc {
+            for r in 0..self.m {
+                let row = self.cap_rows[c][r];
+                let var = self.slots[si].vars[c];
+                self.solver.set_coeff(row, var, demand.norm[r]);
+            }
+        }
+        self.slots[si].user = Some(SlotUser { spec: user, demand, weight, cap });
+        self.order.push(si);
+        UserId(si)
+    }
+
+    /// Departure event. The slot's pair rows collapse to
+    /// `Σ_c x_ic = 0`, which releases the user's capacity without
+    /// disturbing the basis; the slot is recycled on the next join.
+    pub fn remove_user(&mut self, id: UserId) {
+        let si = id.0;
+        assert!(
+            self.slots[si].user.is_some(),
+            "remove_user on an empty slot"
+        );
+        self.slots[si].user = None;
+        let (up, lo) = (self.slots[si].row_up, self.slots[si].row_lo);
+        self.solver.set_coeff(up, self.delta, 0.0);
+        self.solver.set_coeff(lo, self.delta, 0.0);
+        self.solver.set_rhs(up, 0.0);
+        self.solver.set_rhs(lo, 0.0);
+        self.order.retain(|&s| s != si);
+        self.free.push(si);
+    }
+
+    /// Task-cap change event (paper Sec. V-A finite demands).
+    pub fn set_cap(&mut self, id: UserId, task_cap: Option<f64>) {
+        let u = self.slots[id.0]
+            .user
+            .as_mut()
+            .expect("set_cap on a removed user");
+        u.spec.task_cap = task_cap;
+        u.cap = task_cap
+            .map(|t| t * u.demand.share[u.demand.dominant])
+            .unwrap_or(f64::INFINITY);
+    }
+
+    /// Weight change event.
+    pub fn set_weight(&mut self, id: UserId, weight: f64) {
+        let u = self.slots[id.0]
+            .user
+            .as_mut()
+            .expect("set_weight on a removed user");
+        u.spec.weight = weight;
+        u.weight = effective_weight(weight);
+    }
+
+    /// Re-equalize: run the progressive-filling rounds for the current
+    /// user set, warm from the standing basis. Mirrors
+    /// `drfh::solve_classes` round for round (same `delta_max`, same
+    /// saturation thresholds, same termination) so the resulting
+    /// dominant shares match the from-scratch path.
+    pub fn allocate(&mut self) -> FluidAllocation {
+        let nc = self.classes.len();
+        let n = self.order.len();
+        let demands: Vec<NormalizedDemand> = self
+            .order
+            .iter()
+            .map(|&si| self.slots[si].user.as_ref().unwrap().demand.clone())
+            .collect();
+        if n == 0 {
+            return FluidAllocation {
+                classes: self.classes.clone(),
+                total: self.total,
+                demands,
+                x: Vec::new(),
+                g: Vec::new(),
+                tasks: Vec::new(),
+                lp_pivots: 0,
+                lp_solves: 0,
+            };
+        }
+        let weights: Vec<f64> = self
+            .order
+            .iter()
+            .map(|&si| self.slots[si].user.as_ref().unwrap().weight)
+            .collect();
+        let caps: Vec<f64> = self
+            .order
+            .iter()
+            .map(|&si| self.slots[si].user.as_ref().unwrap().cap)
+            .collect();
+
+        // Reset the filling state: every present user grows from zero
+        // again (dynamic DRFH re-equalizes the whole allocation on
+        // every event; only the solver basis carries over). Active
+        // rows are `Σx − w·G = 0` and stay untouched until the user
+        // saturates — see the module docs for why the growth variable
+        // is cumulative.
+        let mut frozen = vec![0.0f64; n];
+        let mut saturated: Vec<bool> =
+            caps.iter().map(|&c| c <= 1e-15).collect();
+        let mut x = vec![vec![0.0f64; nc]; n];
+        let mut lp_pivots = 0u64;
+        let mut lp_solves = 0u32;
+        for k in 0..n {
+            let si = self.order[k];
+            let (up, lo) = (self.slots[si].row_up, self.slots[si].row_lo);
+            let w = if saturated[k] { 0.0 } else { weights[k] };
+            self.solver.set_coeff(up, self.delta, -w);
+            self.solver.set_coeff(lo, self.delta, w);
+            self.solver.set_rhs(up, 0.0);
+            self.solver.set_rhs(lo, 0.0);
+        }
+
+        // cumulative filling level committed so far (G in the docs)
+        let mut g_cum = 0.0f64;
+        for _round in 0..n + 1 {
+            if saturated.iter().all(|&s| s) {
+                break;
+            }
+            // G bounded by the tightest cap among active users; equals
+            // the reference's `frozen + delta_max` since active users
+            // hold frozen = w·G exactly. With no finite cap the row
+            // gets the O(1) never-binding stand-in (see module docs).
+            let mut g_max = f64::INFINITY;
+            let mut max_w = 0.0f64;
+            for k in 0..n {
+                if !saturated[k] {
+                    max_w = max_w.max(weights[k]);
+                    if caps[k].is_finite() {
+                        g_max = g_max.min(caps[k] / weights[k]);
+                    }
+                }
+            }
+            // any bound >= 2/max_w can never bind (G <= 1/max_w), so
+            // clamping there changes nothing while keeping the tableau
+            // free of large-magnitude rhs values
+            let rhs = g_max.max(0.0).min(2.0 / max_w);
+            self.solver.set_rhs(self.delta_cap, rhs);
+
+            let (sol, g_star) = match self.solver.solve() {
+                LpResult::Optimal { x, obj, pivots } => {
+                    lp_pivots += pivots.search() as u64;
+                    lp_solves += 1;
+                    (x, obj)
+                }
+                other => {
+                    panic!("incremental DRFH round LP not optimal: {other:?}")
+                }
+            };
+            for k in 0..n {
+                let si = self.order[k];
+                for c in 0..nc {
+                    x[k][c] = sol[self.slots[si].vars[c].index()];
+                }
+            }
+            // the reference's per-round progressive-filling increment
+            let delta = g_star - g_cum;
+            if delta <= 1e-12 {
+                break; // capacity exhausted for all active users
+            }
+            g_cum = g_star;
+            let mut newly = 0;
+            for k in 0..n {
+                if saturated[k] {
+                    continue;
+                }
+                frozen[k] += weights[k] * delta;
+                if caps[k].is_finite() && frozen[k] >= caps[k] - 1e-9 {
+                    frozen[k] = caps[k];
+                    saturated[k] = true;
+                    newly += 1;
+                    // freeze: Σx = cap — the current optimum already
+                    // satisfies this (w·G* = cap up to the clamp
+                    // epsilon), so the basis stays primal feasible
+                    let si = self.order[k];
+                    let (up, lo) =
+                        (self.slots[si].row_up, self.slots[si].row_lo);
+                    self.solver.set_coeff(up, self.delta, 0.0);
+                    self.solver.set_coeff(lo, self.delta, 0.0);
+                    self.solver.set_rhs(up, caps[k]);
+                    self.solver.set_rhs(lo, -caps[k]);
+                }
+            }
+            if newly == 0 {
+                break; // no cap hit: capacity-limited optimum reached
+            }
+        }
+
+        let g: Vec<f64> = x.iter().map(|xi| xi.iter().sum()).collect();
+        let tasks: Vec<f64> = g
+            .iter()
+            .zip(&demands)
+            .map(|(&gi, d)| gi / d.share[d.dominant])
+            .collect();
+        FluidAllocation {
+            classes: self.classes.clone(),
+            total: self.total,
+            demands,
+            x,
+            g,
+            tasks,
+            lp_pivots,
+            lp_solves,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocator;
+    use crate::cluster::Cluster;
+
+    fn fig1_users() -> Vec<FluidUser> {
+        vec![
+            FluidUser::unweighted(ResVec::cpu_mem(0.2, 1.0)),
+            FluidUser::unweighted(ResVec::cpu_mem(1.0, 0.2)),
+        ]
+    }
+
+    fn assert_matches_scratch(inc: &mut IncrementalDrfh, cluster: &Cluster) {
+        let warm = inc.allocate();
+        let scratch = allocator::solve(cluster, &inc.users());
+        assert_eq!(warm.g.len(), scratch.g.len());
+        for i in 0..warm.g.len() {
+            assert!(
+                (warm.g[i] - scratch.g[i]).abs() < 1e-8,
+                "user {i}: warm g {} vs scratch {}",
+                warm.g[i],
+                scratch.g[i]
+            );
+        }
+        assert!(warm.is_feasible(1e-7));
+    }
+
+    #[test]
+    fn matches_scratch_on_fig1() {
+        let cluster = Cluster::fig1_example();
+        let mut inc = IncrementalDrfh::new(&cluster);
+        for u in fig1_users() {
+            inc.add_user(u);
+        }
+        let a = inc.allocate();
+        assert!((a.g[0] - 5.0 / 7.0).abs() < 1e-6, "g1={}", a.g[0]);
+        assert!((a.g[1] - 5.0 / 7.0).abs() < 1e-6, "g2={}", a.g[1]);
+        assert!((a.tasks[0] - 10.0).abs() < 1e-5);
+        assert!((a.tasks[1] - 10.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn join_depart_rejoin_reuses_slot() {
+        let cluster = Cluster::fig1_example();
+        let mut inc = IncrementalDrfh::new(&cluster);
+        let users = fig1_users();
+        let id0 = inc.add_user(users[0].clone());
+        inc.add_user(users[1].clone());
+        inc.allocate();
+        inc.remove_user(id0);
+        assert_eq!(inc.len(), 1);
+        assert_matches_scratch(&mut inc, &cluster);
+        // rejoin with a different demand: the freed slot is rewired
+        inc.add_user(FluidUser::unweighted(ResVec::cpu_mem(0.5, 0.5)));
+        assert_eq!(inc.len(), 2);
+        // slot recycled, no new slot appended
+        assert_eq!(inc.slots.len(), 2);
+        assert_matches_scratch(&mut inc, &cluster);
+    }
+
+    #[test]
+    fn cap_and_weight_events_apply() {
+        let cluster = Cluster::fig1_example();
+        let mut inc = IncrementalDrfh::new(&cluster);
+        let ids: Vec<UserId> =
+            fig1_users().into_iter().map(|u| inc.add_user(u)).collect();
+        inc.allocate();
+        // cap user 1 at 2 tasks: user 2 absorbs the release
+        inc.set_cap(ids[0], Some(2.0));
+        let a = inc.allocate();
+        assert!((a.tasks[0] - 2.0).abs() < 1e-5, "tasks={:?}", a.tasks);
+        assert!(a.tasks[1] > 10.0, "user 2 should absorb: {:?}", a.tasks);
+        assert_matches_scratch(&mut inc, &cluster);
+        // uncap + double the weight: shares go 2:1
+        inc.set_cap(ids[0], None);
+        inc.set_weight(ids[0], 2.0);
+        let a = inc.allocate();
+        assert!(
+            (a.g[0] - 2.0 * a.g[1]).abs() < 1e-6,
+            "weighted shares {:?}",
+            a.g
+        );
+        assert_matches_scratch(&mut inc, &cluster);
+    }
+
+    #[test]
+    fn zero_weight_user_uses_guarded_semantics() {
+        let cluster = Cluster::fig1_example();
+        let mut inc = IncrementalDrfh::new(&cluster);
+        let mut users = fig1_users();
+        users[0].weight = 0.0;
+        for u in users {
+            inc.add_user(u);
+        }
+        let a = inc.allocate();
+        assert!(a.g.iter().all(|g| g.is_finite()), "g = {:?}", a.g);
+        // guarded to weight 1.0: the unweighted Fig. 3 optimum
+        assert!((a.g[0] - 5.0 / 7.0).abs() < 1e-6, "g1 = {}", a.g[0]);
+        assert!((a.g[1] - 5.0 / 7.0).abs() < 1e-6, "g2 = {}", a.g[1]);
+    }
+
+    #[test]
+    fn empty_and_single_user() {
+        let cluster = Cluster::fig1_example();
+        let mut inc = IncrementalDrfh::new(&cluster);
+        let a = inc.allocate();
+        assert!(a.g.is_empty() && a.tasks.is_empty());
+        let id = inc.add_user(fig1_users()[0].clone());
+        assert_matches_scratch(&mut inc, &cluster);
+        inc.remove_user(id);
+        let a = inc.allocate();
+        assert!(a.g.is_empty());
+    }
+
+    #[test]
+    fn warm_solves_dominate_after_first_event() {
+        let cluster = Cluster::fig1_example();
+        let mut inc = IncrementalDrfh::new(&cluster);
+        for u in fig1_users() {
+            inc.add_user(u);
+        }
+        inc.allocate();
+        for i in 0..6usize {
+            // non-binding caps (fair share is 10 tasks): the churn is
+            // rhs-only, so every round after the first solve re-solves
+            // warm from the standing basis
+            inc.set_cap(UserId(i % 2), Some(30.0 + i as f64));
+            let a = inc.allocate();
+            assert!((a.g[0] - 5.0 / 7.0).abs() < 1e-6, "g={:?}", a.g);
+        }
+        let st = inc.solver_stats();
+        assert!(
+            st.warm_solves > st.cold_solves + st.fallbacks,
+            "warm path barely used: {st:?}"
+        );
+    }
+}

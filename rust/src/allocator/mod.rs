@@ -3,13 +3,19 @@
 //! * [`drfh`] — the paper's contribution: the exact DRFH allocation
 //!   (eq. (7)), supporting weighted users and finite task demands via
 //!   progressive-filling rounds (paper Sec. V-A).
+//! * [`incremental`] — the event-driven dynamic DRFH allocator: the
+//!   same exact allocation maintained across join/departure/cap/weight
+//!   events on a warm-started simplex basis ([`drfh::solve`] stays the
+//!   from-scratch parity reference);
 //! * [`per_server_drf`] — the naive "run DRF inside every server"
 //!   extension of Sec. III-D, kept as the inefficiency baseline.
 
 pub mod drfh;
+pub mod incremental;
 pub mod per_server_drf;
 
 pub use drfh::{solve, FluidAllocation, FluidUser};
+pub use incremental::IncrementalDrfh;
 
 use crate::cluster::ResVec;
 

@@ -1,0 +1,359 @@
+//! Fig. 4 (fluid counterpart) — dynamic sharing under the *exact*
+//! fluid DRFH allocation: three users with the Fig. 4 demand vectors
+//! join a 100-server pool at t = 0, 200 and 500 s; the allocation is
+//! re-equalized every [`DT`] seconds, user 1 drains a finite backlog
+//! and departs, and the survivors rebalance upward — the fluid
+//! trajectory the discrete Best-Fit run of [`super::fig4`]
+//! approximates.
+//!
+//! The sweep runs two jobs on [`super::runner`]: the warm-started
+//! [`IncrementalDrfh`] event path and the from-scratch
+//! `allocator::solve` reference. Both produce the same share
+//! trajectory (checked to solver precision in `max_share_err`); the
+//! point of the pair is the cost gap, reported as simplex search
+//! pivots (`warm_pivots` vs `scratch_pivots`) — the same numbers
+//! `benches/allocator_scale.rs` records in `BENCH_allocator.json`.
+
+use super::runner::{self, Job};
+use super::write_csv;
+use crate::allocator::incremental::{IncrementalDrfh, UserId};
+use crate::allocator::{self, FluidUser};
+use crate::cluster::{Cluster, ResVec};
+use crate::util::Pcg32;
+
+/// Re-equalization period (seconds of fluid time per allocate call).
+pub const DT: f64 = 5.0;
+/// Fluid horizon.
+pub const HORIZON: f64 = 2_000.0;
+/// Join times (paper Fig. 4).
+pub const JOIN: [f64; 3] = [0.0, 200.0, 500.0];
+/// User 1's backlog in task-seconds, sized so it drains around
+/// t ≈ 1000 s under fair sharing (paper: departs at 1080 s).
+pub const WORK_USER1: f64 = 90_000.0;
+
+/// One backend's trajectory.
+struct SimOut {
+    /// Per-step dominant share per user (0 while absent).
+    share: Vec<[f64; 3]>,
+    /// Per-step fluid task allocation per user.
+    tasks: Vec<[f64; 3]>,
+    depart: Option<f64>,
+    /// Simplex search pivots across the whole sweep.
+    pivots: u64,
+    /// LP solves (progressive-filling rounds) across the sweep.
+    lp_solves: u64,
+    /// Warm-started solves (incremental backend only).
+    warm_solves: u64,
+}
+
+/// Measured sweep results.
+#[derive(Clone, Debug)]
+pub struct Fig4FluidResult {
+    /// Per-step dominant share per user (incremental path).
+    pub share: Vec<[f64; 3]>,
+    /// Per-step fluid task allocation per user.
+    pub tasks: Vec<[f64; 3]>,
+    /// (label, window, per-user mean dominant share)
+    pub phases: Vec<(String, (f64, f64), [f64; 3])>,
+    /// user 1 departure time (backlog drained), if reached
+    pub depart: Option<f64>,
+    pub total_cpu: f64,
+    pub total_mem: f64,
+    /// Simplex search pivots: warm-started event path.
+    pub warm_pivots: u64,
+    /// Simplex search pivots: from-scratch re-solves.
+    pub scratch_pivots: u64,
+    /// LP solves on the warm path, and how many started warm.
+    pub warm_lp_solves: u64,
+    pub warm_started: u64,
+    /// Max |warm − scratch| dominant-share divergence over the sweep.
+    pub max_share_err: f64,
+}
+
+/// The Fig. 4 demand vectors (`workload::gen::fig4_trace`).
+fn demands() -> [ResVec; 3] {
+    [
+        ResVec::cpu_mem(0.2, 0.3),
+        ResVec::cpu_mem(0.5, 0.1),
+        ResVec::cpu_mem(0.1, 0.3),
+    ]
+}
+
+/// One fluid sweep: `warm` picks the incremental or from-scratch
+/// backend; everything else (joins, backlog drain, departure) is
+/// identical, so the trajectories must agree.
+fn simulate(cluster: &Cluster, work1: f64, warm: bool) -> SimOut {
+    let demand = demands();
+    let steps = (HORIZON / DT) as usize;
+    let mut out = SimOut {
+        share: Vec::with_capacity(steps),
+        tasks: Vec::with_capacity(steps),
+        depart: None,
+        pivots: 0,
+        lp_solves: 0,
+        warm_solves: 0,
+    };
+    // the standing LP skeleton is only built on the warm backend; the
+    // scratch job must not pay (or time) its construction
+    let mut inc = if warm {
+        Some(IncrementalDrfh::new(cluster))
+    } else {
+        None
+    };
+    let mut ids: [Option<UserId>; 3] = [None; 3];
+    let mut scratch: Vec<(usize, FluidUser)> = Vec::new();
+    let mut joined = [false; 3];
+    let mut departed = [false; 3];
+    let mut remaining1 = work1;
+    for s in 0..steps {
+        let t = s as f64 * DT;
+        for u in 0..3 {
+            if !joined[u] && t + 1e-9 >= JOIN[u] {
+                joined[u] = true;
+                let fu = FluidUser {
+                    demand: demand[u],
+                    weight: 1.0,
+                    task_cap: None,
+                };
+                if warm {
+                    ids[u] = Some(inc.as_mut().unwrap().add_user(fu));
+                } else {
+                    scratch.push((u, fu));
+                }
+            }
+        }
+        // user 1 can run at most backlog/DT concurrent fluid tasks
+        if joined[0] && !departed[0] {
+            let cap = Some(remaining1 / DT);
+            if warm {
+                inc.as_mut().unwrap().set_cap(ids[0].unwrap(), cap);
+            } else {
+                for e in scratch.iter_mut() {
+                    if e.0 == 0 {
+                        e.1.task_cap = cap;
+                    }
+                }
+            }
+        }
+        // re-equalize and record
+        let mut share = [0.0f64; 3];
+        let mut tasks = [0.0f64; 3];
+        if warm {
+            let a = inc.as_mut().unwrap().allocate();
+            out.pivots += a.lp_pivots;
+            out.lp_solves += a.lp_solves as u64;
+            let present: Vec<usize> = (0..3)
+                .filter(|&u| joined[u] && !departed[u])
+                .collect();
+            for (k, &u) in present.iter().enumerate() {
+                share[u] = a.g[k];
+                tasks[u] = a.tasks[k];
+            }
+        } else {
+            let users: Vec<FluidUser> =
+                scratch.iter().map(|(_, fu)| fu.clone()).collect();
+            let a = allocator::solve(cluster, &users);
+            out.pivots += a.lp_pivots;
+            out.lp_solves += a.lp_solves as u64;
+            for (k, &(u, _)) in scratch.iter().enumerate() {
+                share[u] = a.g[k];
+                tasks[u] = a.tasks[k];
+            }
+        }
+        out.share.push(share);
+        out.tasks.push(tasks);
+        // drain user 1's backlog; depart when it empties
+        if joined[0] && !departed[0] {
+            remaining1 = (remaining1 - tasks[0] * DT).max(0.0);
+            if remaining1 <= 1e-6 {
+                departed[0] = true;
+                out.depart = Some(t + DT);
+                if warm {
+                    inc.as_mut().unwrap().remove_user(ids[0].take().unwrap());
+                } else {
+                    scratch.retain(|&(u, _)| u != 0);
+                }
+            }
+        }
+    }
+    if warm {
+        out.warm_solves = inc.as_ref().unwrap().solver_stats().warm_solves;
+    }
+    out
+}
+
+/// Run the fluid Fig. 4 sweep: warm and from-scratch jobs fan out on
+/// [`runner::run_parallel`]; trajectories are compared afterwards.
+pub fn run_fig4_fluid(seed: u64) -> Fig4FluidResult {
+    let mut rng = Pcg32::new(seed, 0xf4f);
+    let cluster = Cluster::google_sample(100, &mut rng);
+    let total = cluster.total_capacity();
+    let jobs: Vec<Job<'_, SimOut>> = vec![
+        Box::new(|| simulate(&cluster, WORK_USER1, true)),
+        Box::new(|| simulate(&cluster, WORK_USER1, false)),
+    ];
+    let mut outs = runner::run_parallel(jobs).into_iter();
+    let warm = outs.next().expect("warm job");
+    let scratch = outs.next().expect("scratch job");
+
+    let mut max_share_err = 0.0f64;
+    for (a, b) in warm.share.iter().zip(&scratch.share) {
+        for u in 0..3 {
+            max_share_err = max_share_err.max((a[u] - b[u]).abs());
+        }
+    }
+    let d = warm.depart.unwrap_or(HORIZON);
+    let windows = [
+        ("user 1 alone", (50.0, 200.0)),
+        ("users 1+2", (250.0, 500.0)),
+        ("users 1+2+3", (550.0, (d - 50.0).min(1_000.0))),
+        ("after user 1 departs", (d + 50.0, HORIZON)),
+    ];
+    let phases: Vec<(String, (f64, f64), [f64; 3])> = windows
+        .iter()
+        .map(|&(label, (lo, hi))| {
+            let mut s = [0.0f64; 3];
+            let mut cnt = 0usize;
+            for (i, row) in warm.share.iter().enumerate() {
+                let t = i as f64 * DT;
+                if t >= lo && t <= hi {
+                    for u in 0..3 {
+                        s[u] += row[u];
+                    }
+                    cnt += 1;
+                }
+            }
+            if cnt > 0 {
+                for v in s.iter_mut() {
+                    *v /= cnt as f64;
+                }
+            }
+            (label.to_string(), (lo, hi), s)
+        })
+        .collect();
+
+    Fig4FluidResult {
+        share: warm.share,
+        tasks: warm.tasks,
+        phases,
+        depart: warm.depart,
+        total_cpu: total[0],
+        total_mem: total[1],
+        warm_pivots: warm.pivots,
+        scratch_pivots: scratch.pivots,
+        warm_lp_solves: warm.lp_solves,
+        warm_started: warm.warm_solves,
+        max_share_err,
+    }
+}
+
+/// Print the paper-style summary and dump the full time series CSV.
+pub fn print(res: &Fig4FluidResult) {
+    println!("== Fig. 4 (fluid): dynamic DRFH, 3 users on 100 servers ==");
+    println!(
+        "pool: {:.2} CPU units, {:.2} memory units (paper: 52.75 / 51.32)",
+        res.total_cpu, res.total_mem
+    );
+    match res.depart {
+        Some(t) => println!("user 1 departs at {t:.0} s (paper: 1080 s)"),
+        None => println!("user 1 still active at horizon"),
+    }
+    println!(
+        "{:<24} {:>12} {:>8} {:>8} {:>8}",
+        "phase", "window", "u1", "u2", "u3"
+    );
+    for (label, (lo, hi), s) in &res.phases {
+        println!(
+            "{:<24} [{:>4.0},{:>4.0}] {:>7.1}% {:>7.1}% {:>7.1}%",
+            label,
+            lo,
+            hi,
+            s[0] * 100.0,
+            s[1] * 100.0,
+            s[2] * 100.0
+        );
+    }
+    println!(
+        "incremental path: {} LP solves ({} warm), {} search pivots vs \
+         {} from-scratch ({:.1}x fewer); trajectories agree to {:.1e}",
+        res.warm_lp_solves,
+        res.warm_started,
+        res.warm_pivots,
+        res.scratch_pivots,
+        res.scratch_pivots as f64 / res.warm_pivots.max(1) as f64,
+        res.max_share_err
+    );
+    let rows: Vec<String> = res
+        .share
+        .iter()
+        .zip(&res.tasks)
+        .enumerate()
+        .map(|(i, (s, tk))| {
+            format!(
+                "{:.1},{:.6},{:.6},{:.6},{:.3},{:.3},{:.3}",
+                i as f64 * DT,
+                s[0],
+                s[1],
+                s[2],
+                tk[0],
+                tk[1],
+                tk[2]
+            )
+        })
+        .collect();
+    write_csv(
+        "fig4_fluid_shares.csv",
+        "t,u1_dom,u2_dom,u3_dom,u1_tasks,u2_tasks,u3_tasks",
+        &rows,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fluid_phases_equalize_and_user1_departs() {
+        let res = run_fig4_fluid(42);
+        // two-user phase: the fluid allocation equalizes exactly
+        let p2 = res.phases[1].2;
+        assert!(p2[0] > 0.0 && p2[1] > 0.0, "{p2:?}");
+        assert!(
+            (p2[0] - p2[1]).abs() < 1e-6,
+            "two-user fluid shares not equalized: {p2:?}"
+        );
+        // three-user phase: all present, equalized, below the 2-user level
+        let p3 = res.phases[2].2;
+        assert!(p3.iter().all(|&s| s > 0.0), "{p3:?}");
+        let mx = p3.iter().cloned().fold(0.0, f64::max);
+        let mn = p3.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(mx - mn < 1e-6, "three-user fluid shares: {p3:?}");
+        assert!(p3[0] < p2[0], "share must drop when user 3 joins");
+        // alone phase: user 1 above its fair-shared level
+        assert!(res.phases[0].2[0] > p2[0]);
+        // departure and rebalance
+        let d = res.depart.expect("user 1 must drain its backlog");
+        assert!(d > 600.0 && d < 1_800.0, "departure at {d}");
+        let p4 = res.phases[3].2;
+        assert!(p4[0] < 1e-9, "u1 share must vanish, got {}", p4[0]);
+        assert!(p4[1] > p3[1] * 1.1, "u2 {} -> {}", p3[1], p4[1]);
+        assert!(p4[2] > p3[2] * 1.1, "u3 {} -> {}", p3[2], p4[2]);
+    }
+
+    #[test]
+    fn fluid_warm_path_matches_scratch_and_saves_pivots() {
+        let res = run_fig4_fluid(42);
+        assert!(
+            res.max_share_err < 1e-6,
+            "warm/scratch trajectories diverged: {:.3e}",
+            res.max_share_err
+        );
+        assert!(
+            res.warm_pivots < res.scratch_pivots,
+            "warm {} >= scratch {}",
+            res.warm_pivots,
+            res.scratch_pivots
+        );
+        assert!(res.warm_started > 0, "no warm solves at all");
+    }
+}

@@ -9,6 +9,7 @@
 //! factories); results are bit-identical to the old sequential loops.
 
 pub mod fig4;
+pub mod fig4_fluid;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;

@@ -1,8 +1,8 @@
 //! `drfh` — launcher CLI for the DRFH reproduction.
 //!
 //! ```text
-//! drfh exp <fig4|table2|fig5|fig6|fig7|fig8|all> [--seed N] [--servers K]
-//!          [--users N] [--duration S]             regenerate a paper figure/table
+//! drfh exp <fig4|fig4-fluid|table2|fig5|fig6|fig7|fig8|all> [--seed N]
+//!          [--servers K] [--users N] [--duration S] regenerate a paper figure/table
 //! drfh sim --config exp.toml                      run a configured simulation
 //! drfh solve                                      exact fluid DRFH on the Fig. 1 example
 //! drfh picker-check [--trials N] [--seed N]       native vs XLA decision parity
@@ -25,7 +25,7 @@ const USAGE: &str = "\
 drfh — Dominant Resource Fairness with Heterogeneous Servers (paper reproduction)
 
 USAGE:
-  drfh exp <fig4|table2|fig5|fig6|fig7|fig8|all>
+  drfh exp <fig4|fig4-fluid|table2|fig5|fig6|fig7|fig8|all>
            [--seed N] [--servers K] [--users N] [--duration SECONDS]
   drfh sim --config <exp.toml>
   drfh solve
@@ -131,6 +131,10 @@ fn run_exp(
             let res = experiments::fig4::run_fig4(seed);
             experiments::fig4::print(&res);
         }
+        "fig4-fluid" => {
+            let res = experiments::fig4_fluid::run_fig4_fluid(seed);
+            experiments::fig4_fluid::print(&res);
+        }
         "table2" => {
             let s = setup();
             let rows = experiments::table2::run_table2(&s);
@@ -159,6 +163,8 @@ fn run_exp(
         "all" => {
             let res = experiments::fig4::run_fig4(seed);
             experiments::fig4::print(&res);
+            let f4f = experiments::fig4_fluid::run_fig4_fluid(seed);
+            experiments::fig4_fluid::print(&f4f);
             let s = setup();
             let rows = experiments::table2::run_table2(&s);
             experiments::table2::print(&rows);

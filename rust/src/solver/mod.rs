@@ -1,6 +1,10 @@
-//! Optimization substrates: a dense two-phase simplex LP solver used by
-//! the exact fluid DRFH allocator.
+//! Optimization substrates: a dense two-phase simplex LP solver (the
+//! substrate for the paper's eq. (7)) plus the warm-startable
+//! [`Solver`] that the incremental dynamic-DRFH allocator
+//! (`allocator::incremental`) re-solves from a recorded basis.
 
 pub mod simplex;
 
-pub use simplex::{solve, Lp, LpResult};
+pub use simplex::{
+    solve, Lp, LpResult, PivotCounts, RowId, SolveStats, Solver, VarId,
+};

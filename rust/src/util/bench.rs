@@ -120,6 +120,19 @@ pub fn write_suite_json(
 pub fn bench_n<T>(
     name: &str,
     iters: usize,
+    f: impl FnMut() -> T,
+) -> BenchResult {
+    let res = bench_n_quiet(name, iters, f);
+    res.print();
+    res
+}
+
+/// [`bench_n`] without the printed row — for cases timed on
+/// `experiments::runner` worker threads, where the caller prints after
+/// the fan-out so rows don't interleave.
+pub fn bench_n_quiet<T>(
+    name: &str,
+    iters: usize,
     mut f: impl FnMut() -> T,
 ) -> BenchResult {
     let iters = iters.max(1);
@@ -134,15 +147,13 @@ pub fn bench_n<T>(
     }
     samples.sort();
     let total: Duration = samples.iter().sum();
-    let res = BenchResult {
+    BenchResult {
         name: name.to_string(),
         iters: samples.len(),
         mean: total / samples.len() as u32,
         p50: samples[samples.len() / 2],
         min: samples[0],
-    };
-    res.print();
-    res
+    }
 }
 
 /// Time `f` repeatedly within `budget` (at least 3 runs, at most

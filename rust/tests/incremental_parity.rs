@@ -1,0 +1,184 @@
+//! Incremental-vs-scratch parity: `allocator::incremental::IncrementalDrfh`
+//! must match the from-scratch `allocator::solve` after *every* event
+//! of randomized join/depart/cap-change/weight-change sequences, within
+//! 1e-9 per resource — while actually re-using the warm simplex basis
+//! (pivot counts must drop vs the from-scratch path).
+//!
+//! The comparison targets the quantities that are unique across
+//! alternate LP optima: the dominant shares `g` and each user's
+//! per-resource pool-share totals (`Σ_c x_ic · d_ir = g_i · d_ir`).
+//! The per-class split may legitimately differ between two optimal
+//! solutions and is not compared.
+
+use drfh::allocator::incremental::{IncrementalDrfh, UserId};
+use drfh::allocator::{self, FluidAllocation, FluidUser};
+use drfh::cluster::{Cluster, ResVec};
+use drfh::util::Pcg32;
+
+fn random_user(rng: &mut Pcg32) -> FluidUser {
+    FluidUser {
+        demand: ResVec::cpu_mem(
+            rng.uniform(0.05, 1.0),
+            rng.uniform(0.05, 1.0),
+        ),
+        weight: if rng.f64() < 0.4 { rng.uniform(0.5, 3.0) } else { 1.0 },
+        task_cap: if rng.f64() < 0.35 {
+            Some(rng.uniform(0.0, 25.0))
+        } else {
+            None
+        },
+    }
+}
+
+fn assert_parity(warm: &FluidAllocation, scratch: &FluidAllocation, ctx: &str) {
+    assert_eq!(warm.g.len(), scratch.g.len(), "{ctx}: user count");
+    let m = warm.total.dims();
+    for i in 0..warm.g.len() {
+        assert!(
+            (warm.g[i] - scratch.g[i]).abs() < 1e-9,
+            "{ctx}: user {i} dominant share {} vs {}",
+            warm.g[i],
+            scratch.g[i]
+        );
+        for r in 0..m {
+            let w: f64 = (0..warm.classes.len())
+                .map(|c| warm.alloc_share(i, c)[r])
+                .sum();
+            let s: f64 = (0..scratch.classes.len())
+                .map(|c| scratch.alloc_share(i, c)[r])
+                .sum();
+            assert!(
+                (w - s).abs() < 1e-9,
+                "{ctx}: user {i} resource {r}: {w} vs {s}"
+            );
+        }
+        assert!(
+            (warm.tasks[i] - scratch.tasks[i]).abs()
+                < 1e-6 * (1.0 + scratch.tasks[i].abs()),
+            "{ctx}: user {i} tasks {} vs {}",
+            warm.tasks[i],
+            scratch.tasks[i]
+        );
+    }
+    assert!(warm.is_feasible(1e-7), "{ctx}: warm allocation infeasible");
+}
+
+/// The headline property: parity after every event of a random stream,
+/// on an independently maintained mirror (catches ordering bugs that a
+/// `inc.users()`-based reference would mask).
+#[test]
+fn random_event_sequences_match_scratch() {
+    for seed in 0..12u64 {
+        let mut rng = Pcg32::seeded(500 + seed);
+        let k = 5 + rng.below(40);
+        let cluster = Cluster::google_sample(k, &mut rng);
+        let mut inc = IncrementalDrfh::new(&cluster);
+        let mut ids: Vec<UserId> = Vec::new();
+        let mut mirror: Vec<FluidUser> = Vec::new();
+        for _ in 0..2 + rng.below(3) {
+            let u = random_user(&mut rng);
+            ids.push(inc.add_user(u.clone()));
+            mirror.push(u);
+        }
+        for ev in 0..24 {
+            let r = rng.f64();
+            if (r < 0.3 && ids.len() < 8) || ids.len() <= 1 {
+                let u = random_user(&mut rng);
+                ids.push(inc.add_user(u.clone()));
+                mirror.push(u);
+            } else if r < 0.5 {
+                let i = rng.below(ids.len());
+                inc.remove_user(ids.remove(i));
+                mirror.remove(i);
+            } else if r < 0.75 {
+                let i = rng.below(ids.len());
+                let cap = if rng.f64() < 0.5 {
+                    Some(rng.uniform(0.0, 30.0))
+                } else {
+                    None
+                };
+                inc.set_cap(ids[i], cap);
+                mirror[i].task_cap = cap;
+            } else {
+                let i = rng.below(ids.len());
+                let w = rng.uniform(0.25, 4.0);
+                inc.set_weight(ids[i], w);
+                mirror[i].weight = w;
+            }
+            let warm = inc.allocate();
+            let scratch = allocator::solve(&cluster, &mirror);
+            assert_parity(&warm, &scratch, &format!("seed {seed} event {ev}"));
+        }
+        let st = inc.solver_stats();
+        assert!(st.warm_solves > 0, "seed {seed}: no warm solves: {st:?}");
+    }
+}
+
+/// The warm path must actually be cheaper: across a churny stream the
+/// incremental allocator's search-pivot total stays below the
+/// from-scratch re-solves'.
+#[test]
+fn warm_start_saves_pivots() {
+    let mut rng = Pcg32::seeded(77);
+    let cluster = Cluster::google_sample(500, &mut rng);
+    let mut inc = IncrementalDrfh::new(&cluster);
+    let users: Vec<FluidUser> = (0..16).map(|_| random_user(&mut rng)).collect();
+    let mut ids: Vec<UserId> =
+        users.iter().map(|u| inc.add_user(u.clone())).collect();
+    let mut mirror = users;
+    let mut warm_pivots = 0u64;
+    let mut scratch_pivots = 0u64;
+    for step in 0..20usize {
+        let i = step % mirror.len();
+        let cap = if step % 2 == 0 { Some(5.0 + step as f64) } else { None };
+        inc.set_cap(ids[i], cap);
+        mirror[i].task_cap = cap;
+        if step == 10 {
+            inc.remove_user(ids.remove(0));
+            mirror.remove(0);
+            let u = random_user(&mut rng);
+            ids.push(inc.add_user(u.clone()));
+            mirror.push(u);
+        }
+        let warm = inc.allocate();
+        let scratch = allocator::solve(&cluster, &mirror);
+        assert_parity(&warm, &scratch, &format!("step {step}"));
+        warm_pivots += warm.lp_pivots;
+        scratch_pivots += scratch.lp_pivots;
+    }
+    assert!(
+        warm_pivots < scratch_pivots,
+        "warm {warm_pivots} >= scratch {scratch_pivots}"
+    );
+    let st = inc.solver_stats();
+    assert!(st.warm_solves > 0, "warm path never used: {st:?}");
+}
+
+/// Stress the slot recycler: drain the population to one user and
+/// rebuild it several times; parity must survive every generation.
+#[test]
+fn repeated_drain_and_refill_keeps_parity() {
+    let mut rng = Pcg32::seeded(9090);
+    let cluster = Cluster::google_sample(30, &mut rng);
+    let mut inc = IncrementalDrfh::new(&cluster);
+    let mut ids: Vec<UserId> = Vec::new();
+    let mut mirror: Vec<FluidUser> = Vec::new();
+    for gen in 0..3 {
+        for _ in 0..5 {
+            let u = random_user(&mut rng);
+            ids.push(inc.add_user(u.clone()));
+            mirror.push(u);
+            let warm = inc.allocate();
+            let scratch = allocator::solve(&cluster, &mirror);
+            assert_parity(&warm, &scratch, &format!("gen {gen} grow"));
+        }
+        while ids.len() > 1 {
+            let i = rng.below(ids.len());
+            inc.remove_user(ids.remove(i));
+            mirror.remove(i);
+            let warm = inc.allocate();
+            let scratch = allocator::solve(&cluster, &mirror);
+            assert_parity(&warm, &scratch, &format!("gen {gen} shrink"));
+        }
+    }
+}
