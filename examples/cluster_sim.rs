@@ -107,6 +107,7 @@ fn main() {
             horizon: 3_600.0,
             sample_dt: 60.0,
             track_user_series: false,
+            ..SimOpts::default()
         };
         let t0 = Instant::now();
         let native = run(

@@ -72,7 +72,7 @@ fn main() {
         cluster,
         &trace,
         Box::new(BestFitDrfh::default()),
-        SimOpts { horizon: 10.0, sample_dt: 5.0, track_user_series: false },
+        SimOpts { horizon: 10.0, sample_dt: 5.0, track_user_series: false, ..SimOpts::default() },
     );
     println!("\n-- discrete Best-Fit DRFH scheduler --");
     println!(

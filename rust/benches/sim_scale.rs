@@ -1,0 +1,236 @@
+//! §Perf headline for PR 4: the trace-scale simulation data plane.
+//!
+//! Runs the paper's Fig. 5 configuration scaled to ~10⁶ offered tasks
+//! at k = 2,000 servers and times three variants of the same Best-Fit
+//! DRFH simulation:
+//!
+//! * `wheel-streaming` — timer-wheel event queue + bounded-memory
+//!   streaming metrics (the new data plane; run FIRST so the process
+//!   RSS watermark reflects it alone);
+//! * `wheel-full` — timer wheel with full metric retention;
+//! * `heap-full` — the seed's binary-heap queue (naive parity
+//!   reference).
+//!
+//! Targets: **≥3× tasks/sec** for the wheel+streaming plane over the
+//! heap path, and peak memory **~flat in task count** under streaming
+//! metrics (retained metric points bounded by the series cap instead
+//! of growing with jobs/samples). Placement counts are asserted equal
+//! across all variants here as a cheap guard; full bit-identical
+//! report parity is enforced by `tests/engine_parity.rs` and the
+//! `drfh exp sim-scale` harness.
+//!
+//! Results go to `BENCH_sim.json` at the repo root (override with
+//! `BENCH_OUT=/path.json`); CI runs the small-scale smoke via
+//! `SIM_SMOKE=1`.
+//!
+//! Run: `cargo bench --bench sim_scale`
+
+use drfh::experiments::EvalSetup;
+use drfh::metrics::MetricsMode;
+use drfh::sched::BestFitDrfh;
+use drfh::sim::{run, QueueKind, SimOpts, SimReport};
+use drfh::util::bench::{
+    bench_n, header, peak_rss_bytes, write_suite_json, BenchResult,
+};
+use drfh::util::json::Json;
+
+struct Case {
+    bench: BenchResult,
+    report: SimReport,
+    vmhwm_after: Option<u64>,
+}
+
+fn run_case(
+    name: &str,
+    iters: usize,
+    setup: &EvalSetup,
+    queue: QueueKind,
+    metrics: MetricsMode,
+) -> Case {
+    let mut report = None;
+    let bench = bench_n(name, iters, || {
+        let opts = SimOpts { queue, metrics, ..setup.opts.clone() };
+        let rep = run(
+            setup.cluster.clone(),
+            &setup.trace,
+            Box::new(BestFitDrfh::default()),
+            opts,
+        );
+        let placed = rep.tasks_placed;
+        report = Some(rep);
+        placed
+    });
+    Case {
+        bench,
+        report: report.expect("bench ran at least once"),
+        vmhwm_after: peak_rss_bytes(),
+    }
+}
+
+fn retained_points(rep: &SimReport) -> usize {
+    rep.cpu_util.len() + rep.mem_util.len() + rep.jobs.len()
+}
+
+fn main() {
+    let smoke = std::env::var_os("SIM_SMOKE").is_some();
+    // full scale: ~2.2e-4 jobs/(server·s) × 2000 servers × 32400 s
+    // ≈ 14.3 k jobs ≈ 1.03 M tasks (see EvalSetup::with_duration)
+    let (servers, users, duration, iters) = if smoke {
+        (200usize, 20usize, 3_600.0f64, 1usize)
+    } else {
+        (2_000, 100, 32_400.0, 1)
+    };
+    let setup = EvalSetup::with_duration(2024, servers, users, duration);
+    let offered = setup.trace.total_tasks();
+    println!(
+        "sim_scale: k={servers} n={users} horizon={duration:.0}s \
+         ({offered} tasks offered){}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    header("sim_scale: full simulation, queue x metrics variants");
+    // streaming first: the VmHWM watermark is monotone, so this
+    // ordering lets the JSON show the bounded-memory plane's own peak
+    let streaming = run_case(
+        "wheel-streaming",
+        iters,
+        &setup,
+        QueueKind::Wheel,
+        MetricsMode::streaming(),
+    );
+    let wheel_full = run_case(
+        "wheel-full",
+        iters,
+        &setup,
+        QueueKind::Wheel,
+        MetricsMode::Full,
+    );
+    let heap_full = run_case(
+        "heap-full",
+        iters,
+        &setup,
+        QueueKind::Heap,
+        MetricsMode::Full,
+    );
+
+    // cheap parity guards; the real proof is tests/engine_parity.rs
+    assert_eq!(
+        heap_full.report.tasks_placed, wheel_full.report.tasks_placed,
+        "heap/wheel placement counts diverged"
+    );
+    assert_eq!(
+        heap_full.report.tasks_completed,
+        wheel_full.report.tasks_completed,
+        "heap/wheel completion counts diverged"
+    );
+    assert_eq!(
+        streaming.report.tasks_placed, wheel_full.report.tasks_placed,
+        "streaming metrics changed the simulation itself"
+    );
+    assert_eq!(
+        streaming.report.job_stats, wheel_full.report.job_stats,
+        "streaming job stats diverged from full-mode job stats"
+    );
+    assert!(
+        streaming.report.jobs.is_empty(),
+        "streaming mode must not materialize job records"
+    );
+
+    let secs = |c: &Case| c.bench.mean.as_secs_f64().max(1e-12);
+    let tps = |c: &Case| c.report.tasks_completed as f64 / secs(c);
+    let pps = |c: &Case| c.report.tasks_placed as f64 / secs(c);
+    let speedup_streaming = secs(&heap_full) / secs(&streaming);
+    let speedup_wheel = secs(&heap_full) / secs(&wheel_full);
+    println!(
+        "\nheap-full       : {:>10.0} tasks/s  {:>10.0} placements/s",
+        tps(&heap_full),
+        pps(&heap_full)
+    );
+    println!(
+        "wheel-full      : {:>10.0} tasks/s  {:>10.0} placements/s  ({speedup_wheel:.2}x)",
+        tps(&wheel_full),
+        pps(&wheel_full)
+    );
+    println!(
+        "wheel-streaming : {:>10.0} tasks/s  {:>10.0} placements/s  ({speedup_streaming:.2}x)",
+        tps(&streaming),
+        pps(&streaming)
+    );
+    println!(
+        "retained metric points: streaming {} vs full {} \
+         (bounded vs growing); VmHWM after streaming/full/heap: {:?}/{:?}/{:?}",
+        retained_points(&streaming.report),
+        retained_points(&wheel_full.report),
+        streaming.vmhwm_after,
+        wheel_full.vmhwm_after,
+        heap_full.vmhwm_after,
+    );
+    if !smoke && speedup_streaming < 3.0 {
+        println!(
+            "WARNING: wheel+streaming speedup {speedup_streaming:.2}x \
+             below the 3x target"
+        );
+    }
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim.json")
+            .to_string()
+    });
+    let opt_num = |v: Option<u64>| match v {
+        Some(x) => Json::Num(x as f64),
+        None => Json::Null,
+    };
+    let meta = [
+        ("servers", Json::Num(servers as f64)),
+        ("users", Json::Num(users as f64)),
+        ("horizon_s", Json::Num(duration)),
+        ("tasks_offered", Json::Num(offered as f64)),
+        (
+            "tasks_placed",
+            Json::Num(wheel_full.report.tasks_placed as f64),
+        ),
+        (
+            "tasks_completed",
+            Json::Num(wheel_full.report.tasks_completed as f64),
+        ),
+        ("smoke", Json::Bool(smoke)),
+        ("speedup_wheel_vs_heap", Json::Num(speedup_wheel)),
+        (
+            "speedup_streaming_vs_heap",
+            Json::Num(speedup_streaming),
+        ),
+        ("tasks_per_sec_heap", Json::Num(tps(&heap_full))),
+        ("tasks_per_sec_wheel", Json::Num(tps(&wheel_full))),
+        ("tasks_per_sec_streaming", Json::Num(tps(&streaming))),
+        ("placements_per_sec_heap", Json::Num(pps(&heap_full))),
+        ("placements_per_sec_wheel", Json::Num(pps(&wheel_full))),
+        (
+            "placements_per_sec_streaming",
+            Json::Num(pps(&streaming)),
+        ),
+        (
+            "retained_points_streaming",
+            Json::Num(retained_points(&streaming.report) as f64),
+        ),
+        (
+            "retained_points_full",
+            Json::Num(retained_points(&wheel_full.report) as f64),
+        ),
+        (
+            "vmhwm_after_streaming_bytes",
+            opt_num(streaming.vmhwm_after),
+        ),
+        (
+            "vmhwm_after_full_bytes",
+            opt_num(wheel_full.vmhwm_after),
+        ),
+        ("vmhwm_after_heap_bytes", opt_num(heap_full.vmhwm_after)),
+    ];
+    let results = [streaming.bench, wheel_full.bench, heap_full.bench];
+    let path = std::path::PathBuf::from(&out);
+    if write_suite_json(&path, "sim_scale", &meta, &results) {
+        println!("\nwrote {}", path.display());
+    } else {
+        println!("\ncould not write {} (read-only fs?)", path.display());
+    }
+}

@@ -12,6 +12,8 @@
 //! horizon = 86400.0
 //! sample_dt = 60.0
 //! track_user_series = false
+//! queue = "wheel"          # wheel | heap (naive parity reference)
+//! metrics = "full"         # full | streaming (bounded memory)
 //! [scheduler]
 //! policy = "bestfit"       # bestfit | firstfit | slots | bestfit-xla
 //! slots_per_max = 14       # slots policy only
@@ -22,7 +24,7 @@
 
 use crate::cluster::Cluster;
 use crate::sched::{BestFitDrfh, FirstFitDrfh, Scheduler, SlotsScheduler};
-use crate::sim::SimOpts;
+use crate::sim::{MetricsMode, QueueKind, SimOpts};
 use crate::util::toml_lite;
 use crate::util::Pcg32;
 use crate::workload::{GoogleLikeConfig, TraceGenerator};
@@ -59,11 +61,23 @@ pub struct SimConfig {
     pub horizon: f64,
     pub sample_dt: f64,
     pub track_user_series: bool,
+    /// Event queue: "wheel" (default) | "heap" (naive parity
+    /// reference).
+    pub queue: String,
+    /// Metrics retention: "full" (default) | "streaming" (bounded
+    /// memory for trace-scale runs).
+    pub metrics: String,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        SimConfig { horizon: 86_400.0, sample_dt: 60.0, track_user_series: false }
+        SimConfig {
+            horizon: 86_400.0,
+            sample_dt: 60.0,
+            track_user_series: false,
+            queue: "wheel".into(),
+            metrics: "full".into(),
+        }
     }
 }
 
@@ -123,6 +137,12 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_bool("sim", "track_user_series") {
             cfg.sim.track_user_series = v;
         }
+        if let Some(v) = doc.get_str("sim", "queue") {
+            cfg.sim.queue = v.to_string();
+        }
+        if let Some(v) = doc.get_str("sim", "metrics") {
+            cfg.sim.metrics = v.to_string();
+        }
         if let Some(v) = doc.get_str("scheduler", "policy") {
             cfg.scheduler.policy = v.to_string();
         }
@@ -172,13 +192,27 @@ impl ExperimentConfig {
         })
     }
 
-    /// Simulation options.
-    pub fn sim_opts(&self) -> SimOpts {
-        SimOpts {
+    /// Simulation options (validating the queue / metrics choices).
+    pub fn sim_opts(&self) -> Result<SimOpts> {
+        let queue = match self.sim.queue.as_str() {
+            "wheel" => QueueKind::Wheel,
+            "heap" => QueueKind::Heap,
+            other => bail!("unknown sim queue '{other}' (wheel | heap)"),
+        };
+        let metrics = match self.sim.metrics.as_str() {
+            "full" => MetricsMode::Full,
+            "streaming" => MetricsMode::streaming(),
+            other => {
+                bail!("unknown sim metrics '{other}' (full | streaming)")
+            }
+        };
+        Ok(SimOpts {
             horizon: self.sim.horizon,
             sample_dt: self.sim.sample_dt,
             track_user_series: self.sim.track_user_series,
-        }
+            queue,
+            metrics,
+        })
     }
 }
 
@@ -221,6 +255,29 @@ mod tests {
         assert_eq!(cluster.len(), 100);
         let sched = c.build_scheduler(&cluster).unwrap();
         assert_eq!(sched.name(), "slots");
+    }
+
+    #[test]
+    fn queue_and_metrics_parse_and_validate() {
+        let c = ExperimentConfig::from_toml("").unwrap();
+        let opts = c.sim_opts().unwrap();
+        assert_eq!(opts.queue, QueueKind::Wheel);
+        assert_eq!(opts.metrics, MetricsMode::Full);
+
+        let c = ExperimentConfig::from_toml(
+            "[sim]\nqueue = 'heap'\nmetrics = 'streaming'",
+        )
+        .unwrap();
+        let opts = c.sim_opts().unwrap();
+        assert_eq!(opts.queue, QueueKind::Heap);
+        assert!(matches!(opts.metrics, MetricsMode::Streaming { .. }));
+
+        let c =
+            ExperimentConfig::from_toml("[sim]\nqueue = 'nope'").unwrap();
+        assert!(c.sim_opts().is_err());
+        let c =
+            ExperimentConfig::from_toml("[sim]\nmetrics = 'nope'").unwrap();
+        assert!(c.sim_opts().is_err());
     }
 
     #[test]

@@ -38,6 +38,7 @@ pub fn run_fig4(seed: u64) -> Fig4Result {
         horizon: 2_000.0,
         sample_dt: 5.0,
         track_user_series: true,
+        ..SimOpts::default()
     };
     // strict filling: the paper's Fig. 4 shows exactly equalized
     // shares, which requires stalling behind blocked users

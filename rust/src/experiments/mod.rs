@@ -15,6 +15,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod runner;
+pub mod sim_scale;
 pub mod table2;
 
 use crate::cluster::Cluster;
@@ -77,6 +78,7 @@ impl EvalSetup {
             horizon: duration,
             sample_dt: (duration / 720.0).max(10.0),
             track_user_series: false,
+            ..SimOpts::default()
         };
         EvalSetup { cluster, trace, opts, seed }
     }

@@ -1,0 +1,205 @@
+//! §Perf diagnostic for the trace-scale simulation data plane
+//! (`drfh exp sim-scale`): run the same Best-Fit DRFH simulation on
+//! the naive binary-heap event queue and on the timer wheel (full and
+//! streaming metrics), check the parity and memory invariants, and
+//! report throughput.
+//!
+//! This is the `exp`-level smoke path for `benches/sim_scale.rs`: the
+//! bench produces the committed `BENCH_sim.json` numbers at k = 2000
+//! / ~10⁶ tasks; this harness runs at whatever scale the CLI asks for
+//! (`--servers/--users/--duration`) and is cheap enough for tests.
+
+use crate::experiments::EvalSetup;
+use crate::metrics::MetricsMode;
+use crate::sched::BestFitDrfh;
+use crate::sim::{run, QueueKind, SimOpts, SimReport};
+use std::time::{Duration, Instant};
+
+/// One timed variant.
+pub struct QueueRun {
+    pub label: &'static str,
+    pub report: SimReport,
+    pub wall: Duration,
+}
+
+impl QueueRun {
+    /// Completed tasks per wall-clock second.
+    pub fn tasks_per_sec(&self) -> f64 {
+        self.report.tasks_completed as f64
+            / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    /// Committed placements per wall-clock second.
+    pub fn placements_per_sec(&self) -> f64 {
+        self.report.tasks_placed as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    /// Retained metric points (series samples + job records) — the
+    /// memory the metrics layer holds at end of run.
+    pub fn retained_points(&self) -> usize {
+        let series = |ts: &crate::metrics::TimeSeries| ts.len();
+        let mut pts = series(&self.report.cpu_util)
+            + series(&self.report.mem_util)
+            + self.report.jobs.len();
+        for s in self
+            .report
+            .user_dom_share
+            .iter()
+            .chain(&self.report.user_cpu_share)
+            .chain(&self.report.user_mem_share)
+        {
+            pts += s.len();
+        }
+        pts
+    }
+}
+
+/// The three-variant comparison.
+pub struct SimScaleResult {
+    pub heap_full: QueueRun,
+    pub wheel_full: QueueRun,
+    pub wheel_streaming: QueueRun,
+    pub tasks_offered: usize,
+}
+
+impl SimScaleResult {
+    /// Wall-clock speedup of the wheel over the heap (same metrics).
+    pub fn wheel_speedup(&self) -> f64 {
+        self.heap_full.wall.as_secs_f64()
+            / self.wheel_full.wall.as_secs_f64().max(1e-12)
+    }
+
+    /// The load-bearing invariant: heap and wheel runs are
+    /// *bit-identical* — every decision, sample and job record.
+    pub fn queue_parity_ok(&self) -> bool {
+        self.heap_full.report == self.wheel_full.report
+    }
+
+    /// Streaming mode must not change the simulation itself: same
+    /// placements/completions and identical streaming job statistics;
+    /// only the retention policy differs.
+    pub fn streaming_semantics_ok(&self) -> bool {
+        let s = &self.wheel_streaming.report;
+        let f = &self.wheel_full.report;
+        s.tasks_placed == f.tasks_placed
+            && s.tasks_completed == f.tasks_completed
+            && s.job_stats == f.job_stats
+            && s.jobs.is_empty()
+    }
+
+    /// Decimated utilization stays within plotting tolerance of the
+    /// full series (Fig. 5's quantity).
+    pub fn streaming_util_delta(&self) -> f64 {
+        (self.wheel_streaming.report.avg_cpu_util
+            - self.wheel_full.report.avg_cpu_util)
+            .abs()
+    }
+}
+
+fn timed(
+    setup: &EvalSetup,
+    label: &'static str,
+    queue: QueueKind,
+    metrics: MetricsMode,
+) -> QueueRun {
+    let opts = SimOpts { queue, metrics, ..setup.opts.clone() };
+    let t0 = Instant::now();
+    let report = run(
+        setup.cluster.clone(),
+        &setup.trace,
+        Box::new(BestFitDrfh::default()),
+        opts,
+    );
+    QueueRun { label, report, wall: t0.elapsed() }
+}
+
+/// Run the three variants sequentially (timing comparisons must not
+/// share cores) and return the comparison.
+pub fn run_sim_scale(setup: &EvalSetup) -> SimScaleResult {
+    let heap_full =
+        timed(setup, "heap-full", QueueKind::Heap, MetricsMode::Full);
+    let wheel_full =
+        timed(setup, "wheel-full", QueueKind::Wheel, MetricsMode::Full);
+    // cap at a quarter of the expected sample count so decimation
+    // actually fires at every scale this harness runs at (EvalSetup's
+    // sample_dt floor keeps series <= ~721 points, below the 2048
+    // production default — a default-cap run would test nothing)
+    let samples = (setup.opts.horizon / setup.opts.sample_dt) as usize;
+    let series_cap = (samples / 4).max(8);
+    let wheel_streaming = timed(
+        setup,
+        "wheel-streaming",
+        QueueKind::Wheel,
+        MetricsMode::Streaming { series_cap },
+    );
+    SimScaleResult {
+        heap_full,
+        wheel_full,
+        wheel_streaming,
+        tasks_offered: setup.trace.total_tasks(),
+    }
+}
+
+pub fn print(res: &SimScaleResult) {
+    println!("== sim-scale: event-queue / metrics data-plane check ==");
+    println!(
+        "offered {} tasks; parity heap==wheel: {}; streaming semantics: {}",
+        res.tasks_offered,
+        if res.queue_parity_ok() { "OK (bit-identical)" } else { "FAILED" },
+        if res.streaming_semantics_ok() { "OK" } else { "FAILED" },
+    );
+    for rrun in [&res.heap_full, &res.wheel_full, &res.wheel_streaming] {
+        println!(
+            "{:<16} {:>9.1} ms  {:>10.0} tasks/s  {:>10.0} placements/s  \
+             {:>9} retained pts",
+            rrun.label,
+            rrun.wall.as_secs_f64() * 1e3,
+            rrun.tasks_per_sec(),
+            rrun.placements_per_sec(),
+            rrun.retained_points(),
+        );
+    }
+    println!(
+        "wheel speedup {:.2}x; streaming avg-util delta {:.4} \
+         (plotting tolerance)",
+        res.wheel_speedup(),
+        res.streaming_util_delta(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The exp-level smoke: a small Fig. 5-shaped setup must pass the
+    /// parity and streaming invariants end to end.
+    #[test]
+    fn smoke_invariants_hold() {
+        let setup = EvalSetup::with_duration(42, 60, 8, 2_500.0);
+        let res = run_sim_scale(&setup);
+        assert!(res.queue_parity_ok(), "heap vs wheel reports diverged");
+        assert!(res.streaming_semantics_ok());
+        // decimation really fired (the harness caps below the sample
+        // count) and stayed within plotting tolerance
+        assert!(
+            res.wheel_streaming.report.cpu_util.len()
+                < res.wheel_full.report.cpu_util.len(),
+            "streaming run never decimated — the tolerance check is vacuous"
+        );
+        assert!(
+            res.streaming_util_delta() < 0.05,
+            "decimated avg drifted {}",
+            res.streaming_util_delta()
+        );
+        assert!(res.heap_full.report.tasks_placed > 0);
+        // streaming retains no more points than full mode
+        assert!(
+            res.wheel_streaming.report.job_stats.count()
+                == res.wheel_full.report.job_stats.count()
+        );
+        assert!(
+            res.wheel_streaming.retained_points()
+                <= res.wheel_full.retained_points()
+        );
+    }
+}

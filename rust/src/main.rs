@@ -1,7 +1,7 @@
 //! `drfh` — launcher CLI for the DRFH reproduction.
 //!
 //! ```text
-//! drfh exp <fig4|fig4-fluid|table2|fig5|fig6|fig7|fig8|all> [--seed N]
+//! drfh exp <fig4|fig4-fluid|table2|fig5|fig6|fig7|fig8|sim-scale|all> [--seed N]
 //!          [--servers K] [--users N] [--duration S] regenerate a paper figure/table
 //! drfh sim --config exp.toml                      run a configured simulation
 //! drfh solve                                      exact fluid DRFH on the Fig. 1 example
@@ -25,7 +25,7 @@ const USAGE: &str = "\
 drfh — Dominant Resource Fairness with Heterogeneous Servers (paper reproduction)
 
 USAGE:
-  drfh exp <fig4|fig4-fluid|table2|fig5|fig6|fig7|fig8|all>
+  drfh exp <fig4|fig4-fluid|table2|fig5|fig6|fig7|fig8|sim-scale|all>
            [--seed N] [--servers K] [--users N] [--duration SECONDS]
   drfh sim --config <exp.toml>
   drfh solve
@@ -160,6 +160,14 @@ fn run_exp(
             let res = experiments::fig8::run_fig8(&s);
             experiments::fig8::print(&res);
         }
+        "sim-scale" => {
+            let s = setup();
+            let res = experiments::sim_scale::run_sim_scale(&s);
+            experiments::sim_scale::print(&res);
+            if !res.queue_parity_ok() || !res.streaming_semantics_ok() {
+                bail!("sim-scale data-plane parity failure");
+            }
+        }
         "all" => {
             let res = experiments::fig4::run_fig4(seed);
             experiments::fig4::print(&res);
@@ -195,14 +203,16 @@ fn run_sim(path: &std::path::Path) -> Result<()> {
         trace.total_tasks(),
         sched.name()
     );
-    let report = sim::run(cluster, &trace, sched, cfg.sim_opts());
+    let report = sim::run(cluster, &trace, sched, cfg.sim_opts()?);
     println!(
         "done: {} placed, {} completed, cpu {:.1}%, mem {:.1}%, jobs {}",
         report.tasks_placed,
         report.tasks_completed,
         report.avg_cpu_util * 100.0,
         report.avg_mem_util * 100.0,
-        report.jobs.len()
+        // job_stats counts in every metrics mode; report.jobs is
+        // empty under `metrics = "streaming"`
+        report.job_stats.count()
     );
     Ok(())
 }

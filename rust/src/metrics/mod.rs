@@ -1,9 +1,48 @@
 //! Simulation metrics: everything the paper's evaluation section plots.
+//!
+//! ## §Perf: bounded-memory mode
+//!
+//! At trace scale (10⁶ tasks and beyond) the seed's metrics grew
+//! without bound: one [`JobRecord`] per completed job and one sample
+//! per `sample_dt` per tracked series. [`MetricsMode::Streaming`]
+//! caps both: time series decimate to a fixed point budget
+//! ([`TimeSeries::decimate`] — drop every other point, doubling the
+//! effective stride, so the retained grid still spans the whole
+//! horizon and stays within plotting tolerance), and job completions
+//! fold into [`JobStats`] — O(1)-memory count/mean/min/max
+//! ([`crate::util::stats::StreamStats`]) plus P² completion-time
+//! percentiles ([`crate::util::stats::P2Quantile`]) overall and per
+//! Fig. 6b size bucket — instead of materializing `jobs`. Peak RSS is
+//! then ~flat in task count; `benches/sim_scale.rs` records the
+//! retained-point counts next to its throughput numbers.
 
 use crate::util::stats;
+use crate::util::stats::{P2Quantile, StreamStats};
+
+/// How the engine records per-run measurements (see
+/// [`crate::sim::SimOpts::metrics`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum MetricsMode {
+    /// Keep every sample and every completed-job record (the seed
+    /// behavior; what the figure harnesses need).
+    #[default]
+    Full,
+    /// Bounded memory: series decimate to at most `series_cap` points
+    /// (0 = unbounded) and job completions stream into
+    /// [`JobStats`] only — `SimReport::jobs` stays empty.
+    Streaming { series_cap: usize },
+}
+
+impl MetricsMode {
+    /// Streaming with the default point budget (2048 points ≈ 16 KiB
+    /// per series — comfortably above plotting resolution).
+    pub fn streaming() -> Self {
+        MetricsMode::Streaming { series_cap: 2048 }
+    }
+}
 
 /// A sampled time series (e.g. utilization over time, Fig. 5).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct TimeSeries {
     pub t: Vec<f64>,
     pub v: Vec<f64>,
@@ -13,6 +52,32 @@ impl TimeSeries {
     pub fn push(&mut self, t: f64, v: f64) {
         self.t.push(t);
         self.v.push(v);
+    }
+
+    /// Halve the retained points (keep indices 0, 2, 4, …), doubling
+    /// the effective sample stride. The time span is preserved up to
+    /// one stride at the tail; repeated application under a fixed cap
+    /// keeps memory bounded while the grid stays horizon-spanning.
+    pub fn decimate(&mut self) {
+        let keep_every_other = |v: &mut Vec<f64>| {
+            let mut i = 0usize;
+            v.retain(|_| {
+                let keep = i % 2 == 0;
+                i += 1;
+                keep
+            });
+        };
+        keep_every_other(&mut self.t);
+        keep_every_other(&mut self.v);
+    }
+
+    /// Enforce a point budget (0 = unbounded): decimate whenever the
+    /// series outgrows `cap`. Bounded between `cap / 2` and `cap`
+    /// points at all times.
+    pub fn enforce_cap(&mut self, cap: usize) {
+        if cap > 0 && self.t.len() > cap {
+            self.decimate();
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -54,7 +119,7 @@ impl TimeSeries {
 }
 
 /// A completed job record.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct JobRecord {
     pub job: usize,
     pub user: usize,
@@ -69,8 +134,62 @@ impl JobRecord {
     }
 }
 
+/// Streaming job-completion statistics, maintained by the engine in
+/// every metrics mode (they are O(1) memory and cheap): completion
+/// time moments and P² percentiles, overall and per Fig. 6b job-size
+/// bucket. In [`MetricsMode::Streaming`] they are the *only*
+/// job-completion output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobStats {
+    /// Completion-time (finish − submit) moments over completed jobs.
+    pub jct: StreamStats,
+    /// P² estimates of the 50th / 90th / 99th JCT percentiles.
+    pub jct_p50: P2Quantile,
+    pub jct_p90: P2Quantile,
+    pub jct_p99: P2Quantile,
+    /// Tasks-per-completed-job moments.
+    pub tasks_per_job: StreamStats,
+    /// JCT moments per [`JCT_BUCKETS`] size class.
+    pub jct_by_bucket: Vec<StreamStats>,
+}
+
+impl Default for JobStats {
+    fn default() -> Self {
+        JobStats {
+            jct: StreamStats::default(),
+            jct_p50: P2Quantile::new(0.50),
+            jct_p90: P2Quantile::new(0.90),
+            jct_p99: P2Quantile::new(0.99),
+            tasks_per_job: StreamStats::default(),
+            jct_by_bucket: vec![StreamStats::default(); JCT_BUCKETS.len()],
+        }
+    }
+}
+
+impl JobStats {
+    /// Fold in one completed job.
+    pub fn record(&mut self, jct: f64, num_tasks: usize) {
+        self.jct.push(jct);
+        self.jct_p50.push(jct);
+        self.jct_p90.push(jct);
+        self.jct_p99.push(jct);
+        self.tasks_per_job.push(num_tasks as f64);
+        if let Some(b) = JCT_BUCKETS
+            .iter()
+            .position(|&(lo, hi)| num_tasks >= lo && num_tasks <= hi)
+        {
+            self.jct_by_bucket[b].push(jct);
+        }
+    }
+
+    /// Completed-job count.
+    pub fn count(&self) -> u64 {
+        self.jct.count()
+    }
+}
+
 /// Per-user task accounting for completion-ratio figures (Fig. 7/8).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct UserTaskCounts {
     pub submitted: usize,
     pub completed: usize,
@@ -160,6 +279,71 @@ mod tests {
         let c = UserTaskCounts { submitted: 4, completed: 3 };
         assert!((c.ratio() - 0.75).abs() < 1e-12);
         assert_eq!(UserTaskCounts::default().ratio(), 1.0);
+    }
+
+    #[test]
+    fn decimation_bounds_memory_and_preserves_shape() {
+        let mut ts = TimeSeries::default();
+        let cap = 64;
+        for i in 0..10_000 {
+            ts.push(i as f64, (i % 100) as f64 / 100.0);
+            ts.enforce_cap(cap);
+        }
+        assert!(ts.len() <= cap, "cap violated: {}", ts.len());
+        assert!(ts.len() > cap / 2, "over-decimated: {}", ts.len());
+        // grid still spans the horizon (first point kept exactly,
+        // tail within one post-decimation stride)
+        assert_eq!(ts.t[0], 0.0);
+        assert!(*ts.t.last().unwrap() > 9_000.0);
+        // strictly increasing grid survives decimation
+        for w in ts.t.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        // the time average stays within plotting tolerance of the
+        // exact (undecimated) value, 0.495 (decimation aliases the
+        // period-100 signal slightly — that bias is the accepted cost)
+        assert!((ts.time_avg() - 0.495).abs() < 0.03, "{}", ts.time_avg());
+    }
+
+    #[test]
+    fn decimate_keeps_even_indices() {
+        let mut ts = TimeSeries::default();
+        for i in 0..5 {
+            ts.push(i as f64, 10.0 * i as f64);
+        }
+        ts.decimate();
+        assert_eq!(ts.t, vec![0.0, 2.0, 4.0]);
+        assert_eq!(ts.v, vec![0.0, 20.0, 40.0]);
+        // cap 0 = unbounded: no decimation however long it grows
+        let mut unb = TimeSeries::default();
+        for i in 0..100 {
+            unb.push(i as f64, 0.0);
+            unb.enforce_cap(0);
+        }
+        assert_eq!(unb.len(), 100);
+    }
+
+    #[test]
+    fn job_stats_stream_matches_records() {
+        use crate::util::Pcg32;
+        let mut rng = Pcg32::seeded(99);
+        let mut js = JobStats::default();
+        let mut jcts = Vec::new();
+        for _ in 0..2_000 {
+            let jct = rng.uniform(1.0, 5_000.0);
+            let tasks = 1 + rng.below(600);
+            js.record(jct, tasks);
+            jcts.push(jct);
+        }
+        assert_eq!(js.count(), 2_000);
+        assert!((js.jct.mean() - stats::mean(&jcts)).abs() < 1e-9);
+        let exact_p90 = stats::percentile(&jcts, 90.0);
+        let rel = (js.jct_p90.quantile() - exact_p90).abs() / exact_p90;
+        assert!(rel < 0.1, "P² p90 {} vs {}", js.jct_p90.quantile(), exact_p90);
+        // every job landed in exactly one bucket
+        let bucketed: u64 =
+            js.jct_by_bucket.iter().map(|b| b.count()).sum();
+        assert_eq!(bucketed, 2_000);
     }
 
     #[test]

@@ -22,6 +22,38 @@
 //! completion event; stale events are skipped via a per-server
 //! generation counter.
 //!
+//! ## §Perf: the trace-scale data plane
+//!
+//! Three independently gated pieces keep a ~10⁶-task, k = 2000 run
+//! inside one machine's memory and cache budget (`benches/sim_scale.rs`
+//! measures all three; `tests/engine_parity.rs` pins the semantics):
+//!
+//! * **Event queue** ([`SimOpts::queue`]): the engine drives a
+//!   [`wheel::SimQueue`] — a calendar-style timer wheel
+//!   ([`wheel::TimerWheel`], the default) or the seed's `BinaryHeap`
+//!   ([`wheel::HeapQueue`], the naive parity reference). Both drain
+//!   in the identical total `(time, seq)` order, so every scheduling
+//!   decision and every derived float is bit-identical across queue
+//!   choices; the wheel replaces O(log N) cache-hostile heap walks
+//!   with O(1) bucket pushes and batched bucket sorts.
+//!
+//! * **Task arena** ([`TaskArena`]): per-job state lives in flat
+//!   structure-of-arrays columns (u32 cursors/countdowns), task
+//!   durations are borrowed once from the [`Trace`] instead of being
+//!   cloned per job, per-user queues are flat `VecDeque<u32>` job-id
+//!   rings, and per-user demand rows are interned
+//!   ([`crate::workload::DemandTable`]) so derived per-task constants
+//!   (dominant delta, blocked-index fit keys) are computed once per
+//!   distinct row.
+//!
+//! * **Metrics gating** ([`SimOpts::metrics`]):
+//!   [`MetricsMode::Streaming`] folds job completions into O(1)
+//!   streaming accumulators ([`crate::metrics::JobStats`]) and keeps
+//!   every time series under a fixed point budget by stride-doubling
+//!   decimation, so peak RSS stays ~flat in task count.
+//!   [`MetricsMode::Full`] (default) is the seed behavior the figure
+//!   harnesses need. `job_stats` is maintained in both modes.
+//!
 //! ## §Perf: batched drain
 //!
 //! Scheduling opportunities are handed to the policy one *event wave*
@@ -53,10 +85,13 @@
 //! identical (asserted end-to-end by `tests/engine_parity.rs`).
 
 use crate::cluster::{Cluster, ResVec};
-use crate::metrics::{JobRecord, TimeSeries, UserTaskCounts};
+use crate::metrics::{
+    JobRecord, JobStats, MetricsMode, TimeSeries, UserTaskCounts,
+};
 use crate::sched::index::BlockedIndex;
 use crate::sched::{DrainCtx, Scheduler, UserState};
-use crate::workload::Trace;
+use crate::sim::wheel::{self, EventQueue, QueueKind, SimQueue};
+use crate::workload::{TaskArena, Trace};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::collections::VecDeque;
@@ -72,16 +107,31 @@ pub struct SimOpts {
     /// Record per-user share time series (Fig. 4 needs it; the
     /// 2,000-server runs don't and save the memory).
     pub track_user_series: bool,
+    /// Event-queue implementation (§Perf): the timer wheel by
+    /// default; [`QueueKind::Heap`] is the seed's binary heap, kept
+    /// as the naive parity reference. Decision streams are
+    /// bit-identical either way (`tests/engine_parity.rs`).
+    pub queue: QueueKind,
+    /// Metrics retention (§Perf): [`MetricsMode::Full`] keeps every
+    /// sample and job record; [`MetricsMode::Streaming`] bounds
+    /// memory for trace-scale runs.
+    pub metrics: MetricsMode,
 }
 
 impl Default for SimOpts {
     fn default() -> Self {
-        SimOpts { horizon: 86_400.0, sample_dt: 30.0, track_user_series: false }
+        SimOpts {
+            horizon: 86_400.0,
+            sample_dt: 30.0,
+            track_user_series: false,
+            queue: QueueKind::Wheel,
+            metrics: MetricsMode::Full,
+        }
     }
 }
 
 /// Everything measured during a run.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SimReport {
     pub scheduler: String,
     pub cpu_util: TimeSeries,
@@ -91,8 +141,12 @@ pub struct SimReport {
     /// Per-user CPU / memory share of the pool over time (when tracked).
     pub user_cpu_share: Vec<TimeSeries>,
     pub user_mem_share: Vec<TimeSeries>,
-    /// Jobs that completed before the horizon.
+    /// Jobs that completed before the horizon (empty under
+    /// [`MetricsMode::Streaming`] — use [`SimReport::job_stats`]).
     pub jobs: Vec<JobRecord>,
+    /// Streaming job-completion statistics (maintained in every
+    /// metrics mode).
+    pub job_stats: JobStats,
     pub user_tasks: Vec<UserTaskCounts>,
     pub tasks_placed: usize,
     pub tasks_completed: usize,
@@ -110,33 +164,8 @@ enum EventKind {
     Sample,
 }
 
-#[derive(Clone, Copy, Debug)]
-struct Event {
-    time: f64,
-    seq: u64,
-    kind: EventKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
-    }
-}
-impl Eq for Event {}
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // reversed: BinaryHeap is a max-heap, we want earliest first
-        other
-            .time
-            .total_cmp(&self.time)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
+type Event = wheel::Event<EventKind>;
+type Events = SimQueue<EventKind>;
 
 // ------------------------------------------------------------- run state
 
@@ -197,35 +226,26 @@ impl ServerSim {
     }
 }
 
-struct JobSim {
-    remaining: usize,
-    submit: f64,
-    num_tasks: usize,
-    user: usize,
-}
-
-/// A job's un-placed tasks in a user's queue.
-#[derive(Clone)]
-struct JobQueue {
-    job: u32,
-    tasks: VecDeque<f64>,
-}
-
-/// The simulator.
+/// The simulator. `'a` covers both the policy and the replayed trace —
+/// the [`TaskArena`] borrows every task duration straight from the
+/// trace instead of cloning it.
 pub struct Simulation<'a> {
     pub cluster: Cluster,
     pub users: Vec<UserState>,
     scheduler: Box<dyn Scheduler + 'a>,
     opts: SimOpts,
 
-    /// Per-user queue of jobs; each job holds its un-placed task
-    /// durations. Tasks are drawn round-robin across the user's jobs
-    /// (Hadoop Fair Scheduler semantics: fair across jobs within a
-    /// pool), so a small job is never buried behind an earlier big one.
-    queues: Vec<VecDeque<JobQueue>>,
-    jobs: Vec<JobSim>,
+    /// Per-user round-robin ring of job ids with un-placed tasks.
+    /// Tasks are drawn round-robin across the user's jobs (Hadoop
+    /// Fair Scheduler semantics: fair across jobs within a pool), so
+    /// a small job is never buried behind an earlier big one. The
+    /// job's un-placed frontier itself is a u32 cursor in the arena —
+    /// no per-job containers on this path.
+    queues: Vec<VecDeque<u32>>,
+    /// Flat SoA job/task state, durations borrowed from the trace.
+    arena: TaskArena<'a>,
     servers: Vec<ServerSim>,
-    events: BinaryHeap<Event>,
+    events: Events,
     seq: u64,
     now: f64,
 
@@ -237,40 +257,43 @@ pub struct Simulation<'a> {
 
     report: SimReport,
     total: ResVec,
-    /// Per-job task durations, consumed at arrival.
-    trace_tasks: Vec<Vec<f64>>,
 }
 
 impl<'a> Simulation<'a> {
     /// Build a simulation for `trace` on `cluster` under `scheduler`.
     pub fn new(
         cluster: Cluster,
-        trace: &Trace,
+        trace: &'a Trace,
         scheduler: Box<dyn Scheduler + 'a>,
         opts: SimOpts,
     ) -> Self {
         trace.validate().expect("invalid trace");
         let total = cluster.total_capacity();
         let m = cluster.dims();
+        let arena = TaskArena::new(trace);
+        // per-task constants derived once per *distinct* demand row
+        // (bit-identical to the per-user computation they replace)
+        let dom_deltas: Vec<f64> =
+            arena.demands().per_user(|d| d.div(&total).max());
+        // blocked-user fit keys: min_r demand_r (see BlockedIndex docs)
+        let fit_keys: Vec<f64> = arena.demands().per_user(|d| d.min());
         let users: Vec<UserState> = trace
             .users
             .iter()
-            .map(|u| UserState {
+            .zip(&dom_deltas)
+            .map(|(u, &dom_delta)| UserState {
                 demand: u.demand,
                 weight: u.weight,
                 pending: 0,
                 running: 0,
                 dom_share: 0.0,
                 usage: ResVec::zeros(m),
-                dom_delta: u.demand.div(&total).max(),
+                dom_delta,
             })
             .collect();
         let n = users.len();
         let k = cluster.len();
         let name = scheduler.name().to_string();
-        // blocked-user fit keys: min_r demand_r (see BlockedIndex docs)
-        let fit_keys: Vec<f64> =
-            users.iter().map(|u| u.demand.min()).collect();
 
         let mut sim = Simulation {
             cluster,
@@ -278,18 +301,9 @@ impl<'a> Simulation<'a> {
             scheduler,
             opts: opts.clone(),
             queues: vec![VecDeque::new(); n],
-            jobs: trace
-                .jobs
-                .iter()
-                .map(|j| JobSim {
-                    remaining: j.num_tasks(),
-                    submit: j.submit,
-                    num_tasks: j.num_tasks(),
-                    user: j.user,
-                })
-                .collect(),
+            arena,
             servers: (0..k).map(|_| ServerSim::new()).collect(),
-            events: BinaryHeap::new(),
+            events: Events::new(opts.queue),
             seq: 0,
             now: 0.0,
             eligible: vec![true; n],
@@ -303,6 +317,7 @@ impl<'a> Simulation<'a> {
                 user_cpu_share: vec![TimeSeries::default(); if opts.track_user_series { n } else { 0 }],
                 user_mem_share: vec![TimeSeries::default(); if opts.track_user_series { n } else { 0 }],
                 jobs: Vec::new(),
+                job_stats: JobStats::default(),
                 user_tasks: vec![UserTaskCounts::default(); n],
                 tasks_placed: 0,
                 tasks_completed: 0,
@@ -310,11 +325,6 @@ impl<'a> Simulation<'a> {
                 avg_mem_util: 0.0,
             },
             total,
-            trace_tasks: trace
-                .jobs
-                .iter()
-                .map(|j| j.tasks.iter().map(|t| t.duration).collect())
-                .collect(),
         };
         for (j, job) in trace.jobs.iter().enumerate() {
             if job.submit <= opts.horizon {
@@ -342,13 +352,13 @@ impl<'a> Simulation<'a> {
                 break;
             }
             self.now = ev.time;
-            let mut need_sched = self.apply(ev.kind);
+            let mut need_sched = self.apply(ev.payload);
             while let Some(next) = self.events.peek() {
                 if next.time > self.now {
                     break;
                 }
                 let next = self.events.pop().unwrap();
-                need_sched |= self.apply(next.kind);
+                need_sched |= self.apply(next.payload);
             }
             if need_sched {
                 self.schedule_loop();
@@ -375,14 +385,11 @@ impl<'a> Simulation<'a> {
     }
 
     fn on_arrival(&mut self, j: usize) -> bool {
-        let user = self.jobs[j].user;
-        let durations = std::mem::take(&mut self.trace_tasks[j]);
-        self.queues[user].push_back(JobQueue {
-            job: j as u32,
-            tasks: durations.into(),
-        });
-        self.users[user].pending += self.jobs[j].num_tasks;
-        self.report.user_tasks[user].submitted += self.jobs[j].num_tasks;
+        let user = self.arena.job_user(j);
+        self.queues[user].push_back(j as u32);
+        let num_tasks = self.arena.job_len(j);
+        self.users[user].pending += num_tasks;
+        self.report.user_tasks[user].submitted += num_tasks;
         // a blocked user stays blocked (its demand is static); for the
         // rest, let indexed policies re-insert the user
         if !self.blocked.is_blocked(user) {
@@ -432,15 +439,19 @@ impl<'a> Simulation<'a> {
         self.report.tasks_completed += 1;
         self.report.user_tasks[u].completed += 1;
         let j = entry.job as usize;
-        self.jobs[j].remaining -= 1;
-        if self.jobs[j].remaining == 0 {
-            self.report.jobs.push(JobRecord {
-                job: j,
-                user: self.jobs[j].user,
-                num_tasks: self.jobs[j].num_tasks,
-                submit: self.jobs[j].submit,
-                finish: self.now,
-            });
+        if self.arena.complete_one(j) {
+            let submit = self.arena.job_submit(j);
+            let num_tasks = self.arena.job_len(j);
+            self.report.job_stats.record(self.now - submit, num_tasks);
+            if self.opts.metrics == MetricsMode::Full {
+                self.report.jobs.push(JobRecord {
+                    job: j,
+                    user: self.arena.job_user(j),
+                    num_tasks,
+                    submit,
+                    finish: self.now,
+                });
+            }
         }
     }
 
@@ -500,6 +511,7 @@ impl<'a> Simulation<'a> {
             eligible: &mut self.eligible,
             blocked: &mut self.blocked,
             queues: &mut self.queues,
+            arena: &mut self.arena,
             servers: &mut self.servers,
             events: &mut self.events,
             seq: &mut self.seq,
@@ -527,6 +539,17 @@ impl<'a> Simulation<'a> {
                 }
             }
         }
+        if let MetricsMode::Streaming { series_cap } = self.opts.metrics {
+            self.report.cpu_util.enforce_cap(series_cap);
+            self.report.mem_util.enforce_cap(series_cap);
+            if self.opts.track_user_series {
+                for u in 0..self.users.len() {
+                    self.report.user_dom_share[u].enforce_cap(series_cap);
+                    self.report.user_cpu_share[u].enforce_cap(series_cap);
+                    self.report.user_mem_share[u].enforce_cap(series_cap);
+                }
+            }
+        }
         let next = self.now + self.opts.sample_dt;
         if next <= self.opts.horizon {
             self.push_event(next, EventKind::Sample);
@@ -537,13 +560,13 @@ impl<'a> Simulation<'a> {
 // ------------------------------------------------------- drain plumbing
 
 fn push_event_into(
-    events: &mut BinaryHeap<Event>,
+    events: &mut Events,
     seq: &mut u64,
     time: f64,
     kind: EventKind,
 ) {
     *seq += 1;
-    events.push(Event { time, seq: *seq, kind });
+    events.push(Event { time, seq: *seq, payload: kind });
 }
 
 /// Recompute server `l`'s PS rate and (re)schedule its next completion
@@ -552,7 +575,7 @@ fn push_event_into(
 fn refresh_server_at(
     cluster: &Cluster,
     servers: &mut [ServerSim],
-    events: &mut BinaryHeap<Event>,
+    events: &mut Events,
     seq: &mut u64,
     now: f64,
     l: usize,
@@ -574,21 +597,22 @@ fn refresh_server_at(
 /// The engine's side of the batched-drain protocol: disjoint mutable
 /// borrows of every [`Simulation`] field a placement touches, so the
 /// scheduler (the one field *not* borrowed) can be called with the ctx.
-struct EngineCtx<'e> {
+struct EngineCtx<'e, 't> {
     cluster: &'e mut Cluster,
     users: &'e mut [UserState],
     eligible: &'e mut [bool],
     blocked: &'e mut BlockedIndex,
-    queues: &'e mut [VecDeque<JobQueue>],
+    queues: &'e mut [VecDeque<u32>],
+    arena: &'e mut TaskArena<'t>,
     servers: &'e mut [ServerSim],
-    events: &'e mut BinaryHeap<Event>,
+    events: &'e mut Events,
     seq: &'e mut u64,
     now: f64,
     report: &'e mut SimReport,
     overcommit: bool,
 }
 
-impl DrainCtx for EngineCtx<'_> {
+impl DrainCtx for EngineCtx<'_, '_> {
     fn cluster(&self) -> &Cluster {
         &*self.cluster
     }
@@ -614,12 +638,12 @@ impl DrainCtx for EngineCtx<'_> {
         }
         // round-robin across the user's jobs: take one task from the
         // front job, then rotate it to the back if it has more
-        let mut jq =
-            self.queues[u].pop_front().expect("placement without pending");
-        let duration = jq.tasks.pop_front().expect("empty job queue");
-        let job = jq.job;
-        if !jq.tasks.is_empty() {
-            self.queues[u].push_back(jq);
+        let j = self.queues[u]
+            .pop_front()
+            .expect("placement without pending") as usize;
+        let duration = self.arena.take_next(j);
+        if self.arena.unplaced(j) > 0 {
+            self.queues[u].push_back(j as u32);
         }
         self.users[u].pending -= 1;
         self.users[u].running += 1;
@@ -637,7 +661,7 @@ impl DrainCtx for EngineCtx<'_> {
             vfinish: self.servers[l].vtime + duration,
             seq: *self.seq,
             user: u as u32,
-            job,
+            job: j as u32,
         };
         self.servers[l].running.push(entry);
         refresh_server_at(
@@ -657,10 +681,10 @@ impl DrainCtx for EngineCtx<'_> {
 }
 
 /// Convenience: build and run in one call.
-pub fn run(
+pub fn run<'a>(
     cluster: Cluster,
-    trace: &Trace,
-    scheduler: Box<dyn Scheduler + '_>,
+    trace: &'a Trace,
+    scheduler: Box<dyn Scheduler + 'a>,
     opts: SimOpts,
 ) -> SimReport {
     Simulation::new(cluster, trace, scheduler, opts).run()

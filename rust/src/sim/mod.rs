@@ -1,9 +1,16 @@
 //! Discrete-event cluster simulation: the engine behind every figure in
 //! the paper's evaluation (Sec. VI).
+//!
+//! The trace-scale data plane (timer-wheel event queue, SoA task
+//! arena, streaming metrics) is documented in [`engine`] §Perf; the
+//! queue implementations live in [`wheel`].
 
 pub mod engine;
+pub mod wheel;
 
+pub use crate::metrics::MetricsMode;
 pub use engine::{run, SimOpts, SimReport, Simulation};
+pub use wheel::{EventQueue, HeapQueue, QueueKind, SimQueue, TimerWheel};
 
 #[cfg(test)]
 mod tests {
@@ -35,7 +42,7 @@ mod tests {
             cluster,
             &one_user_trace(1, 10.0),
             Box::new(BestFitDrfh::default()),
-            SimOpts { horizon: 100.0, sample_dt: 1.0, track_user_series: false },
+            SimOpts { horizon: 100.0, sample_dt: 1.0, track_user_series: false, ..SimOpts::default() },
         );
         assert_eq!(r.tasks_placed, 1);
         assert_eq!(r.tasks_completed, 1);
@@ -53,7 +60,7 @@ mod tests {
             cluster,
             &one_user_trace(3, 10.0),
             Box::new(BestFitDrfh::default()),
-            SimOpts { horizon: 100.0, sample_dt: 1.0, track_user_series: false },
+            SimOpts { horizon: 100.0, sample_dt: 1.0, track_user_series: false, ..SimOpts::default() },
         );
         assert_eq!(r.tasks_completed, 3);
         assert!((r.jobs[0].finish - 30.0).abs() < 1e-6, "{}", r.jobs[0].finish);
@@ -70,7 +77,7 @@ mod tests {
             cluster,
             &one_user_trace(3, 10.0),
             Box::new(FirstFitDrfh::default()),
-            SimOpts { horizon: 100.0, sample_dt: 1.0, track_user_series: false },
+            SimOpts { horizon: 100.0, sample_dt: 1.0, track_user_series: false, ..SimOpts::default() },
         );
         assert!((r.jobs[0].finish - 10.0).abs() < 1e-6);
     }
@@ -83,7 +90,7 @@ mod tests {
             cluster,
             &one_user_trace(3, 10.0),
             Box::new(BestFitDrfh::default()),
-            SimOpts { horizon: 15.0, sample_dt: 1.0, track_user_series: false },
+            SimOpts { horizon: 15.0, sample_dt: 1.0, track_user_series: false, ..SimOpts::default() },
         );
         assert_eq!(r.tasks_completed, 1);
         assert_eq!(r.user_tasks[0].submitted, 3);
@@ -123,7 +130,7 @@ mod tests {
             cluster,
             &trace,
             Box::new(BestFitDrfh::default()),
-            SimOpts { horizon: 50.0, sample_dt: 5.0, track_user_series: true },
+            SimOpts { horizon: 50.0, sample_dt: 5.0, track_user_series: true, ..SimOpts::default() },
         );
         assert_eq!(r.tasks_placed, 4);
         // equal dominant shares after the initial fill
@@ -145,7 +152,7 @@ mod tests {
             cluster,
             &trace,
             Box::new(slots),
-            SimOpts { horizon: 100.0, sample_dt: 1.0, track_user_series: false },
+            SimOpts { horizon: 100.0, sample_dt: 1.0, track_user_series: false, ..SimOpts::default() },
         );
         assert_eq!(r.tasks_placed, 2);
         assert_eq!(r.tasks_completed, 2);
@@ -189,7 +196,7 @@ mod tests {
             cluster,
             &trace,
             Box::new(slots),
-            SimOpts { horizon: 200.0, sample_dt: 1.0, track_user_series: false },
+            SimOpts { horizon: 200.0, sample_dt: 1.0, track_user_series: false, ..SimOpts::default() },
         );
         assert_eq!(r.jobs.len(), 2);
         let mut finishes: Vec<f64> =
@@ -217,7 +224,7 @@ mod tests {
             cluster.clone(),
             &trace,
             Box::new(BestFitDrfh::default()),
-            SimOpts { horizon: 50_000.0, sample_dt: 100.0, track_user_series: false },
+            SimOpts { horizon: 50_000.0, sample_dt: 100.0, track_user_series: false, ..SimOpts::default() },
         );
         // with a generous horizon everything completes
         assert_eq!(r.tasks_placed, trace.total_tasks());

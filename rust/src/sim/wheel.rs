@@ -1,0 +1,592 @@
+//! Event queues for the discrete-event engine: the naive binary heap
+//! and a calendar-style hierarchical timer wheel, behind one
+//! [`EventQueue`] trait.
+//!
+//! ## Ordering contract
+//!
+//! Both implementations drain events in strictly increasing
+//! `(time, seq)` order, where `time` is compared with
+//! [`f64::total_cmp`] and `seq` is a unique engine-assigned push
+//! counter. Because `seq` is unique the order is *total*: for any
+//! multiset of pushed events with non-NaN times (all the engine can
+//! produce — `Trace::validate` rejects NaN durations, and pushes are
+//! `debug_assert`ed), every implementation pops the exact same
+//! sequence regardless of insertion order or internal layout. That is
+//! what lets `tests/engine_parity.rs` demand *bit-identical*
+//! [`crate::sim::SimReport`]s between the heap and the wheel — the
+//! engine's event interleaving (and therefore every scheduling
+//! decision and every float it derives) is a pure function of the
+//! drain order.
+//!
+//! ## §Perf: why a wheel
+//!
+//! A `BinaryHeap` pays `O(log N)` comparisons per push/pop with N the
+//! *live* event count — at trace scale (≈10⁶ tasks ⇒ ≳2·10⁶ events,
+//! tens of thousands live at once) the heap walks long cache-hostile
+//! paths on every operation. The [`TimerWheel`] buckets events by
+//! `tick = ⌊time / width⌋` over a sliding window of `nb` buckets,
+//! with a `far` spillover for events beyond the window:
+//!
+//! * **push** is O(1): index into the window (or append to `far`);
+//! * **pop** sorts the *current* bucket once when it is first
+//!   touched (events are sorted at most once each, in bucket-sized
+//!   batches that fit in cache) and then pops from a contiguous
+//!   `Vec`;
+//! * when the window drains, it advances to the earliest `far` event
+//!   and re-buckets — with the default 32768 s window a bounded-Pareto
+//!   task duration (≤ 21600 s) is re-bucketed at most once, so the
+//!   amortized cost per event stays O(sort share + O(1) moves).
+//!
+//! Parameters only affect performance, never order: any `width`/`nb`
+//! degrade gracefully toward "one sorted vec" behavior while the
+//! drain order stays the total `(time, seq)` order.
+
+/// One scheduled event: an opaque payload due at `time`, tie-broken
+/// by the engine-assigned unique `seq`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Event<T> {
+    pub time: f64,
+    pub seq: u64,
+    pub payload: T,
+}
+
+/// The total drain order: earliest `time` first ([`f64::total_cmp`]),
+/// then lowest `seq`. Shared by both queues so their orders cannot
+/// drift apart.
+#[inline]
+fn drain_cmp<T>(a: &Event<T>, b: &Event<T>) -> Ordering {
+    a.time.total_cmp(&b.time).then_with(|| a.seq.cmp(&b.seq))
+}
+
+/// Minimal queue surface the engine drives. `peek`/`pop` take
+/// `&mut self` because the wheel locates (and lazily sorts) its
+/// earliest bucket on demand; reorganization never changes the drain
+/// order.
+pub trait EventQueue<T: Copy> {
+    fn push(&mut self, ev: Event<T>);
+    /// Remove and return the earliest event in `(time, seq)` order.
+    fn pop(&mut self) -> Option<Event<T>>;
+    /// The earliest event without removing it.
+    fn peek(&mut self) -> Option<Event<T>>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------- heap
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Reversed-order wrapper so `BinaryHeap` (a max-heap) pops earliest
+/// `(time, seq)` first — byte-for-byte the seed engine's ordering.
+#[derive(Clone, Copy, Debug)]
+struct HeapEv<T>(Event<T>);
+
+impl<T> PartialEq for HeapEv<T> {
+    fn eq(&self, other: &Self) -> bool {
+        // must agree with Ord (time then seq), per the Ord contract
+        drain_cmp(&self.0, &other.0) == Ordering::Equal
+    }
+}
+impl<T> Eq for HeapEv<T> {}
+impl<T> PartialOrd for HeapEv<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for HeapEv<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest first
+        drain_cmp(&other.0, &self.0)
+    }
+}
+
+/// The seed's `BinaryHeap` event queue — kept as the naive parity
+/// reference ([`SimQueue::naive`] / [`QueueKind::Heap`]).
+pub struct HeapQueue<T> {
+    heap: BinaryHeap<HeapEv<T>>,
+}
+
+impl<T: Copy> HeapQueue<T> {
+    pub fn new() -> Self {
+        HeapQueue { heap: BinaryHeap::new() }
+    }
+}
+
+impl<T: Copy> Default for HeapQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Copy> EventQueue<T> for HeapQueue<T> {
+    fn push(&mut self, ev: Event<T>) {
+        self.heap.push(HeapEv(ev));
+    }
+
+    fn pop(&mut self) -> Option<Event<T>> {
+        self.heap.pop().map(|h| h.0)
+    }
+
+    fn peek(&mut self) -> Option<Event<T>> {
+        self.heap.peek().map(|h| h.0)
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+// --------------------------------------------------------------- wheel
+
+/// Default bucket width (seconds). Trace times are seconds; 8 s
+/// buckets keep Fig. 5-scale bucket occupancy in the hundreds.
+const DEFAULT_WIDTH: f64 = 8.0;
+/// Default bucket count: a 4096 × 8 s = 32768 s window, wider than the
+/// generator's longest task duration (21600 s), so a completion event
+/// is re-bucketed from `far` at most once.
+const DEFAULT_BUCKETS: usize = 4096;
+
+/// Calendar-queue timer wheel over non-negative event times.
+///
+/// Invariants:
+/// * every stored event has `tick >= win_lo` (times never precede the
+///   last pop — the engine only schedules at or after `now`; a
+///   defensive clamp files any earlier push under the cursor bucket,
+///   which still drains in exact `(time, seq)` order);
+/// * buckets `0..cursor` are empty;
+/// * `buckets[i]` holds exactly the events with
+///   `tick - win_lo == i` (cursor bucket: `<= i`, via the clamp);
+/// * `far` holds exactly the events with `tick - win_lo >= nb`;
+/// * `buckets[cursor]` is sorted descending by `(time, seq)` iff
+///   `sorted` (pop takes from the back).
+pub struct TimerWheel<T> {
+    buckets: Vec<Vec<Event<T>>>,
+    far: Vec<Event<T>>,
+    /// Tick of `buckets[0]`.
+    win_lo: u64,
+    /// First possibly-non-empty bucket.
+    cursor: usize,
+    /// Is `buckets[cursor]` currently sorted (descending by key)?
+    sorted: bool,
+    /// Events in `buckets` (excludes `far`).
+    near_len: usize,
+    len: usize,
+    width: f64,
+    nb: usize,
+}
+
+impl<T: Copy> TimerWheel<T> {
+    pub fn new() -> Self {
+        Self::with_params(DEFAULT_WIDTH, DEFAULT_BUCKETS)
+    }
+
+    /// Custom geometry (tests use tiny windows to force rotation).
+    /// Any `width > 0`, `nb >= 1` is correct; geometry is perf-only.
+    pub fn with_params(width: f64, nb: usize) -> Self {
+        assert!(width > 0.0 && width.is_finite(), "bucket width {width}");
+        assert!(nb >= 1, "need at least one bucket");
+        TimerWheel {
+            buckets: (0..nb).map(|_| Vec::new()).collect(),
+            far: Vec::new(),
+            win_lo: 0,
+            cursor: 0,
+            sorted: false,
+            near_len: 0,
+            len: 0,
+            width,
+            nb,
+        }
+    }
+
+    #[inline]
+    fn tick_of(&self, time: f64) -> u64 {
+        // negative times are clamped to tick 0; the `as` cast
+        // saturates (huge-but-finite times land in `far` and are
+        // ordered by their actual f64 key when re-bucketed/sorted)
+        (time.max(0.0) / self.width) as u64
+    }
+
+    /// Slide the window to the earliest `far` event and re-bucket
+    /// everything that now falls inside it. Caller guarantees the
+    /// near window is empty and `far` is not.
+    fn advance_window(&mut self) {
+        debug_assert_eq!(self.near_len, 0);
+        debug_assert!(!self.far.is_empty());
+        let min_tick = self
+            .far
+            .iter()
+            .map(|e| self.tick_of(e.time))
+            .min()
+            .expect("far is non-empty");
+        self.win_lo = min_tick;
+        self.cursor = 0;
+        self.sorted = false;
+        let mut far = std::mem::take(&mut self.far);
+        far.retain(|&ev| {
+            let off = self.tick_of(ev.time) - self.win_lo;
+            if off < self.nb as u64 {
+                self.buckets[off as usize].push(ev);
+                self.near_len += 1;
+                false
+            } else {
+                true
+            }
+        });
+        self.far = far;
+        debug_assert!(self.near_len > 0);
+    }
+
+    /// Advance `cursor` to the first non-empty bucket, rotating the
+    /// window as needed. Caller guarantees `len > 0`. Afterwards
+    /// `buckets[cursor]` is non-empty and sorted.
+    fn settle(&mut self) {
+        debug_assert!(self.len > 0);
+        if self.near_len == 0 {
+            self.advance_window();
+        }
+        while self.buckets[self.cursor].is_empty() {
+            self.cursor += 1;
+            self.sorted = false;
+            if self.cursor == self.nb {
+                // near window exhausted mid-scan
+                debug_assert_eq!(self.near_len, 0);
+                self.advance_window();
+            }
+        }
+        if !self.sorted {
+            // descending so pop() takes the earliest from the back
+            self.buckets[self.cursor]
+                .sort_unstable_by(|a, b| drain_cmp(b, a));
+            self.sorted = true;
+        }
+    }
+}
+
+impl<T: Copy> Default for TimerWheel<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Copy> EventQueue<T> for TimerWheel<T> {
+    fn push(&mut self, ev: Event<T>) {
+        debug_assert!(!ev.time.is_nan(), "event time is NaN");
+        let tick = self.tick_of(ev.time);
+        if self.len == 0 {
+            // empty queue: re-anchor the window at this event
+            self.win_lo = tick;
+            self.cursor = 0;
+            self.sorted = false;
+            self.buckets[0].push(ev);
+            self.near_len = 1;
+            self.len = 1;
+            return;
+        }
+        let off = tick.saturating_sub(self.win_lo);
+        if off < self.nb as u64 {
+            // clamp to the cursor: a bucket behind it was already
+            // drained, and the cursor bucket sorts by (time, seq)
+            // anyway, so an early event still pops in exact order
+            let idx = (off as usize).max(self.cursor);
+            self.buckets[idx].push(ev);
+            if idx == self.cursor {
+                self.sorted = false;
+            }
+            self.near_len += 1;
+        } else {
+            self.far.push(ev);
+        }
+        self.len += 1;
+    }
+
+    fn pop(&mut self) -> Option<Event<T>> {
+        if self.len == 0 {
+            return None;
+        }
+        self.settle();
+        let ev = self.buckets[self.cursor].pop().expect("settled bucket");
+        self.near_len -= 1;
+        self.len -= 1;
+        Some(ev)
+    }
+
+    fn peek(&mut self) -> Option<Event<T>> {
+        if self.len == 0 {
+            return None;
+        }
+        self.settle();
+        self.buckets[self.cursor].last().copied()
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+// ------------------------------------------------------------ dispatch
+
+/// Which [`EventQueue`] the engine runs on (see
+/// [`crate::sim::SimOpts::queue`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QueueKind {
+    /// Hierarchical timer wheel ([`TimerWheel`]) — the trace-scale
+    /// data plane.
+    #[default]
+    Wheel,
+    /// Binary heap ([`HeapQueue`]) — the seed's queue, kept as the
+    /// naive parity reference.
+    Heap,
+}
+
+/// Enum-dispatched queue so [`crate::sim::Simulation`] stays
+/// non-generic (and pays a predictable two-way branch instead of a
+/// virtual call on the hot path).
+pub enum SimQueue<T> {
+    Heap(HeapQueue<T>),
+    Wheel(TimerWheel<T>),
+}
+
+impl<T: Copy> SimQueue<T> {
+    pub fn new(kind: QueueKind) -> Self {
+        match kind {
+            QueueKind::Heap => SimQueue::Heap(HeapQueue::new()),
+            QueueKind::Wheel => SimQueue::Wheel(TimerWheel::new()),
+        }
+    }
+
+    /// The parity-reference queue (mirrors the `::naive()` scheduler
+    /// constructors).
+    pub fn naive() -> Self {
+        Self::new(QueueKind::Heap)
+    }
+}
+
+impl<T: Copy> EventQueue<T> for SimQueue<T> {
+    fn push(&mut self, ev: Event<T>) {
+        match self {
+            SimQueue::Heap(q) => q.push(ev),
+            SimQueue::Wheel(q) => q.push(ev),
+        }
+    }
+
+    fn pop(&mut self) -> Option<Event<T>> {
+        match self {
+            SimQueue::Heap(q) => q.pop(),
+            SimQueue::Wheel(q) => q.pop(),
+        }
+    }
+
+    fn peek(&mut self) -> Option<Event<T>> {
+        match self {
+            SimQueue::Heap(q) => q.peek(),
+            SimQueue::Wheel(q) => q.peek(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            SimQueue::Heap(q) => q.len(),
+            SimQueue::Wheel(q) => q.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn ev(time: f64, seq: u64) -> Event<u32> {
+        Event { time, seq, payload: seq as u32 }
+    }
+
+    fn drain(q: &mut impl EventQueue<u32>) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        while let Some(e) = q.pop() {
+            out.push((e.time, e.seq));
+        }
+        out
+    }
+
+    /// Both queues share one comparator; spot-check its total order
+    /// on the edge times the engine can produce.
+    #[test]
+    fn drain_cmp_is_time_then_seq() {
+        assert_eq!(drain_cmp(&ev(1.0, 5), &ev(2.0, 1)), Ordering::Less);
+        assert_eq!(drain_cmp(&ev(2.0, 1), &ev(2.0, 2)), Ordering::Less);
+        assert_eq!(drain_cmp(&ev(0.0, 1), &ev(0.0, 1)), Ordering::Equal);
+        assert_eq!(
+            drain_cmp(&ev(f64::INFINITY, 1), &ev(1e18, 9)),
+            Ordering::Greater
+        );
+    }
+
+    /// Satellite regression guard: simultaneous events must drain in
+    /// seq order from BOTH queues, whatever the insertion order.
+    #[test]
+    fn equal_timestamps_drain_in_seq_order() {
+        // push order deliberately scrambled; three distinct
+        // timestamps, several seqs per timestamp (the engine's
+        // Arrival / ServerCheck / Sample collision shape)
+        let evs = [
+            ev(30.0, 7),
+            ev(10.0, 4),
+            ev(30.0, 2),
+            ev(10.0, 1),
+            ev(30.0, 5),
+            ev(10.0, 9),
+            ev(0.0, 3),
+            ev(0.0, 8),
+        ];
+        let want = vec![
+            (0.0, 3),
+            (0.0, 8),
+            (10.0, 1),
+            (10.0, 4),
+            (10.0, 9),
+            (30.0, 2),
+            (30.0, 5),
+            (30.0, 7),
+        ];
+        let mut heap = HeapQueue::new();
+        let mut wheel = TimerWheel::new();
+        // a tiny wheel forces the same-time events through the
+        // cursor-bucket sort rather than one big bucket
+        let mut tiny = TimerWheel::with_params(0.5, 4);
+        for &e in &evs {
+            heap.push(e);
+            wheel.push(e);
+            tiny.push(e);
+        }
+        assert_eq!(drain(&mut heap), want);
+        assert_eq!(drain(&mut wheel), want);
+        assert_eq!(drain(&mut tiny), want);
+    }
+
+    #[test]
+    fn window_rotation_preserves_order() {
+        // window = 2.0 * 4 = 8 s; events spread over 100 s force
+        // several far re-bucketings
+        let mut wheel = TimerWheel::with_params(2.0, 4);
+        let mut heap = HeapQueue::new();
+        // ascending pushes: everything beyond the first 8 s window
+        // spills to `far` and is re-bucketed window by window during
+        // the drain (~12 rotations)
+        for i in 0..100u64 {
+            let e = ev(i as f64 * 1.01, i + 1);
+            wheel.push(e);
+            heap.push(e);
+        }
+        assert_eq!(drain(&mut wheel), drain(&mut heap));
+    }
+
+    #[test]
+    fn push_into_sorted_cursor_bucket_resorts() {
+        let mut wheel = TimerWheel::with_params(10.0, 4);
+        wheel.push(ev(5.0, 1));
+        wheel.push(ev(7.0, 2));
+        assert_eq!(wheel.peek().unwrap().seq, 1); // sorts the bucket
+        // land behind the now-sorted back of the cursor bucket
+        wheel.push(ev(1.0, 3));
+        assert_eq!(wheel.pop().unwrap().seq, 3);
+        assert_eq!(wheel.pop().unwrap().seq, 1);
+        assert_eq!(wheel.pop().unwrap().seq, 2);
+        assert!(wheel.pop().is_none());
+    }
+
+    #[test]
+    fn past_time_push_clamps_to_cursor() {
+        let mut wheel = TimerWheel::with_params(1.0, 8);
+        for s in 0..6 {
+            wheel.push(ev(s as f64, s + 1));
+        }
+        // drain to t=3 so the cursor sits mid-window
+        assert_eq!(wheel.pop().unwrap().time, 0.0);
+        assert_eq!(wheel.pop().unwrap().time, 1.0);
+        assert_eq!(wheel.pop().unwrap().time, 2.0);
+        // a push earlier than the cursor's bucket must still pop
+        // first (defensive clamp; the engine never does this)
+        wheel.push(ev(0.5, 99));
+        assert_eq!(wheel.pop().unwrap(), ev(0.5, 99));
+        assert_eq!(
+            drain(&mut wheel),
+            vec![(3.0, 4), (4.0, 5), (5.0, 6)]
+        );
+    }
+
+    #[test]
+    fn empty_queue_reanchors_on_push() {
+        let mut wheel = TimerWheel::with_params(1.0, 4);
+        wheel.push(ev(2.0, 1));
+        assert_eq!(wheel.pop().unwrap().seq, 1);
+        assert!(wheel.pop().is_none());
+        // far beyond the old window: must re-anchor, not spill
+        wheel.push(ev(1e6, 2));
+        assert_eq!(wheel.len(), 1);
+        assert_eq!(wheel.peek().unwrap().seq, 2);
+        assert_eq!(wheel.pop().unwrap().seq, 2);
+    }
+
+    /// The core guarantee: on randomized interleaved push/pop streams
+    /// (the engine's actual access pattern) the wheel and the heap
+    /// agree on every single pop, across several wheel geometries.
+    #[test]
+    fn randomized_interleaved_parity_with_heap() {
+        for (width, nb) in [(8.0, 4096), (1.0, 16), (0.25, 3), (100.0, 2)] {
+            let mut rng = Pcg32::seeded(1234 + nb as u64);
+            let mut heap = HeapQueue::new();
+            let mut wheel = TimerWheel::with_params(width, nb);
+            let mut seq = 0u64;
+            // `now` only advances (like the engine's clock) so pushes
+            // are never scheduled before the last popped time
+            let mut now = 0.0f64;
+            for _ in 0..3_000 {
+                let r = rng.f64();
+                if r < 0.55 || heap.len() == 0 {
+                    seq += 1;
+                    // mix of near, same-tick, far, and exactly-now
+                    let dt = match seq % 4 {
+                        0 => 0.0,
+                        1 => rng.uniform(0.0, 2.0 * width),
+                        2 => rng.uniform(0.0, 50.0 * width),
+                        _ => rng.uniform(0.0, 2000.0 * width),
+                    };
+                    let e = ev(now + dt, seq);
+                    heap.push(e);
+                    wheel.push(e);
+                } else {
+                    let a = heap.pop().unwrap();
+                    let b = wheel.pop().unwrap();
+                    assert_eq!(
+                        (a.time, a.seq),
+                        (b.time, b.seq),
+                        "divergence at seq {seq} (width {width}, nb {nb})"
+                    );
+                    now = a.time;
+                }
+                assert_eq!(heap.len(), wheel.len());
+                // peeks agree too (and never disturb the order)
+                if heap.len() > 0 {
+                    let pa = heap.peek().unwrap();
+                    let pb = wheel.peek().unwrap();
+                    assert_eq!((pa.time, pa.seq), (pb.time, pb.seq));
+                }
+            }
+            assert_eq!(drain(&mut heap), drain(&mut wheel));
+        }
+    }
+
+    #[test]
+    fn simqueue_dispatch_matches_kinds() {
+        let mut q = SimQueue::new(QueueKind::Wheel);
+        assert!(matches!(q, SimQueue::Wheel(_)));
+        q.push(ev(1.0, 1));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop().unwrap().seq, 1);
+        let n = SimQueue::<u32>::naive();
+        assert!(matches!(n, SimQueue::Heap(_)));
+    }
+}

@@ -113,6 +113,22 @@ pub fn write_suite_json(
     std::fs::write(path, suite_json(suite, meta, results)).is_ok()
 }
 
+/// Best-effort peak RSS (`VmHWM`) of this process in bytes — Linux
+/// `/proc` only, `None` elsewhere. The kernel watermark is monotone
+/// over the process lifetime, so callers comparing phases must run
+/// the lighter phase *first* (see `benches/sim_scale.rs`).
+pub fn peak_rss_bytes() -> Option<u64> {
+    let s = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in s.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 =
+                rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
 /// Time `f` for exactly `iters` iterations — for heavyweight
 /// end-to-end cases where the budget-based loop of [`bench`] would
 /// run far too long. Warms up once first, except at `iters == 1`

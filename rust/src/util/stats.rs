@@ -1,5 +1,21 @@
 //! Small statistics toolkit shared by metrics and the experiment
-//! harness: means, percentiles, empirical CDFs, Jain's fairness index.
+//! harness: means, percentiles, empirical CDFs, Jain's fairness index,
+//! and the streaming accumulators ([`StreamStats`], [`P2Quantile`])
+//! behind the engine's bounded-memory metrics mode.
+//!
+//! ## §Perf: selection instead of sorting
+//!
+//! [`percentile`] and [`cdf_points`] used to clone and *fully sort*
+//! their input on every call — O(n log n) per quantile, which the
+//! figure harnesses call repeatedly over job-completion vectors. Both
+//! now run on `select_nth_unstable_by` (introselect): O(n) for one
+//! percentile, O(n log k) for k CDF quantiles via recursive
+//! multiselect. The comparator is still [`f64::total_cmp`], so the
+//! NaN-tolerant semantics (NaNs group at the sign-matching extreme,
+//! never a panic) are unchanged — selection over a total order yields
+//! exactly the values a full sort would put at those ranks, which the
+//! equivalence tests assert bit-for-bit against the sort-based
+//! reference.
 
 /// Arithmetic mean; 0 for an empty slice.
 pub fn mean(xs: &[f64]) -> f64 {
@@ -20,40 +36,80 @@ pub fn std_dev(xs: &[f64]) -> f64 {
         .sqrt()
 }
 
-/// Linear-interpolated percentile, p in [0, 100]. NaN-tolerant: sorts
-/// with `total_cmp` instead of panicking mid-sort (NaNs group at the
-/// extremes by sign bit — positive NaNs last, negative NaNs first —
-/// so a NaN-bearing input yields NaN percentiles at the affected end
-/// rather than a panic).
+/// Linear-interpolated percentile, p in [0, 100]. NaN-tolerant:
+/// selects with `total_cmp` instead of panicking mid-comparison (NaNs
+/// group at the extremes by sign bit — positive NaNs last, negative
+/// NaNs first — so a NaN-bearing input yields NaN percentiles at the
+/// affected end rather than a panic). O(n) via introselect; the
+/// values match the sort-based reference exactly (see module docs).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
+    let (_, &mut lo_v, upper) =
+        v.select_nth_unstable_by(lo, f64::total_cmp);
     if lo == hi {
-        v[lo]
+        lo_v
     } else {
-        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+        // the (lo+1)-th order statistic is the minimum of the upper
+        // partition (non-empty: hi > lo implies a fractional rank,
+        // so lo < len - 1)
+        let hi_v = upper
+            .iter()
+            .copied()
+            .min_by(f64::total_cmp)
+            .expect("fractional rank implies lo < len - 1");
+        lo_v + (rank - lo as f64) * (hi_v - lo_v)
     }
+}
+
+/// Place every rank in `ranks` (strictly increasing, relative to the
+/// whole array, each `< base + v.len()`) at its sorted position in
+/// `v` (a sub-slice starting at absolute index `base`), by recursive
+/// partitioning around the median requested rank — O(n log k).
+fn multiselect(v: &mut [f64], ranks: &[usize], base: usize) {
+    if ranks.is_empty() {
+        return;
+    }
+    let m = ranks.len() / 2;
+    let mid = ranks[m] - base;
+    let (left, _, right) = v.select_nth_unstable_by(mid, f64::total_cmp);
+    multiselect(left, &ranks[..m], base);
+    multiselect(right, &ranks[m + 1..], base + mid + 1);
 }
 
 /// Empirical CDF evaluated at `points` many equally spaced quantiles;
 /// returns (value, fraction <= value) pairs suitable for plotting.
+/// NaN-tolerant like [`percentile`]; O(n log points) via multiselect
+/// when that beats a full sort.
 pub fn cdf_points(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
-    if xs.is_empty() {
+    if xs.is_empty() || points == 0 {
         return vec![];
     }
-    let mut v = xs.to_vec();
-    v.sort_by(f64::total_cmp); // NaN-tolerant, like `percentile`
-    let n = v.len();
-    (0..points)
+    let n = xs.len();
+    let idxs: Vec<usize> = (0..points)
         .map(|i| {
             let q = (i as f64 + 1.0) / points as f64;
-            let idx = ((q * n as f64).ceil() as usize).clamp(1, n) - 1;
+            ((q * n as f64).ceil() as usize).clamp(1, n) - 1
+        })
+        .collect();
+    let mut v = xs.to_vec();
+    if points >= n || n < 64 {
+        // dense quantile grid or tiny input: one sort is cheaper
+        v.sort_by(f64::total_cmp);
+    } else {
+        let mut ranks = idxs.clone();
+        ranks.dedup(); // idxs is nondecreasing; multiselect wants strict
+        multiselect(&mut v, &ranks, 0);
+    }
+    idxs.iter()
+        .enumerate()
+        .map(|(i, &idx)| {
+            let q = (i as f64 + 1.0) / points as f64;
             (v[idx], q)
         })
         .collect()
@@ -70,6 +126,216 @@ pub fn jain_index(xs: &[f64]) -> f64 {
         1.0
     } else {
         s * s / (xs.len() as f64 * s2)
+    }
+}
+
+// ------------------------------------------------- streaming moments
+
+/// Online count / mean / variance / min / max (Welford) — O(1) memory
+/// however many samples arrive; the bounded-memory metrics mode
+/// aggregates job-completion stats through this.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamStats {
+    count: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for StreamStats {
+    fn default() -> Self {
+        StreamStats {
+            count: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl StreamStats {
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        let d = x - self.mean;
+        self.mean += d / self.count as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// 0 for no samples (matching [`mean`] on an empty slice).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population standard deviation; 0 for fewer than 2 samples
+    /// (matching [`std_dev`]).
+    pub fn std_dev(&self) -> f64 {
+        if self.count < 2 {
+            0.0
+        } else {
+            (self.m2 / self.count as f64).sqrt()
+        }
+    }
+
+    /// 0 for no samples.
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// 0 for no samples.
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+}
+
+// ---------------------------------------------------- P² quantiles
+
+/// Streaming quantile estimator (Jain & Chlamtac's P² algorithm,
+/// CACM 1985): five markers track the running p-quantile in O(1)
+/// memory. Exact for the first five observations; afterwards a
+/// piecewise-parabolic approximation whose error vanishes as the
+/// sample grows. The bounded-memory metrics mode uses it for job
+/// completion-time percentiles.
+#[derive(Clone, Debug, PartialEq)]
+pub struct P2Quantile {
+    p: f64,
+    count: u64,
+    /// Marker heights (the first `count` entries, sorted, while
+    /// `count < 5`).
+    q: [f64; 5],
+    /// Actual marker positions (1-based; integral, kept as f64 for
+    /// the update arithmetic).
+    n: [f64; 5],
+    /// Desired marker positions.
+    np: [f64; 5],
+    /// Desired-position increments per observation.
+    dn: [f64; 5],
+}
+
+impl P2Quantile {
+    /// Estimator for the `p`-quantile, `p` in (0, 1) (e.g. 0.5 for
+    /// the median).
+    pub fn new(p: f64) -> Self {
+        assert!(
+            p > 0.0 && p < 1.0,
+            "quantile p={p} outside (0, 1): the five-marker scheme \
+             degenerates at the extremes"
+        );
+        P2Quantile {
+            p,
+            count: 0,
+            q: [0.0; 5],
+            n: [1.0, 2.0, 3.0, 4.0, 5.0],
+            np: [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0],
+            dn: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.count < 5 {
+            // exact phase: insertion-sort into the live prefix
+            let mut i = self.count as usize;
+            self.q[i] = x;
+            while i > 0 && self.q[i - 1] > self.q[i] {
+                self.q.swap(i - 1, i);
+                i -= 1;
+            }
+            self.count += 1;
+            return;
+        }
+        self.count += 1;
+        // locate the cell, updating the extreme markers
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = x;
+            3
+        } else {
+            // q[k] <= x < q[k+1]
+            (0..4).rfind(|&i| self.q[i] <= x).unwrap_or(0)
+        };
+        for i in (k + 1)..5 {
+            self.n[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.np[i] += self.dn[i];
+        }
+        // nudge the three middle markers toward their desired spots
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let d = d.signum();
+                let qp = self.parabolic(i, d);
+                self.q[i] = if self.q[i - 1] < qp && qp < self.q[i + 1] {
+                    qp
+                } else {
+                    self.linear(i, d)
+                };
+                self.n[i] += d;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (q, n) = (&self.q, &self.n);
+        q[i] + d / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + d) * (q[i + 1] - q[i])
+                / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1])
+                    / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.q[i]
+            + d * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+    }
+
+    /// Current estimate; exact (interpolated, like [`percentile`])
+    /// while fewer than five samples have arrived, 0 when empty.
+    pub fn quantile(&self) -> f64 {
+        let c = self.count as usize;
+        if c == 0 {
+            return 0.0;
+        }
+        if c < 5 {
+            let rank = self.p * (c - 1) as f64;
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            return if lo == hi {
+                self.q[lo]
+            } else {
+                self.q[lo]
+                    + (rank - lo as f64) * (self.q[hi] - self.q[lo])
+            };
+        }
+        self.q[2]
     }
 }
 
@@ -96,6 +362,171 @@ pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Pcg32;
+
+    /// The pre-selection sort-based implementations, kept verbatim as
+    /// the equivalence references for the O(n) paths.
+    fn percentile_sort_ref(xs: &[f64], p: f64) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let mut v = xs.to_vec();
+        v.sort_by(f64::total_cmp);
+        let rank = (p / 100.0) * (v.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            v[lo]
+        } else {
+            v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+        }
+    }
+
+    fn cdf_sort_ref(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
+        if xs.is_empty() || points == 0 {
+            return vec![];
+        }
+        let mut v = xs.to_vec();
+        v.sort_by(f64::total_cmp);
+        let n = v.len();
+        (0..points)
+            .map(|i| {
+                let q = (i as f64 + 1.0) / points as f64;
+                let idx = ((q * n as f64).ceil() as usize).clamp(1, n) - 1;
+                (v[idx], q)
+            })
+            .collect()
+    }
+
+    /// bit-exact equality that treats NaN == NaN (same bits).
+    fn bits_eq(a: f64, b: f64) -> bool {
+        a.to_bits() == b.to_bits() || (a == b)
+    }
+
+    #[test]
+    fn selection_percentile_matches_sort_reference() {
+        let mut rng = Pcg32::seeded(404);
+        for trial in 0..40 {
+            let n = 1 + rng.below(300);
+            let mut xs: Vec<f64> = (0..n)
+                .map(|_| {
+                    // duplicates, negatives, ±0.0, and the occasional NaN
+                    match rng.below(10) {
+                        0 => 0.0,
+                        1 => -0.0,
+                        2 => f64::NAN,
+                        3 => -f64::NAN,
+                        4 => rng.uniform(-5.0, 5.0).round(),
+                        _ => rng.uniform(-1e6, 1e6),
+                    }
+                })
+                .collect();
+            if trial % 3 == 0 {
+                xs.retain(|x| !x.is_nan()); // plenty of NaN-free runs too
+                if xs.is_empty() {
+                    xs.push(1.0);
+                }
+            }
+            for p in [0.0, 1.0, 25.0, 50.0, 73.3, 90.0, 99.0, 100.0] {
+                let fast = percentile(&xs, p);
+                let slow = percentile_sort_ref(&xs, p);
+                assert!(
+                    bits_eq(fast, slow),
+                    "trial {trial} p={p}: {fast} != {slow}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn multiselect_cdf_matches_sort_reference() {
+        let mut rng = Pcg32::seeded(505);
+        for trial in 0..30 {
+            // sizes straddling the n < 64 sort cutoff and points >= n
+            let n = 1 + rng.below(400);
+            let xs: Vec<f64> = (0..n)
+                .map(|_| match rng.below(8) {
+                    0 => f64::NAN,
+                    1 => rng.uniform(0.0, 3.0).round(),
+                    _ => rng.uniform(0.0, 1e4),
+                })
+                .collect();
+            for points in [1usize, 2, 7, 10, 50, 100, 500] {
+                let fast = cdf_points(&xs, points);
+                let slow = cdf_sort_ref(&xs, points);
+                assert_eq!(fast.len(), slow.len());
+                for (i, (a, b)) in fast.iter().zip(&slow).enumerate() {
+                    assert!(
+                        bits_eq(a.0, b.0) && a.1 == b.1,
+                        "trial {trial} points={points} idx {i}: \
+                         {a:?} != {b:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stream_stats_match_batch() {
+        let mut rng = Pcg32::seeded(606);
+        let xs: Vec<f64> = (0..500).map(|_| rng.uniform(-3.0, 9.0)).collect();
+        let mut s = StreamStats::default();
+        for &x in &xs {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 500);
+        assert!((s.mean() - mean(&xs)).abs() < 1e-9);
+        assert!((s.std_dev() - std_dev(&xs)).abs() < 1e-9);
+        let mn = xs.iter().copied().fold(f64::INFINITY, f64::min);
+        let mx = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(s.min(), mn);
+        assert_eq!(s.max(), mx);
+        // empty accumulator mirrors the empty-slice conventions
+        let e = StreamStats::default();
+        assert_eq!((e.mean(), e.std_dev(), e.min(), e.max()), (0.0, 0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn p2_exact_below_five_samples() {
+        let mut q = P2Quantile::new(0.5);
+        assert_eq!(q.quantile(), 0.0);
+        for x in [5.0, 1.0, 3.0] {
+            q.push(x);
+        }
+        // exact phase must agree with `percentile` on the same data
+        assert!((q.quantile() - percentile(&[5.0, 1.0, 3.0], 50.0)).abs() < 1e-12);
+        q.push(2.0);
+        q.push(4.0);
+        assert!((q.quantile() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p2_converges_on_skewed_data() {
+        // tolerance widens with tail depth: P² is an approximation
+        // and the p99 marker sees ~200 effective samples here
+        for (p, pct, tol) in
+            [(0.5, 50.0, 0.08), (0.9, 90.0, 0.10), (0.99, 99.0, 0.25)]
+        {
+            let mut rng = Pcg32::seeded(707);
+            let mut est = P2Quantile::new(p);
+            let mut xs = Vec::new();
+            for _ in 0..20_000 {
+                // exponential × uniform scale: heavy right tail like
+                // JCT data
+                let u = rng.uniform(0.0, 1.0).max(1e-12);
+                let x = (-(u.ln())) * rng.uniform(10.0, 1000.0);
+                est.push(x);
+                xs.push(x);
+            }
+            let exact = percentile(&xs, pct);
+            let got = est.quantile();
+            let rel = (got - exact).abs() / exact.abs().max(1e-12);
+            assert!(
+                rel < tol,
+                "p={p}: P² {got} vs exact {exact} (rel {rel:.3})"
+            );
+        }
+    }
 
     #[test]
     fn mean_and_std() {

@@ -1,0 +1,291 @@
+//! §Perf: flat, borrow-only job/task state for the simulation engine.
+//!
+//! The seed engine kept three parallel copies of per-job state: a
+//! `JobSim` struct per job, a `trace_tasks: Vec<Vec<f64>>` clone of
+//! every task duration (consumed at arrival), and a per-user
+//! `VecDeque<JobQueue>` where each `JobQueue` owned *another*
+//! duration container. Every placement chased two heap pointers into
+//! a per-job allocation, and a million-task trace paid a million
+//! duration copies plus ~#jobs transient allocations.
+//!
+//! [`TaskArena`] replaces all of that with structure-of-arrays
+//! columns indexed by the job id the trace already assigns
+//! (`u32`-sized — 4 G jobs is beyond any trace we replay):
+//!
+//! * durations are **never copied** — the arena borrows each job's
+//!   `&[TaskSpec]` slice straight out of the [`Trace`] (stored once,
+//!   for the lifetime of the run);
+//! * the un-placed frontier of a job is a single `u32` cursor
+//!   (`next`), not a shrinking deque;
+//! * completion tracking is a `u32` countdown (`open`).
+//!
+//! The engine's per-user round-robin queue then shrinks to a
+//! `VecDeque<u32>` of job ids — one flat ring per user, no per-job
+//! containers on the hot path.
+//!
+//! [`DemandTable`] interns the per-user demand rows: Google-like
+//! traces draw user demands from a handful of profile classes, so the
+//! engine can precompute per-*class* derived quantities (dominant
+//! delta, blocked-index fit keys) once instead of per user — the
+//! difference between O(users) and O(classes) setup work when the
+//! user count scales toward the ROADMAP's millions.
+
+use crate::cluster::ResVec;
+use crate::workload::{TaskSpec, Trace, UserSpec};
+use std::collections::HashMap;
+
+/// Structure-of-arrays view of a trace's jobs, borrowing all task
+/// durations from the trace itself.
+pub struct TaskArena<'t> {
+    /// Per-job task slice, borrowed from `trace.jobs[j].tasks`.
+    tasks: Vec<&'t [TaskSpec]>,
+    /// Owning user per job.
+    user: Vec<u32>,
+    /// Submission time per job.
+    submit: Vec<f64>,
+    /// Cursor: tasks `0..next[j]` have been placed.
+    next: Vec<u32>,
+    /// Tasks not yet *completed* (placed or not).
+    open: Vec<u32>,
+    /// Interned demand rows for the trace's users.
+    demands: DemandTable,
+}
+
+impl<'t> TaskArena<'t> {
+    pub fn new(trace: &'t Trace) -> Self {
+        let nj = trace.jobs.len();
+        assert!(nj <= u32::MAX as usize, "trace exceeds u32 job ids");
+        let mut tasks = Vec::with_capacity(nj);
+        let mut user = Vec::with_capacity(nj);
+        let mut submit = Vec::with_capacity(nj);
+        let mut open = Vec::with_capacity(nj);
+        for j in &trace.jobs {
+            assert!(
+                j.tasks.len() <= u32::MAX as usize,
+                "job exceeds u32 task count"
+            );
+            tasks.push(j.tasks.as_slice());
+            user.push(j.user as u32);
+            submit.push(j.submit);
+            open.push(j.tasks.len() as u32);
+        }
+        TaskArena {
+            tasks,
+            user,
+            submit,
+            next: vec![0; nj],
+            open,
+            demands: DemandTable::build(&trace.users),
+        }
+    }
+
+    /// Number of jobs.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    #[inline]
+    pub fn job_user(&self, j: usize) -> usize {
+        self.user[j] as usize
+    }
+
+    #[inline]
+    pub fn job_submit(&self, j: usize) -> f64 {
+        self.submit[j]
+    }
+
+    /// Total tasks of job `j`.
+    #[inline]
+    pub fn job_len(&self, j: usize) -> usize {
+        self.tasks[j].len()
+    }
+
+    /// Tasks of `j` not yet placed.
+    #[inline]
+    pub fn unplaced(&self, j: usize) -> usize {
+        self.tasks[j].len() - self.next[j] as usize
+    }
+
+    /// Tasks of `j` not yet completed.
+    #[inline]
+    pub fn open(&self, j: usize) -> usize {
+        self.open[j] as usize
+    }
+
+    /// Pop the next un-placed task of `j`, returning its duration.
+    #[inline]
+    pub fn take_next(&mut self, j: usize) -> f64 {
+        let cur = self.next[j] as usize;
+        debug_assert!(cur < self.tasks[j].len(), "job {j} over-drawn");
+        self.next[j] += 1;
+        self.tasks[j][cur].duration
+    }
+
+    /// Record one task completion; true when the whole job finished.
+    #[inline]
+    pub fn complete_one(&mut self, j: usize) -> bool {
+        debug_assert!(self.open[j] > 0, "job {j} over-completed");
+        self.open[j] -= 1;
+        self.open[j] == 0
+    }
+
+    /// The interned demand rows of the trace's users.
+    pub fn demands(&self) -> &DemandTable {
+        &self.demands
+    }
+}
+
+// ---------------------------------------------------------- interning
+
+/// Distinct per-user demand rows, deduplicated by exact bit pattern,
+/// with a user → class map. Derived per-task quantities can then be
+/// computed once per class and fanned out.
+#[derive(Clone, Debug)]
+pub struct DemandTable {
+    rows: Vec<ResVec>,
+    class_of: Vec<u32>,
+}
+
+impl DemandTable {
+    pub fn build(users: &[UserSpec]) -> Self {
+        let mut rows: Vec<ResVec> = Vec::new();
+        let mut class_of = Vec::with_capacity(users.len());
+        // key on the exact bits so -0.0 vs 0.0 or ulp-different rows
+        // never alias (bit-identical semantics above all)
+        let mut seen: HashMap<Vec<u64>, u32> = HashMap::new();
+        for u in users {
+            let key: Vec<u64> =
+                u.demand.as_slice().iter().map(|x| x.to_bits()).collect();
+            let class = *seen.entry(key).or_insert_with(|| {
+                rows.push(u.demand);
+                (rows.len() - 1) as u32
+            });
+            class_of.push(class);
+        }
+        DemandTable { rows, class_of }
+    }
+
+    /// Number of distinct demand rows.
+    pub fn classes(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn users(&self) -> usize {
+        self.class_of.len()
+    }
+
+    #[inline]
+    pub fn class_of(&self, user: usize) -> usize {
+        self.class_of[user] as usize
+    }
+
+    #[inline]
+    pub fn row(&self, class: usize) -> &ResVec {
+        &self.rows[class]
+    }
+
+    /// Compute `f` once per distinct row and fan the results out to a
+    /// per-user vector — the interning win for derived quantities.
+    pub fn per_user<T: Copy>(&self, f: impl Fn(&ResVec) -> T) -> Vec<T> {
+        let per_class: Vec<T> = self.rows.iter().map(&f).collect();
+        self.class_of.iter().map(|&c| per_class[c as usize]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::JobSpec;
+
+    fn trace() -> Trace {
+        let d = ResVec::cpu_mem(0.2, 0.3);
+        Trace {
+            users: vec![
+                UserSpec { demand: d, weight: 1.0 },
+                UserSpec { demand: ResVec::cpu_mem(0.4, 0.1), weight: 2.0 },
+                UserSpec { demand: d, weight: 0.5 }, // same row as user 0
+            ],
+            jobs: vec![
+                JobSpec {
+                    id: 0,
+                    user: 1,
+                    submit: 5.0,
+                    tasks: vec![
+                        TaskSpec { duration: 10.0 },
+                        TaskSpec { duration: 20.0 },
+                    ],
+                },
+                JobSpec {
+                    id: 1,
+                    user: 0,
+                    submit: 9.0,
+                    tasks: vec![TaskSpec { duration: 7.0 }],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn arena_mirrors_trace_without_copying_durations() {
+        let t = trace();
+        let mut a = TaskArena::new(&t);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.job_user(0), 1);
+        assert_eq!(a.job_submit(1), 9.0);
+        assert_eq!(a.job_len(0), 2);
+        assert_eq!(a.unplaced(0), 2);
+        assert_eq!(a.take_next(0), 10.0);
+        assert_eq!(a.unplaced(0), 1);
+        assert_eq!(a.take_next(0), 20.0);
+        assert_eq!(a.unplaced(0), 0);
+        // durations still live in the trace — the arena borrowed them
+        assert_eq!(t.jobs[0].tasks[0].duration, 10.0);
+        assert_eq!(a.open(0), 2);
+        assert!(!a.complete_one(0));
+        assert!(a.complete_one(0));
+        assert_eq!(a.open(0), 0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "over-drawn")]
+    fn arena_overdraw_panics_in_debug() {
+        let t = trace();
+        let mut a = TaskArena::new(&t);
+        a.take_next(1);
+        a.take_next(1);
+    }
+
+    #[test]
+    fn demand_rows_intern_by_bits() {
+        let t = trace();
+        let table = DemandTable::build(&t.users);
+        assert_eq!(table.users(), 3);
+        assert_eq!(table.classes(), 2);
+        assert_eq!(table.class_of(0), table.class_of(2));
+        assert_ne!(table.class_of(0), table.class_of(1));
+        assert_eq!(*table.row(table.class_of(1)), ResVec::cpu_mem(0.4, 0.1));
+        // derived quantities computed per class, fanned per user
+        let mins = table.per_user(|d| d.min());
+        assert_eq!(mins.len(), 3);
+        assert!((mins[0] - 0.2).abs() < 1e-12);
+        assert!((mins[1] - 0.1).abs() < 1e-12);
+        assert_eq!(mins[0], mins[2]);
+    }
+
+    #[test]
+    fn interning_distinguishes_bit_different_rows() {
+        let users = vec![
+            UserSpec { demand: ResVec::cpu_mem(0.0, 1.0), weight: 1.0 },
+            UserSpec { demand: ResVec::cpu_mem(-0.0, 1.0), weight: 1.0 },
+        ];
+        let table = DemandTable::build(&users);
+        assert_eq!(table.classes(), 2, "-0.0 must not alias 0.0");
+    }
+}

@@ -10,8 +10,10 @@
 //! tasks-per-job follow a heavy-tailed (Zipf-like) law, and task
 //! durations follow a bounded Pareto.
 
+pub mod arena;
 pub mod gen;
 pub mod trace;
 
+pub use arena::{DemandTable, TaskArena};
 pub use gen::{GoogleLikeConfig, TraceGenerator};
 pub use trace::{JobSpec, TaskSpec, Trace, UserSpec};

@@ -1,9 +1,10 @@
 //! Decision parity: the indexed scheduling core (`sched::index`), the
-//! batched drain path (`Scheduler::drain`), and the indexed Slots
-//! user selection must emit decision streams *bit-identical* to the
-//! seed's single-pick linear-scan path — same committed placements,
-//! same blocked/unblocked churn, same metrics — on randomized traces
-//! that exercise saturation (blocking), completions (unblocking), and
+//! batched drain path (`Scheduler::drain`), the indexed Slots user
+//! selection, and the timer-wheel event queue (`sim::wheel`) must
+//! emit decision streams *bit-identical* to the seed's single-pick
+//! linear-scan, binary-heap path — same committed placements, same
+//! blocked/unblocked churn, same metrics — on randomized traces that
+//! exercise saturation (blocking), completions (unblocking), and
 //! weighted users.
 //!
 //! Since the engine drives policies through `Scheduler::drain`, the
@@ -18,7 +19,7 @@ use drfh::sched::{
     BestFitDrfh, DrainCtx, FirstFitDrfh, Pick, Scheduler, SlotsScheduler,
     UserState,
 };
-use drfh::sim::{run, SimOpts};
+use drfh::sim::{run, QueueKind, SimOpts};
 use drfh::util::Pcg32;
 use drfh::workload::{
     GoogleLikeConfig, JobSpec, TaskSpec, Trace, TraceGenerator, UserSpec,
@@ -233,6 +234,7 @@ fn random_setup(
         horizon: 4_000.0,
         sample_dt: 100.0,
         track_user_series: false,
+        ..SimOpts::default()
     };
     (cluster, trace, opts)
 }
@@ -366,6 +368,7 @@ fn saturated_blocking_churn() {
         horizon: 5_000.0,
         sample_dt: 50.0,
         track_user_series: false,
+        ..SimOpts::default()
     };
     assert_parity(
         "saturated bestfit",
@@ -419,6 +422,7 @@ fn zero_weight_user_parity() {
         horizon: 2_000.0,
         sample_dt: 50.0,
         track_user_series: false,
+        ..SimOpts::default()
     };
     assert_parity(
         "zero-weight bestfit",
@@ -568,4 +572,208 @@ fn dom_share_stays_exact_over_long_runs() {
             opts,
         );
     }
+}
+
+// ------------------------------------------------ event-queue parity
+
+/// Run the same policy + trace on the timer wheel and on the naive
+/// binary heap and assert the decision streams AND the entire
+/// [`drfh::sim::SimReport`] are identical — every placement, every
+/// utilization sample, every job record, every derived float. The
+/// queues drain in the same total `(time, seq)` order, so nothing
+/// downstream may differ.
+fn assert_queue_parity<S, F>(
+    label: &str,
+    cluster: &Cluster,
+    trace: &Trace,
+    opts: &SimOpts,
+    mk: F,
+) where
+    S: Scheduler + 'static,
+    F: Fn() -> S,
+{
+    let log_w = Rc::new(RefCell::new(Vec::new()));
+    let log_h = Rc::new(RefCell::new(Vec::new()));
+    let rw = run(
+        cluster.clone(),
+        trace,
+        Box::new(Recording { inner: mk(), log: log_w.clone() }),
+        SimOpts { queue: QueueKind::Wheel, ..opts.clone() },
+    );
+    let rh = run(
+        cluster.clone(),
+        trace,
+        Box::new(Recording { inner: mk(), log: log_h.clone() }),
+        SimOpts { queue: QueueKind::Heap, ..opts.clone() },
+    );
+    let w = log_w.borrow();
+    let h = log_h.borrow();
+    for (i, (x, y)) in w.iter().zip(h.iter()).enumerate() {
+        assert_eq!(x, y, "{label}: decision {i} diverged");
+    }
+    assert_eq!(w.len(), h.len(), "{label}: decision-stream lengths");
+    assert_eq!(rw, rh, "{label}: SimReports diverged");
+    assert!(rw.tasks_placed > 0, "{label}: degenerate run placed nothing");
+}
+
+/// Wheel vs heap on randomized Google-like traces, across the policy
+/// spectrum (demand-based DRFH and the overcommitting Slots baseline
+/// whose PS completion times are maximally sensitive to event order).
+#[test]
+fn wheel_vs_heap_randomized() {
+    for seed in 0..4u64 {
+        let (cluster, trace, opts) =
+            random_setup(11_000 + seed, seed * 29 + 13);
+        assert_queue_parity(
+            &format!("wheel bestfit seed {seed}"),
+            &cluster,
+            &trace,
+            &opts,
+            BestFitDrfh::default,
+        );
+        assert_queue_parity(
+            &format!("wheel slots seed {seed}"),
+            &cluster,
+            &trace,
+            &opts,
+            || SlotsScheduler::new(&cluster, 14),
+        );
+    }
+}
+
+/// Wheel vs heap on the Fig. 5 configuration (the acceptance gate:
+/// `EvalSetup` is exactly the generator the Fig. 5 harness and the
+/// scale benches run), with user series tracked so every report
+/// surface is compared.
+#[test]
+fn wheel_vs_heap_fig5_config() {
+    use drfh::experiments::EvalSetup;
+    let setup = EvalSetup::with_duration(42, 150, 15, 6_000.0);
+    let opts = SimOpts { track_user_series: true, ..setup.opts.clone() };
+    assert_queue_parity(
+        "fig5 bestfit",
+        &setup.cluster,
+        &setup.trace,
+        &opts,
+        BestFitDrfh::default,
+    );
+    assert_queue_parity(
+        "fig5 firstfit",
+        &setup.cluster,
+        &setup.trace,
+        &opts,
+        FirstFitDrfh::default,
+    );
+}
+
+/// Satellite regression guard for the parity claim: `Arrival`,
+/// `ServerCheck`, and `Sample` events engineered onto the *same*
+/// timestamps must drain in identical `seq` order from both queues.
+/// Everything here lands on a 10 s grid: submits are multiples of 10,
+/// durations are multiples of 10 (and DRFH tasks run at rate 1, so
+/// completions hit the grid exactly), and `sample_dt` is 10 — every
+/// wave is a three-way collision whose resolution the engine derives
+/// purely from the queue's (time, seq) order.
+#[test]
+fn simultaneous_events_tiebreak_parity() {
+    let mut rng = Pcg32::seeded(4242);
+    let cluster = Cluster::google_sample(10, &mut rng);
+    let users: Vec<UserSpec> = (0..5)
+        .map(|_| UserSpec {
+            demand: ResVec::cpu_mem(
+                rng.uniform(0.1, 0.4),
+                rng.uniform(0.1, 0.4),
+            ),
+            weight: 1.0,
+        })
+        .collect();
+    let jobs: Vec<JobSpec> = (0..25)
+        .map(|j| JobSpec {
+            id: j,
+            user: j % 5,
+            submit: ((j / 5) as f64) * 10.0, // 5 arrivals per timestamp
+            tasks: vec![
+                TaskSpec { duration: 10.0 * (1 + j % 4) as f64 };
+                12
+            ],
+        })
+        .collect();
+    let trace = Trace { users, jobs };
+    let opts = SimOpts {
+        horizon: 1_000.0,
+        sample_dt: 10.0,
+        track_user_series: false,
+        ..SimOpts::default()
+    };
+    assert_queue_parity(
+        "tie-break bestfit",
+        &cluster,
+        &trace,
+        &opts,
+        BestFitDrfh::default,
+    );
+    // the naive single-pick reference path over the heap/wheel pair
+    assert_queue_parity(
+        "tie-break naive bestfit",
+        &cluster,
+        &trace,
+        &opts,
+        BestFitDrfh::naive,
+    );
+    // Slots overcommits: PS rate changes reschedule ServerChecks that
+    // keep colliding with the sample grid while rates are 1
+    assert_queue_parity(
+        "tie-break slots",
+        &cluster,
+        &trace,
+        &opts,
+        || SlotsScheduler::new(&cluster, 14),
+    );
+}
+
+/// Streaming metrics must not perturb the simulation: identical
+/// decision streams and identical streaming job statistics, with the
+/// report differing only in what is *retained*.
+#[test]
+fn streaming_metrics_decision_parity() {
+    use drfh::sim::MetricsMode;
+    let (cluster, trace, opts) = random_setup(12_000, 77);
+    let log_s = Rc::new(RefCell::new(Vec::new()));
+    let log_f = Rc::new(RefCell::new(Vec::new()));
+    let rs = run(
+        cluster.clone(),
+        &trace,
+        Box::new(Recording {
+            inner: BestFitDrfh::default(),
+            log: log_s.clone(),
+        }),
+        SimOpts {
+            metrics: MetricsMode::Streaming { series_cap: 16 },
+            ..opts.clone()
+        },
+    );
+    let rf = run(
+        cluster.clone(),
+        &trace,
+        Box::new(Recording {
+            inner: BestFitDrfh::default(),
+            log: log_f.clone(),
+        }),
+        opts.clone(),
+    );
+    assert_eq!(*log_s.borrow(), *log_f.borrow(), "decision streams");
+    assert_eq!(rs.tasks_placed, rf.tasks_placed);
+    assert_eq!(rs.tasks_completed, rf.tasks_completed);
+    assert_eq!(rs.job_stats, rf.job_stats, "streaming job stats");
+    assert_eq!(rs.user_tasks, rf.user_tasks);
+    assert!(rs.jobs.is_empty() && !rf.jobs.is_empty());
+    assert!(rs.cpu_util.len() <= 16 && rs.cpu_util.len() < rf.cpu_util.len());
+    // the decimated series stays within plotting tolerance even at a
+    // punishingly small cap (16 points for a 41-sample horizon)
+    assert!(
+        (rs.avg_cpu_util - rf.avg_cpu_util).abs() < 0.08,
+        "decimated avg {} vs full {}",
+        rs.avg_cpu_util,
+        rf.avg_cpu_util
+    );
 }

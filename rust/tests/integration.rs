@@ -45,7 +45,7 @@ fn paper_example_discrete_matches_fluid() {
         cluster.clone(),
         &trace,
         Box::new(BestFitDrfh::default()),
-        SimOpts { horizon: 100.0, sample_dt: 10.0, track_user_series: false },
+        SimOpts { horizon: 100.0, sample_dt: 10.0, track_user_series: false, ..SimOpts::default() },
     );
     // fluid optimum: 10 tasks each (Fig. 3)
     assert_eq!(r.tasks_placed, 20, "discrete best-fit should reach 10+10");
@@ -76,7 +76,7 @@ fn all_schedulers_run_same_trace() {
     });
     let trace = gen.generate(5);
     let opts =
-        SimOpts { horizon: 6_000.0, sample_dt: 60.0, track_user_series: false };
+        SimOpts { horizon: 6_000.0, sample_dt: 60.0, track_user_series: false, ..SimOpts::default() };
 
     let slots = SlotsScheduler::new(&cluster, 14);
     for report in [
@@ -144,7 +144,8 @@ fn config_driven_simulation() {
     let trace = cfg.build_trace();
     let sched = cfg.build_scheduler(&cluster).unwrap();
     assert_eq!(sched.name(), "firstfit-drfh");
-    let report = run(cluster, &trace, sched, cfg.sim_opts());
+    let report =
+        run(cluster, &trace, sched, cfg.sim_opts().expect("valid sim opts"));
     assert!(report.tasks_placed > 0);
 }
 
@@ -164,7 +165,7 @@ fn trace_json_capsule_reproduces_run() {
     let mut rng = Pcg32::seeded(11);
     let cluster = Cluster::google_sample(40, &mut rng);
     let opts =
-        SimOpts { horizon: 2_000.0, sample_dt: 50.0, track_user_series: false };
+        SimOpts { horizon: 2_000.0, sample_dt: 50.0, track_user_series: false, ..SimOpts::default() };
     let ra = run(cluster.clone(), &trace, Box::new(BestFitDrfh::default()), opts.clone());
     let rb = run(cluster, &trace2, Box::new(BestFitDrfh::default()), opts);
     assert_eq!(ra.tasks_placed, rb.tasks_placed);
@@ -221,7 +222,7 @@ fn coordinator_matches_simulation_fill() {
         cluster,
         &trace,
         Box::new(BestFitDrfh::default()),
-        SimOpts { horizon: 10.0, sample_dt: 5.0, track_user_series: false },
+        SimOpts { horizon: 10.0, sample_dt: 5.0, track_user_series: false, ..SimOpts::default() },
     );
     // both fill the cluster greedily under progressive filling; the
     // f32 (coordinator) vs f64 (engine) fit checks can differ by a task
@@ -258,7 +259,7 @@ fn slots_overcommit_inflates_completion_times() {
             .collect(),
     };
     let opts =
-        SimOpts { horizon: 4_000.0, sample_dt: 10.0, track_user_series: false };
+        SimOpts { horizon: 4_000.0, sample_dt: 10.0, track_user_series: false, ..SimOpts::default() };
     let bf = run(cluster.clone(), &trace, Box::new(BestFitDrfh::default()), opts.clone());
     let slots = run(
         cluster.clone(),
@@ -311,7 +312,7 @@ fn weighted_users_share_proportionally_in_sim() {
         cluster,
         &trace,
         Box::new(BestFitDrfh::default()),
-        SimOpts { horizon: 10.0, sample_dt: 5.0, track_user_series: true },
+        SimOpts { horizon: 10.0, sample_dt: 5.0, track_user_series: true, ..SimOpts::default() },
     );
     // 32 concurrent tasks fit; weighted filling gives ~21 vs ~11
     assert_eq!(r.tasks_placed, 32);
@@ -355,7 +356,7 @@ fn finite_backlog_releases_capacity_in_sim() {
         cluster,
         &trace,
         Box::new(BestFitDrfh::default()),
-        SimOpts { horizon: 100.0, sample_dt: 1.0, track_user_series: false },
+        SimOpts { horizon: 100.0, sample_dt: 1.0, track_user_series: false, ..SimOpts::default() },
     );
     // phase 1: 2+2 split; user 0 done at t=10; user 1 then runs 4-wide:
     // remaining 6 tasks in two waves -> job 1 finishes at 30

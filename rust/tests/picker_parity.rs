@@ -178,7 +178,12 @@ fn xla_scheduler_in_simulation() {
     });
     let trace = gen.generate(7);
     let opts =
-        SimOpts { horizon: 1_500.0, sample_dt: 50.0, track_user_series: false };
+        SimOpts {
+        horizon: 1_500.0,
+        sample_dt: 50.0,
+        track_user_series: false,
+        ..SimOpts::default()
+    };
     let native =
         run(cluster.clone(), &trace, Box::new(BestFitDrfh::default()), opts.clone());
     let xla = run(

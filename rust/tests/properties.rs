@@ -501,7 +501,12 @@ fn sim_conservation_randomized() {
             cluster,
             &trace,
             Box::new(BestFitDrfh::default()),
-            SimOpts { horizon, sample_dt: 50.0, track_user_series: false },
+            SimOpts {
+                horizon,
+                sample_dt: 50.0,
+                track_user_series: false,
+                ..SimOpts::default()
+            },
         );
         assert!(r.tasks_completed <= r.tasks_placed);
         assert!(r.tasks_placed <= trace.total_tasks());
