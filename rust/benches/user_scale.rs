@@ -1,0 +1,220 @@
+//! §Perf headline for PR 5: class-keyed user state.
+//!
+//! Sweeps the user count 10³ → 10⁶ at a FIXED ~10 demand classes on
+//! the k = 2,000 Fig. 5 cluster and times the same Best-Fit DRFH
+//! simulation on both scheduler-state layouts:
+//!
+//! * `classed` — the default class-keyed path (`sched::users`):
+//!   user selection aggregated over `(dom_delta, weight)` groups,
+//!   placement/blocked structures shared per interned demand class —
+//!   per-event work scales with classes, not users;
+//! * `per-user` — the PR 1 layout (`BestFitDrfh::per_user()`): one
+//!   `ShareHeap` entry and one placement heap per user. Its per-event
+//!   cost grows with n (each touched server re-scores every user) and
+//!   its memory with n·k, so the sweep caps it at `PER_USER_CAP`
+//!   users by default — set `USER_SCALE_FULL=1` to run it at every
+//!   point (the 10⁶ point takes a long while and a lot of memory by
+//!   construction; that is the point).
+//!
+//! Offered work is held constant across the sweep, so throughput
+//! differences isolate the per-event scheduler cost. Target: classed
+//! per-event cost ~flat in user count (sublinear growth across the
+//! sweep) and **≥5× tasks/sec** over the per-user layout at 10⁶
+//! users / 10 classes. Placement counts are asserted equal wherever
+//! both paths run (cheap guard); full bit-identical report parity is
+//! enforced by `tests/engine_parity.rs` and `drfh exp user-scale`.
+//!
+//! Results go to `BENCH_users.json` at the repo root (override with
+//! `BENCH_OUT=/path.json`); CI runs the small-scale smoke via
+//! `USER_SCALE_SMOKE=1`.
+//!
+//! Run: `cargo bench --bench user_scale`
+
+use drfh::cluster::Cluster;
+use drfh::experiments::user_scale::{classed_trace, DEFAULT_CLASSES};
+use drfh::sched::BestFitDrfh;
+use drfh::sim::{run, SimOpts, SimReport};
+use drfh::util::bench::{bench_n, header, write_suite_json, BenchResult};
+use drfh::util::json::Json;
+use drfh::util::Pcg32;
+use std::collections::BTreeMap;
+
+/// Per-user path cap without `USER_SCALE_FULL=1`: its per-event cost
+/// grows with n AND its placement index holds up to n·k heap entries
+/// (~3 GB at 10⁵ users × 2,000 servers), so default runs stop at 10⁴
+/// users — demonstrating the growth without exhausting the machine.
+const PER_USER_CAP: usize = 10_000;
+
+struct Case {
+    bench: BenchResult,
+    report: SimReport,
+}
+
+fn run_case(
+    name: &str,
+    setup: &(Cluster, drfh::workload::Trace, SimOpts),
+    per_user: bool,
+) -> Case {
+    let (cluster, trace, opts) = setup;
+    let mut report = None;
+    let bench = bench_n(name, 1, || {
+        let sched = if per_user {
+            BestFitDrfh::per_user()
+        } else {
+            BestFitDrfh::default()
+        };
+        let rep =
+            run(cluster.clone(), trace, Box::new(sched), opts.clone());
+        let placed = rep.tasks_placed;
+        report = Some(rep);
+        placed
+    });
+    Case { bench, report: report.expect("bench ran at least once") }
+}
+
+fn tasks_per_sec(c: &Case) -> f64 {
+    c.report.tasks_completed as f64 / c.bench.mean.as_secs_f64().max(1e-12)
+}
+
+fn per_event_ns(c: &Case) -> f64 {
+    let events =
+        (c.report.tasks_placed + c.report.tasks_completed).max(1) as f64;
+    c.bench.mean.as_nanos() as f64 / events
+}
+
+fn main() {
+    let smoke = std::env::var_os("USER_SCALE_SMOKE").is_some();
+    let full = std::env::var_os("USER_SCALE_FULL").is_some();
+    let (servers, total_tasks, duration, sweep): (usize, usize, f64, Vec<usize>) =
+        if smoke {
+            (200, 8_000, 3_600.0, vec![1_000, 5_000])
+        } else {
+            (2_000, 200_000, 14_400.0, vec![
+                1_000, 10_000, 100_000, 1_000_000,
+            ])
+        };
+    let classes = DEFAULT_CLASSES;
+    let per_user_cap = if full { usize::MAX } else { PER_USER_CAP };
+    println!(
+        "user_scale: k={servers} classes={classes} ~{total_tasks} tasks \
+         over {duration:.0}s, users swept {sweep:?}{}",
+        if smoke { " [smoke]" } else { "" }
+    );
+    header("user_scale: class-keyed vs per-user scheduler state");
+
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut rows: Vec<Json> = Vec::new();
+    let mut classed_event_ns: Vec<(usize, f64)> = Vec::new();
+    let mut last_speedup: Option<(usize, f64)> = None;
+    for &n in &sweep {
+        let mut rng = Pcg32::new(2026, 0xc1);
+        let cluster = Cluster::google_sample(servers, &mut rng);
+        let trace = classed_trace(n, classes, total_tasks, duration, 2026);
+        let opts = SimOpts {
+            horizon: duration,
+            sample_dt: (duration / 200.0).max(10.0),
+            ..SimOpts::default()
+        };
+        let setup = (cluster, trace, opts);
+        let classed = run_case(&format!("classed-n{n}"), &setup, false);
+        classed_event_ns.push((n, per_event_ns(&classed)));
+        let mut row = BTreeMap::new();
+        row.insert("users".to_string(), Json::Num(n as f64));
+        row.insert(
+            "tasks_per_sec_classed".to_string(),
+            Json::Num(tasks_per_sec(&classed)),
+        );
+        row.insert(
+            "per_event_ns_classed".to_string(),
+            Json::Num(per_event_ns(&classed)),
+        );
+        if n <= per_user_cap {
+            let per_user =
+                run_case(&format!("per-user-n{n}"), &setup, true);
+            // cheap parity guard; the bit-identical proof lives in
+            // tests/engine_parity.rs
+            assert_eq!(
+                classed.report.tasks_placed, per_user.report.tasks_placed,
+                "classed/per-user placement counts diverged at n={n}"
+            );
+            let speedup = per_user.bench.mean.as_secs_f64()
+                / classed.bench.mean.as_secs_f64().max(1e-12);
+            println!(
+                "  n={n:>9}: classed {:>10.0} tasks/s ({:>7.0} ns/event), \
+                 per-user {:>10.0} tasks/s -> {speedup:.2}x",
+                tasks_per_sec(&classed),
+                per_event_ns(&classed),
+                tasks_per_sec(&per_user),
+            );
+            row.insert(
+                "tasks_per_sec_per_user".to_string(),
+                Json::Num(tasks_per_sec(&per_user)),
+            );
+            row.insert(
+                "per_event_ns_per_user".to_string(),
+                Json::Num(per_event_ns(&per_user)),
+            );
+            row.insert("speedup".to_string(), Json::Num(speedup));
+            last_speedup = Some((n, speedup));
+            results.push(per_user.bench);
+        } else {
+            println!(
+                "  n={n:>9}: classed {:>10.0} tasks/s ({:>7.0} ns/event); \
+                 per-user path skipped (cap {per_user_cap}; set \
+                 USER_SCALE_FULL=1 to run it)",
+                tasks_per_sec(&classed),
+                per_event_ns(&classed),
+            );
+            row.insert("tasks_per_sec_per_user".to_string(), Json::Null);
+            row.insert("per_event_ns_per_user".to_string(), Json::Null);
+            row.insert("speedup".to_string(), Json::Null);
+        }
+        results.push(classed.bench);
+        rows.push(Json::Obj(row));
+    }
+
+    // flatness: classed per-event cost across three decades of users
+    let (n_lo, ns_lo) = classed_event_ns[0];
+    let (n_hi, ns_hi) = *classed_event_ns.last().expect("non-empty sweep");
+    let growth = ns_hi / ns_lo.max(1e-12);
+    println!(
+        "\nclassed per-event cost: {ns_lo:.0} ns at n={n_lo} -> \
+         {ns_hi:.0} ns at n={n_hi} ({growth:.2}x across {:.0}x users)",
+        n_hi as f64 / n_lo as f64
+    );
+    if !smoke && growth > 3.0 {
+        println!(
+            "WARNING: classed per-event cost grew {growth:.2}x across \
+             the sweep — expected ~flat in user count"
+        );
+    }
+    if let Some((n, s)) = last_speedup {
+        if !smoke && s < 5.0 && n >= PER_USER_CAP {
+            println!(
+                "WARNING: classed speedup {s:.2}x at n={n} below the \
+                 5x target"
+            );
+        }
+    }
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_users.json")
+            .to_string()
+    });
+    let meta = [
+        ("servers", Json::Num(servers as f64)),
+        ("classes", Json::Num(classes as f64)),
+        ("tasks_offered_approx", Json::Num(total_tasks as f64)),
+        ("horizon_s", Json::Num(duration)),
+        ("smoke", Json::Bool(smoke)),
+        ("per_user_cap", Json::Num(per_user_cap.min(1 << 52) as f64)),
+        ("per_event_cost_growth_classed", Json::Num(growth)),
+        ("sweep", Json::Arr(rows)),
+    ];
+    let path = std::path::PathBuf::from(&out);
+    if write_suite_json(&path, "user_scale", &meta, &results) {
+        println!("\nwrote {}", path.display());
+    } else {
+        println!("\ncould not write {} (read-only fs?)", path.display());
+    }
+}

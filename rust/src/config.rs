@@ -12,8 +12,9 @@
 //! horizon = 86400.0
 //! sample_dt = 60.0
 //! track_user_series = false
-//! queue = "wheel"          # wheel | heap (naive parity reference)
+//! queue = "wheel"          # wheel | auto (trace-tuned wheel) | heap (naive parity reference)
 //! metrics = "full"         # full | streaming (bounded memory)
+//! share_sketch = 2048      # optional: per-user share-sketch point budget (0 = exact)
 //! [scheduler]
 //! policy = "bestfit"       # bestfit | firstfit | slots | bestfit-xla
 //! slots_per_max = 14       # slots policy only
@@ -61,12 +62,16 @@ pub struct SimConfig {
     pub horizon: f64,
     pub sample_dt: f64,
     pub track_user_series: bool,
-    /// Event queue: "wheel" (default) | "heap" (naive parity
-    /// reference).
+    /// Event queue: "wheel" (default) | "auto" (wheel with geometry
+    /// tuned from the trace's duration distribution) | "heap" (naive
+    /// parity reference).
     pub queue: String,
     /// Metrics retention: "full" (default) | "streaming" (bounded
     /// memory for trace-scale runs).
     pub metrics: String,
+    /// Per-user dominant-share sketch budget (points; 0 = exact
+    /// retention). Unset = sketches off.
+    pub share_sketch: Option<usize>,
 }
 
 impl Default for SimConfig {
@@ -77,6 +82,7 @@ impl Default for SimConfig {
             track_user_series: false,
             queue: "wheel".into(),
             metrics: "full".into(),
+            share_sketch: None,
         }
     }
 }
@@ -143,6 +149,9 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_str("sim", "metrics") {
             cfg.sim.metrics = v.to_string();
         }
+        if let Some(v) = doc.get_usize("sim", "share_sketch") {
+            cfg.sim.share_sketch = Some(v);
+        }
         if let Some(v) = doc.get_str("scheduler", "policy") {
             cfg.scheduler.policy = v.to_string();
         }
@@ -196,8 +205,11 @@ impl ExperimentConfig {
     pub fn sim_opts(&self) -> Result<SimOpts> {
         let queue = match self.sim.queue.as_str() {
             "wheel" => QueueKind::Wheel,
+            "auto" => QueueKind::Auto,
             "heap" => QueueKind::Heap,
-            other => bail!("unknown sim queue '{other}' (wheel | heap)"),
+            other => {
+                bail!("unknown sim queue '{other}' (wheel | auto | heap)")
+            }
         };
         let metrics = match self.sim.metrics.as_str() {
             "full" => MetricsMode::Full,
@@ -212,6 +224,7 @@ impl ExperimentConfig {
             track_user_series: self.sim.track_user_series,
             queue,
             metrics,
+            share_sketch: self.sim.share_sketch,
         })
     }
 }
@@ -271,6 +284,14 @@ mod tests {
         let opts = c.sim_opts().unwrap();
         assert_eq!(opts.queue, QueueKind::Heap);
         assert!(matches!(opts.metrics, MetricsMode::Streaming { .. }));
+
+        let c = ExperimentConfig::from_toml(
+            "[sim]\nqueue = 'auto'\nshare_sketch = 128",
+        )
+        .unwrap();
+        let opts = c.sim_opts().unwrap();
+        assert_eq!(opts.queue, QueueKind::Auto);
+        assert_eq!(opts.share_sketch, Some(128));
 
         let c =
             ExperimentConfig::from_toml("[sim]\nqueue = 'nope'").unwrap();

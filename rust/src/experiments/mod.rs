@@ -17,6 +17,7 @@ pub mod fig8;
 pub mod runner;
 pub mod sim_scale;
 pub mod table2;
+pub mod user_scale;
 
 use crate::cluster::Cluster;
 use crate::sim::SimOpts;

@@ -1,0 +1,244 @@
+//! §Perf diagnostic for the class-keyed scheduler state
+//! (`drfh exp user-scale`): run the same Best-Fit DRFH simulation on
+//! the class-keyed path (the default) and on the PR 1 per-user index
+//! layout, assert the two runs are *bit-identical* (full
+//! [`SimReport`] equality — every decision feeds every derived
+//! float), and report throughput and per-event cost.
+//!
+//! This is the `exp`-level smoke path for `benches/user_scale.rs`:
+//! the bench produces the committed `BENCH_users.json` sweep
+//! (users 10³ → 10⁶ at ~10 demand classes, k = 2000); this harness
+//! runs at whatever scale the CLI asks for
+//! (`--servers/--users/--duration`) and is cheap enough for tests.
+
+use crate::cluster::{Cluster, ResVec};
+use crate::sched::BestFitDrfh;
+use crate::sim::{run, SimOpts, SimReport};
+use crate::util::Pcg32;
+use crate::workload::{JobSpec, TaskSpec, Trace, UserSpec};
+use std::time::{Duration, Instant};
+
+/// Demand classes the synthetic workload draws from (the sweep's
+/// fixed class count).
+pub const DEFAULT_CLASSES: usize = 10;
+
+/// Build a trace whose `n_users` users share exactly
+/// `min(n_classes, n_users)` distinct demand rows and a small cycle
+/// of weights (including a zero-weight cohort, exercising the guarded
+/// `effective_weight` semantics), offering ~`total_tasks` tasks over
+/// `duration` seconds.
+///
+/// This is the workload shape the class-keyed state is built for —
+/// [`crate::workload::DemandTable`] interns the rows at build, so
+/// per-event scheduler work depends on the class count while the
+/// user count scales freely. Deterministic in `seed`.
+pub fn classed_trace(
+    n_users: usize,
+    n_classes: usize,
+    total_tasks: usize,
+    duration: f64,
+    seed: u64,
+) -> Trace {
+    assert!(n_users > 0 && duration > 0.0);
+    let n_classes = n_classes.clamp(1, n_users);
+    let mut rng = Pcg32::new(seed, 0x5eed_c1a5);
+    // distinct demand rows spanning CPU-heavy / mem-heavy / balanced
+    // profiles; the formula keys every component on `c`, so rows are
+    // pairwise bit-distinct
+    let rows: Vec<ResVec> = (0..n_classes)
+        .map(|c| {
+            let frac = (c as f64 + 1.0) / (n_classes as f64 + 1.0);
+            let dom = 0.04 + 0.28 * frac;
+            let skew = 0.2 + 0.6 * frac;
+            match c % 3 {
+                0 => ResVec::cpu_mem(dom, dom * skew),
+                1 => ResVec::cpu_mem(dom * skew, dom),
+                _ => ResVec::cpu_mem(dom, dom * 0.9),
+            }
+        })
+        .collect();
+    const WEIGHTS: [f64; 4] = [1.0, 2.0, 0.5, 0.0];
+    let users: Vec<UserSpec> = (0..n_users)
+        .map(|u| UserSpec {
+            demand: rows[u % n_classes],
+            weight: WEIGHTS[(u / n_classes) % WEIGHTS.len()],
+        })
+        .collect();
+    // jobs spread uniformly over the trace, a few tasks each (mean 4)
+    let n_jobs = (total_tasks / 4).max(1);
+    let mut jobs: Vec<JobSpec> = (0..n_jobs)
+        .map(|_| {
+            let user = rng.below(n_users);
+            let submit = rng.uniform(0.0, duration);
+            let ntasks = 1 + rng.below(7);
+            let tasks = (0..ntasks)
+                .map(|_| TaskSpec {
+                    duration: rng.pareto_bounded(30.0, 3_600.0, 1.3),
+                })
+                .collect();
+            JobSpec { id: 0, user, submit, tasks }
+        })
+        .collect();
+    jobs.sort_by(|a, b| a.submit.total_cmp(&b.submit));
+    for (i, j) in jobs.iter_mut().enumerate() {
+        j.id = i;
+    }
+    let trace = Trace { users, jobs };
+    debug_assert!(trace.validate().is_ok());
+    trace
+}
+
+/// One timed path.
+pub struct PathRun {
+    pub label: &'static str,
+    pub report: SimReport,
+    pub wall: Duration,
+}
+
+impl PathRun {
+    /// Completed tasks per wall-clock second.
+    pub fn tasks_per_sec(&self) -> f64 {
+        self.report.tasks_completed as f64
+            / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    /// Mean wall-clock cost per scheduler-visible event (placements +
+    /// completions) — the quantity the class keying holds ~flat in
+    /// user count.
+    pub fn per_event_cost(&self) -> Duration {
+        let events =
+            (self.report.tasks_placed + self.report.tasks_completed).max(1);
+        self.wall / events as u32
+    }
+}
+
+/// The classed vs per-user comparison.
+pub struct UserScaleResult {
+    pub classed: PathRun,
+    pub per_user: PathRun,
+    pub users: usize,
+    pub classes: usize,
+    pub tasks_offered: usize,
+}
+
+impl UserScaleResult {
+    /// The load-bearing invariant: the class-keyed run is
+    /// *bit-identical* to the per-user run — every placement, sample,
+    /// and job record.
+    pub fn parity_ok(&self) -> bool {
+        self.classed.report == self.per_user.report
+    }
+
+    /// Wall-clock speedup of the classed path.
+    pub fn speedup(&self) -> f64 {
+        self.per_user.wall.as_secs_f64()
+            / self.classed.wall.as_secs_f64().max(1e-12)
+    }
+}
+
+fn timed(
+    label: &'static str,
+    cluster: &Cluster,
+    trace: &Trace,
+    opts: &SimOpts,
+    sched: BestFitDrfh,
+) -> PathRun {
+    let t0 = Instant::now();
+    let report =
+        run(cluster.clone(), trace, Box::new(sched), opts.clone());
+    PathRun { label, report, wall: t0.elapsed() }
+}
+
+/// Run the comparison: `users` tenants over [`DEFAULT_CLASSES`]
+/// demand classes on `servers` Table I servers for `duration`
+/// seconds.
+pub fn run_user_scale(
+    seed: u64,
+    servers: usize,
+    users: usize,
+    duration: f64,
+) -> UserScaleResult {
+    let mut rng = Pcg32::new(seed, 0xc1);
+    let cluster = Cluster::google_sample(servers, &mut rng);
+    let total_tasks = (servers * 40).clamp(1_000, 400_000);
+    let classes = DEFAULT_CLASSES.min(users);
+    let trace = classed_trace(users, classes, total_tasks, duration, seed);
+    let opts = SimOpts {
+        horizon: duration,
+        sample_dt: (duration / 200.0).max(10.0),
+        ..SimOpts::default()
+    };
+    let classed =
+        timed("classed", &cluster, &trace, &opts, BestFitDrfh::default());
+    let per_user = timed(
+        "per-user",
+        &cluster,
+        &trace,
+        &opts,
+        BestFitDrfh::per_user(),
+    );
+    UserScaleResult {
+        classed,
+        per_user,
+        users,
+        classes,
+        tasks_offered: trace.total_tasks(),
+    }
+}
+
+pub fn print(res: &UserScaleResult) {
+    println!("== user-scale: class-keyed scheduler state check ==");
+    println!(
+        "{} users over {} demand classes, {} tasks offered; \
+         parity classed==per-user: {}",
+        res.users,
+        res.classes,
+        res.tasks_offered,
+        if res.parity_ok() { "OK (bit-identical)" } else { "FAILED" },
+    );
+    for run in [&res.per_user, &res.classed] {
+        println!(
+            "{:<10} {:>9.1} ms  {:>10.0} tasks/s  {:>10} per event",
+            run.label,
+            run.wall.as_secs_f64() * 1e3,
+            run.tasks_per_sec(),
+            crate::util::bench::fmt_dur(run.per_event_cost()),
+        );
+    }
+    println!("classed speedup {:.2}x", res.speedup());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::DemandTable;
+
+    /// The exp-level smoke: classed and per-user paths must be
+    /// bit-identical end to end on a workload with real class sharing
+    /// (many users per row, zero-weight cohort included).
+    #[test]
+    fn smoke_parity_holds() {
+        let res = run_user_scale(7, 40, 60, 2_000.0);
+        assert!(res.parity_ok(), "classed vs per-user reports diverged");
+        assert!(res.classed.report.tasks_placed > 0);
+        assert_eq!(res.classes, DEFAULT_CLASSES);
+    }
+
+    #[test]
+    fn classed_trace_interns_to_the_requested_classes() {
+        let t = classed_trace(60, 10, 2_000, 2_000.0, 3);
+        t.validate().unwrap();
+        assert_eq!(t.users.len(), 60);
+        let table = DemandTable::build(&t.users);
+        assert_eq!(table.classes(), 10);
+        // the weight cycle includes a zero-weight cohort
+        assert!(t.users.iter().any(|u| u.weight == 0.0));
+        // clamped: never more classes than users
+        let tiny = classed_trace(3, 10, 100, 500.0, 4);
+        assert_eq!(DemandTable::build(&tiny.users).classes(), 3);
+        // deterministic
+        let a = classed_trace(20, 5, 1_000, 1_000.0, 9);
+        let b = classed_trace(20, 5, 1_000, 1_000.0, 9);
+        assert_eq!(a.total_tasks(), b.total_tasks());
+    }
+}

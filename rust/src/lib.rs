@@ -6,23 +6,35 @@
 //! * [`cluster`] — the heterogeneous server pool (paper Sec. III-A),
 //!   including the Google Table I configuration distribution;
 //! * [`workload`] — users/jobs/tasks and the Google-like trace generator
-//!   substituting the original (unavailable) cluster traces;
-//! * [`solver`] — dense two-phase simplex, the LP substrate for eq. (7);
+//!   substituting the original (unavailable) cluster traces, plus the
+//!   trace-scale data layout ([`workload::TaskArena`],
+//!   [`workload::DemandTable`]);
+//! * [`solver`] — dense two-phase simplex, the LP substrate for eq. (7),
+//!   warm-startable across edits ([`solver::Solver`]);
 //! * [`allocator`] — the *exact fluid* DRFH allocation (paper Sec. IV),
-//!   weighted users, finite demands, and the naive per-server DRF
-//!   baseline of Sec. III-D;
+//!   weighted users, finite demands, the naive per-server DRF
+//!   baseline of Sec. III-D, and the event-driven incremental
+//!   allocator ([`allocator::incremental`]);
 //! * [`sched`] — discrete task schedulers: Best-Fit DRFH, First-Fit
-//!   DRFH (paper Sec. V-B) and the slot-based baseline (Table II);
+//!   DRFH (paper Sec. V-B) and the slot-based baseline (Table II),
+//!   with the incremental decision indexes ([`sched::index`]) and the
+//!   class-keyed user state that scales them to millions of users
+//!   ([`sched::users`]);
 //! * [`sim`] — the discrete-event cluster simulator behind every figure
-//!   in the evaluation (Sec. VI);
-//! * [`metrics`] — utilization time series, JCT CDFs, completion ratios;
+//!   in the evaluation (Sec. VI): timer-wheel event queue
+//!   ([`sim::wheel`]), batched drain, streaming metrics;
+//! * [`metrics`] — utilization time series, JCT CDFs, completion
+//!   ratios, and bounded-memory share sketches ([`metrics::shares`]);
 //! * [`runtime`] — the PJRT bridge executing the AOT-compiled XLA
 //!   scheduling kernels (L1 Pallas / L2 JAX) from the Rust hot path;
 //! * [`coordinator`] — the online (tokio) scheduling service;
-//! * [`experiments`] — one harness per paper table/figure.
+//! * [`experiments`] — one harness per paper table/figure, plus the
+//!   §Perf harnesses (`sim-scale`, `user-scale`) on the parallel
+//!   sweep runner ([`experiments::runner`]).
 //!
-//! See DESIGN.md for the experiment index and EXPERIMENTS.md for
-//! measured-vs-paper results.
+//! ARCHITECTURE.md (repo root) maps these modules, the event-wave
+//! data flow, the parity-reference convention, and which bench emits
+//! which `BENCH_*.json`; README.md has the CLI quickstart.
 
 pub mod allocator;
 pub mod cluster;

@@ -1,8 +1,9 @@
 //! `drfh` — launcher CLI for the DRFH reproduction.
 //!
 //! ```text
-//! drfh exp <fig4|fig4-fluid|table2|fig5|fig6|fig7|fig8|sim-scale|all> [--seed N]
-//!          [--servers K] [--users N] [--duration S] regenerate a paper figure/table
+//! drfh exp <fig4|fig4-fluid|table2|fig5|fig6|fig7|fig8|sim-scale|user-scale|all>
+//!          [--seed N] [--servers K] [--users N] [--duration S]
+//!          regenerate a paper figure/table or run a §Perf harness
 //! drfh sim --config exp.toml                      run a configured simulation
 //! drfh solve                                      exact fluid DRFH on the Fig. 1 example
 //! drfh picker-check [--trials N] [--seed N]       native vs XLA decision parity
@@ -25,7 +26,7 @@ const USAGE: &str = "\
 drfh — Dominant Resource Fairness with Heterogeneous Servers (paper reproduction)
 
 USAGE:
-  drfh exp <fig4|fig4-fluid|table2|fig5|fig6|fig7|fig8|sim-scale|all>
+  drfh exp <fig4|fig4-fluid|table2|fig5|fig6|fig7|fig8|sim-scale|user-scale|all>
            [--seed N] [--servers K] [--users N] [--duration SECONDS]
   drfh sim --config <exp.toml>
   drfh solve
@@ -166,6 +167,15 @@ fn run_exp(
             experiments::sim_scale::print(&res);
             if !res.queue_parity_ok() || !res.streaming_semantics_ok() {
                 bail!("sim-scale data-plane parity failure");
+            }
+        }
+        "user-scale" => {
+            let res = experiments::user_scale::run_user_scale(
+                seed, servers, users, duration,
+            );
+            experiments::user_scale::print(&res);
+            if !res.parity_ok() {
+                bail!("user-scale class-keyed parity failure");
             }
         }
         "all" => {

@@ -15,6 +15,16 @@
 //! Fig. 6b size bucket — instead of materializing `jobs`. Peak RSS is
 //! then ~flat in task count; `benches/sim_scale.rs` records the
 //! retained-point counts next to its throughput numbers.
+//!
+//! Per-user share *trajectories* (Fig. 4) get the same treatment in
+//! [`shares`]: a [`ShareSketch`] holds each user's dominant-share
+//! series under a fixed point budget with exact streaming summaries,
+//! so trajectory reporting survives the ROADMAP's millions of users
+//! (see [`crate::sim::SimOpts::share_sketch`]).
+
+pub mod shares;
+
+pub use shares::ShareSketch;
 
 use crate::util::stats;
 use crate::util::stats::{P2Quantile, StreamStats};

@@ -1,0 +1,179 @@
+//! Streaming per-user dominant-share sketches: Fig. 4-style share
+//! trajectories at a fixed point budget per user.
+//!
+//! The paper's Fig. 4 plots each user's global dominant share over
+//! time. [`crate::sim::SimOpts::track_user_series`] reproduces that
+//! exactly — one retained sample per user per tick — which is the
+//! right tool for the 3-user Fig. 4 scenario and untenable at the
+//! ROADMAP's millions of users. [`ShareSketch`] is the bounded
+//! alternative ([`crate::sim::SimOpts::share_sketch`]): per user it
+//! keeps
+//!
+//! * exact O(1) streaming summaries of the sampled trajectory —
+//!   Welford count/mean/variance/min/max
+//!   ([`crate::util::stats::StreamStats`]) and P² median / p90
+//!   estimates ([`crate::util::stats::P2Quantile`]) — plus the latest
+//!   sample, and
+//! * a plottable trajectory held under a fixed point budget by the
+//!   same stride-doubling decimation the streaming metrics mode
+//!   applies to utilization series
+//!   ([`crate::metrics::TimeSeries::enforce_cap`]): the retained grid
+//!   always spans the whole horizon, at a coarsening stride.
+//!
+//! Memory per user is `O(budget)` — independent of horizon length and
+//! sample rate — so a million-user run with a 64-point budget holds
+//! ~1.5 KiB/user of trajectory instead of an unbounded series.
+//!
+//! ## Parity reference
+//!
+//! [`ShareSketch::exact`] (budget 0 = never decimate) follows the
+//! crate's `::naive()` convention: its series is the exact
+//! trajectory, and the streaming summaries are *bit-identical*
+//! between exact and budgeted sketches (they fold every sample before
+//! decimation touches anything). The bounded-error guarantees of the
+//! decimated series and the P² quantiles are pinned by this module's
+//! tests against the exact reference.
+
+use crate::metrics::TimeSeries;
+use crate::util::stats::{P2Quantile, StreamStats};
+
+/// A bounded-memory sketch of one user's dominant-share trajectory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShareSketch {
+    /// Point budget for the retained trajectory (0 = exact: never
+    /// decimate).
+    budget: usize,
+    /// The retained trajectory (decimated to `budget` points).
+    pub series: TimeSeries,
+    /// Exact streaming moments over every sample ever pushed.
+    pub stats: StreamStats,
+    /// P² estimate of the trajectory median.
+    pub p50: P2Quantile,
+    /// P² estimate of the trajectory 90th percentile.
+    pub p90: P2Quantile,
+    /// Most recent sample value (the "current share").
+    pub last: f64,
+}
+
+impl ShareSketch {
+    /// Sketch with a trajectory budget of `budget` points (0 keeps
+    /// every point — see [`ShareSketch::exact`]).
+    pub fn with_budget(budget: usize) -> Self {
+        ShareSketch {
+            budget,
+            series: TimeSeries::default(),
+            stats: StreamStats::default(),
+            p50: P2Quantile::new(0.50),
+            p90: P2Quantile::new(0.90),
+            last: 0.0,
+        }
+    }
+
+    /// The exact-mode parity reference: unbounded retention, same
+    /// summary accumulators.
+    pub fn exact() -> Self {
+        Self::with_budget(0)
+    }
+
+    /// The configured point budget (0 = exact).
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    pub fn is_exact(&self) -> bool {
+        self.budget == 0
+    }
+
+    /// Samples folded in so far (decimation does not change this).
+    pub fn count(&self) -> u64 {
+        self.stats.count()
+    }
+
+    /// Fold in one sample of the share trajectory.
+    pub fn push(&mut self, t: f64, v: f64) {
+        self.stats.push(v);
+        self.p50.push(v);
+        self.p90.push(v);
+        self.last = v;
+        self.series.push(t, v);
+        self.series.enforce_cap(self.budget);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+    use crate::util::Pcg32;
+
+    /// Satellite guarantee: a budgeted sketch vs the exact-trajectory
+    /// reference — identical streaming summaries (bit-exact), bounded
+    /// trajectory memory, horizon-spanning grid, and bounded error on
+    /// the derived quantities (time average, P² quantiles).
+    #[test]
+    fn sketch_vs_exact_trajectory_bounded_error() {
+        let mut rng = Pcg32::seeded(3131);
+        let budget = 64;
+        let mut sketch = ShareSketch::with_budget(budget);
+        let mut exact = ShareSketch::exact();
+        assert!(exact.is_exact() && !sketch.is_exact());
+        assert_eq!(sketch.budget(), budget);
+        // a Fig. 4-shaped trajectory: ramp in, plateau with noise,
+        // drain out — 20k samples, far beyond the budget
+        let n = 20_000usize;
+        let mut vals = Vec::with_capacity(n);
+        for i in 0..n {
+            let t = i as f64;
+            let base = if i < n / 4 {
+                i as f64 / (n / 4) as f64
+            } else if i < 3 * n / 4 {
+                1.0
+            } else {
+                (n - i) as f64 / (n / 4) as f64
+            };
+            let v = (0.5 * base + rng.uniform(-0.02, 0.02)).max(0.0);
+            sketch.push(t, v);
+            exact.push(t, v);
+            vals.push(v);
+        }
+        // streaming summaries are bit-identical to the exact ones:
+        // decimation never touches the accumulators
+        assert_eq!(sketch.stats, exact.stats);
+        assert_eq!(sketch.p50, exact.p50);
+        assert_eq!(sketch.p90, exact.p90);
+        assert_eq!(sketch.last, exact.last);
+        assert_eq!(sketch.count(), n as u64);
+        // memory bound holds; exact mode retained everything
+        assert!(sketch.series.len() <= budget);
+        assert!(sketch.series.len() > budget / 2);
+        assert_eq!(exact.series.len(), n);
+        // the decimated grid still spans the horizon
+        assert_eq!(sketch.series.t[0], 0.0);
+        assert!(*sketch.series.t.last().unwrap() > (n - 1) as f64 * 0.99);
+        // bounded error on the derived quantities
+        let avg_err =
+            (sketch.series.time_avg() - exact.series.time_avg()).abs();
+        assert!(avg_err < 0.05, "time-avg drift {avg_err}");
+        let p50_exact = stats::percentile(&vals, 50.0);
+        let p90_exact = stats::percentile(&vals, 90.0);
+        assert!(
+            (sketch.p50.quantile() - p50_exact).abs() < 0.05,
+            "p50 {} vs exact {p50_exact}",
+            sketch.p50.quantile()
+        );
+        assert!(
+            (sketch.p90.quantile() - p90_exact).abs() < 0.05,
+            "p90 {} vs exact {p90_exact}",
+            sketch.p90.quantile()
+        );
+    }
+
+    #[test]
+    fn empty_sketch_defaults() {
+        let s = ShareSketch::with_budget(8);
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.last, 0.0);
+        assert!(s.series.is_empty());
+        assert_eq!(s.stats.mean(), 0.0);
+    }
+}

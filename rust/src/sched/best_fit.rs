@@ -8,11 +8,14 @@
 //! matching the fused XLA kernel's "min share among users with a fit"
 //! semantics (see `runtime::picker`).
 //!
-//! §Perf: the default construction runs on the incremental index
-//! ([`index::ShareHeap`] + [`index::PlacementIndex`]) fed by the
-//! engine's place/complete/ready notifications; [`BestFitDrfh::naive`]
-//! keeps the seed's linear scans as the bit-identical reference
-//! (parity proved in `tests/engine_parity.rs`).
+//! §Perf: the default construction runs on the class-keyed
+//! incremental index ([`crate::sched::users::ClassedShareIndex`] +
+//! the per-demand-class [`index::PlacementIndex`]) fed by the
+//! engine's place/complete/ready notifications, so per-event work
+//! scales with distinct demand classes rather than user count;
+//! [`BestFitDrfh::per_user`] keeps the PR 1 per-user index layout
+//! and [`BestFitDrfh::naive`] the seed's linear scans — all three
+//! bit-identical (parity proved in `tests/engine_parity.rs`).
 
 use super::index::{self, IndexedCore, ScoreKind};
 use super::{drain_by_picks, min_share_user, DrainCtx, Pick, Scheduler, UserState};
@@ -60,9 +63,25 @@ impl BestFitDrfh {
         BestFitDrfh { strict: false, core: None }
     }
 
+    /// The PR 1 per-user index layout (`ShareHeap` + one placement
+    /// heap per user) — the scaling baseline in
+    /// `benches/user_scale.rs` and the intermediate parity reference
+    /// for the class-keyed default.
+    pub fn per_user() -> Self {
+        BestFitDrfh {
+            strict: false,
+            core: Some(IndexedCore::per_user(ScoreKind::BestFit)),
+        }
+    }
+
     /// Is this instance on the indexed hot path?
     pub fn is_indexed(&self) -> bool {
         self.core.is_some()
+    }
+
+    /// Is this instance on the class-keyed (interned) index?
+    pub fn is_classed(&self) -> bool {
+        self.core.as_ref().is_some_and(IndexedCore::is_classed)
     }
 }
 
@@ -205,7 +224,11 @@ mod tests {
 
     #[test]
     fn routes_fig1_users_to_matching_servers() {
-        for mut sched in [BestFitDrfh::default(), BestFitDrfh::naive()] {
+        for mut sched in [
+            BestFitDrfh::default(),
+            BestFitDrfh::per_user(),
+            BestFitDrfh::naive(),
+        ] {
             let cluster = Cluster::fig1_example();
             let mut users = users_fixture();
             let all = [true, true];
@@ -215,7 +238,12 @@ mod tests {
                 sched.pick(&cluster, &users, &all),
                 Pick::Place { user: 0, server: 0 }
             );
-            users[0].dom_share = 0.5;
+            // raise user 0's share the way the engine does: bump
+            // `running` and recompute `dom_share = running * dom_delta`
+            // (the class-keyed path ranks through exactly this
+            // invariant)
+            users[0].running = 5;
+            users[0].dom_share = 5.0 * users[0].dom_delta;
             sched.on_place(0, 0); // engine would notify; no commit here
             // now user 1 has the lower share: routed to the CPU server
             assert_eq!(

@@ -4,9 +4,11 @@
 //! (Fig. 5 compares the two).
 //!
 //! §Perf: like Best-Fit, the default construction runs on the
-//! incremental index (the per-user server heaps minimize the server
-//! *index* instead of the H-score); [`FirstFitDrfh::naive`] keeps the
-//! seed's linear scan as the bit-identical reference.
+//! class-keyed incremental index (the per-demand-class server heaps
+//! minimize the server *index* instead of the H-score);
+//! [`FirstFitDrfh::per_user`] keeps the PR 1 per-user heaps and
+//! [`FirstFitDrfh::naive`] the seed's linear scan as bit-identical
+//! references.
 
 use super::index::{IndexedCore, ScoreKind};
 use super::{drain_by_picks, min_share_user, DrainCtx, Pick, Scheduler, UserState};
@@ -32,9 +34,21 @@ impl FirstFitDrfh {
         FirstFitDrfh { core: None }
     }
 
+    /// The PR 1 per-user index layout — the scaling baseline in
+    /// `benches/user_scale.rs` and the intermediate parity reference
+    /// for the class-keyed default.
+    pub fn per_user() -> Self {
+        FirstFitDrfh { core: Some(IndexedCore::per_user(ScoreKind::FirstFit)) }
+    }
+
     /// Is this instance on the indexed hot path?
     pub fn is_indexed(&self) -> bool {
         self.core.is_some()
+    }
+
+    /// Is this instance on the class-keyed (interned) index?
+    pub fn is_classed(&self) -> bool {
+        self.core.as_ref().is_some_and(IndexedCore::is_classed)
     }
 }
 

@@ -17,15 +17,22 @@
 //!   per-class per-resource *max-free skyline*: a sound upper bound on
 //!   available capacity used to skip entire classes during rebuilds
 //!   and feasibility pre-checks.
-//! * [`PlacementIndex`] — per-user lazy min-heaps over feasible-server
-//!   keys (Best-Fit H-score or First-Fit index). A cluster mutation
-//!   touches one server, so maintaining all n heaps costs O(n·m) score
-//!   probes + O(log k) pushes for the (few) users the server still
-//!   fits — instead of every subsequent pick paying O(k·m).
-//! * [`BlockedIndex`] — blocked users keyed by their minimum demand
-//!   component, so a completion re-checks only users whose smallest
-//!   requirement fits under the freed server's smallest headroom (a
-//!   necessary condition for fitting), not every blocked user.
+//! * [`PlacementIndex`] — lazy min-heaps over feasible-server keys
+//!   (Best-Fit H-score or First-Fit index), kept per *demand class*
+//!   ([`crate::sched::users::DemandClasses`]): scores depend on the
+//!   demand vector alone, so users sharing a row share one heap. A
+//!   cluster mutation touches one server, so maintaining the heaps
+//!   costs O(C·m) score probes + O(log k) pushes for the (few)
+//!   classes the server still fits — C distinct classes, not n users
+//!   — instead of every subsequent pick paying O(k·m).
+//!   [`PlacementIndex::per_user`] keeps the PR 1 one-heap-per-user
+//!   layout as the reference.
+//! * [`BlockedIndex`] — blocked users grouped by demand class and
+//!   keyed by the class's minimum demand component, so a completion
+//!   re-checks one representative per candidate class (classes whose
+//!   smallest requirement fits under the freed server's smallest
+//!   headroom — a necessary condition for fitting), not every blocked
+//!   user.
 //!
 //! ## Invariants
 //!
@@ -49,6 +56,7 @@
 //!    never skips one that could fit.
 
 use crate::cluster::{Cluster, ResVec, Server, FIT_EPS, MAX_RES};
+use crate::sched::users::{ClassedShareIndex, DemandClasses};
 use crate::sched::{DrainCtx, Pick, UserState};
 use std::cmp::Ordering;
 use std::collections::{BTreeSet, BinaryHeap};
@@ -389,17 +397,31 @@ pub fn score_server(
 
 // --------------------------------------------------------- PlacementIndex
 
-/// Per-user lazy min-heaps over feasible-server keys, maintained
-/// incrementally from place/complete notifications.
+/// Lazy min-heaps over feasible-server keys — one per demand *class*
+/// (§Perf: feasibility and both [`ScoreKind`] keys are functions of
+/// the demand vector alone, so every user of a class shares one heap
+/// and one dirty-rescore; per-event maintenance is O(classes), not
+/// O(users)) — maintained incrementally from place/complete
+/// notifications. [`PlacementIndex::per_user`] disables the interning
+/// (one class per user) to reproduce the PR 1 per-user layout.
 pub struct PlacementIndex {
     kind: ScoreKind,
+    /// Share heaps between users with bit-identical demand rows?
+    intern: bool,
     servers: Option<ServerIndex>,
+    /// Demand class per user (identity map under `per_user`).
+    class_of: Vec<u32>,
+    /// Distinct demand rows, by class id.
+    class_demand: Vec<ResVec>,
+    /// One heap per class.
     heaps: Vec<BinaryHeap<MinEntry>>,
     stamp: Vec<u64>,
     dirty: Vec<u32>,
     is_dirty: Vec<bool>,
+    /// Hoisted H-score ratios, by class id.
     dratio: Vec<[f64; MAX_RES]>,
     k: usize,
+    n_users: usize,
     /// Debug-only guard against reusing one index across different
     /// same-sized clusters/user sets (see [`IndexedCore`] ownership).
     #[cfg(debug_assertions)]
@@ -421,19 +443,42 @@ fn state_fingerprint(cluster: &Cluster, users: &[UserState]) -> f64 {
 }
 
 impl PlacementIndex {
+    /// Class-keyed index (the default): users sharing a demand row
+    /// share heaps and rescores.
     pub fn new(kind: ScoreKind) -> Self {
+        Self::with_interning(kind, true)
+    }
+
+    /// One class per user — the PR 1 per-user layout, kept as the
+    /// scaling baseline (`benches/user_scale.rs`).
+    pub fn per_user(kind: ScoreKind) -> Self {
+        Self::with_interning(kind, false)
+    }
+
+    fn with_interning(kind: ScoreKind, intern: bool) -> Self {
         PlacementIndex {
             kind,
+            intern,
             servers: None,
+            class_of: Vec::new(),
+            class_demand: Vec::new(),
             heaps: Vec::new(),
             stamp: Vec::new(),
             dirty: Vec::new(),
             is_dirty: Vec::new(),
             dratio: Vec::new(),
             k: 0,
+            n_users: 0,
             #[cfg(debug_assertions)]
             fingerprint: 0.0,
         }
+    }
+
+    /// Distinct demand classes the index maintains heaps for
+    /// (testing / diagnostics; equals the user count under
+    /// [`PlacementIndex::per_user`]).
+    pub fn class_count(&self) -> usize {
+        self.class_demand.len()
     }
 
     /// Note that server `l`'s availability changed; the next
@@ -451,7 +496,7 @@ impl PlacementIndex {
     fn ensure_built(&mut self, cluster: &Cluster, users: &[UserState]) {
         if self.servers.is_some()
             && self.k == cluster.len()
-            && self.heaps.len() == users.len()
+            && self.n_users == users.len()
         {
             #[cfg(debug_assertions)]
             debug_assert!(
@@ -464,43 +509,48 @@ impl PlacementIndex {
         }
         let k = cluster.len();
         self.k = k;
+        self.n_users = users.len();
         self.servers = Some(ServerIndex::build(cluster));
         self.stamp = vec![0; k];
         self.is_dirty = vec![false; k];
         self.dirty.clear();
-        self.dratio = users.iter().map(|u| dratio_of(&u.demand)).collect();
-        self.heaps = (0..users.len()).map(|_| BinaryHeap::new()).collect();
+        let classes = if self.intern {
+            DemandClasses::build(users)
+        } else {
+            DemandClasses::identity(users)
+        };
+        self.dratio = classes.rows.iter().map(dratio_of).collect();
+        self.heaps =
+            (0..classes.rows.len()).map(|_| BinaryHeap::new()).collect();
+        self.class_of = classes.class_of;
+        self.class_demand = classes.rows;
         #[cfg(debug_assertions)]
         {
             self.fingerprint = state_fingerprint(cluster, users);
         }
-        for i in 0..users.len() {
-            self.rebuild_user(cluster, users, i);
+        for c in 0..self.class_demand.len() {
+            self.rebuild_class(cluster, c);
         }
     }
 
-    /// Rebuild user `i`'s heap from scratch, visiting only classes the
-    /// skyline says could fit (invariant 3 makes the skip sound).
-    fn rebuild_user(
-        &mut self,
-        cluster: &Cluster,
-        users: &[UserState],
-        i: usize,
-    ) {
-        let mut heap = std::mem::take(&mut self.heaps[i]);
+    /// Rebuild demand class `c`'s heap from scratch, visiting only
+    /// server classes the skyline says could fit (invariant 3 makes
+    /// the skip sound).
+    fn rebuild_class(&mut self, cluster: &Cluster, c: usize) {
+        let mut heap = std::mem::take(&mut self.heaps[c]);
         heap.clear();
-        let demand = &users[i].demand;
+        let demand = self.class_demand[c];
         let sidx = self.servers.as_ref().expect("built");
         for class in sidx.classes() {
-            if !class.may_fit(demand) {
+            if !class.may_fit(&demand) {
                 continue;
             }
             for &l in &class.members {
                 let l = l as usize;
                 if let Some(key) = score_server(
                     self.kind,
-                    demand,
-                    &self.dratio[i],
+                    &demand,
+                    &self.dratio[c],
                     &cluster.servers[l],
                     l,
                 ) {
@@ -512,7 +562,7 @@ impl PlacementIndex {
                 }
             }
         }
-        self.heaps[i] = heap;
+        self.heaps[c] = heap;
     }
 
     /// Flush dirty servers: bump their stamp, fold the new availability
@@ -552,8 +602,15 @@ impl PlacementIndex {
     }
 
     /// Bump `l`'s stamp, fold its availability into the skyline, and
-    /// push fresh entries for every user it still fits.
-    fn rescore_one(&mut self, cluster: &Cluster, users: &[UserState], l: usize) {
+    /// push fresh entries for every demand *class* it still fits —
+    /// O(classes·m) score probes per touched server, however many
+    /// users share those classes.
+    fn rescore_one(
+        &mut self,
+        cluster: &Cluster,
+        _users: &[UserState],
+        l: usize,
+    ) {
         self.stamp[l] += 1;
         self.servers
             .as_mut()
@@ -561,11 +618,11 @@ impl PlacementIndex {
             .note_avail(cluster, l);
         let srv = &cluster.servers[l];
         let stamp = self.stamp[l];
-        for (i, u) in users.iter().enumerate() {
+        for (c, demand) in self.class_demand.iter().enumerate() {
             if let Some(key) =
-                score_server(self.kind, &u.demand, &self.dratio[i], srv, l)
+                score_server(self.kind, demand, &self.dratio[c], srv, l)
             {
-                self.heaps[i].push(MinEntry {
+                self.heaps[c].push(MinEntry {
                     key,
                     idx: l as u32,
                     stamp,
@@ -574,20 +631,21 @@ impl PlacementIndex {
         }
     }
 
-    /// Rebuild any per-user heap that has outgrown its live set.
-    fn compact(&mut self, cluster: &Cluster, users: &[UserState]) {
-        for i in 0..self.heaps.len() {
-            if self.heaps[i].len() > 2 * self.k + 64 {
-                self.rebuild_user(cluster, users, i);
+    /// Rebuild any per-class heap that has outgrown its live set.
+    fn compact(&mut self, cluster: &Cluster, _users: &[UserState]) {
+        for c in 0..self.heaps.len() {
+            if self.heaps[c].len() > 2 * self.k + 64 {
+                self.rebuild_class(cluster, c);
             }
         }
     }
 
-    /// Lowest-key feasible server for user `i` (entry stays in the
-    /// heap), or `None` when nothing fits. Requires a preceding
+    /// Lowest-key feasible server for user `i` (looked up through
+    /// `i`'s demand class; the entry stays in the heap), or `None`
+    /// when nothing fits. Requires a preceding
     /// [`PlacementIndex::refresh`].
     pub fn best_server(&mut self, i: usize) -> Option<usize> {
-        let heap = &mut self.heaps[i];
+        let heap = &mut self.heaps[self.class_of[i] as usize];
         while let Some(top) = heap.peek() {
             if top.stamp == self.stamp[top.idx as usize] {
                 return Some(top.idx as usize);
@@ -605,28 +663,110 @@ impl PlacementIndex {
 
 // ----------------------------------------------------------- IndexedCore
 
+/// The user-selection half of [`IndexedCore`]: the class-keyed
+/// aggregation ([`ClassedShareIndex`], the default) or the per-user
+/// lazy heap ([`ShareHeap`], the PR 1 layout, kept as the scaling
+/// baseline and parity reference). Decision streams are bit-identical
+/// (`tests/engine_parity.rs`).
+enum RankIndex {
+    PerUser(ShareHeap),
+    Classed(ClassedShareIndex),
+}
+
+impl RankIndex {
+    fn mark_dirty(&mut self, u: usize) {
+        match self {
+            RankIndex::PerUser(h) => h.mark_dirty(u),
+            RankIndex::Classed(c) => c.mark_dirty(u),
+        }
+    }
+
+    fn remove(&mut self, u: usize) {
+        match self {
+            RankIndex::PerUser(h) => h.remove(u),
+            RankIndex::Classed(c) => c.remove(u),
+        }
+    }
+
+    fn refresh(&mut self, users: &[UserState], eligible: &[bool]) {
+        match self {
+            RankIndex::PerUser(h) => h.refresh(users, eligible),
+            RankIndex::Classed(c) => c.refresh(users, eligible),
+        }
+    }
+
+    fn peek_min(
+        &mut self,
+        users: &[UserState],
+        eligible: &[bool],
+    ) -> Option<usize> {
+        match self {
+            RankIndex::PerUser(h) => h.peek_min(users, eligible),
+            RankIndex::Classed(c) => c.peek_min(users, eligible),
+        }
+    }
+
+    /// Re-key `u` mid-drain, right after the engine committed its
+    /// placement (the wave's opening refresh already ran, so nothing
+    /// else is stale).
+    fn rekey_after_place(
+        &mut self,
+        u: usize,
+        users: &[UserState],
+        eligible: &[bool],
+    ) {
+        match self {
+            RankIndex::PerUser(h) => {
+                let schedulable = eligible[u] && users[u].pending > 0;
+                h.reinsert(u, users[u].share_key(), schedulable);
+            }
+            RankIndex::Classed(c) => c.resync(u, users, eligible),
+        }
+    }
+}
+
 /// The shared indexed decision core embedded in the DRFH policies:
-/// [`ShareHeap`] + [`PlacementIndex`] + the blocked-drop protocol.
+/// a user-selection index ([`ClassedShareIndex`] by default,
+/// [`ShareHeap`] under [`IndexedCore::per_user`]) + [`PlacementIndex`]
+/// + the blocked-drop protocol.
 /// Best-Fit and First-Fit differ only in the [`ScoreKind`] they
 /// construct this with, so the parity-critical plumbing (refresh
 /// ordering, the `remove`-on-Blocked step, the notification wiring)
 /// lives in exactly one place.
 ///
 /// Ownership: a core (and therefore a policy instance) serves ONE
-/// cluster + user set; the demand ratios and heaps snapshot them on
-/// first use. Debug builds assert against reuse with a different
-/// same-sized cluster/user set.
+/// cluster + user set; the demand ratios, classes and heaps snapshot
+/// them on first use. Debug builds assert against reuse with a
+/// different same-sized cluster/user set.
 pub struct IndexedCore {
-    share: ShareHeap,
+    share: RankIndex,
     servers: PlacementIndex,
 }
 
 impl IndexedCore {
+    /// Class-keyed core (the default): user selection aggregates over
+    /// `(dom_delta, weight)` groups and placement heaps are shared per
+    /// demand class, so per-event work scales with distinct classes.
     pub fn new(kind: ScoreKind) -> Self {
         IndexedCore {
-            share: ShareHeap::new(),
+            share: RankIndex::Classed(ClassedShareIndex::new()),
             servers: PlacementIndex::new(kind),
         }
+    }
+
+    /// The PR 1 per-user layout ([`ShareHeap`] + one placement heap
+    /// per user) — the scaling baseline of `benches/user_scale.rs`
+    /// and the near-parity reference for the classed path.
+    pub fn per_user(kind: ScoreKind) -> Self {
+        IndexedCore {
+            share: RankIndex::PerUser(ShareHeap::new()),
+            servers: PlacementIndex::per_user(kind),
+        }
+    }
+
+    /// Is this core on the class-keyed path?
+    pub fn is_classed(&self) -> bool {
+        matches!(self.share, RankIndex::Classed(_))
     }
 
     /// One progressive-filling decision, decision-identical to
@@ -674,11 +814,11 @@ impl IndexedCore {
             match self.servers.best_server(u) {
                 Some(l) => {
                     ctx.place(u, l);
-                    let users = ctx.users();
-                    let schedulable =
-                        ctx.eligible()[u] && users[u].pending > 0;
-                    let key = users[u].share_key();
-                    self.share.reinsert(u, key, schedulable);
+                    self.share.rekey_after_place(
+                        u,
+                        ctx.users(),
+                        ctx.eligible(),
+                    );
                     self.servers.rescore_server(ctx.cluster(), ctx.users(), l);
                 }
                 None => {
@@ -720,32 +860,77 @@ impl Ord for F64Ord {
     }
 }
 
-/// Blocked users keyed by their minimum demand component, so a freed
-/// server re-checks only users that could possibly fit (invariant 4).
+/// Blocked users grouped by demand class and keyed by the class's
+/// minimum demand component, so a freed server re-checks only classes
+/// that could possibly fit (invariant 4) — and, since the exact
+/// [`crate::sched::Scheduler::can_fit`] verdict depends on the user
+/// only through its demand class, one probe per candidate class
+/// decides every blocked member at once
+/// ([`BlockedIndex::candidate_classes`] /
+/// [`BlockedIndex::class_members`]).
+///
+/// [`BlockedIndex::new`] builds the degenerate one-class-per-user
+/// layout (the seed semantics); the engine constructs the shared
+/// layout from the trace's interned
+/// [`crate::workload::DemandTable`] via [`BlockedIndex::classed`].
 pub struct BlockedIndex {
+    /// Fit key (`min_r demand_r`) per class.
     key: Vec<f64>,
+    /// Demand class per user.
+    class_of: Vec<u32>,
+    /// Blocked members per class.
+    members: Vec<BTreeSet<u32>>,
+    /// Classes with at least one blocked member, by fit key.
     set: BTreeSet<(F64Ord, u32)>,
     flags: Vec<bool>,
+    len: usize,
 }
 
 impl BlockedIndex {
-    /// `fit_key[u]` = `min_r demand_ur` — the necessary-condition key.
+    /// Per-user layout: `fit_key[u]` = `min_r demand_ur` — the
+    /// necessary-condition key — with each user its own class.
     pub fn new(fit_key: Vec<f64>) -> Self {
         let n = fit_key.len();
-        BlockedIndex { key: fit_key, set: BTreeSet::new(), flags: vec![false; n] }
+        Self::classed((0..n as u32).collect(), fit_key)
+    }
+
+    /// Class-keyed layout: `class_key[c]` = `min_r demand_cr` for each
+    /// interned demand row, `class_of[u]` the row of user `u`.
+    pub fn classed(class_of: Vec<u32>, class_key: Vec<f64>) -> Self {
+        let n = class_of.len();
+        let nc = class_key.len();
+        debug_assert!(class_of.iter().all(|&c| (c as usize) < nc));
+        BlockedIndex {
+            key: class_key,
+            class_of,
+            members: vec![BTreeSet::new(); nc],
+            set: BTreeSet::new(),
+            flags: vec![false; n],
+            len: 0,
+        }
     }
 
     pub fn insert(&mut self, u: usize) {
         if !self.flags[u] {
             self.flags[u] = true;
-            self.set.insert((F64Ord(self.key[u]), u as u32));
+            self.len += 1;
+            let c = self.class_of[u] as usize;
+            if self.members[c].is_empty() {
+                self.set.insert((F64Ord(self.key[c]), c as u32));
+            }
+            self.members[c].insert(u as u32);
         }
     }
 
     pub fn remove(&mut self, u: usize) {
         if self.flags[u] {
             self.flags[u] = false;
-            self.set.remove(&(F64Ord(self.key[u]), u as u32));
+            self.len -= 1;
+            let c = self.class_of[u] as usize;
+            self.members[c].remove(&(u as u32));
+            if self.members[c].is_empty() {
+                self.set.remove(&(F64Ord(self.key[c]), c as u32));
+            }
         }
     }
 
@@ -754,11 +939,11 @@ impl BlockedIndex {
     }
 
     pub fn len(&self) -> usize {
-        self.set.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.set.is_empty()
+        self.len == 0
     }
 
     /// Blocked users whose fit key is at most `free_min` — a superset
@@ -768,9 +953,30 @@ impl BlockedIndex {
         &self,
         free_min: f64,
     ) -> impl Iterator<Item = usize> + '_ {
+        self.candidate_classes(free_min)
+            .flat_map(move |c| self.class_members(c))
+    }
+
+    /// Demand classes with a blocked member whose fit key is at most
+    /// `free_min` — the per-class version of
+    /// [`BlockedIndex::candidates`]: probe
+    /// [`crate::sched::Scheduler::can_fit`] on any one member and the
+    /// verdict covers the whole class.
+    pub fn candidate_classes(
+        &self,
+        free_min: f64,
+    ) -> impl Iterator<Item = usize> + '_ {
         self.set
             .range(..=(F64Ord(free_min), u32::MAX))
-            .map(|&(_, u)| u as usize)
+            .map(|&(_, c)| c as usize)
+    }
+
+    /// Blocked members of class `c`, ascending by user id.
+    pub fn class_members(
+        &self,
+        c: usize,
+    ) -> impl Iterator<Item = usize> + '_ {
+        self.members[c].iter().map(|&u| u as usize)
     }
 }
 

@@ -58,31 +58,44 @@
 //!
 //! ## §Perf: the indexed hot path
 //!
-//! The DRFH policies ship two decision paths with *bit-identical*
+//! The DRFH policies ship three decision paths with *bit-identical*
 //! outputs (asserted by `tests/engine_parity.rs` on randomized traces
-//! and by the unit parities in [`index`]):
+//! and by the unit parities in [`index`] and [`users`]):
 //!
 //! * the **naive** path — `min_share_user` O(n) + `best_server` /
 //!   `first_server` O(k·m) linear scans, kept as the reference and
 //!   constructed via `BestFitDrfh::naive()` / `FirstFitDrfh::naive()`;
-//! * the **indexed** path (default) — [`index::ShareHeap`] +
-//!   [`index::PlacementIndex`], maintained incrementally from the
-//!   engine notifications, making a pick O(log n + log k) amortized
-//!   and an event O(n·m) instead of every pick paying O(n + k·m).
+//! * the **per-user indexed** path — [`index::ShareHeap`] +
+//!   one [`index::PlacementIndex`] heap per user, maintained
+//!   incrementally from the engine notifications, making a pick
+//!   O(log n + log k) amortized (`BestFitDrfh::per_user()` /
+//!   `FirstFitDrfh::per_user()`, the PR 1 layout);
+//! * the **class-keyed** path (default) — user selection aggregated
+//!   over `(dom_delta, weight)` groups ([`users::ClassedShareIndex`];
+//!   builds whose groups do not aggregate fall back to an embedded
+//!   per-user heap, so the worst case is the PR 1 layout) and
+//!   placement/blocked structures shared per interned demand
+//!   class ([`users::DemandClasses`]), so per-event maintenance
+//!   scales with *distinct demand classes* rather than user count —
+//!   the difference between O(n) and O(C) work per placement when n
+//!   runs to the millions and C stays at tens
+//!   (`benches/user_scale.rs`).
 //!
 //! Methodology: `benches/engine_scale.rs` times full simulations on
 //! the Fig. 5 configuration (k = 2,000 Google-distribution servers,
-//! saturated 24 h-style trace) for both paths, reports placement
-//! throughput and speedups (warning loudly below the ≥5× end-to-end
-//! target), and writes `BENCH_engine.json`; decision parity is
-//! enforced separately (placement-count guard in the bench, full
-//! pick-stream equality in `tests/engine_parity.rs`) so speed never
-//! buys semantic drift.
+//! saturated 24 h-style trace) against the naive path and
+//! `benches/user_scale.rs` sweeps the user count at fixed class count
+//! against the per-user path, reporting placement throughput and
+//! speedups and writing `BENCH_engine.json` / `BENCH_users.json`;
+//! decision parity is enforced separately (placement-count guards in
+//! the benches, full pick-stream equality in
+//! `tests/engine_parity.rs`) so speed never buys semantic drift.
 
 pub mod best_fit;
 pub mod first_fit;
 pub mod index;
 pub mod slots;
+pub mod users;
 pub mod xla;
 
 pub use best_fit::BestFitDrfh;
@@ -212,6 +225,13 @@ pub trait Scheduler {
 
     /// Could one task of `user` be placed on `server` right now? Used
     /// by the engine to unblock users when `server` frees capacity.
+    ///
+    /// Contract: the verdict may depend on `user` only through its
+    /// demand vector (every in-tree policy checks either
+    /// `server.fits(demand)` or a user-independent slot count). The
+    /// engine relies on this to probe one representative per blocked
+    /// demand class instead of every blocked user
+    /// ([`index::BlockedIndex::candidate_classes`]).
     fn can_fit(
         &self,
         cluster: &Cluster,

@@ -1,0 +1,546 @@
+//! §Perf: class-keyed user state — per-event scheduler work that
+//! scales with *distinct demand classes*, not user count.
+//!
+//! Google-like traces draw per-user demands from a handful of profile
+//! classes ([`crate::workload::DemandTable`] proves it at trace-build
+//! time), and the PS-DSF observation (Khamse-Ashari et al., 2017)
+//! is that users with identical demand vectors are interchangeable to
+//! the scheduler except for *how much they are currently running*.
+//! This module exploits that for the DRFH progressive-filling
+//! selection of paper Sec. V-B:
+//!
+//! * [`DemandClasses`] interns the scheduler-visible demand rows by
+//!   exact bit pattern into dense `u32` class ids (the scheduler-side
+//!   sibling of [`crate::workload::DemandTable`], which interns
+//!   [`crate::workload::UserSpec`] rows at trace build). Everything
+//!   derived from a demand row alone — Best-Fit H-score ratios,
+//!   feasibility, blocked-index fit keys — is computed once per class
+//!   and shared ([`crate::sched::index::PlacementIndex`] and
+//!   [`crate::sched::index::BlockedIndex`] key their structures on
+//!   these ids).
+//!
+//! * [`ClassedShareIndex`] replaces the per-user lazy
+//!   [`crate::sched::index::ShareHeap`] for user selection. Users are
+//!   grouped by the *pair* `(dom_delta, effective_weight)` (bit-exact
+//!   interning): inside such a group the weighted share key
+//!   `share_key = (running · dom_delta) / effective_weight` is a
+//!   strictly increasing function of the integer `running`, so the
+//!   group's lowest-share user is simply its `(running, user)`
+//!   minimum — an exact, eagerly maintained `BTreeSet` ordered by
+//!   small integers, no float heap churn. A pick then compares one
+//!   candidate per *group* (a handful at trace scale) instead of
+//!   popping through a heap with one entry per *user*.
+//!
+//! ## Decision parity
+//!
+//! The selection is bit-identical to [`crate::sched::min_share_user`]
+//! (and therefore to the per-user `ShareHeap` path) under the engine
+//! invariants that already hold everywhere:
+//!
+//! 1. `dom_share == running as f64 * dom_delta` bit-exactly (the
+//!    engine recomputes it on every transition; asserted by
+//!    `tests/engine_parity.rs::dom_share_stays_exact_over_long_runs`);
+//! 2. demands are strictly positive and pool capacities positive
+//!    ([`crate::workload::Trace::validate`]), so `dom_delta` is a
+//!    finite positive number, and weights are `>= 0` **and finite**
+//!    (also validate-enforced), so
+//!    [`crate::sched::effective_weight`] is finite positive;
+//!    degenerate constants outside those bounds collapse the group to
+//!    index order, which is exactly the `(key, index)` tie-break when
+//!    every key is the same constant;
+//! 3. running counts stay far below 2^52, so distinct counts map to
+//!    distinct key floats (monotonicity survives rounding).
+//!
+//! Groups whose constants violate (2) (possible only in hand-built
+//! unit fixtures) degrade to index-ordered groups; the randomized
+//! parity suites in `tests/engine_parity.rs` pin the classed path
+//! against both the per-user index and the naive scans, including
+//! zero-weight mixes.
+
+use crate::cluster::ResVec;
+use crate::sched::index::ShareHeap;
+use crate::sched::{effective_weight, UserState};
+use std::collections::{BTreeSet, HashMap};
+
+/// Interned demand rows over the scheduler's `UserState` table: dense
+/// `u32` class ids keyed by the exact bit pattern of the demand
+/// vector, so ulp-different (or `-0.0` vs `0.0`) rows never alias and
+/// per-class constants are bit-identical to their per-user
+/// counterparts.
+#[derive(Clone, Debug, Default)]
+pub struct DemandClasses {
+    /// Class id per user.
+    pub class_of: Vec<u32>,
+    /// Distinct demand rows, indexed by class id.
+    pub rows: Vec<ResVec>,
+}
+
+impl DemandClasses {
+    /// Intern `users`' demand rows (the one shared bit-exact
+    /// interning implementation, [`crate::workload::intern_rows`]).
+    pub fn build(users: &[UserState]) -> Self {
+        let (rows, class_of) =
+            crate::workload::intern_rows(users.iter().map(|u| &u.demand));
+        DemandClasses { class_of, rows }
+    }
+
+    /// One class per user (no sharing) — the per-user reference
+    /// layout, kept so the legacy path is a constructor flag away.
+    pub fn identity(users: &[UserState]) -> Self {
+        DemandClasses {
+            class_of: (0..users.len() as u32).collect(),
+            rows: users.iter().map(|u| u.demand).collect(),
+        }
+    }
+
+    /// Number of distinct classes.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+// ----------------------------------------------------- share grouping
+
+/// Sentinel: user currently has no entry in its group's set.
+const NOT_STORED: u32 = u32::MAX;
+
+/// One `(dom_delta, effective_weight)` aggregation group: every member
+/// shares the key constants, so the member order by `(run_key, user)`
+/// IS the order by `(share_key, user)`.
+struct ShareGroup {
+    dom_delta: f64,
+    eff_weight: f64,
+    /// Schedulable members, ordered by `(run_key, user id)`.
+    members: BTreeSet<(u32, u32)>,
+}
+
+impl ShareGroup {
+    /// The integer ordering key standing in for `share_key`. When the
+    /// constants are degenerate (non-positive or non-finite
+    /// `dom_delta`, or a non-finite effective weight — impossible on
+    /// validated traces) every member's true key collapses to the
+    /// same constant, so the key here collapses too and the group
+    /// orders by user id alone, matching the `(key, index)` tie-break.
+    #[inline]
+    fn run_key(&self, running: usize) -> u32 {
+        if self.dom_delta > 0.0
+            && self.dom_delta.is_finite()
+            && self.eff_weight.is_finite()
+        {
+            debug_assert!((running as u64) < NOT_STORED as u64);
+            running as u32
+        } else {
+            0
+        }
+    }
+
+    /// The exact weighted share key of a member running `r` tasks —
+    /// the same arithmetic, in the same order, as
+    /// [`UserState::share_key`] under the engine's
+    /// `dom_share = running * dom_delta` invariant.
+    #[inline]
+    fn share_key(&self, r: u32) -> f64 {
+        (r as f64 * self.dom_delta) / self.eff_weight
+    }
+}
+
+/// Class-keyed progressive-filling index: the lowest weighted
+/// dominant-share schedulable user, maintained per
+/// `(dom_delta, effective_weight)` group.
+///
+/// Drop-in replacement for the per-user
+/// [`crate::sched::index::ShareHeap`] inside
+/// [`crate::sched::index::IndexedCore`]; the module docs state the
+/// preconditions under which the two are decision-identical (all hold
+/// on validated traces).
+///
+/// A pick compares one candidate per *group*, so the aggregation only
+/// pays off when groups hold several users each. The build therefore
+/// self-selects: when interning finds fewer than ~2 users per group
+/// (e.g. continuously distributed per-user weights), the instance
+/// falls back to an embedded [`ShareHeap`] — the decision stream is
+/// bit-identical either way, and the worst case is exactly the
+/// per-user layout rather than an O(#groups) = O(n) scan per pick.
+///
+/// Like [`crate::sched::index::PlacementIndex`], an instance snapshots
+/// one user set on first use: demand-derived constants and weights are
+/// read once, at build.
+#[derive(Default)]
+pub struct ClassedShareIndex {
+    built: bool,
+    group_of: Vec<u32>,
+    groups: Vec<ShareGroup>,
+    /// `run_key` under which each user is currently stored
+    /// (`NOT_STORED` when absent — blocked, ineligible, or drained).
+    stored: Vec<u32>,
+    dirty: Vec<u32>,
+    is_dirty: Vec<bool>,
+    /// Per-user fallback when grouping does not aggregate (see the
+    /// struct docs); `Some` disables the group machinery entirely.
+    fallback: Option<ShareHeap>,
+}
+
+impl ClassedShareIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of aggregation groups (testing / diagnostics; 0 when
+    /// the instance fell back to the per-user heap).
+    pub fn group_count(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Did the build fall back to the embedded per-user heap?
+    pub fn is_fallback(&self) -> bool {
+        self.fallback.is_some()
+    }
+
+    fn rebuild(&mut self, users: &[UserState]) {
+        let n = users.len();
+        self.groups.clear();
+        self.fallback = None;
+        self.group_of = Vec::with_capacity(n);
+        let mut seen: HashMap<(u64, u64), u32> = HashMap::new();
+        for u in users {
+            let w = effective_weight(u.weight);
+            let key = (u.dom_delta.to_bits(), w.to_bits());
+            let g = *seen.entry(key).or_insert_with(|| {
+                self.groups.push(ShareGroup {
+                    dom_delta: u.dom_delta,
+                    eff_weight: w,
+                    members: BTreeSet::new(),
+                });
+                (self.groups.len() - 1) as u32
+            });
+            self.group_of.push(g);
+        }
+        if self.groups.len() * 2 > n {
+            // fewer than ~2 users per group: aggregation loses to the
+            // per-user heap's O(log n) — use it directly (ShareHeap
+            // starts with every user dirty, mirroring the build)
+            self.groups.clear();
+            self.fallback = Some(ShareHeap::new());
+        }
+        self.stored = vec![NOT_STORED; n];
+        self.is_dirty = vec![true; n];
+        self.dirty = (0..n as u32).collect();
+        self.built = true;
+    }
+
+    /// Note that `u`'s key or schedulability may have changed; the
+    /// next [`ClassedShareIndex::refresh`] re-syncs it.
+    pub fn mark_dirty(&mut self, u: usize) {
+        if !self.built {
+            return; // the initial build marks every user dirty
+        }
+        if u >= self.stored.len() {
+            // user set grew under us — resnapshot at the next refresh
+            self.built = false;
+            return;
+        }
+        if let Some(heap) = &mut self.fallback {
+            heap.mark_dirty(u);
+            return;
+        }
+        if !self.is_dirty[u] {
+            self.is_dirty[u] = true;
+            self.dirty.push(u as u32);
+        }
+    }
+
+    /// Drop `u` from its group (blocked-user protocol); it re-enters
+    /// via [`ClassedShareIndex::mark_dirty`] + refresh.
+    pub fn remove(&mut self, u: usize) {
+        if !self.built || u >= self.stored.len() {
+            return;
+        }
+        if let Some(heap) = &mut self.fallback {
+            heap.remove(u);
+            return;
+        }
+        if self.stored[u] != NOT_STORED {
+            let g = self.group_of[u] as usize;
+            self.groups[g].members.remove(&(self.stored[u], u as u32));
+            self.stored[u] = NOT_STORED;
+        }
+    }
+
+    /// Re-sync `u` against the current engine state — the classed
+    /// equivalent of `ShareHeap::reinsert`, used mid-drain right after
+    /// a commit (and by [`ClassedShareIndex::refresh`] for each dirty
+    /// user).
+    pub fn resync(
+        &mut self,
+        u: usize,
+        users: &[UserState],
+        eligible: &[bool],
+    ) {
+        debug_assert!(self.built && u < self.stored.len());
+        let schedulable = eligible[u] && users[u].pending > 0;
+        if let Some(heap) = &mut self.fallback {
+            heap.reinsert(u, users[u].share_key(), schedulable);
+            return;
+        }
+        let g = self.group_of[u] as usize;
+        let desired = if schedulable {
+            self.groups[g].run_key(users[u].running)
+        } else {
+            NOT_STORED
+        };
+        if desired == self.stored[u] {
+            return;
+        }
+        if self.stored[u] != NOT_STORED {
+            self.groups[g].members.remove(&(self.stored[u], u as u32));
+        }
+        if desired != NOT_STORED {
+            self.groups[g].members.insert((desired, u as u32));
+        }
+        self.stored[u] = desired;
+    }
+
+    /// Flush dirty users (building the group table on first use).
+    pub fn refresh(&mut self, users: &[UserState], eligible: &[bool]) {
+        if !self.built || self.group_of.len() != users.len() {
+            self.rebuild(users);
+        }
+        if let Some(heap) = &mut self.fallback {
+            heap.refresh(users, eligible);
+            return;
+        }
+        while let Some(u) = self.dirty.pop() {
+            let u = u as usize;
+            self.is_dirty[u] = false;
+            self.resync(u, users, eligible);
+        }
+    }
+
+    /// Current minimum-key schedulable user: the minimum over one
+    /// candidate per group — O(#groups), not O(#users) (or the
+    /// embedded heap's pop when the build fell back). Call
+    /// [`ClassedShareIndex::refresh`] first.
+    pub fn peek_min(
+        &mut self,
+        users: &[UserState],
+        eligible: &[bool],
+    ) -> Option<usize> {
+        if let Some(heap) = &mut self.fallback {
+            return heap.peek_min(users, eligible);
+        }
+        let mut best: Option<(f64, u32)> = None;
+        for grp in &self.groups {
+            let Some(&(r, u)) = grp.members.first() else {
+                continue;
+            };
+            debug_assert!(
+                eligible[u as usize] && users[u as usize].pending > 0,
+                "stale classed entry for user {u}"
+            );
+            let key = grp.share_key(r);
+            let better = match best {
+                None => true,
+                Some((bk, bu)) => {
+                    key.total_cmp(&bk).then_with(|| u.cmp(&bu)).is_lt()
+                }
+            };
+            if better {
+                best = Some((key, u));
+            }
+        }
+        best.map(|(_, u)| u as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::min_share_user;
+    use crate::util::Pcg32;
+
+    fn mk_user(
+        demand: ResVec,
+        weight: f64,
+        pending: usize,
+        running: usize,
+        dom_delta: f64,
+    ) -> UserState {
+        UserState {
+            demand,
+            weight,
+            pending,
+            running,
+            dom_share: running as f64 * dom_delta,
+            usage: ResVec::zeros(2),
+            dom_delta,
+        }
+    }
+
+    #[test]
+    fn demand_classes_intern_by_bits() {
+        let d = ResVec::cpu_mem(0.2, 0.3);
+        let users = vec![
+            mk_user(d, 1.0, 1, 0, 0.01),
+            mk_user(ResVec::cpu_mem(0.4, 0.1), 1.0, 1, 0, 0.02),
+            mk_user(d, 2.0, 1, 0, 0.01),
+        ];
+        let c = DemandClasses::build(&users);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.class_of[0], c.class_of[2]);
+        assert_ne!(c.class_of[0], c.class_of[1]);
+        assert_eq!(c.rows[c.class_of[1] as usize], ResVec::cpu_mem(0.4, 0.1));
+        let id = DemandClasses::identity(&users);
+        assert_eq!(id.len(), 3);
+        assert_eq!(id.class_of, vec![0, 1, 2]);
+        assert!(!c.is_empty());
+    }
+
+    /// The classed index agrees with the linear scan through
+    /// randomized churn of running counts, pending work, eligibility
+    /// and blocking — with many users per (class, weight) group and a
+    /// zero-weight group in the mix. State is mutated under the engine
+    /// invariant `dom_share = running * dom_delta`.
+    #[test]
+    fn classed_index_matches_linear_scan() {
+        let deltas = [0.01f64, 0.02, 0.05];
+        let weights = [1.0f64, 2.0, 0.0];
+        let mut rng = Pcg32::seeded(909);
+        let n = 18;
+        let mut users: Vec<UserState> = (0..n)
+            .map(|i| {
+                let d = deltas[i % deltas.len()];
+                mk_user(
+                    ResVec::cpu_mem(d * 10.0, d * 5.0),
+                    weights[(i / deltas.len()) % weights.len()],
+                    rng.below(3),
+                    rng.below(6),
+                    d,
+                )
+            })
+            .collect();
+        for u in users.iter_mut() {
+            u.dom_share = u.running as f64 * u.dom_delta;
+        }
+        let mut eligible = vec![true; n];
+        let mut idx = ClassedShareIndex::new();
+        for step in 0..600 {
+            idx.refresh(&users, &eligible);
+            let got = idx.peek_min(&users, &eligible);
+            let want = min_share_user(&users, &eligible);
+            assert_eq!(got, want, "step {step}");
+            let u = rng.below(n);
+            match rng.below(4) {
+                0 => {
+                    users[u].running = rng.below(8);
+                    users[u].dom_share =
+                        users[u].running as f64 * users[u].dom_delta;
+                    idx.mark_dirty(u);
+                }
+                1 => {
+                    users[u].pending = rng.below(3);
+                    idx.mark_dirty(u);
+                }
+                2 if eligible[u] => {
+                    // block u (engine: Pick::Blocked)
+                    eligible[u] = false;
+                    idx.remove(u);
+                }
+                _ => {
+                    // unblock u (engine: on_ready)
+                    eligible[u] = true;
+                    idx.mark_dirty(u);
+                }
+            }
+        }
+        // 3 deltas x 2 *effective* weights: weight 0.0 goes through
+        // the guarded fallback and lands in the weight-1.0 groups
+        assert_eq!(idx.group_count(), 6);
+        assert!(!idx.is_fallback(), "18 users / 6 groups must aggregate");
+    }
+
+    /// Continuously distributed per-user weights defeat grouping: the
+    /// build must fall back to the embedded per-user heap (instead of
+    /// an O(n) group scan per pick) and stay bit-identical to the
+    /// linear scan through the same churn protocol.
+    #[test]
+    fn distinct_weights_fall_back_to_heap() {
+        let mut rng = Pcg32::seeded(911);
+        let n = 12;
+        let mut users: Vec<UserState> = (0..n)
+            .map(|i| {
+                mk_user(
+                    ResVec::cpu_mem(0.1, 0.2),
+                    1.0 + i as f64 * 0.137, // all distinct
+                    1 + rng.below(2),
+                    rng.below(5),
+                    0.03,
+                )
+            })
+            .collect();
+        let mut eligible = vec![true; n];
+        let mut idx = ClassedShareIndex::new();
+        idx.refresh(&users, &eligible);
+        assert!(idx.is_fallback(), "12 users / 12 groups must fall back");
+        assert_eq!(idx.group_count(), 0);
+        for step in 0..300 {
+            idx.refresh(&users, &eligible);
+            assert_eq!(
+                idx.peek_min(&users, &eligible),
+                min_share_user(&users, &eligible),
+                "step {step}"
+            );
+            let u = rng.below(n);
+            match rng.below(3) {
+                0 => {
+                    users[u].running = rng.below(7);
+                    users[u].dom_share =
+                        users[u].running as f64 * users[u].dom_delta;
+                    idx.mark_dirty(u);
+                }
+                1 if eligible[u] => {
+                    eligible[u] = false;
+                    idx.remove(u);
+                }
+                _ => {
+                    eligible[u] = true;
+                    idx.mark_dirty(u);
+                }
+            }
+        }
+    }
+
+    /// Mid-drain resync (the reinsert-equivalent) keeps the index
+    /// exact without a dirty-list round trip.
+    #[test]
+    fn resync_updates_in_place() {
+        let d = ResVec::cpu_mem(0.1, 0.1);
+        let mut users = vec![
+            mk_user(d, 1.0, 2, 0, 0.01),
+            mk_user(d, 1.0, 1, 1, 0.01),
+        ];
+        let eligible = vec![true, true];
+        let mut idx = ClassedShareIndex::new();
+        idx.refresh(&users, &eligible);
+        assert_eq!(idx.peek_min(&users, &eligible), Some(0));
+        // engine commits a placement for user 0
+        users[0].running = 1;
+        users[0].pending = 1;
+        users[0].dom_share = 0.01;
+        idx.resync(0, &users, &eligible);
+        // tie at running = 1 -> lowest index
+        assert_eq!(idx.peek_min(&users, &eligible), Some(0));
+        // and one more: user 0 now runs more than user 1
+        users[0].running = 2;
+        users[0].dom_share = 0.02;
+        idx.resync(0, &users, &eligible);
+        assert_eq!(idx.peek_min(&users, &eligible), Some(1));
+        // draining user 1's pending work removes it
+        users[1].pending = 0;
+        idx.resync(1, &users, &eligible);
+        assert_eq!(idx.peek_min(&users, &eligible), Some(0));
+    }
+}

@@ -30,12 +30,14 @@
 //!
 //! * **Event queue** ([`SimOpts::queue`]): the engine drives a
 //!   [`wheel::SimQueue`] — a calendar-style timer wheel
-//!   ([`wheel::TimerWheel`], the default) or the seed's `BinaryHeap`
-//!   ([`wheel::HeapQueue`], the naive parity reference). Both drain
-//!   in the identical total `(time, seq)` order, so every scheduling
-//!   decision and every derived float is bit-identical across queue
-//!   choices; the wheel replaces O(log N) cache-hostile heap walks
-//!   with O(1) bucket pushes and batched bucket sorts.
+//!   ([`wheel::TimerWheel`], the default; [`QueueKind::Auto`] tunes
+//!   its geometry to the trace's observed duration distribution) or
+//!   the seed's `BinaryHeap` ([`wheel::HeapQueue`], the naive parity
+//!   reference). All drain in the identical total `(time, seq)`
+//!   order, so every scheduling decision and every derived float is
+//!   bit-identical across queue choices; the wheel replaces O(log N)
+//!   cache-hostile heap walks with O(1) bucket pushes and batched
+//!   bucket sorts.
 //!
 //! * **Task arena** ([`TaskArena`]): per-job state lives in flat
 //!   structure-of-arrays columns (u32 cursors/countdowns), task
@@ -71,26 +73,31 @@
 //! ## §Perf: indexed hot path
 //!
 //! The engine feeds the policies' incremental indexes
-//! (`sched::index`) through three notifications — `on_place` after a
-//! commit, `on_complete`/`on_free` after a release, and `on_ready`
-//! when a user (re-)enters the schedulable set — and keeps its own
-//! blocked set in a `sched::index::BlockedIndex`: a completion on
-//! server `l` re-checks only the blocked users whose minimum demand
-//! component fits under `l`'s smallest per-resource headroom (a
-//! necessary condition for fitting), instead of scanning every
-//! blocked user. The candidate set is a provable superset of the
-//! users the old linear scan would have unblocked and each candidate
-//! still passes the exact `Scheduler::can_fit` check, so the
-//! unblocked *set* — and therefore every subsequent decision — is
-//! identical (asserted end-to-end by `tests/engine_parity.rs`).
+//! (`sched::index`, `sched::users`) through three notifications —
+//! `on_place` after a commit, `on_complete`/`on_free` after a
+//! release, and `on_ready` when a user (re-)enters the schedulable
+//! set — and keeps its own blocked set in a class-keyed
+//! `sched::index::BlockedIndex` built over the trace's interned
+//! demand rows ([`crate::workload::DemandTable`]): a completion on
+//! server `l` re-checks only the blocked demand *classes* whose
+//! minimum demand component fits under `l`'s smallest per-resource
+//! headroom (a necessary condition for fitting), with one exact
+//! `Scheduler::can_fit` probe per candidate class deciding every
+//! blocked member of that class (the `can_fit` contract: verdicts
+//! depend on the user only through its demand). The candidate set is
+//! a provable superset of the users the seed's linear scan would
+//! have unblocked, so the unblocked *set* — and therefore every
+//! subsequent decision — is identical (asserted end-to-end by
+//! `tests/engine_parity.rs`).
 
 use crate::cluster::{Cluster, ResVec};
+use crate::metrics::shares::ShareSketch;
 use crate::metrics::{
     JobRecord, JobStats, MetricsMode, TimeSeries, UserTaskCounts,
 };
 use crate::sched::index::BlockedIndex;
 use crate::sched::{DrainCtx, Scheduler, UserState};
-use crate::sim::wheel::{self, EventQueue, QueueKind, SimQueue};
+use crate::sim::wheel::{self, EventQueue, QueueKind, SimQueue, TimerWheel};
 use crate::workload::{TaskArena, Trace};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -108,14 +115,25 @@ pub struct SimOpts {
     /// 2,000-server runs don't and save the memory).
     pub track_user_series: bool,
     /// Event-queue implementation (§Perf): the timer wheel by
-    /// default; [`QueueKind::Heap`] is the seed's binary heap, kept
-    /// as the naive parity reference. Decision streams are
-    /// bit-identical either way (`tests/engine_parity.rs`).
+    /// default; [`QueueKind::Auto`] re-tunes the wheel geometry from
+    /// the trace's observed task-duration distribution
+    /// ([`wheel::auto_geometry`] — perf-only, the drain order is
+    /// geometry-independent); [`QueueKind::Heap`] is the seed's
+    /// binary heap, kept as the naive parity reference. Decision
+    /// streams are bit-identical in every case
+    /// (`tests/engine_parity.rs`).
     pub queue: QueueKind,
     /// Metrics retention (§Perf): [`MetricsMode::Full`] keeps every
     /// sample and job record; [`MetricsMode::Streaming`] bounds
     /// memory for trace-scale runs.
     pub metrics: MetricsMode,
+    /// Per-user dominant-share *sketches* (§Perf): `Some(budget)`
+    /// maintains one [`ShareSketch`] per user — Welford moments, P²
+    /// median/p90 and a trajectory decimated to at most `budget`
+    /// points (0 = exact retention) — fed at every sample tick. The
+    /// bounded-memory alternative to [`SimOpts::track_user_series`]
+    /// for Fig. 4-style trajectories at large user counts.
+    pub share_sketch: Option<usize>,
 }
 
 impl Default for SimOpts {
@@ -126,6 +144,7 @@ impl Default for SimOpts {
             track_user_series: false,
             queue: QueueKind::Wheel,
             metrics: MetricsMode::Full,
+            share_sketch: None,
         }
     }
 }
@@ -138,6 +157,9 @@ pub struct SimReport {
     pub mem_util: TimeSeries,
     /// Per-user global dominant share over time (when tracked).
     pub user_dom_share: Vec<TimeSeries>,
+    /// Per-user dominant-share sketches (when
+    /// [`SimOpts::share_sketch`] is set; empty otherwise).
+    pub share_sketches: Vec<ShareSketch>,
     /// Per-user CPU / memory share of the pool over time (when tracked).
     pub user_cpu_share: Vec<TimeSeries>,
     pub user_mem_share: Vec<TimeSeries>,
@@ -251,9 +273,10 @@ pub struct Simulation<'a> {
 
     eligible: Vec<bool>,
     blocked: BlockedIndex,
-    /// Scratch buffer for unblock candidates (avoids per-completion
-    /// allocation).
+    /// Scratch buffers for unblock candidates (users / demand
+    /// classes), avoiding per-completion allocation.
     scratch_unblock: Vec<usize>,
+    scratch_classes: Vec<usize>,
 
     report: SimReport,
     total: ResVec,
@@ -275,8 +298,12 @@ impl<'a> Simulation<'a> {
         // (bit-identical to the per-user computation they replace)
         let dom_deltas: Vec<f64> =
             arena.demands().per_user(|d| d.div(&total).max());
-        // blocked-user fit keys: min_r demand_r (see BlockedIndex docs)
-        let fit_keys: Vec<f64> = arena.demands().per_user(|d| d.min());
+        // blocked-user fit keys: min_r demand_r per interned class,
+        // with the user -> class map (see BlockedIndex docs)
+        let class_fit: Vec<f64> = (0..arena.demands().classes())
+            .map(|c| arena.demands().row(c).min())
+            .collect();
+        let class_of = arena.demands().class_map().to_vec();
         let users: Vec<UserState> = trace
             .users
             .iter()
@@ -294,6 +321,21 @@ impl<'a> Simulation<'a> {
         let n = users.len();
         let k = cluster.len();
         let name = scheduler.name().to_string();
+        let events = match opts.queue {
+            QueueKind::Auto => {
+                // perf-only: any geometry drains in the same total
+                // (time, seq) order (see `wheel` docs)
+                let (width, nb) = wheel::auto_geometry(
+                    trace
+                        .jobs
+                        .iter()
+                        .flat_map(|j| j.tasks.iter().map(|t| t.duration)),
+                );
+                SimQueue::Wheel(TimerWheel::with_params(width, nb))
+            }
+            kind => Events::new(kind),
+        };
+        let sketch_budget = opts.share_sketch;
 
         let mut sim = Simulation {
             cluster,
@@ -303,17 +345,24 @@ impl<'a> Simulation<'a> {
             queues: vec![VecDeque::new(); n],
             arena,
             servers: (0..k).map(|_| ServerSim::new()).collect(),
-            events: Events::new(opts.queue),
+            events,
             seq: 0,
             now: 0.0,
             eligible: vec![true; n],
-            blocked: BlockedIndex::new(fit_keys),
+            blocked: BlockedIndex::classed(class_of, class_fit),
             scratch_unblock: Vec::new(),
+            scratch_classes: Vec::new(),
             report: SimReport {
                 scheduler: name,
                 cpu_util: TimeSeries::default(),
                 mem_util: TimeSeries::default(),
                 user_dom_share: vec![TimeSeries::default(); if opts.track_user_series { n } else { 0 }],
+                share_sketches: match sketch_budget {
+                    Some(budget) => {
+                        vec![ShareSketch::with_budget(budget); n]
+                    }
+                    None => Vec::new(),
+                },
                 user_cpu_share: vec![TimeSeries::default(); if opts.track_user_series { n } else { 0 }],
                 user_mem_share: vec![TimeSeries::default(); if opts.track_user_series { n } else { 0 }],
                 jobs: Vec::new(),
@@ -469,13 +518,17 @@ impl<'a> Simulation<'a> {
     }
 
     /// Re-check blocked users against server `l` after it freed
-    /// capacity. Candidates are pre-filtered by the BlockedIndex
-    /// necessary condition (min demand component vs. `l`'s smallest
-    /// headroom); the exact `can_fit` verdict is unchanged, so the
-    /// unblocked set matches the old full scan. The filter is only
-    /// sound for demand-based `can_fit`; overcommitting policies
-    /// (Slots — slot-based fits, headroom may be negative) re-check
-    /// every blocked user, as before.
+    /// capacity. Candidate *classes* are pre-filtered by the
+    /// BlockedIndex necessary condition (min demand component vs.
+    /// `l`'s smallest headroom), and one exact `can_fit` probe per
+    /// class decides all of its blocked members at once (the
+    /// [`Scheduler::can_fit`] contract: the verdict depends on the
+    /// user only through its demand class) — O(classes) probes per
+    /// completion, however many users are blocked. The unblocked
+    /// *set* matches the seed's full per-user scan. The headroom
+    /// filter is only sound for demand-based `can_fit`;
+    /// overcommitting policies (Slots — slot-based fits, headroom may
+    /// be negative) consider every blocked class, as before.
     fn unblock_for_server(&mut self, l: usize) {
         if self.blocked.is_empty() {
             return;
@@ -485,17 +538,28 @@ impl<'a> Simulation<'a> {
         } else {
             self.cluster.servers[l].min_headroom() + crate::cluster::FIT_EPS
         };
+        let mut classes = std::mem::take(&mut self.scratch_classes);
+        classes.clear();
+        classes.extend(self.blocked.candidate_classes(free_min));
         let mut cands = std::mem::take(&mut self.scratch_unblock);
         cands.clear();
-        cands.extend(self.blocked.candidates(free_min));
-        for &u in &cands {
-            if self.scheduler.can_fit(&self.cluster, &self.users, u, l) {
-                self.blocked.remove(u);
-                self.eligible[u] = true;
-                self.scheduler.on_ready(u);
+        for &c in &classes {
+            let probe = self
+                .blocked
+                .class_members(c)
+                .next()
+                .expect("candidate class has a blocked member");
+            if self.scheduler.can_fit(&self.cluster, &self.users, probe, l) {
+                cands.extend(self.blocked.class_members(c));
             }
         }
+        for &u in &cands {
+            self.blocked.remove(u);
+            self.eligible[u] = true;
+            self.scheduler.on_ready(u);
+        }
         self.scratch_unblock = cands;
+        self.scratch_classes = classes;
     }
 
     /// One scheduling opportunity: hand the whole event wave to the
@@ -537,6 +601,11 @@ impl<'a> Simulation<'a> {
                     self.report.user_mem_share[u]
                         .push(self.now, us.usage[1] / self.total[1]);
                 }
+            }
+        }
+        if self.opts.share_sketch.is_some() {
+            for (u, us) in self.users.iter().enumerate() {
+                self.report.share_sketches[u].push(self.now, us.dom_share);
             }
         }
         if let MetricsMode::Streaming { series_cap } = self.opts.metrics {

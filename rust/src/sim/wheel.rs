@@ -1,6 +1,8 @@
 //! Event queues for the discrete-event engine: the naive binary heap
 //! and a calendar-style hierarchical timer wheel, behind one
-//! [`EventQueue`] trait.
+//! [`EventQueue`] trait. (The engine these feed reproduces the
+//! paper's evaluation, Sec. VI — every figure is a pure function of
+//! the drain order pinned down here.)
 //!
 //! ## Ordering contract
 //!
@@ -336,9 +338,52 @@ pub enum QueueKind {
     /// data plane.
     #[default]
     Wheel,
+    /// Timer wheel with geometry auto-tuned from the trace's observed
+    /// task-duration distribution ([`auto_geometry`]). Perf-only:
+    /// the drain order is geometry-independent.
+    Auto,
     /// Binary heap ([`HeapQueue`]) — the seed's queue, kept as the
     /// naive parity reference.
     Heap,
+}
+
+/// Pick a [`TimerWheel`] geometry `(width, buckets)` for a trace whose
+/// task durations are `durations` — the [`QueueKind::Auto`] mode.
+///
+/// The tuning goal mirrors the rationale behind the defaults: the
+/// window (`width × buckets`) should cover the longest task duration
+/// with slack, so a completion event scheduled `duration` ahead of
+/// `now` spills to the `far` overflow at most once before it drains.
+/// The window never *shrinks* below the default one: the engine
+/// enqueues every arrival for the whole horizon up front, so a window
+/// tuned only to short durations would re-scan that arrival backlog
+/// on every one of its (many more) window advances — the tuning only
+/// ever widens the window for duration distributions the default
+/// cannot cover. Geometry only affects performance, never the drain
+/// order (see the module docs), so any outcome here is semantically
+/// safe; an empty or degenerate duration set falls back to the
+/// defaults.
+pub fn auto_geometry(
+    durations: impl IntoIterator<Item = f64>,
+) -> (f64, usize) {
+    let mut max_d: f64 = 0.0;
+    let mut seen = false;
+    for d in durations {
+        if d.is_finite() && d > max_d {
+            max_d = d;
+        }
+        seen = true;
+    }
+    let nb = DEFAULT_BUCKETS;
+    if !seen || max_d <= 0.0 {
+        return (DEFAULT_WIDTH, nb);
+    }
+    // 1.25x slack over the observed maximum, floored at the default
+    // window; the upper clamp keeps bucket sorts cache-sized for
+    // degenerate multi-year durations
+    let window = (max_d * 1.25).max(DEFAULT_WIDTH * nb as f64);
+    let width = (window / nb as f64).min(3_600.0);
+    (width, nb)
 }
 
 /// Enum-dispatched queue so [`crate::sim::Simulation`] stays
@@ -350,10 +395,16 @@ pub enum SimQueue<T> {
 }
 
 impl<T: Copy> SimQueue<T> {
+    /// Build the queue for `kind`. [`QueueKind::Auto`] without trace
+    /// context falls back to the default wheel geometry — the engine
+    /// resolves `Auto` itself via [`auto_geometry`] where the trace is
+    /// in hand.
     pub fn new(kind: QueueKind) -> Self {
         match kind {
             QueueKind::Heap => SimQueue::Heap(HeapQueue::new()),
-            QueueKind::Wheel => SimQueue::Wheel(TimerWheel::new()),
+            QueueKind::Wheel | QueueKind::Auto => {
+                SimQueue::Wheel(TimerWheel::new())
+            }
         }
     }
 
@@ -588,5 +639,48 @@ mod tests {
         assert_eq!(q.pop().unwrap().seq, 1);
         let n = SimQueue::<u32>::naive();
         assert!(matches!(n, SimQueue::Heap(_)));
+        // Auto without trace context degrades to the default wheel
+        let a = SimQueue::<u32>::new(QueueKind::Auto);
+        assert!(matches!(a, SimQueue::Wheel(_)));
+    }
+
+    /// Auto geometry covers the longest observed duration with slack
+    /// (so completions re-bucket from `far` at most once), never
+    /// shrinks the window below the default (the horizon's arrival
+    /// backlog would thrash the far overflow), falls back to the
+    /// defaults on degenerate input — and, being perf-only, drains in
+    /// the exact heap order.
+    #[test]
+    fn auto_geometry_covers_durations_and_preserves_order() {
+        let (w, nb) = auto_geometry([120.0, 21_600.0, 600.0]);
+        assert_eq!(nb, DEFAULT_BUCKETS);
+        // window covers the longest duration with slack...
+        assert!(w * nb as f64 >= 21_600.0 * 1.25 - 1e-6);
+        // ...and never narrows below the default geometry
+        assert!(w >= DEFAULT_WIDTH && w <= 3_600.0);
+        // long-duration traces widen the window
+        let (w_long, _) = auto_geometry([200_000.0]);
+        assert!(w_long * DEFAULT_BUCKETS as f64 >= 250_000.0 - 1e-6);
+        // short-task traces keep the default window untouched
+        assert_eq!(auto_geometry([100.0]), (DEFAULT_WIDTH, DEFAULT_BUCKETS));
+        // degenerate inputs fall back to the defaults
+        assert_eq!(
+            auto_geometry(std::iter::empty::<f64>()),
+            (DEFAULT_WIDTH, DEFAULT_BUCKETS)
+        );
+        assert_eq!(
+            auto_geometry([f64::NAN, -3.0, 0.0]),
+            (DEFAULT_WIDTH, DEFAULT_BUCKETS)
+        );
+        // drain parity at a tuned geometry
+        let mut rng = Pcg32::seeded(77);
+        let mut heap = HeapQueue::new();
+        let mut wheel = TimerWheel::with_params(w_long, 64);
+        for seq in 1..=500u64 {
+            let e = ev(rng.uniform(0.0, 400_000.0), seq);
+            heap.push(e);
+            wheel.push(e);
+        }
+        assert_eq!(drain(&mut heap), drain(&mut wheel));
     }
 }

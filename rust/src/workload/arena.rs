@@ -1,4 +1,6 @@
-//! §Perf: flat, borrow-only job/task state for the simulation engine.
+//! §Perf: flat, borrow-only job/task state for the simulation engine
+//! (the users/jobs/tasks model of paper Sec. III-A, laid out for the
+//! Sec. VI trace-replay scale).
 //!
 //! The seed engine kept three parallel copies of per-job state: a
 //! `JobSim` struct per job, a `trace_tasks: Vec<Vec<f64>>` clone of
@@ -143,6 +145,33 @@ impl<'t> TaskArena<'t> {
 
 // ---------------------------------------------------------- interning
 
+/// Intern a sequence of demand rows by exact bit pattern: returns the
+/// distinct rows (in first-appearance order) and a dense `u32` class
+/// id per input row. Keying on the bits means `-0.0` vs `0.0` or
+/// ulp-different rows never alias — bit-identical semantics above all.
+///
+/// The single interning implementation behind both
+/// [`DemandTable::build`] (trace side, [`UserSpec`] rows) and
+/// `sched::users::DemandClasses` (scheduler side, `UserState` rows):
+/// every class-keyed structure relies on the same dense-id contract.
+pub fn intern_rows<'a>(
+    rows_in: impl IntoIterator<Item = &'a ResVec>,
+) -> (Vec<ResVec>, Vec<u32>) {
+    let mut rows: Vec<ResVec> = Vec::new();
+    let mut class_of = Vec::new();
+    let mut seen: HashMap<Vec<u64>, u32> = HashMap::new();
+    for d in rows_in {
+        let key: Vec<u64> =
+            d.as_slice().iter().map(|x| x.to_bits()).collect();
+        let class = *seen.entry(key).or_insert_with(|| {
+            rows.push(*d);
+            (rows.len() - 1) as u32
+        });
+        class_of.push(class);
+    }
+    (rows, class_of)
+}
+
 /// Distinct per-user demand rows, deduplicated by exact bit pattern,
 /// with a user → class map. Derived per-task quantities can then be
 /// computed once per class and fanned out.
@@ -154,20 +183,8 @@ pub struct DemandTable {
 
 impl DemandTable {
     pub fn build(users: &[UserSpec]) -> Self {
-        let mut rows: Vec<ResVec> = Vec::new();
-        let mut class_of = Vec::with_capacity(users.len());
-        // key on the exact bits so -0.0 vs 0.0 or ulp-different rows
-        // never alias (bit-identical semantics above all)
-        let mut seen: HashMap<Vec<u64>, u32> = HashMap::new();
-        for u in users {
-            let key: Vec<u64> =
-                u.demand.as_slice().iter().map(|x| x.to_bits()).collect();
-            let class = *seen.entry(key).or_insert_with(|| {
-                rows.push(u.demand);
-                (rows.len() - 1) as u32
-            });
-            class_of.push(class);
-        }
+        let (rows, class_of) =
+            intern_rows(users.iter().map(|u| &u.demand));
         DemandTable { rows, class_of }
     }
 
@@ -183,6 +200,14 @@ impl DemandTable {
     #[inline]
     pub fn class_of(&self, user: usize) -> usize {
         self.class_of[user] as usize
+    }
+
+    /// The full user → class map (dense `u32` class ids) — what the
+    /// engine hands to the class-keyed scheduler structures
+    /// (`sched::index::BlockedIndex::classed`).
+    #[inline]
+    pub fn class_map(&self) -> &[u32] {
+        &self.class_of
     }
 
     #[inline]

@@ -14,6 +14,6 @@ pub mod arena;
 pub mod gen;
 pub mod trace;
 
-pub use arena::{DemandTable, TaskArena};
+pub use arena::{intern_rows, DemandTable, TaskArena};
 pub use gen::{GoogleLikeConfig, TraceGenerator};
 pub use trace::{JobSpec, TaskSpec, Trace, UserSpec};

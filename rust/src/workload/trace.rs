@@ -200,9 +200,14 @@ impl Trace {
             }
             // zero weights are legal: every consumer ranks through the
             // guarded `sched::effective_weight` (0 -> 1.0), matching
-            // the f32 picker and the Pallas kernel
-            if !(u.weight >= 0.0) {
-                return Err(format!("user {i} has negative weight"));
+            // the f32 picker and the Pallas kernel. Non-finite weights
+            // are not: an infinite weight collapses every share key to
+            // 0, which the class-keyed scheduler state
+            // (`sched::users`) relies on validate to exclude.
+            if !(u.weight >= 0.0 && u.weight.is_finite()) {
+                return Err(format!(
+                    "user {i} has negative or non-finite weight"
+                ));
             }
         }
         Ok(())
@@ -246,6 +251,15 @@ mod tests {
         assert_eq!(t2.users[0].demand, t.users[0].demand);
         assert_eq!(t2.jobs[0].submit, 1.0);
         assert_eq!(t2.jobs[0].tasks[0].duration, 5.0);
+    }
+
+    #[test]
+    fn validate_rejects_non_finite_or_negative_weight() {
+        for w in [f64::INFINITY, f64::NAN, -1.0] {
+            let mut t = tiny();
+            t.users[0].weight = w;
+            assert!(t.validate().is_err(), "weight {w} must be rejected");
+        }
     }
 
     #[test]

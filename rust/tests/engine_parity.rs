@@ -244,9 +244,16 @@ fn random_setup(
 #[test]
 fn constructors_select_the_expected_path() {
     assert!(BestFitDrfh::default().is_indexed());
+    assert!(BestFitDrfh::default().is_classed());
+    assert!(BestFitDrfh::per_user().is_indexed());
+    assert!(!BestFitDrfh::per_user().is_classed());
     assert!(!BestFitDrfh::naive().is_indexed());
+    assert!(!BestFitDrfh::naive().is_classed());
     assert!(!BestFitDrfh::strict_filling().is_indexed());
     assert!(FirstFitDrfh::default().is_indexed());
+    assert!(FirstFitDrfh::default().is_classed());
+    assert!(FirstFitDrfh::per_user().is_indexed());
+    assert!(!FirstFitDrfh::per_user().is_classed());
     assert!(!FirstFitDrfh::naive().is_indexed());
     let cluster = Cluster::fig1_example();
     assert!(SlotsScheduler::new(&cluster, 14).is_indexed());
@@ -334,6 +341,104 @@ fn randomized_traces_slots() {
                 SlotsScheduler::naive(&cluster, slots),
             );
         }
+    }
+}
+
+// ------------------------------------------- class-keyed user state
+
+/// Class-keyed vs per-user scheduler state on workloads with real
+/// demand-row sharing (many users per interned class, a zero-weight
+/// cohort in the weight cycle): the decision streams AND headline
+/// metrics must be identical across all three paths — classed
+/// (default), the PR 1 per-user index, and the naive scans.
+#[test]
+fn class_keyed_state_parity() {
+    use drfh::experiments::user_scale::classed_trace;
+    for seed in 0..4u64 {
+        let mut rng = Pcg32::seeded(13_000 + seed);
+        let cluster = Cluster::google_sample(30 + rng.below(30), &mut rng);
+        // 40 users over 4 demand classes x 3 effective weights = at
+        // most 12 share groups for 40 users, comfortably under the
+        // fall-back threshold: the grouped machinery (not the embedded
+        // per-user heap) is what runs here, with several users per
+        // group and per class
+        let trace = classed_trace(40, 4, 2_500, 4_000.0, 100 + seed);
+        let opts = SimOpts {
+            horizon: 4_000.0,
+            sample_dt: 100.0,
+            ..SimOpts::default()
+        };
+        assert_parity(
+            &format!("classed-vs-per-user bestfit seed {seed}"),
+            &cluster,
+            &trace,
+            &opts,
+            BestFitDrfh::default(),
+            BestFitDrfh::per_user(),
+        );
+        assert_parity(
+            &format!("classed-vs-naive bestfit seed {seed}"),
+            &cluster,
+            &trace,
+            &opts,
+            BestFitDrfh::default(),
+            BestFitDrfh::naive(),
+        );
+        assert_parity(
+            &format!("classed-vs-per-user firstfit seed {seed}"),
+            &cluster,
+            &trace,
+            &opts,
+            FirstFitDrfh::default(),
+            FirstFitDrfh::per_user(),
+        );
+    }
+}
+
+/// Property test (satellite): interned class-keyed decisions are
+/// bit-identical to per-user state across randomized weight /
+/// zero-weight mixes — the weights are re-drawn per user on top of
+/// the classed demand rows, so `(dom_delta, weight)` groups form and
+/// dissolve at random: the guarded weight-0 draws merge into the
+/// weight-1 groups, while the continuous draws usually leave too few
+/// users per group and exercise the build's per-user-heap fall-back —
+/// both paths must stay bit-identical to `::per_user()`.
+#[test]
+fn classed_decisions_bit_identical_across_weight_mixes() {
+    use drfh::experiments::user_scale::classed_trace;
+    for seed in 0..6u64 {
+        let mut rng = Pcg32::seeded(14_000 + seed);
+        let cluster = Cluster::google_sample(25 + rng.below(25), &mut rng);
+        let mut trace = classed_trace(18, 4, 2_000, 3_500.0, 200 + seed);
+        for u in trace.users.iter_mut() {
+            u.weight = if rng.f64() < 0.25 {
+                0.0
+            } else {
+                rng.uniform(0.25, 4.0)
+            };
+        }
+        trace.validate().expect("weight mix stays valid");
+        let opts = SimOpts {
+            horizon: 3_500.0,
+            sample_dt: 100.0,
+            ..SimOpts::default()
+        };
+        assert_parity(
+            &format!("weight-mix bestfit seed {seed}"),
+            &cluster,
+            &trace,
+            &opts,
+            BestFitDrfh::default(),
+            BestFitDrfh::per_user(),
+        );
+        assert_parity(
+            &format!("weight-mix firstfit seed {seed}"),
+            &cluster,
+            &trace,
+            &opts,
+            FirstFitDrfh::default(),
+            FirstFitDrfh::per_user(),
+        );
     }
 }
 
@@ -729,6 +834,94 @@ fn simultaneous_events_tiebreak_parity() {
         &opts,
         || SlotsScheduler::new(&cluster, 14),
     );
+}
+
+/// Auto-tuned wheel geometry is perf-only: a run under
+/// `QueueKind::Auto` must be bit-identical to the heap reference
+/// (and therefore to the default wheel), share sketches included.
+#[test]
+fn auto_wheel_geometry_parity() {
+    use drfh::sim::MetricsMode;
+    for seed in 0..2u64 {
+        let (cluster, trace, opts) =
+            random_setup(15_000 + seed, seed * 19 + 3);
+        let opts = SimOpts {
+            queue: QueueKind::Auto,
+            share_sketch: Some(32),
+            ..opts
+        };
+        let ra = run(
+            cluster.clone(),
+            &trace,
+            Box::new(BestFitDrfh::default()),
+            opts.clone(),
+        );
+        let rh = run(
+            cluster.clone(),
+            &trace,
+            Box::new(BestFitDrfh::default()),
+            SimOpts { queue: QueueKind::Heap, ..opts.clone() },
+        );
+        assert_eq!(ra, rh, "auto-geometry run diverged from heap (seed {seed})");
+        // streaming metrics on top of the auto wheel: decisions still
+        // identical
+        let rs = run(
+            cluster,
+            &trace,
+            Box::new(BestFitDrfh::default()),
+            SimOpts { metrics: MetricsMode::streaming(), ..opts },
+        );
+        assert_eq!(rs.tasks_placed, rh.tasks_placed);
+        assert_eq!(rs.job_stats, rh.job_stats);
+    }
+}
+
+/// Engine-level share sketches: budgeted sketches must not perturb
+/// decisions, must stay under their point budget, and must agree with
+/// the exact trajectory (`track_user_series`) on the summary
+/// quantities.
+#[test]
+fn share_sketches_bound_memory_and_error() {
+    let (cluster, trace, opts) = random_setup(16_000, 99);
+    let budget = 32usize;
+    let opts = SimOpts {
+        track_user_series: true,
+        share_sketch: Some(budget),
+        ..opts
+    };
+    let r = run(
+        cluster.clone(),
+        &trace,
+        Box::new(BestFitDrfh::default()),
+        opts.clone(),
+    );
+    // sketches must not change the simulation
+    let r0 = run(
+        cluster,
+        &trace,
+        Box::new(BestFitDrfh::default()),
+        SimOpts { share_sketch: None, ..opts },
+    );
+    assert_eq!(r.tasks_placed, r0.tasks_placed);
+    assert_eq!(r.cpu_util, r0.cpu_util);
+    assert!(r0.share_sketches.is_empty());
+    assert_eq!(r.share_sketches.len(), trace.users.len());
+    let samples = r.cpu_util.len(); // one sketch sample per tick
+    assert!(samples > budget, "horizon too short to force decimation");
+    for (u, sketch) in r.share_sketches.iter().enumerate() {
+        let exact = &r.user_dom_share[u];
+        assert_eq!(sketch.count(), exact.len() as u64, "user {u}");
+        assert!(sketch.series.len() <= budget, "user {u} over budget");
+        // the sketch's last sample is the exact trajectory's last value
+        assert_eq!(sketch.last, *exact.v.last().unwrap(), "user {u}");
+        // bounded error on the time average (decimated vs exact grid)
+        let err = (sketch.series.time_avg() - exact.time_avg()).abs();
+        assert!(err < 0.05, "user {u}: time-avg drift {err}");
+        // exact streaming max equals the trajectory max
+        let vmax =
+            exact.v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(sketch.stats.max(), vmax, "user {u}");
+    }
 }
 
 /// Streaming metrics must not perturb the simulation: identical
