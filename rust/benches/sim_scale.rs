@@ -19,16 +19,24 @@
 //! report parity is enforced by `tests/engine_parity.rs` and the
 //! `drfh exp sim-scale` harness.
 //!
+//! PR 6 adds the **shard sweep**: the same wheel+streaming simulation
+//! at `[sim] shards` = 1, 2, 4, … up to the core count (one trace
+//! across all cores, bit-identical merge — target **≥4×** at 8
+//! shards). Placement counts are asserted equal across every shard
+//! count; the bit-exact proof is
+//! `tests/engine_parity.rs::sharded_engine_matches_sequential`.
+//!
 //! Results go to `BENCH_sim.json` at the repo root (override with
 //! `BENCH_OUT=/path.json`); CI runs the small-scale smoke via
-//! `SIM_SMOKE=1`.
+//! `SIM_SMOKE=1`, and the shard-sweep smoke (S ∈ {1, cores} only)
+//! via `SIM_SHARD_SMOKE=1`.
 //!
 //! Run: `cargo bench --bench sim_scale`
 
 use drfh::experiments::EvalSetup;
 use drfh::metrics::MetricsMode;
 use drfh::sched::BestFitDrfh;
-use drfh::sim::{run, QueueKind, SimOpts, SimReport};
+use drfh::sim::{run, QueueKind, ShardCount, SimOpts, SimReport};
 use drfh::util::bench::{
     bench_n, header, peak_rss_bytes, write_suite_json, BenchResult,
 };
@@ -46,10 +54,12 @@ fn run_case(
     setup: &EvalSetup,
     queue: QueueKind,
     metrics: MetricsMode,
+    shards: ShardCount,
 ) -> Case {
     let mut report = None;
     let bench = bench_n(name, iters, || {
-        let opts = SimOpts { queue, metrics, ..setup.opts.clone() };
+        let opts =
+            SimOpts { queue, metrics, shards, ..setup.opts.clone() };
         let rep = run(
             setup.cluster.clone(),
             &setup.trace,
@@ -72,7 +82,8 @@ fn retained_points(rep: &SimReport) -> usize {
 }
 
 fn main() {
-    let smoke = std::env::var_os("SIM_SMOKE").is_some();
+    let shard_smoke = std::env::var_os("SIM_SHARD_SMOKE").is_some();
+    let smoke = std::env::var_os("SIM_SMOKE").is_some() || shard_smoke;
     // full scale: ~2.2e-4 jobs/(server·s) × 2000 servers × 32400 s
     // ≈ 14.3 k jobs ≈ 1.03 M tasks (see EvalSetup::with_duration)
     let (servers, users, duration, iters) = if smoke {
@@ -97,6 +108,7 @@ fn main() {
         &setup,
         QueueKind::Wheel,
         MetricsMode::streaming(),
+        ShardCount::Fixed(1),
     );
     let wheel_full = run_case(
         "wheel-full",
@@ -104,6 +116,7 @@ fn main() {
         &setup,
         QueueKind::Wheel,
         MetricsMode::Full,
+        ShardCount::Fixed(1),
     );
     let heap_full = run_case(
         "heap-full",
@@ -111,6 +124,7 @@ fn main() {
         &setup,
         QueueKind::Heap,
         MetricsMode::Full,
+        ShardCount::Fixed(1),
     );
 
     // cheap parity guards; the real proof is tests/engine_parity.rs
@@ -172,6 +186,57 @@ fn main() {
         );
     }
 
+    // ---- shard sweep: the same wheel+streaming plane at S = 1 → cores
+    let hw = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    let shard_counts: Vec<usize> = if shard_smoke {
+        // CI smoke: the endpoints only
+        if hw > 1 { vec![1, hw] } else { vec![1] }
+    } else {
+        let mut v = vec![1usize];
+        let mut s = 2;
+        while s < hw {
+            v.push(s);
+            s *= 2;
+        }
+        if hw > 1 {
+            v.push(hw);
+        }
+        v
+    };
+    header("sim_scale: shard sweep (wheel + streaming)");
+    let mut shard_cases: Vec<(usize, Case)> = Vec::new();
+    for &s in &shard_counts {
+        let case = run_case(
+            &format!("shards-{s}"),
+            iters,
+            &setup,
+            QueueKind::Wheel,
+            MetricsMode::streaming(),
+            ShardCount::Fixed(s),
+        );
+        // cheap parity guards across shard counts (bit-exact proof:
+        // tests/engine_parity.rs::sharded_engine_matches_sequential)
+        assert_eq!(
+            case.report.tasks_placed, streaming.report.tasks_placed,
+            "shards={s} changed placement counts"
+        );
+        assert_eq!(
+            case.report.job_stats, streaming.report.job_stats,
+            "shards={s} changed job statistics"
+        );
+        shard_cases.push((s, case));
+    }
+    let shard_base = secs(&shard_cases[0].1);
+    for (s, case) in &shard_cases {
+        println!(
+            "shards-{s:<8} : {:>10.0} tasks/s  ({:.2}x vs 1 shard)",
+            tps(case),
+            shard_base / secs(case)
+        );
+    }
+
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim.json")
             .to_string()
@@ -226,9 +291,34 @@ fn main() {
         ),
         ("vmhwm_after_heap_bytes", opt_num(heap_full.vmhwm_after)),
     ];
-    let results = [streaming.bench, wheel_full.bench, heap_full.bench];
+    // per-shard-count throughput/speedup entries carry dynamic keys
+    let mut meta: Vec<(String, Json)> =
+        meta.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+    meta.push((
+        "shard_counts".to_string(),
+        Json::Arr(
+            shard_counts.iter().map(|&s| Json::Num(s as f64)).collect(),
+        ),
+    ));
+    meta.push(("cores".to_string(), Json::Num(hw as f64)));
+    meta.push(("shard_smoke".to_string(), Json::Bool(shard_smoke)));
+    for (s, case) in &shard_cases {
+        meta.push((
+            format!("tasks_per_sec_shards_{s}"),
+            Json::Num(tps(case)),
+        ));
+        meta.push((
+            format!("speedup_shards_{s}"),
+            Json::Num(shard_base / secs(case)),
+        ));
+    }
+    let meta_refs: Vec<(&str, Json)> =
+        meta.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    let mut results =
+        vec![streaming.bench, wheel_full.bench, heap_full.bench];
+    results.extend(shard_cases.into_iter().map(|(_, c)| c.bench));
     let path = std::path::PathBuf::from(&out);
-    if write_suite_json(&path, "sim_scale", &meta, &results) {
+    if write_suite_json(&path, "sim_scale", &meta_refs, &results) {
         println!("\nwrote {}", path.display());
     } else {
         println!("\ncould not write {} (read-only fs?)", path.display());

@@ -3,8 +3,10 @@
 
 pub mod pool;
 pub mod server;
+pub mod shard;
 pub mod vector;
 
 pub use pool::{Cluster, ServerClass, GOOGLE_CLASSES};
 pub use server::{Server, FIT_EPS};
+pub use shard::{ShardCount, ShardSpec};
 pub use vector::{ResVec, MAX_RES};

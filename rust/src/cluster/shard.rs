@@ -1,0 +1,177 @@
+//! Contiguous server-pool partitioning for the sharded data plane.
+//!
+//! The paper's placement step (Sec. V-B, Algorithm 1) is per-server:
+//! feasibility and the Best-Fit H-score of server `l` depend on `l`'s
+//! own capacity and usage alone, which is why the PS-DSF line of work
+//! (Khamse-Ashari et al., 2017) can decompose scheduling per server
+//! without changing the mechanism. The engine exploits the same
+//! structure by splitting the pool into `S` *contiguous* shards: each
+//! shard owns its servers' processor-sharing state and event lane
+//! (`sim::engine` §Perf: sharded data plane), and the placement index
+//! keeps per-shard heaps reconciled by a cross-shard argmin
+//! (`sched::index::PlacementIndex`).
+//!
+//! Shards are contiguous index ranges so slices of per-server columns
+//! (`Vec<Server>`, the engine's `Vec<ServerSim>`) can be handed to
+//! scoped worker threads via `split_at_mut` — no index indirection on
+//! the hot path, and `owner_of` is O(1) arithmetic. The partition is
+//! *semantics-free*: every consumer reconciles shard-local results in
+//! the same total order the unsharded structure uses, so any shard
+//! count yields bit-identical decisions (`tests/engine_parity.rs`).
+
+/// How many shards to split the server pool into
+/// (`sim::SimOpts::shards` / the `[sim] shards` config key).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardCount {
+    /// One shard per available core
+    /// ([`std::thread::available_parallelism`]).
+    Auto,
+    /// Exactly `n` shards (clamped to `[1, k]` at resolution).
+    Fixed(usize),
+}
+
+impl Default for ShardCount {
+    fn default() -> Self {
+        ShardCount::Fixed(1)
+    }
+}
+
+impl ShardCount {
+    /// Resolve to a concrete shard count for a `k`-server pool:
+    /// `Auto` = available cores; always at least 1 and at most `k`
+    /// (an empty shard buys nothing).
+    pub fn resolve(&self, k: usize) -> usize {
+        let raw = match self {
+            ShardCount::Auto => std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1),
+            ShardCount::Fixed(n) => *n,
+        };
+        raw.clamp(1, k.max(1))
+    }
+}
+
+/// A balanced contiguous partition of servers `0..k` into `shards`
+/// ranges: the first `k % shards` shards hold `⌈k/shards⌉` servers,
+/// the rest `⌊k/shards⌋`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    k: usize,
+    shards: usize,
+    /// Base shard size (`k / shards`).
+    q: usize,
+    /// Shards `0..rem` hold one extra server.
+    rem: usize,
+}
+
+impl ShardSpec {
+    /// Partition `k` servers into `shards` contiguous ranges (clamped
+    /// to `[1, k]` like [`ShardCount::resolve`]).
+    pub fn contiguous(k: usize, shards: usize) -> Self {
+        let shards = shards.clamp(1, k.max(1));
+        ShardSpec { k, shards, q: k / shards, rem: k % shards }
+    }
+
+    /// Number of shards.
+    #[inline]
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Number of servers partitioned.
+    #[inline]
+    pub fn servers(&self) -> usize {
+        self.k
+    }
+
+    /// First server index of shard `s`.
+    #[inline]
+    pub fn start_of(&self, s: usize) -> usize {
+        debug_assert!(s <= self.shards);
+        s * self.q + s.min(self.rem)
+    }
+
+    /// Number of servers in shard `s`.
+    #[inline]
+    pub fn len_of(&self, s: usize) -> usize {
+        debug_assert!(s < self.shards);
+        self.q + usize::from(s < self.rem)
+    }
+
+    /// Server-index range owned by shard `s`.
+    #[inline]
+    pub fn range(&self, s: usize) -> std::ops::Range<usize> {
+        let lo = self.start_of(s);
+        lo..lo + self.len_of(s)
+    }
+
+    /// The shard owning `server` — O(1) (the inverse of the balanced
+    /// layout: big shards first, then base-sized ones).
+    #[inline]
+    pub fn owner_of(&self, server: usize) -> usize {
+        debug_assert!(server < self.k);
+        let big = self.rem * (self.q + 1);
+        if server < big {
+            server / (self.q + 1)
+        } else {
+            self.rem + (server - big) / self.q.max(1)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_clamps_to_pool_size() {
+        assert_eq!(ShardCount::Fixed(1).resolve(2000), 1);
+        assert_eq!(ShardCount::Fixed(8).resolve(2000), 8);
+        assert_eq!(ShardCount::Fixed(0).resolve(2000), 1);
+        assert_eq!(ShardCount::Fixed(64).resolve(3), 3);
+        assert!(ShardCount::Auto.resolve(2000) >= 1);
+        assert!(ShardCount::Auto.resolve(2) <= 2);
+        assert_eq!(ShardCount::default(), ShardCount::Fixed(1));
+    }
+
+    #[test]
+    fn contiguous_partition_covers_the_pool_exactly() {
+        for (k, s) in [(10, 3), (2000, 8), (7, 7), (5, 1), (3, 64), (1, 1)] {
+            let spec = ShardSpec::contiguous(k, s);
+            assert_eq!(spec.servers(), k);
+            assert!(spec.shards() >= 1 && spec.shards() <= k);
+            let mut covered = 0;
+            for sh in 0..spec.shards() {
+                let r = spec.range(sh);
+                assert_eq!(r.start, covered, "shard {sh} not contiguous");
+                assert_eq!(r.len(), spec.len_of(sh));
+                covered = r.end;
+            }
+            assert_eq!(covered, k, "partition must cover all servers");
+            // balanced: sizes differ by at most one
+            let sizes: Vec<usize> =
+                (0..spec.shards()).map(|sh| spec.len_of(sh)).collect();
+            let (lo, hi) = (
+                *sizes.iter().min().unwrap(),
+                *sizes.iter().max().unwrap(),
+            );
+            assert!(hi - lo <= 1, "unbalanced partition {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn owner_of_inverts_the_ranges() {
+        for (k, s) in [(10, 3), (2000, 8), (12_583, 16), (9, 9), (4, 2)] {
+            let spec = ShardSpec::contiguous(k, s);
+            for sh in 0..spec.shards() {
+                for l in spec.range(sh) {
+                    assert_eq!(
+                        spec.owner_of(l),
+                        sh,
+                        "server {l} of {k} across {s} shards"
+                    );
+                }
+            }
+        }
+    }
+}

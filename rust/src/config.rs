@@ -15,6 +15,7 @@
 //! queue = "wheel"          # wheel | auto (trace-tuned wheel) | heap (naive parity reference)
 //! metrics = "full"         # full | streaming (bounded memory)
 //! share_sketch = 2048      # optional: per-user share-sketch point budget (0 = exact)
+//! shards = "auto"          # 1 (sequential, default) | N | "auto" (per-core data-plane shards)
 //! [scheduler]
 //! policy = "bestfit"       # bestfit | firstfit | slots | bestfit-xla
 //! slots_per_max = 14       # slots policy only
@@ -25,7 +26,7 @@
 
 use crate::cluster::Cluster;
 use crate::sched::{BestFitDrfh, FirstFitDrfh, Scheduler, SlotsScheduler};
-use crate::sim::{MetricsMode, QueueKind, SimOpts};
+use crate::sim::{MetricsMode, QueueKind, ShardCount, SimOpts};
 use crate::util::toml_lite;
 use crate::util::Pcg32;
 use crate::workload::{GoogleLikeConfig, TraceGenerator};
@@ -72,6 +73,10 @@ pub struct SimConfig {
     /// Per-user dominant-share sketch budget (points; 0 = exact
     /// retention). Unset = sketches off.
     pub share_sketch: Option<usize>,
+    /// Data-plane shards: "1" (sequential, default) | "N" | "auto"
+    /// (one shard per core). Reports are bit-identical across all
+    /// choices; this is purely a wall-clock lever.
+    pub shards: String,
 }
 
 impl Default for SimConfig {
@@ -83,6 +88,7 @@ impl Default for SimConfig {
             queue: "wheel".into(),
             metrics: "full".into(),
             share_sketch: None,
+            shards: "1".into(),
         }
     }
 }
@@ -152,6 +158,12 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_usize("sim", "share_sketch") {
             cfg.sim.share_sketch = Some(v);
         }
+        // shards accepts both a bare integer and the string "auto"
+        if let Some(v) = doc.get_usize("sim", "shards") {
+            cfg.sim.shards = v.to_string();
+        } else if let Some(v) = doc.get_str("sim", "shards") {
+            cfg.sim.shards = v.to_string();
+        }
         if let Some(v) = doc.get_str("scheduler", "policy") {
             cfg.scheduler.policy = v.to_string();
         }
@@ -218,6 +230,15 @@ impl ExperimentConfig {
                 bail!("unknown sim metrics '{other}' (full | streaming)")
             }
         };
+        let shards = match self.sim.shards.as_str() {
+            "auto" => ShardCount::Auto,
+            s => match s.parse::<usize>() {
+                Ok(n) if n >= 1 => ShardCount::Fixed(n),
+                _ => bail!(
+                    "unknown sim shards '{s}' (\"auto\" | N >= 1)"
+                ),
+            },
+        };
         Ok(SimOpts {
             horizon: self.sim.horizon,
             sample_dt: self.sim.sample_dt,
@@ -225,6 +246,7 @@ impl ExperimentConfig {
             queue,
             metrics,
             share_sketch: self.sim.share_sketch,
+            shards,
         })
     }
 }
@@ -298,6 +320,28 @@ mod tests {
         assert!(c.sim_opts().is_err());
         let c =
             ExperimentConfig::from_toml("[sim]\nmetrics = 'nope'").unwrap();
+        assert!(c.sim_opts().is_err());
+    }
+
+    #[test]
+    fn shards_parse_and_validate() {
+        // default: sequential
+        let c = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(c.sim_opts().unwrap().shards, ShardCount::Fixed(1));
+        // bare integer
+        let c = ExperimentConfig::from_toml("[sim]\nshards = 8").unwrap();
+        assert_eq!(c.sim_opts().unwrap().shards, ShardCount::Fixed(8));
+        // quoted integer and "auto"
+        let c = ExperimentConfig::from_toml("[sim]\nshards = '4'").unwrap();
+        assert_eq!(c.sim_opts().unwrap().shards, ShardCount::Fixed(4));
+        let c =
+            ExperimentConfig::from_toml("[sim]\nshards = 'auto'").unwrap();
+        assert_eq!(c.sim_opts().unwrap().shards, ShardCount::Auto);
+        // rejects zero and junk
+        let c = ExperimentConfig::from_toml("[sim]\nshards = 0").unwrap();
+        assert!(c.sim_opts().is_err());
+        let c =
+            ExperimentConfig::from_toml("[sim]\nshards = 'many'").unwrap();
         assert!(c.sim_opts().is_err());
     }
 

@@ -49,11 +49,23 @@ pub type Job<'env, T> = Box<dyn FnOnce() -> T + Send + 'env>;
 /// capped at the job count (override with `DRFH_SWEEP_THREADS`);
 /// `DRFH_SEQ=1` forces in-place sequential execution.
 pub fn run_parallel<'env, T: Send>(jobs: Vec<Job<'env, T>>) -> Vec<T> {
+    run_parallel_budgeted(jobs, 1)
+}
+
+/// [`run_parallel`] for jobs that are themselves multi-threaded:
+/// `threads_per_job` is the worker threads each job spawns internally
+/// (the engine's shard count under `[sim] shards`), and the fan-out is
+/// divided down so `sweep workers × threads_per_job` never
+/// oversubscribes the machine ([`worker_count_budgeted`]).
+pub fn run_parallel_budgeted<'env, T: Send>(
+    jobs: Vec<Job<'env, T>>,
+    threads_per_job: usize,
+) -> Vec<T> {
     let n = jobs.len();
     if n == 0 {
         return Vec::new();
     }
-    let workers = worker_count(n);
+    let workers = worker_count_budgeted(n, threads_per_job);
     if workers <= 1 {
         return jobs.into_iter().map(|job| job()).collect();
     }
@@ -86,27 +98,43 @@ pub fn run_parallel<'env, T: Send>(jobs: Vec<Job<'env, T>>) -> Vec<T> {
 /// `DRFH_SWEEP_THREADS` override, 1 under `DRFH_SEQ=1`. Public so
 /// benches can report the true denominator next to their speedups.
 pub fn worker_count(jobs: usize) -> usize {
+    worker_count_budgeted(jobs, 1)
+}
+
+/// [`worker_count`] with an internal-parallelism budget: each job is
+/// assumed to keep `threads_per_job` cores busy on its own (the
+/// sharded engine's propose workers), so the sweep fan-out is
+/// `available_parallelism / threads_per_job` — `shards × variants`
+/// stays at or under the machine instead of multiplying. An explicit
+/// `DRFH_SWEEP_THREADS` still wins (the operator asked for that exact
+/// fan-out), and `DRFH_SEQ=1` still forces 1.
+pub fn worker_count_budgeted(jobs: usize, threads_per_job: usize) -> usize {
     if std::env::var_os("DRFH_SEQ").is_some() {
         return 1;
     }
     let hw = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(1);
+    let budget = (hw / threads_per_job.max(1)).max(1);
     let cap = std::env::var("DRFH_SWEEP_THREADS")
         .ok()
         .and_then(|v| v.parse::<usize>().ok())
-        .unwrap_or(hw);
+        .unwrap_or(budget);
     cap.clamp(1, jobs.max(1))
 }
 
 /// Run every policy variant on its own clone of `cluster` + `trace`
-/// in parallel; reports come back in factory order.
+/// in parallel; reports come back in factory order. When `opts`
+/// requests a sharded engine (`[sim] shards`), the variant fan-out is
+/// budgeted so `shards × concurrent variants` stays at or under
+/// `available_parallelism` ([`worker_count_budgeted`]).
 pub fn sweep(
     cluster: &Cluster,
     trace: &Trace,
     opts: &SimOpts,
     factories: Vec<SchedFactory>,
 ) -> Vec<SimReport> {
+    let threads_per_job = opts.shards.resolve(cluster.len());
     let jobs: Vec<Job<'_, SimReport>> = factories
         .into_iter()
         .map(|f| {
@@ -118,7 +146,7 @@ pub fn sweep(
             job
         })
         .collect();
-    run_parallel(jobs)
+    run_parallel_budgeted(jobs, threads_per_job)
 }
 
 /// The sequential reference sweep: identical results, one variant at a
@@ -157,6 +185,39 @@ mod tests {
                 Box::new(SlotsScheduler::new(c, 14)) as Box<dyn Scheduler>
             }),
         ]
+    }
+
+    /// The budgeted worker count never oversubscribes: `workers ×
+    /// threads_per_job` stays at or under the machine (unless the
+    /// machine itself is smaller than one job), it never exceeds the
+    /// plain fan-out, and it is always at least 1.
+    #[test]
+    fn budgeted_worker_count_never_oversubscribes() {
+        if std::env::var_os("DRFH_SEQ").is_some()
+            || std::env::var_os("DRFH_SWEEP_THREADS").is_some()
+        {
+            return; // operator overrides bypass the budget by design
+        }
+        let hw = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        for jobs in [1usize, 3, 8, 40] {
+            for tpj in [1usize, 2, 8, 64] {
+                let w = worker_count_budgeted(jobs, tpj);
+                assert!(w >= 1, "jobs {jobs} tpj {tpj}");
+                assert!(w <= jobs, "jobs {jobs} tpj {tpj}");
+                assert!(
+                    w <= worker_count(jobs),
+                    "budget must only shrink the fan-out"
+                );
+                // the oversubscription bound, modulo the >=1 floor
+                assert!(
+                    w * tpj <= hw.max(tpj),
+                    "jobs {jobs} tpj {tpj}: {w} workers on {hw} cores"
+                );
+            }
+        }
+        assert_eq!(worker_count_budgeted(5, 0), worker_count_budgeted(5, 1));
     }
 
     #[test]

@@ -117,6 +117,12 @@ impl Scheduler for FirstFitDrfh {
             core.on_ready(user);
         }
     }
+
+    fn on_topology(&mut self, shards: usize) {
+        if let Some(core) = &mut self.core {
+            core.set_shards(shards);
+        }
+    }
 }
 
 #[cfg(test)]

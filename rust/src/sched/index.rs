@@ -55,7 +55,7 @@
 //!    `min_r D_r ≤ min_r A_r + ε`; filtering blocked users by that key
 //!    never skips one that could fit.
 
-use crate::cluster::{Cluster, ResVec, Server, FIT_EPS, MAX_RES};
+use crate::cluster::{Cluster, ResVec, Server, ShardSpec, FIT_EPS, MAX_RES};
 use crate::sched::users::{ClassedShareIndex, DemandClasses};
 use crate::sched::{DrainCtx, Pick, UserState};
 use std::cmp::Ordering;
@@ -404,6 +404,15 @@ pub fn score_server(
 /// O(users)) — maintained incrementally from place/complete
 /// notifications. [`PlacementIndex::per_user`] disables the interning
 /// (one class per user) to reproduce the PR 1 per-user layout.
+///
+/// Under the engine's sharded data plane
+/// ([`PlacementIndex::set_shards`]) each class keeps one heap per
+/// server-pool shard, so a server rescore touches only its owner
+/// shard's heaps; [`PlacementIndex::best_server`] reconciles the
+/// per-shard minima with a cross-shard argmin under the same
+/// `(key, index)` total order a single heap would use, so selections
+/// are shard-count independent (the partition of a set's minimum is
+/// the minimum of the partitions' minima).
 pub struct PlacementIndex {
     kind: ScoreKind,
     /// Share heaps between users with bit-identical demand rows?
@@ -413,8 +422,13 @@ pub struct PlacementIndex {
     class_of: Vec<u32>,
     /// Distinct demand rows, by class id.
     class_demand: Vec<ResVec>,
-    /// One heap per class.
+    /// One heap per `(class, shard)` pair, at `class * shards + shard`
+    /// (a single heap per class when unsharded).
     heaps: Vec<BinaryHeap<MinEntry>>,
+    /// Requested shard count (applied at the next build).
+    nshards: usize,
+    /// The shard layout the heaps were built for.
+    spec: ShardSpec,
     stamp: Vec<u64>,
     dirty: Vec<u32>,
     is_dirty: Vec<bool>,
@@ -463,6 +477,8 @@ impl PlacementIndex {
             class_of: Vec::new(),
             class_demand: Vec::new(),
             heaps: Vec::new(),
+            nshards: 1,
+            spec: ShardSpec::contiguous(0, 1),
             stamp: Vec::new(),
             dirty: Vec::new(),
             is_dirty: Vec::new(),
@@ -479,6 +495,27 @@ impl PlacementIndex {
     /// [`PlacementIndex::per_user`]).
     pub fn class_count(&self) -> usize {
         self.class_demand.len()
+    }
+
+    /// Mirror the engine's shard layout: one heap per
+    /// `(demand class, shard)` pair, reconciled by the cross-shard
+    /// argmin in [`PlacementIndex::best_server`]. Selections are
+    /// shard-count independent, so this is locality-only; the engine
+    /// wires it once, before any event, through
+    /// [`crate::sched::Scheduler::on_topology`]. Changing the count
+    /// after a build forces a rebuild at the next refresh.
+    pub fn set_shards(&mut self, shards: usize) {
+        let shards = shards.max(1);
+        if shards != self.nshards {
+            self.nshards = shards;
+            self.servers = None; // rebuild under the new layout
+        }
+    }
+
+    /// The shard count the heaps are currently laid out for
+    /// (testing / diagnostics).
+    pub fn shard_count(&self) -> usize {
+        self.spec.shards()
     }
 
     /// Note that server `l`'s availability changed; the next
@@ -511,6 +548,7 @@ impl PlacementIndex {
         self.k = k;
         self.n_users = users.len();
         self.servers = Some(ServerIndex::build(cluster));
+        self.spec = ShardSpec::contiguous(k, self.nshards);
         self.stamp = vec![0; k];
         self.is_dirty = vec![false; k];
         self.dirty.clear();
@@ -520,8 +558,10 @@ impl PlacementIndex {
             DemandClasses::identity(users)
         };
         self.dratio = classes.rows.iter().map(dratio_of).collect();
-        self.heaps =
-            (0..classes.rows.len()).map(|_| BinaryHeap::new()).collect();
+        let ns = self.spec.shards();
+        self.heaps = (0..classes.rows.len() * ns)
+            .map(|_| BinaryHeap::new())
+            .collect();
         self.class_of = classes.class_of;
         self.class_demand = classes.rows;
         #[cfg(debug_assertions)]
@@ -533,12 +573,15 @@ impl PlacementIndex {
         }
     }
 
-    /// Rebuild demand class `c`'s heap from scratch, visiting only
-    /// server classes the skyline says could fit (invariant 3 makes
-    /// the skip sound).
+    /// Rebuild demand class `c`'s heaps (all of its shards) from
+    /// scratch, visiting only server classes the skyline says could
+    /// fit (invariant 3 makes the skip sound).
     fn rebuild_class(&mut self, cluster: &Cluster, c: usize) {
-        let mut heap = std::mem::take(&mut self.heaps[c]);
-        heap.clear();
+        let ns = self.spec.shards();
+        let mut heaps = std::mem::take(&mut self.heaps);
+        for heap in &mut heaps[c * ns..(c + 1) * ns] {
+            heap.clear();
+        }
         let demand = self.class_demand[c];
         let sidx = self.servers.as_ref().expect("built");
         for class in sidx.classes() {
@@ -554,7 +597,7 @@ impl PlacementIndex {
                     &cluster.servers[l],
                     l,
                 ) {
-                    heap.push(MinEntry {
+                    heaps[c * ns + self.spec.owner_of(l)].push(MinEntry {
                         key,
                         idx: l as u32,
                         stamp: self.stamp[l],
@@ -562,7 +605,7 @@ impl PlacementIndex {
                 }
             }
         }
-        self.heaps[c] = heap;
+        self.heaps = heaps;
     }
 
     /// Flush dirty servers: bump their stamp, fold the new availability
@@ -618,11 +661,13 @@ impl PlacementIndex {
             .note_avail(cluster, l);
         let srv = &cluster.servers[l];
         let stamp = self.stamp[l];
+        let ns = self.spec.shards();
+        let owner = self.spec.owner_of(l);
         for (c, demand) in self.class_demand.iter().enumerate() {
             if let Some(key) =
                 score_server(self.kind, demand, &self.dratio[c], srv, l)
             {
-                self.heaps[c].push(MinEntry {
+                self.heaps[c * ns + owner].push(MinEntry {
                     key,
                     idx: l as u32,
                     stamp,
@@ -631,28 +676,55 @@ impl PlacementIndex {
         }
     }
 
-    /// Rebuild any per-class heap that has outgrown its live set.
+    /// Rebuild any class whose per-shard heap has outgrown its shard's
+    /// live set.
     fn compact(&mut self, cluster: &Cluster, _users: &[UserState]) {
-        for c in 0..self.heaps.len() {
-            if self.heaps[c].len() > 2 * self.k + 64 {
-                self.rebuild_class(cluster, c);
+        let ns = self.spec.shards();
+        for c in 0..self.class_demand.len() {
+            for s in 0..ns {
+                if self.heaps[c * ns + s].len()
+                    > 2 * self.spec.len_of(s) + 64
+                {
+                    self.rebuild_class(cluster, c);
+                    break;
+                }
             }
         }
     }
 
     /// Lowest-key feasible server for user `i` (looked up through
-    /// `i`'s demand class; the entry stays in the heap), or `None`
-    /// when nothing fits. Requires a preceding
-    /// [`PlacementIndex::refresh`].
+    /// `i`'s demand class; entries stay in their heaps), or `None`
+    /// when nothing fits. Under sharding this is the cross-shard
+    /// argmin over per-shard lazy minima, compared by `(key, index)`
+    /// with `f64::total_cmp` — exactly the order one merged heap would
+    /// pop in, so the selection (ties included) is shard-count
+    /// independent. Requires a preceding [`PlacementIndex::refresh`].
     pub fn best_server(&mut self, i: usize) -> Option<usize> {
-        let heap = &mut self.heaps[self.class_of[i] as usize];
-        while let Some(top) = heap.peek() {
-            if top.stamp == self.stamp[top.idx as usize] {
-                return Some(top.idx as usize);
+        let c = self.class_of[i] as usize;
+        let ns = self.spec.shards();
+        let mut best: Option<(f64, u32)> = None;
+        for s in 0..ns {
+            let heap = &mut self.heaps[c * ns + s];
+            // lazy-pop this shard's heap down to its live minimum
+            while let Some(top) = heap.peek() {
+                if top.stamp == self.stamp[top.idx as usize] {
+                    let earlier = match best {
+                        None => true,
+                        Some((bk, bi)) => top
+                            .key
+                            .total_cmp(&bk)
+                            .then_with(|| top.idx.cmp(&bi))
+                            .is_lt(),
+                    };
+                    if earlier {
+                        best = Some((top.key, top.idx));
+                    }
+                    break;
+                }
+                heap.pop();
             }
-            heap.pop();
         }
-        None
+        best.map(|(_, l)| l as usize)
     }
 
     /// The class skyline (testing / diagnostics).
@@ -767,6 +839,14 @@ impl IndexedCore {
     /// Is this core on the class-keyed path?
     pub fn is_classed(&self) -> bool {
         matches!(self.share, RankIndex::Classed(_))
+    }
+
+    /// Mirror the engine's sharded data plane in the placement index
+    /// ([`PlacementIndex::set_shards`]); wired from the policies'
+    /// [`crate::sched::Scheduler::on_topology`]. Selections are
+    /// shard-count independent.
+    pub fn set_shards(&mut self, shards: usize) {
+        self.servers.set_shards(shards);
     }
 
     /// One progressive-filling decision, decision-identical to
@@ -1047,14 +1127,22 @@ mod tests {
     }
 
     /// PlacementIndex agrees with the naive scans across random
-    /// commit/release churn, for both score kinds.
+    /// commit/release churn, for both score kinds and several shard
+    /// layouts (the cross-shard argmin must reproduce the single-heap
+    /// selection exactly, ties included); a mid-run `set_shards`
+    /// re-layout must also be seamless.
     #[test]
     fn placement_index_matches_naive_scans() {
         use crate::sched::best_fit::best_server;
         use crate::sched::first_fit::first_server;
-        for (kind, seed) in
-            [(ScoreKind::BestFit, 7u64), (ScoreKind::FirstFit, 8u64)]
-        {
+        for (kind, shards, seed) in [
+            (ScoreKind::BestFit, 1usize, 7u64),
+            (ScoreKind::BestFit, 3, 7),
+            (ScoreKind::BestFit, 8, 7),
+            (ScoreKind::FirstFit, 1, 8),
+            (ScoreKind::FirstFit, 3, 8),
+            (ScoreKind::FirstFit, 8, 8),
+        ] {
             let mut rng = Pcg32::seeded(seed);
             let mut cluster = Cluster::google_sample(60, &mut rng);
             let users: Vec<UserState> = (0..6)
@@ -1075,9 +1163,18 @@ mod tests {
                 })
                 .collect();
             let mut index = PlacementIndex::new(kind);
+            index.set_shards(shards);
             let mut committed: Vec<(usize, ResVec)> = Vec::new();
             for step in 0..400 {
+                if step == 200 {
+                    // re-layout mid-run: next refresh rebuilds, with
+                    // no effect on any selection
+                    index.set_shards(shards % 8 + 1);
+                }
                 index.refresh(&cluster, &users);
+                if step == 0 {
+                    assert_eq!(index.shard_count(), shards.min(60));
+                }
                 for (i, u) in users.iter().enumerate() {
                     let want = match kind {
                         ScoreKind::BestFit => best_server(&cluster, &u.demand),
@@ -1086,7 +1183,10 @@ mod tests {
                         }
                     };
                     let got = index.best_server(i);
-                    assert_eq!(got, want, "kind {kind:?} step {step} user {i}");
+                    assert_eq!(
+                        got, want,
+                        "kind {kind:?} shards {shards} step {step} user {i}"
+                    );
                     // skyline pre-check is sound: a fit anywhere implies
                     // may_fit_anywhere (the converse may not hold)
                     if want.is_some() {

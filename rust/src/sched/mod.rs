@@ -275,6 +275,14 @@ pub trait Scheduler {
     /// Notification: `user` (re-)entered the schedulable set — new
     /// work arrived or the engine unblocked it after a completion.
     fn on_ready(&mut self, _user: usize) {}
+
+    /// Notification: the engine runs its sharded data plane with
+    /// `shards` server-pool shards (fired once, before any event).
+    /// Indexed policies mirror the layout (per-shard placement heaps,
+    /// [`index::PlacementIndex::set_shards`]) so their maintenance
+    /// stays shard-local; the cross-shard argmin keeps selections
+    /// identical, so ignoring this (the default) is always correct.
+    fn on_topology(&mut self, _shards: usize) {}
 }
 
 /// Lowest weighted-share eligible user (first on ties) — the

@@ -14,20 +14,26 @@
 //! demand heterogeneity.
 //!
 //! §Perf: both halves of a pick are indexed. The server side is the
-//! `free_hint` cursor (below); the user side reuses the
-//! [`ShareHeap`] machinery keyed on the weighted running-slot count
-//! `running / effective_weight` instead of the naive O(n) scan per
-//! pick, which dominated Table II sweeps at k = 12,583.
+//! `free_hint` cursor (below); the user side runs on the class-keyed
+//! aggregation ([`ClassedShareIndex::by_weight`]) ranked by the
+//! weighted running-slot count `running / effective_weight` — users
+//! sharing an effective weight collapse into one `(running, user)`
+//! ordered group, so a pick compares one candidate per *weight class*
+//! (with the per-user heap as the automatic fallback when weights
+//! don't aggregate) instead of the naive O(n) scan per pick, which
+//! dominated Table II sweeps at k = 12,583.
 //! [`SlotsScheduler::naive`] keeps the linear scan as the
 //! bit-identical reference (parity in `tests/engine_parity.rs`).
 
-use super::index::ShareHeap;
+use super::users::ClassedShareIndex;
 use super::{effective_weight, Pick, Scheduler, UserState};
 use crate::cluster::{Cluster, ResVec};
 
 /// The fair-sharing key: weighted running-slot count (1 task = 1
-/// slot). The single place both the naive scan and the heap compute
-/// it, so their argmins are bit-identical.
+/// slot). The classed index computes the same arithmetic under
+/// [`crate::sched::users::KeyMode::RunningOnly`] (`running * 1.0 /
+/// effective_weight` — the `* 1.0` is exact), so the two argmins are
+/// bit-identical, tie-breaks included.
 #[inline]
 fn slot_key(u: &UserState) -> f64 {
     u.running as f64 / effective_weight(u.weight)
@@ -45,9 +51,11 @@ pub struct SlotsScheduler {
     /// by `on_free`, so it always lower-bounds the true first free
     /// slot and the picked server is identical to a full scan).
     free_hint: usize,
-    /// Lazy min-heap over `slot_key` (default), or `None` for the
-    /// naive O(n) user scan. Both paths emit identical decisions.
-    users_heap: Option<ShareHeap>,
+    /// Class-keyed index over `slot_key` (default;
+    /// [`ClassedShareIndex::by_weight`] aggregates by effective
+    /// weight), or `None` for the naive O(n) user scan. Both paths
+    /// emit identical decisions.
+    users_index: Option<ClassedShareIndex>,
 }
 
 impl SlotsScheduler {
@@ -82,19 +90,29 @@ impl SlotsScheduler {
             slots_per_max,
             slots_total,
             free_hint: 0,
-            users_heap: Some(ShareHeap::new()),
+            users_index: Some(ClassedShareIndex::by_weight()),
         }
     }
 
     /// The seed's linear-scan user selection — the parity reference
     /// and the naive baseline in `benches/table2_slots.rs`.
     pub fn naive(cluster: &Cluster, slots_per_max: usize) -> Self {
-        SlotsScheduler { users_heap: None, ..Self::new(cluster, slots_per_max) }
+        SlotsScheduler {
+            users_index: None,
+            ..Self::new(cluster, slots_per_max)
+        }
     }
 
     /// Is this instance on the indexed user-selection path?
     pub fn is_indexed(&self) -> bool {
-        self.users_heap.is_some()
+        self.users_index.is_some()
+    }
+
+    /// Weight-class groups in the user index (testing / diagnostics);
+    /// `None` when naive or when the index fell back per-user.
+    pub fn weight_groups(&self) -> Option<usize> {
+        let idx = self.users_index.as_ref()?;
+        (!idx.is_fallback()).then(|| idx.group_count())
     }
 
     /// Slot capacity of server `l`.
@@ -122,10 +140,10 @@ impl Scheduler for SlotsScheduler {
         // fair sharing over slot counts: serve the pending user with the
         // fewest weighted running tasks (1 task = 1 slot); zero weights
         // use the shared guarded fallback (see `sched::effective_weight`)
-        let best = match &mut self.users_heap {
-            Some(heap) => {
-                heap.refresh_with(users, eligible, slot_key);
-                heap.peek_min(users, eligible)
+        let best = match &mut self.users_index {
+            Some(idx) => {
+                idx.refresh(users, eligible);
+                idx.peek_min(users, eligible)
             }
             None => {
                 let mut best: Option<usize> = None;
@@ -155,10 +173,10 @@ impl Scheduler for SlotsScheduler {
         if l < k {
             Pick::Place { user: u, server: l }
         } else {
-            // drop u from the heap until the engine unblocks it
+            // drop u from the index until the engine unblocks it
             // (on_ready), mirroring the IndexedCore blocked protocol
-            if let Some(heap) = &mut self.users_heap {
-                heap.remove(u);
+            if let Some(idx) = &mut self.users_index {
+                idx.remove(u);
             }
             Pick::Blocked { user: u }
         }
@@ -185,20 +203,20 @@ impl Scheduler for SlotsScheduler {
     }
 
     fn on_place(&mut self, user: usize, _server: usize) {
-        if let Some(heap) = &mut self.users_heap {
-            heap.mark_dirty(user); // running/pending changed
+        if let Some(idx) = &mut self.users_index {
+            idx.mark_dirty(user); // running/pending changed
         }
     }
 
     fn on_complete(&mut self, user: usize, _server: usize) {
-        if let Some(heap) = &mut self.users_heap {
-            heap.mark_dirty(user); // running changed
+        if let Some(idx) = &mut self.users_index {
+            idx.mark_dirty(user); // running changed
         }
     }
 
     fn on_ready(&mut self, user: usize) {
-        if let Some(heap) = &mut self.users_heap {
-            heap.mark_dirty(user);
+        if let Some(idx) = &mut self.users_index {
+            idx.mark_dirty(user);
         }
     }
 }
@@ -292,6 +310,76 @@ mod tests {
                 Pick::Place { user: 1, server: 0 }
             );
         }
+    }
+
+    /// The class-keyed user selection aggregates same-weight users and
+    /// stays pick-for-pick identical to the naive scan across churn of
+    /// running counts, pending work, and the blocked/ready protocol.
+    #[test]
+    fn classed_user_selection_matches_naive() {
+        let mut rng = Pcg32::seeded(917);
+        let cluster = Cluster::from_capacities(&[
+            ResVec::cpu_mem(1.0, 1.0),
+            ResVec::cpu_mem(0.5, 0.5),
+        ]);
+        let n = 16;
+        let mut users: Vec<UserState> = (0..n)
+            .map(|i| UserState {
+                demand: ResVec::cpu_mem(0.1, 0.1),
+                weight: [1.0, 2.0, 0.0, 4.0][i % 4],
+                pending: 1 + rng.below(2),
+                running: rng.below(5),
+                dom_share: 0.0,
+                usage: ResVec::zeros(2),
+                dom_delta: 0.1,
+            })
+            .collect();
+        let mut fast = SlotsScheduler::new(&cluster, 4);
+        let mut naive = SlotsScheduler::naive(&cluster, 4);
+        let mut eligible = vec![true; n];
+        for step in 0..400 {
+            let a = fast.pick(&cluster, &users, &eligible);
+            let b = naive.pick(&cluster, &users, &eligible);
+            assert_eq!(a, b, "step {step}");
+            match a {
+                Pick::Place { user, .. } => {
+                    // engine would commit; emulate the notification
+                    users[user].running += 1;
+                    users[user].pending -= 1;
+                    fast.on_place(user, 0);
+                    naive.on_place(user, 0);
+                }
+                Pick::Blocked { user } => {
+                    eligible[user] = false;
+                }
+                Pick::Idle => {}
+            }
+            // random completions / new work keep the churn going
+            let u = rng.below(n);
+            match rng.below(3) {
+                0 if users[u].running > 0 => {
+                    users[u].running -= 1;
+                    fast.on_complete(u, 0);
+                    naive.on_complete(u, 0);
+                }
+                1 => {
+                    users[u].pending += 1;
+                    if !eligible[u] {
+                        eligible[u] = true;
+                        fast.on_ready(u);
+                        naive.on_ready(u);
+                    } else {
+                        fast.on_ready(u);
+                        naive.on_ready(u);
+                    }
+                }
+                _ => {}
+            }
+        }
+        // weights {1.0, 2.0, 0.0, 4.0} -> effective {1.0, 2.0, 4.0}:
+        // three weight classes, 16 users — aggregation engaged
+        assert_eq!(fast.weight_groups(), Some(3));
+        assert_eq!(naive.weight_groups(), None);
     }
 
     #[test]

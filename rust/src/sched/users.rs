@@ -108,6 +108,40 @@ impl DemandClasses {
 /// Sentinel: user currently has no entry in its group's set.
 const NOT_STORED: u32 = u32::MAX;
 
+/// Which per-user key a [`ClassedShareIndex`] ranks by.
+///
+/// The group machinery only needs the key to be
+/// `(running · constant_a) / constant_b` for per-user constants; both
+/// supported keys have that shape, so the same exact integer ordering
+/// applies.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KeyMode {
+    /// The weighted dominant share, `(running · dom_delta) /
+    /// effective_weight` — bit-identical to [`UserState::share_key`]
+    /// under the engine's `dom_share = running * dom_delta` invariant
+    /// (the DRFH policies).
+    #[default]
+    DomShare,
+    /// The weighted running-*count*, `running / effective_weight` —
+    /// the slot-scheduler key (1 task = 1 slot, demand ignored).
+    /// Implemented as `dom_delta := 1.0`, so `running as f64 * 1.0`
+    /// is bitwise `running as f64` and parity with the naive slot
+    /// scan is exact.
+    RunningOnly,
+}
+
+/// The exact ranking key of `u` under `mode` — the single definition
+/// both the grouped sets and the embedded fallback heap rank by.
+#[inline]
+fn key_for(mode: KeyMode, u: &UserState) -> f64 {
+    match mode {
+        KeyMode::DomShare => u.share_key(),
+        KeyMode::RunningOnly => {
+            u.running as f64 / effective_weight(u.weight)
+        }
+    }
+}
+
 /// One `(dom_delta, effective_weight)` aggregation group: every member
 /// shares the key constants, so the member order by `(run_key, user)`
 /// IS the order by `(share_key, user)`.
@@ -172,6 +206,8 @@ impl ShareGroup {
 #[derive(Default)]
 pub struct ClassedShareIndex {
     built: bool,
+    /// Ranking key (see [`KeyMode`]); fixed at construction.
+    mode: KeyMode,
     group_of: Vec<u32>,
     groups: Vec<ShareGroup>,
     /// `run_key` under which each user is currently stored
@@ -187,6 +223,13 @@ pub struct ClassedShareIndex {
 impl ClassedShareIndex {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Rank by weighted running-count instead of weighted dominant
+    /// share ([`KeyMode::RunningOnly`]) — the slot-scheduler
+    /// aggregation, grouping users by `effective_weight` alone.
+    pub fn by_weight() -> Self {
+        ClassedShareIndex { mode: KeyMode::RunningOnly, ..Self::default() }
     }
 
     /// Number of aggregation groups (testing / diagnostics; 0 when
@@ -208,10 +251,17 @@ impl ClassedShareIndex {
         let mut seen: HashMap<(u64, u64), u32> = HashMap::new();
         for u in users {
             let w = effective_weight(u.weight);
-            let key = (u.dom_delta.to_bits(), w.to_bits());
+            // RunningOnly is DomShare with dom_delta := 1.0 (exact:
+            // `r as f64 * 1.0` is bitwise `r as f64`), which also
+            // collapses the grouping to effective weight alone
+            let delta = match self.mode {
+                KeyMode::DomShare => u.dom_delta,
+                KeyMode::RunningOnly => 1.0,
+            };
+            let key = (delta.to_bits(), w.to_bits());
             let g = *seen.entry(key).or_insert_with(|| {
                 self.groups.push(ShareGroup {
-                    dom_delta: u.dom_delta,
+                    dom_delta: delta,
                     eff_weight: w,
                     members: BTreeSet::new(),
                 });
@@ -282,8 +332,9 @@ impl ClassedShareIndex {
     ) {
         debug_assert!(self.built && u < self.stored.len());
         let schedulable = eligible[u] && users[u].pending > 0;
+        let mode = self.mode;
         if let Some(heap) = &mut self.fallback {
-            heap.reinsert(u, users[u].share_key(), schedulable);
+            heap.reinsert(u, key_for(mode, &users[u]), schedulable);
             return;
         }
         let g = self.group_of[u] as usize;
@@ -309,8 +360,9 @@ impl ClassedShareIndex {
         if !self.built || self.group_of.len() != users.len() {
             self.rebuild(users);
         }
+        let mode = self.mode;
         if let Some(heap) = &mut self.fallback {
-            heap.refresh(users, eligible);
+            heap.refresh_with(users, eligible, |u| key_for(mode, u));
             return;
         }
         while let Some(u) = self.dirty.pop() {
@@ -508,6 +560,95 @@ mod tests {
                 _ => {
                     eligible[u] = true;
                     idx.mark_dirty(u);
+                }
+            }
+        }
+    }
+
+    /// [`KeyMode::RunningOnly`] ranks by the slot key
+    /// `running / effective_weight`: the grouped index (same-weight
+    /// users aggregate into one group each) and the per-user fallback
+    /// (distinct weights) must both match the naive keep-first slot
+    /// scan through churn.
+    #[test]
+    fn running_only_mode_matches_slot_scan() {
+        let slot_key =
+            |u: &UserState| u.running as f64 / effective_weight(u.weight);
+        let naive_min = |users: &[UserState], eligible: &[bool]| {
+            let mut best: Option<usize> = None;
+            for i in 0..users.len() {
+                if !eligible[i] || users[i].pending == 0 {
+                    continue;
+                }
+                match best {
+                    Some(b)
+                        if slot_key(&users[b]) <= slot_key(&users[i]) => {}
+                    _ => best = Some(i),
+                }
+            }
+            best
+        };
+        // grouped: 12 users over 3 weights (incl. the zero-weight
+        // fallback); fallback: 12 users with all-distinct weights
+        for (label, per_user_weights) in
+            [("grouped", false), ("fallback", true)]
+        {
+            let mut rng = Pcg32::seeded(913);
+            let n = 12;
+            let mut users: Vec<UserState> = (0..n)
+                .map(|i| {
+                    let w = if per_user_weights {
+                        1.0 + i as f64 * 0.211
+                    } else {
+                        [1.0, 3.0, 0.0][i % 3]
+                    };
+                    // dom_delta varies so DomShare and RunningOnly
+                    // would genuinely disagree — the test is keyed on
+                    // running counts alone
+                    mk_user(
+                        ResVec::cpu_mem(0.1, 0.2),
+                        w,
+                        1 + rng.below(2),
+                        rng.below(6),
+                        0.01 + i as f64 * 0.003,
+                    )
+                })
+                .collect();
+            let mut eligible = vec![true; n];
+            let mut idx = ClassedShareIndex::by_weight();
+            idx.refresh(&users, &eligible);
+            assert_eq!(idx.is_fallback(), per_user_weights, "{label}");
+            if !per_user_weights {
+                // weight 0.0 shares the effective-weight-1.0 group
+                assert_eq!(idx.group_count(), 2, "{label}");
+            }
+            for step in 0..500 {
+                idx.refresh(&users, &eligible);
+                assert_eq!(
+                    idx.peek_min(&users, &eligible),
+                    naive_min(&users, &eligible),
+                    "{label} step {step}"
+                );
+                let u = rng.below(n);
+                match rng.below(4) {
+                    0 => {
+                        users[u].running = rng.below(8);
+                        users[u].dom_share =
+                            users[u].running as f64 * users[u].dom_delta;
+                        idx.mark_dirty(u);
+                    }
+                    1 => {
+                        users[u].pending = rng.below(3);
+                        idx.mark_dirty(u);
+                    }
+                    2 if eligible[u] => {
+                        eligible[u] = false;
+                        idx.remove(u);
+                    }
+                    _ => {
+                        eligible[u] = true;
+                        idx.mark_dirty(u);
+                    }
                 }
             }
         }

@@ -89,15 +89,54 @@
 //! have unblocked, so the unblocked *set* — and therefore every
 //! subsequent decision — is identical (asserted end-to-end by
 //! `tests/engine_parity.rs`).
+//!
+//! ## §Perf: sharded data plane
+//!
+//! With every single-threaded hot path indexed, the remaining lever
+//! is using more than one core *within one simulation*. The paper's
+//! placement step is per-server (Best-Fit feasibility and H-score of
+//! server `l` depend only on `l`'s own capacity and usage), so the
+//! server pool is partitioned into `S` contiguous shards
+//! ([`SimOpts::shards`] / [`crate::cluster::ShardSpec`]): each shard
+//! owns its servers' [`Server`](crate::cluster::Server) and PS
+//! (`ServerSim`) columns plus its own event lane
+//! ([`wheel::ShardedQueue`] — a merge cursor restores the exact
+//! global `(time, seq)` drain order for any lane routing).
+//!
+//! Each same-timestamp event wave is drained in two phases:
+//!
+//! * **propose** (shard-parallel, scoped worker threads for heavy
+//!   waves): every live `ServerCheck` advances its shard's PS clock
+//!   and pops + releases the completed run entries. Mutations stay
+//!   inside the owning shard's columns; the only shared reads are the
+//!   static per-user demand vectors.
+//! * **commit** (sequential, main thread): the wave is replayed in
+//!   `(time, seq)` order, applying arrivals and each proposed
+//!   completion's cross-cutting effects — scheduler notifications,
+//!   user shares, report counters, job bookkeeping, seq-consuming
+//!   server refreshes — through the same code the sequential engine
+//!   runs, in the same order.
+//!
+//! Samples split a wave into segments (a sample reads whole-cluster
+//! utilization mid-wave), and the scheduler still runs once per
+//! timestamp after the wave commits. Because the propose phase
+//! computes exactly what the sequential drain would have computed
+//! (completion sets are a pure function of per-shard state) and the
+//! commit replays it in the sequential order, every `SimReport` float
+//! is bit-identical for every shard count — `S = 1` *is* the
+//! sequential engine, not a fork, and `tests/engine_parity.rs` pins
+//! the equivalence across `S × queue` choices.
 
-use crate::cluster::{Cluster, ResVec};
+use crate::cluster::{Cluster, ResVec, Server, ShardCount, ShardSpec};
 use crate::metrics::shares::ShareSketch;
 use crate::metrics::{
     JobRecord, JobStats, MetricsMode, TimeSeries, UserTaskCounts,
 };
 use crate::sched::index::BlockedIndex;
 use crate::sched::{DrainCtx, Scheduler, UserState};
-use crate::sim::wheel::{self, EventQueue, QueueKind, SimQueue, TimerWheel};
+use crate::sim::wheel::{
+    self, EventQueue, QueueKind, ShardedQueue, SimQueue, TimerWheel,
+};
 use crate::workload::{TaskArena, Trace};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -134,6 +173,17 @@ pub struct SimOpts {
     /// bounded-memory alternative to [`SimOpts::track_user_series`]
     /// for Fig. 4-style trajectories at large user counts.
     pub share_sketch: Option<usize>,
+    /// Server-pool shards for the parallel data plane (§Perf: sharded
+    /// data plane). The pool is split into contiguous shards, each
+    /// owning its servers' PS state and event lane; heavy event waves
+    /// propose shard-locally on scoped worker threads before a
+    /// sequential commit replays the wave in the global `(time, seq)`
+    /// order — so the report is bit-identical for every shard count
+    /// (`tests/engine_parity.rs`). `Fixed(1)` (the default) *is* the
+    /// sequential engine, not a fork of it; `Auto` uses one shard per
+    /// core. `DRFH_SEQ=1` disables the worker threads without
+    /// changing results.
+    pub shards: ShardCount,
 }
 
 impl Default for SimOpts {
@@ -145,6 +195,7 @@ impl Default for SimOpts {
             queue: QueueKind::Wheel,
             metrics: MetricsMode::Full,
             share_sketch: None,
+            shards: ShardCount::Fixed(1),
         }
     }
 }
@@ -187,7 +238,17 @@ enum EventKind {
 }
 
 type Event = wheel::Event<EventKind>;
-type Events = SimQueue<EventKind>;
+type Events = ShardedQueue<EventKind>;
+
+/// `(index within the current segment, server, generation)` of one
+/// gathered `ServerCheck` — the unit of shard-local propose work.
+type ShardCheck = (u32, u32, u64);
+
+/// Minimum `ServerCheck` count in a wave segment before the propose
+/// phase fans out to scoped worker threads — below this, spawn
+/// overhead dwarfs the shard-local work and the inline path (the same
+/// function, identical results) wins.
+const PAR_MIN_CHECKS: usize = 32;
 
 // ------------------------------------------------------------- run state
 
@@ -278,6 +339,20 @@ pub struct Simulation<'a> {
     scratch_unblock: Vec<usize>,
     scratch_classes: Vec<usize>,
 
+    /// §Perf: sharded data plane (module docs). `spec` partitions the
+    /// server pool; shard count 1 routes through the sequential
+    /// [`Simulation::run`] loop unchanged.
+    spec: ShardSpec,
+    /// Whether the propose phase may use worker threads at all
+    /// (multiple shards, no `DRFH_SEQ`, more than one core). The
+    /// inline fallback runs the identical function, so this gate is
+    /// perf-only.
+    par_ok: bool,
+    /// Per-shard `ServerCheck` gather and per-event propose results,
+    /// reused across wave segments.
+    scratch_checks: Vec<Vec<ShardCheck>>,
+    scratch_proposed: Vec<Option<Vec<RunEntry>>>,
+
     report: SimReport,
     total: ResVec,
 }
@@ -287,7 +362,7 @@ impl<'a> Simulation<'a> {
     pub fn new(
         cluster: Cluster,
         trace: &'a Trace,
-        scheduler: Box<dyn Scheduler + 'a>,
+        mut scheduler: Box<dyn Scheduler + 'a>,
         opts: SimOpts,
     ) -> Self {
         trace.validate().expect("invalid trace");
@@ -321,19 +396,32 @@ impl<'a> Simulation<'a> {
         let n = users.len();
         let k = cluster.len();
         let name = scheduler.name().to_string();
+        let nshards = opts.shards.resolve(k);
+        let spec = ShardSpec::contiguous(k, nshards);
+        // placement indexes mirror the shard layout (per-shard heaps
+        // reconciled by a cross-shard argmin, same selections)
+        scheduler.on_topology(nshards);
+        let par_ok = nshards > 1
+            && std::env::var_os("DRFH_SEQ").is_none()
+            && std::thread::available_parallelism()
+                .map(|p| p.get() > 1)
+                .unwrap_or(false);
         let events = match opts.queue {
             QueueKind::Auto => {
                 // perf-only: any geometry drains in the same total
-                // (time, seq) order (see `wheel` docs)
+                // (time, seq) order (see `wheel` docs); all lanes
+                // share the one auto-tuned geometry
                 let (width, nb) = wheel::auto_geometry(
                     trace
                         .jobs
                         .iter()
                         .flat_map(|j| j.tasks.iter().map(|t| t.duration)),
                 );
-                SimQueue::Wheel(TimerWheel::with_params(width, nb))
+                ShardedQueue::from_fn(nshards, || {
+                    SimQueue::Wheel(TimerWheel::with_params(width, nb))
+                })
             }
-            kind => Events::new(kind),
+            kind => Events::new(kind, nshards),
         };
         let sketch_budget = opts.share_sketch;
 
@@ -352,6 +440,10 @@ impl<'a> Simulation<'a> {
             blocked: BlockedIndex::classed(class_of, class_fit),
             scratch_unblock: Vec::new(),
             scratch_classes: Vec::new(),
+            spec,
+            par_ok,
+            scratch_checks: vec![Vec::new(); nshards],
+            scratch_proposed: Vec::new(),
             report: SimReport {
                 scheduler: name,
                 cpu_util: TimeSeries::default(),
@@ -385,7 +477,13 @@ impl<'a> Simulation<'a> {
     }
 
     fn push_event(&mut self, time: f64, kind: EventKind) {
-        push_event_into(&mut self.events, &mut self.seq, time, kind);
+        push_event_into(
+            &mut self.events,
+            &self.spec,
+            &mut self.seq,
+            time,
+            kind,
+        );
     }
 
     /// Run to completion (horizon or event exhaustion) and return the
@@ -394,8 +492,14 @@ impl<'a> Simulation<'a> {
     /// All events sharing a timestamp are applied *before* the
     /// scheduler runs, so simultaneous arrivals compete fairly
     /// (progressive filling sees every queued task, not an accident of
-    /// event ordering).
+    /// event ordering). With more than one shard the identical wave
+    /// structure runs through the propose/commit split
+    /// ([`Simulation::run_sharded`]); the single-shard path below is
+    /// the sequential engine and the parity reference.
     pub fn run(mut self) -> SimReport {
+        if self.spec.shards() > 1 {
+            return self.run_sharded();
+        }
         while let Some(ev) = self.events.pop() {
             if ev.time > self.opts.horizon {
                 break;
@@ -470,10 +574,20 @@ impl<'a> Simulation<'a> {
     }
 
     fn complete_task(&mut self, l: usize, entry: RunEntry) {
-        let u = entry.user as usize;
-        let demand = self.users[u].demand;
+        let demand = self.users[entry.user as usize].demand;
         self.cluster.servers[l].release(&demand);
         self.cluster.servers[l].tasks -= 1;
+        self.commit_completion(l, entry);
+    }
+
+    /// The cross-cutting half of a task completion — everything except
+    /// the capacity release, which the caller has already applied
+    /// ([`Simulation::complete_task`] on the sequential path,
+    /// [`propose_shard`] on the sharded one). Statement order matches
+    /// the pre-split `complete_task` exactly.
+    fn commit_completion(&mut self, l: usize, entry: RunEntry) {
+        let u = entry.user as usize;
+        let demand = self.users[u].demand;
         self.scheduler.on_free(l);
         self.scheduler.on_complete(u, l);
         self.users[u].running -= 1;
@@ -511,6 +625,7 @@ impl<'a> Simulation<'a> {
             &self.cluster,
             &mut self.servers,
             &mut self.events,
+            &self.spec,
             &mut self.seq,
             self.now,
             l,
@@ -578,6 +693,7 @@ impl<'a> Simulation<'a> {
             arena: &mut self.arena,
             servers: &mut self.servers,
             events: &mut self.events,
+            spec: &self.spec,
             seq: &mut self.seq,
             now: self.now,
             report: &mut self.report,
@@ -624,18 +740,225 @@ impl<'a> Simulation<'a> {
             self.push_event(next, EventKind::Sample);
         }
     }
+
+    // ------------------------------------------------- sharded drain
+
+    /// The `S >= 2` main loop (§Perf: sharded data plane). Wave
+    /// structure is identical to [`Simulation::run`]: gather every
+    /// event at `now`, apply them all, then let the scheduler drain
+    /// once. The gather is batched rather than interleaved, which is
+    /// order-preserving because any event pushed *during* a wave
+    /// carries a larger seq than everything already queued (seq is a
+    /// monotone push counter) — the sequential loop would also drain
+    /// it after the pre-existing same-time events. The inner loop
+    /// re-gathers defensively in case an applied event scheduled
+    /// another at the same timestamp.
+    fn run_sharded(mut self) -> SimReport {
+        let mut wave: Vec<Event> = Vec::new();
+        while let Some(ev) = self.events.pop() {
+            if ev.time > self.opts.horizon {
+                break;
+            }
+            self.now = ev.time;
+            let mut need_sched = false;
+            wave.clear();
+            wave.push(ev);
+            loop {
+                while let Some(next) = self.events.peek() {
+                    if next.time > self.now {
+                        break;
+                    }
+                    wave.push(self.events.pop().unwrap());
+                }
+                need_sched |= self.apply_wave(&wave);
+                wave.clear();
+                match self.events.peek() {
+                    Some(next) if next.time <= self.now => {}
+                    _ => break,
+                }
+            }
+            if need_sched {
+                self.schedule_loop();
+            }
+        }
+        self.report.avg_cpu_util = self.report.cpu_util.time_avg();
+        self.report.avg_mem_util = self.report.mem_util.time_avg();
+        self.report
+    }
+
+    /// Apply one same-timestamp wave: samples are barriers (they read
+    /// whole-cluster utilization mid-wave, so every earlier release
+    /// must be visible and no later one may be), splitting the wave
+    /// into sample-free segments that each run propose + commit.
+    fn apply_wave(&mut self, wave: &[Event]) -> bool {
+        let mut need = false;
+        let mut i = 0;
+        while i < wave.len() {
+            if matches!(wave[i].payload, EventKind::Sample) {
+                self.on_sample();
+                i += 1;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < wave.len()
+                && !matches!(wave[j].payload, EventKind::Sample)
+            {
+                j += 1;
+            }
+            need |= self.apply_segment(&wave[i..j]);
+            i = j;
+        }
+        need
+    }
+
+    /// One sample-free segment of a wave, in two phases (module docs,
+    /// §Perf: sharded data plane):
+    ///
+    /// * **propose** — [`propose_shard`] per shard, on scoped worker
+    ///   threads when the segment is heavy enough to amortize the
+    ///   spawns (the inline path runs the identical function);
+    /// * **commit** — sequential replay in `(time, seq)` order through
+    ///   the same code the sequential engine runs.
+    ///
+    /// A live check with zero completions still commits: the
+    /// sequential path refreshes such a server unconditionally
+    /// (generation bump plus a seq-consuming next-check push), and seq
+    /// assignment must match event for event.
+    fn apply_segment(&mut self, seg: &[Event]) -> bool {
+        // gather ServerChecks by owner shard
+        let ns = self.spec.shards();
+        for checks in &mut self.scratch_checks {
+            checks.clear();
+        }
+        let mut n_checks = 0usize;
+        for (i, ev) in seg.iter().enumerate() {
+            if let EventKind::ServerCheck { server, gen } = ev.payload {
+                self.scratch_checks[self.spec.owner_of(server)]
+                    .push((i as u32, server as u32, gen));
+                n_checks += 1;
+            }
+        }
+
+        // propose: shard-local completion pops. `mem::take` keeps the
+        // split-off column slices at the full borrow lifetime so they
+        // can cross into the scoped threads.
+        self.scratch_proposed.clear();
+        self.scratch_proposed.resize_with(seg.len(), || None);
+        if n_checks > 0 {
+            let spec = &self.spec;
+            let users = &self.users;
+            let now = self.now;
+            let checks = &self.scratch_checks;
+            let proposed = &mut self.scratch_proposed;
+            let mut srv_rest: &mut [Server] = &mut self.cluster.servers;
+            let mut sim_rest: &mut [ServerSim] = &mut self.servers;
+            if self.par_ok && n_checks >= PAR_MIN_CHECKS {
+                std::thread::scope(|sc| {
+                    let mut handles = Vec::with_capacity(ns);
+                    for s in 0..ns {
+                        let len = spec.len_of(s);
+                        let (srv, rest) =
+                            std::mem::take(&mut srv_rest).split_at_mut(len);
+                        srv_rest = rest;
+                        let (sim, rest) =
+                            std::mem::take(&mut sim_rest).split_at_mut(len);
+                        sim_rest = rest;
+                        if checks[s].is_empty() {
+                            continue;
+                        }
+                        let base = spec.start_of(s);
+                        let shard_checks = &checks[s];
+                        handles.push(sc.spawn(move || {
+                            propose_shard(
+                                srv, sim, base, users, now, shard_checks,
+                            )
+                        }));
+                    }
+                    // join in shard order; results scatter by segment
+                    // index, so completion timing cannot reorder them
+                    for h in handles {
+                        for (idx, entries) in
+                            h.join().expect("shard propose worker")
+                        {
+                            proposed[idx as usize] = Some(entries);
+                        }
+                    }
+                });
+            } else {
+                for s in 0..ns {
+                    let len = spec.len_of(s);
+                    let (srv, rest) =
+                        std::mem::take(&mut srv_rest).split_at_mut(len);
+                    srv_rest = rest;
+                    let (sim, rest) =
+                        std::mem::take(&mut sim_rest).split_at_mut(len);
+                    sim_rest = rest;
+                    if checks[s].is_empty() {
+                        continue;
+                    }
+                    for (idx, entries) in propose_shard(
+                        srv,
+                        sim,
+                        spec.start_of(s),
+                        users,
+                        now,
+                        &checks[s],
+                    ) {
+                        proposed[idx as usize] = Some(entries);
+                    }
+                }
+            }
+        }
+
+        // commit: sequential replay in (time, seq) order
+        let mut proposed = std::mem::take(&mut self.scratch_proposed);
+        let mut need = false;
+        for (i, ev) in seg.iter().enumerate() {
+            match ev.payload {
+                EventKind::Arrival(j) => need |= self.on_arrival(j),
+                EventKind::ServerCheck { server, .. } => {
+                    if let Some(entries) = proposed[i].take() {
+                        let completed_any = !entries.is_empty();
+                        for entry in entries {
+                            self.commit_completion(server, entry);
+                        }
+                        self.refresh_server(server);
+                        if completed_any {
+                            self.unblock_for_server(server);
+                            need = true;
+                        }
+                    }
+                }
+                EventKind::Sample => {
+                    unreachable!("samples are segment barriers")
+                }
+            }
+        }
+        self.scratch_proposed = proposed;
+        need
+    }
 }
 
 // ------------------------------------------------------- drain plumbing
 
 fn push_event_into(
     events: &mut Events,
+    spec: &ShardSpec,
     seq: &mut u64,
     time: f64,
     kind: EventKind,
 ) {
     *seq += 1;
-    events.push(Event { time, seq: *seq, payload: kind });
+    // each ServerCheck rides its owner shard's lane so shard-local
+    // pushes stay shard-local; arrivals and samples ride lane 0. Lane
+    // routing is ownership/locality only — the merge cursor restores
+    // the exact global (time, seq) order for any assignment
+    // ([`wheel::ShardedQueue`]).
+    let lane = match kind {
+        EventKind::ServerCheck { server, .. } => spec.owner_of(server),
+        EventKind::Arrival(_) | EventKind::Sample => 0,
+    };
+    events.push_to(lane, Event { time, seq: *seq, payload: kind });
 }
 
 /// Recompute server `l`'s PS rate and (re)schedule its next completion
@@ -645,6 +968,7 @@ fn refresh_server_at(
     cluster: &Cluster,
     servers: &mut [ServerSim],
     events: &mut Events,
+    spec: &ShardSpec,
     seq: &mut u64,
     now: f64,
     l: usize,
@@ -656,11 +980,59 @@ fn refresh_server_at(
         let dt = (top.vfinish - srv.vtime).max(0.0) / srv.rate;
         let eta = now + dt;
         let gen = srv.gen;
-        push_event_into(events, seq, eta, EventKind::ServerCheck {
+        push_event_into(events, spec, seq, eta, EventKind::ServerCheck {
             server: l,
             gen,
         });
     }
+}
+
+/// Shard-local half of a wave segment's `ServerCheck` work (§Perf:
+/// sharded data plane): for each gathered check on this shard, skip it
+/// if stale, otherwise advance the PS clock and pop every completed
+/// [`RunEntry`], releasing its demand from the shard-owned [`Server`]
+/// column. Mutates only this shard's slices (global server `l` lives
+/// at `l - base`); the only shared reads are the static per-user
+/// demand vectors, so concurrent shards never observe each other. The
+/// completion pops and the release arithmetic are statement-for-
+/// statement the sequential `on_server_check`/`complete_task` path —
+/// the cross-cutting rest is replayed by the sequential commit.
+///
+/// Live checks are reported even with zero completions (the commit
+/// must still refresh those servers to keep seq assignment aligned
+/// with the sequential engine). At most one check per server can be
+/// live in a segment: generations are unique per push, so only one
+/// queued event ever matches the server's current generation.
+fn propose_shard(
+    cluster_servers: &mut [Server],
+    servers: &mut [ServerSim],
+    base: usize,
+    users: &[UserState],
+    now: f64,
+    checks: &[ShardCheck],
+) -> Vec<(u32, Vec<RunEntry>)> {
+    let mut out = Vec::with_capacity(checks.len());
+    for &(idx, server, gen) in checks {
+        let sl = server as usize - base;
+        if servers[sl].gen != gen {
+            continue; // stale event, same guard as the sequential path
+        }
+        servers[sl].advance(now);
+        let mut entries = Vec::new();
+        while let Some(top) = servers[sl].running.peek() {
+            if top.vfinish <= servers[sl].vtime + 1e-9 {
+                let entry = servers[sl].running.pop().unwrap();
+                let demand = users[entry.user as usize].demand;
+                cluster_servers[sl].release(&demand);
+                cluster_servers[sl].tasks -= 1;
+                entries.push(entry);
+            } else {
+                break;
+            }
+        }
+        out.push((idx, entries));
+    }
+    out
 }
 
 /// The engine's side of the batched-drain protocol: disjoint mutable
@@ -675,6 +1047,7 @@ struct EngineCtx<'e, 't> {
     arena: &'e mut TaskArena<'t>,
     servers: &'e mut [ServerSim],
     events: &'e mut Events,
+    spec: &'e ShardSpec,
     seq: &'e mut u64,
     now: f64,
     report: &'e mut SimReport,
@@ -737,6 +1110,7 @@ impl DrainCtx for EngineCtx<'_, '_> {
             self.cluster,
             self.servers,
             self.events,
+            self.spec,
             self.seq,
             self.now,
             l,

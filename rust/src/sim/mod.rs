@@ -8,9 +8,12 @@
 pub mod engine;
 pub mod wheel;
 
+pub use crate::cluster::ShardCount;
 pub use crate::metrics::MetricsMode;
 pub use engine::{run, SimOpts, SimReport, Simulation};
-pub use wheel::{EventQueue, HeapQueue, QueueKind, SimQueue, TimerWheel};
+pub use wheel::{
+    EventQueue, HeapQueue, QueueKind, ShardedQueue, SimQueue, TimerWheel,
+};
 
 #[cfg(test)]
 mod tests {

@@ -445,6 +445,121 @@ impl<T: Copy> EventQueue<T> for SimQueue<T> {
     }
 }
 
+// ------------------------------------------------------------- sharded
+
+/// §Perf: per-shard event lanes behind one merged drain order — the
+/// queue side of the engine's sharded data plane (see
+/// [`crate::sim::engine`] §Perf and [`crate::cluster::ShardSpec`]).
+///
+/// Each lane is an independent [`SimQueue`]; the engine routes every
+/// `ServerCheck` to the lane of the shard owning its server (arrivals
+/// and samples ride lane 0) so shard-local pushes never contend on a
+/// shared structure. `pop`/`peek` run a merge cursor: the lane heads
+/// are compared under the same total `(time, seq)` order
+/// ([`drain_cmp`]) every queue in this module uses, and the earliest
+/// head wins.
+///
+/// **Why the merge is exact for any routing:** each lane individually
+/// drains in `(time, seq)` order, so the globally earliest remaining
+/// event is always at the head of *some* lane, and the argmin over
+/// lane heads finds it. Lane assignment therefore only affects cache
+/// locality and contention — never the drain sequence — which is what
+/// keeps the sharded engine bit-identical to the sequential one
+/// (`tests/engine_parity.rs`). A single-lane queue short-circuits the
+/// cursor and behaves exactly like its inner [`SimQueue`].
+pub struct ShardedQueue<T> {
+    lanes: Vec<SimQueue<T>>,
+    len: usize,
+}
+
+impl<T: Copy> ShardedQueue<T> {
+    /// `lanes` queues of the given kind (lane count = shard count in
+    /// the engine; must be at least 1).
+    pub fn new(kind: QueueKind, lanes: usize) -> Self {
+        Self::from_fn(lanes, || SimQueue::new(kind))
+    }
+
+    /// Build each lane from a closure — the engine uses this to give
+    /// every lane one shared auto-tuned wheel geometry.
+    pub fn from_fn(
+        lanes: usize,
+        mut mk: impl FnMut() -> SimQueue<T>,
+    ) -> Self {
+        assert!(lanes >= 1, "need at least one event lane");
+        ShardedQueue {
+            lanes: (0..lanes).map(|_| mk()).collect(),
+            len: 0,
+        }
+    }
+
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Push `ev` onto a specific lane. Routing is the caller's policy
+    /// and is semantically free (see the type docs); the default
+    /// [`EventQueue::push`] routes everything to lane 0.
+    #[inline]
+    pub fn push_to(&mut self, lane: usize, ev: Event<T>) {
+        self.lanes[lane].push(ev);
+        self.len += 1;
+    }
+
+    /// The lane whose head is the globally earliest event, or `None`
+    /// when empty. `&mut` because peeking a lane may settle its wheel.
+    fn min_lane(&mut self) -> Option<usize> {
+        let mut best: Option<(f64, u64, usize)> = None;
+        for (i, lane) in self.lanes.iter_mut().enumerate() {
+            if let Some(head) = lane.peek() {
+                let earlier = match best {
+                    None => true,
+                    Some((t, s, _)) => head
+                        .time
+                        .total_cmp(&t)
+                        .then_with(|| head.seq.cmp(&s))
+                        .is_lt(),
+                };
+                if earlier {
+                    best = Some((head.time, head.seq, i));
+                }
+            }
+        }
+        best.map(|(_, _, i)| i)
+    }
+}
+
+impl<T: Copy> EventQueue<T> for ShardedQueue<T> {
+    fn push(&mut self, ev: Event<T>) {
+        self.push_to(0, ev);
+    }
+
+    fn pop(&mut self) -> Option<Event<T>> {
+        let lane = if self.lanes.len() == 1 {
+            0
+        } else {
+            self.min_lane()?
+        };
+        let ev = self.lanes[lane].pop();
+        if ev.is_some() {
+            self.len -= 1;
+        }
+        ev
+    }
+
+    fn peek(&mut self) -> Option<Event<T>> {
+        if self.lanes.len() == 1 {
+            return self.lanes[0].peek();
+        }
+        let lane = self.min_lane()?;
+        self.lanes[lane].peek()
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -682,5 +797,84 @@ mod tests {
             wheel.push(e);
         }
         assert_eq!(drain(&mut heap), drain(&mut wheel));
+    }
+
+    /// The merge cursor must produce the exact single-queue drain
+    /// order for ANY lane routing — randomized streams, every queue
+    /// kind, adversarial lane assignment.
+    #[test]
+    fn sharded_merge_matches_single_queue_for_any_routing() {
+        for kind in [QueueKind::Heap, QueueKind::Wheel] {
+            for lanes in [1usize, 2, 3, 8] {
+                let mut rng = Pcg32::seeded(900 + lanes as u64);
+                let mut reference = HeapQueue::new();
+                let mut sharded = ShardedQueue::new(kind, lanes);
+                assert_eq!(sharded.lanes(), lanes);
+                let mut seq = 0u64;
+                let mut now = 0.0f64;
+                for _ in 0..2_000 {
+                    if rng.f64() < 0.55 || reference.len() == 0 {
+                        seq += 1;
+                        // same-time bursts included: ties must break
+                        // by seq across lanes
+                        let dt = match seq % 3 {
+                            0 => 0.0,
+                            1 => rng.uniform(0.0, 40.0),
+                            _ => rng.uniform(0.0, 5_000.0),
+                        };
+                        let e = ev(now + dt, seq);
+                        reference.push(e);
+                        // adversarial routing: lane chosen at random,
+                        // uncorrelated with time or seq
+                        let lane =
+                            (rng.f64() * lanes as f64) as usize % lanes;
+                        sharded.push_to(lane, e);
+                    } else {
+                        let a = reference.pop().unwrap();
+                        let b = sharded.pop().unwrap();
+                        assert_eq!(
+                            (a.time, a.seq),
+                            (b.time, b.seq),
+                            "lanes {lanes} kind {kind:?}"
+                        );
+                        now = a.time;
+                    }
+                    assert_eq!(reference.len(), sharded.len());
+                    if reference.len() > 0 {
+                        let pa = reference.peek().unwrap();
+                        let pb = sharded.peek().unwrap();
+                        assert_eq!((pa.time, pa.seq), (pb.time, pb.seq));
+                    }
+                }
+                assert_eq!(drain(&mut reference), drain(&mut sharded));
+            }
+        }
+    }
+
+    /// Same-timestamp events scattered across lanes drain in global
+    /// seq order (the cross-shard simultaneous-event tie-break).
+    #[test]
+    fn sharded_ties_break_by_seq_across_lanes() {
+        let mut q = ShardedQueue::new(QueueKind::Wheel, 3);
+        // one timestamp, seqs interleaved over all lanes
+        for (lane, seq) in [(2, 4), (0, 1), (1, 5), (2, 2), (0, 6), (1, 3)]
+        {
+            q.push_to(lane, ev(10.0, seq));
+        }
+        // plus a default-routed (lane 0) earlier event
+        q.push(ev(5.0, 7));
+        assert_eq!(
+            drain(&mut q),
+            vec![
+                (5.0, 7),
+                (10.0, 1),
+                (10.0, 2),
+                (10.0, 3),
+                (10.0, 4),
+                (10.0, 5),
+                (10.0, 6),
+            ]
+        );
+        assert!(q.pop().is_none());
     }
 }

@@ -19,7 +19,7 @@ use drfh::sched::{
     BestFitDrfh, DrainCtx, FirstFitDrfh, Pick, Scheduler, SlotsScheduler,
     UserState,
 };
-use drfh::sim::{run, QueueKind, SimOpts};
+use drfh::sim::{run, QueueKind, ShardCount, SimOpts};
 use drfh::util::Pcg32;
 use drfh::workload::{
     GoogleLikeConfig, JobSpec, TaskSpec, Trace, TraceGenerator, UserSpec,
@@ -921,6 +921,152 @@ fn share_sketches_bound_memory_and_error() {
         let vmax =
             exact.v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
         assert_eq!(sketch.stats.max(), vmax, "user {u}");
+    }
+}
+
+// ----------------------------------------------- sharded data plane
+
+/// Run the same policy + trace at several shard counts and assert the
+/// decision streams AND the entire [`drfh::sim::SimReport`] are
+/// bit-identical to the sequential (S = 1) engine — the sharded drain
+/// is a wall-clock lever only, never a behavioral fork.
+fn assert_shard_parity<S, F>(
+    label: &str,
+    cluster: &Cluster,
+    trace: &Trace,
+    opts: &SimOpts,
+    mk: F,
+) where
+    S: Scheduler + 'static,
+    F: Fn() -> S,
+{
+    let log_ref = Rc::new(RefCell::new(Vec::new()));
+    let r_ref = run(
+        cluster.clone(),
+        trace,
+        Box::new(Recording { inner: mk(), log: log_ref.clone() }),
+        SimOpts { shards: ShardCount::Fixed(1), ..opts.clone() },
+    );
+    assert!(r_ref.tasks_placed > 0, "{label}: degenerate run placed nothing");
+    for shards in [2usize, 3, 8] {
+        let log_s = Rc::new(RefCell::new(Vec::new()));
+        let r_s = run(
+            cluster.clone(),
+            trace,
+            Box::new(Recording { inner: mk(), log: log_s.clone() }),
+            SimOpts { shards: ShardCount::Fixed(shards), ..opts.clone() },
+        );
+        let a = log_ref.borrow();
+        let b = log_s.borrow();
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x, y, "{label} S={shards}: decision {i} diverged");
+        }
+        assert_eq!(a.len(), b.len(), "{label} S={shards}: stream lengths");
+        assert_eq!(r_ref, r_s, "{label} S={shards}: SimReports diverged");
+    }
+}
+
+/// The tentpole acceptance matrix: randomized Google-like traces ×
+/// shard counts {1, 2, 3, 8} × every queue kind, for both the DRFH
+/// indexed policies and the overcommitting Slots baseline (whose PS
+/// completion times are maximally sensitive to any drain-order
+/// drift). Full-report equality includes utilization series, job
+/// records, and share sketches.
+#[test]
+fn sharded_engine_matches_sequential() {
+    for seed in 0..3u64 {
+        let (cluster, trace, opts) =
+            random_setup(17_000 + seed, seed * 23 + 9);
+        for kind in [QueueKind::Wheel, QueueKind::Heap, QueueKind::Auto] {
+            let opts = SimOpts {
+                queue: kind,
+                share_sketch: Some(32),
+                track_user_series: true,
+                ..opts.clone()
+            };
+            assert_shard_parity(
+                &format!("sharded bestfit seed {seed} {kind:?}"),
+                &cluster,
+                &trace,
+                &opts,
+                BestFitDrfh::default,
+            );
+        }
+        assert_shard_parity(
+            &format!("sharded slots seed {seed}"),
+            &cluster,
+            &trace,
+            &opts,
+            || SlotsScheduler::new(&cluster, 14),
+        );
+        assert_shard_parity(
+            &format!("sharded naive firstfit seed {seed}"),
+            &cluster,
+            &trace,
+            &opts,
+            FirstFitDrfh::naive,
+        );
+    }
+}
+
+/// Engineered cross-shard collisions: everything lands on a 10 s grid
+/// (arrivals, completions at rate 1, and the sample tick), so every
+/// wave mixes `Arrival`s (lane 0), `ServerCheck`s owned by *different*
+/// shards, and a `Sample` barrier at the same timestamp. The merge
+/// cursor must reconcile the cross-lane picks in the exact global
+/// `(time, seq)` order the sequential engine uses, at every shard
+/// count and on both queue kinds.
+#[test]
+fn cross_shard_simultaneous_events_tiebreak() {
+    let mut rng = Pcg32::seeded(4343);
+    let cluster = Cluster::google_sample(10, &mut rng);
+    let users: Vec<UserSpec> = (0..5)
+        .map(|_| UserSpec {
+            demand: ResVec::cpu_mem(
+                rng.uniform(0.1, 0.4),
+                rng.uniform(0.1, 0.4),
+            ),
+            weight: 1.0,
+        })
+        .collect();
+    let jobs: Vec<JobSpec> = (0..25)
+        .map(|j| JobSpec {
+            id: j,
+            user: j % 5,
+            submit: ((j / 5) as f64) * 10.0, // 5 arrivals per timestamp
+            tasks: vec![
+                TaskSpec { duration: 10.0 * (1 + j % 4) as f64 };
+                12
+            ],
+        })
+        .collect();
+    let trace = Trace { users, jobs };
+    for kind in [QueueKind::Wheel, QueueKind::Heap] {
+        let opts = SimOpts {
+            horizon: 1_000.0,
+            sample_dt: 10.0,
+            track_user_series: false,
+            queue: kind,
+            ..SimOpts::default()
+        };
+        // 10 servers over 8 shards: most shards own a single server,
+        // so simultaneous completions almost always span shards
+        assert_shard_parity(
+            &format!("cross-shard bestfit {kind:?}"),
+            &cluster,
+            &trace,
+            &opts,
+            BestFitDrfh::default,
+        );
+        // Slots overcommits: PS rate changes reschedule ServerChecks
+        // that keep colliding with the sample grid while rates are 1
+        assert_shard_parity(
+            &format!("cross-shard slots {kind:?}"),
+            &cluster,
+            &trace,
+            &opts,
+            || SlotsScheduler::new(&cluster, 14),
+        );
     }
 }
 
