@@ -1,0 +1,811 @@
+//! The determinism conformance linter behind `drfh lint`.
+//!
+//! Five rules, each encoding an invariant the repo's parity tests rely
+//! on but no compiler pass enforces:
+//!
+//! | rule id         | invariant                                               |
+//! | --------------- | ------------------------------------------------------- |
+//! | `hash-iter`     | no `HashMap`/`HashSet` *iteration* in decision modules  |
+//! | `float-sort`    | float ordering uses `total_cmp`, never `partial_cmp`    |
+//! | `wall-clock`    | no `Instant::now`/`SystemTime`/entropy in decision code |
+//! | `naive-parity`  | every `Scheduler` impl has a `naive()` parity reference |
+//! | `unsafe-safety` | `unsafe` requires a `// SAFETY:` comment                |
+//!
+//! Decision modules are `sched`, `sim`, `cluster` and `workload` —
+//! the code whose outputs must be bit-identical across shard counts,
+//! queue kinds and index implementations. Keyed hash lookups
+//! (`get`/`entry`/`contains_key`) stay legal there; only iteration
+//! order can leak `RandomState` nondeterminism into decisions.
+//!
+//! Findings carry `file:line` plus the rule id and are suppressible
+//! with a `// lint:allow(rule-id)` pragma on the same line or the
+//! line above, followed by prose justifying the exemption. The linter
+//! self-tests against [`VIOLATION_CORPUS`], an embedded set of
+//! minimal violating sources; `drfh lint --corpus true` runs the same
+//! corpus from the CLI and must exit non-zero, which CI checks.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// A lint rule identifier. Ordering is the report order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// `HashMap`/`HashSet` iteration inside a decision module.
+    HashIter,
+    /// `partial_cmp` used for float ordering (want `total_cmp`).
+    FloatSort,
+    /// Wall-clock or entropy source inside a decision module.
+    WallClock,
+    /// `impl Scheduler for T` without a `naive()` parity reference.
+    NaiveParity,
+    /// `unsafe` without a `// SAFETY:` comment.
+    UnsafeSafety,
+}
+
+impl Rule {
+    /// All rules, in report order.
+    pub const ALL: [Rule; 5] = [
+        Rule::HashIter,
+        Rule::FloatSort,
+        Rule::WallClock,
+        Rule::NaiveParity,
+        Rule::UnsafeSafety,
+    ];
+
+    /// The stable id used in reports and `lint:allow(...)` pragmas.
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::HashIter => "hash-iter",
+            Rule::FloatSort => "float-sort",
+            Rule::WallClock => "wall-clock",
+            Rule::NaiveParity => "naive-parity",
+            Rule::UnsafeSafety => "unsafe-safety",
+        }
+    }
+
+    /// Parse a pragma id back into a rule.
+    pub fn from_id(id: &str) -> Option<Rule> {
+        Rule::ALL.iter().copied().find(|r| r.id() == id)
+    }
+}
+
+/// One linter finding: file, 1-based line, rule, human message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// Path relative to the linted source root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Which rule fired.
+    pub rule: Rule,
+    /// Human-readable explanation.
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file,
+            self.line,
+            self.rule.id(),
+            self.msg
+        )
+    }
+}
+
+/// Modules whose code decides placements; hash iteration and clock
+/// reads are banned here (top-level directory names under `src/`).
+const DECISION_MODULES: [&str; 4] = ["sched", "sim", "cluster", "workload"];
+
+fn in_decision_module(rel_path: &str) -> bool {
+    let first = rel_path.split('/').next().unwrap_or("");
+    let stem = first.strip_suffix(".rs").unwrap_or(first);
+    DECISION_MODULES.contains(&stem)
+}
+
+// ---------------------------------------------------------------------
+// Lexing: split each source line into code text and comment text, with
+// string/char-literal contents blanked out of the code text so rule
+// patterns never match inside literals. Tracks multi-line constructs
+// (block comments, plain and raw strings) across lines.
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq)]
+enum LexState {
+    Code,
+    /// Nested block comment, with depth.
+    Block(u32),
+    /// Inside a `"..."` string literal.
+    Str,
+    /// Inside a raw string, with the number of `#` delimiters.
+    RawStr(u32),
+}
+
+/// Per-line lexer output.
+struct Stripped {
+    /// Code text with comments and literal contents replaced by
+    /// spaces (column-preserving).
+    code: Vec<String>,
+    /// Comment text per line (line + block comments concatenated).
+    comments: Vec<String>,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn strip(src: &str) -> Stripped {
+    let chars: Vec<char> = src.chars().collect();
+    let mut code = Vec::new();
+    let mut comments = Vec::new();
+    let mut cur_code = String::new();
+    let mut cur_com = String::new();
+    let mut st = LexState::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            code.push(std::mem::take(&mut cur_code));
+            comments.push(std::mem::take(&mut cur_com));
+            i += 1;
+            continue;
+        }
+        match st {
+            LexState::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    // Line comment: rest of the line is comment text.
+                    while i < chars.len() && chars[i] != '\n' {
+                        cur_com.push(chars[i]);
+                        cur_code.push(' ');
+                        i += 1;
+                    }
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = LexState::Block(1);
+                    cur_code.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    st = LexState::Str;
+                    cur_code.push('"');
+                    i += 1;
+                } else if c == 'r'
+                    && !prev_is_ident(&chars, i)
+                    && raw_str_hashes(&chars, i + 1).is_some()
+                {
+                    let h = raw_str_hashes(&chars, i + 1).unwrap();
+                    st = LexState::RawStr(h);
+                    // r, the hashes, and the opening quote.
+                    for _ in 0..(h as usize + 2) {
+                        cur_code.push(' ');
+                    }
+                    i += h as usize + 2;
+                } else if c == '\'' {
+                    // Char literal vs lifetime: a literal closes with
+                    // `'` after one (possibly escaped) character.
+                    if let Some(end) = char_literal_end(&chars, i) {
+                        for _ in i..=end {
+                            cur_code.push(' ');
+                        }
+                        i = end + 1;
+                    } else {
+                        cur_code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    cur_code.push(c);
+                    i += 1;
+                }
+            }
+            LexState::Block(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    st = if depth == 1 {
+                        LexState::Code
+                    } else {
+                        LexState::Block(depth - 1)
+                    };
+                    cur_code.push_str("  ");
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = LexState::Block(depth + 1);
+                    cur_code.push_str("  ");
+                    i += 2;
+                } else {
+                    cur_com.push(c);
+                    cur_code.push(' ');
+                    i += 1;
+                }
+            }
+            LexState::Str => {
+                if c == '\\' && i + 1 < chars.len() && chars[i + 1] != '\n' {
+                    cur_code.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    st = LexState::Code;
+                    cur_code.push('"');
+                    i += 1;
+                } else {
+                    cur_code.push(' ');
+                    i += 1;
+                }
+            }
+            LexState::RawStr(h) => {
+                if c == '"' && closes_raw(&chars, i, h) {
+                    st = LexState::Code;
+                    for _ in 0..(h as usize + 1) {
+                        cur_code.push(' ');
+                    }
+                    i += h as usize + 1;
+                } else {
+                    cur_code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    code.push(cur_code);
+    comments.push(cur_com);
+    Stripped { code, comments }
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && is_ident(chars[i - 1])
+}
+
+/// At `chars[i]` just after an `r`: `Some(n)` if `#`*n `"` starts a
+/// raw string here.
+fn raw_str_hashes(chars: &[char], i: usize) -> Option<u32> {
+    let mut n = 0u32;
+    let mut j = i;
+    while chars.get(j) == Some(&'#') {
+        n += 1;
+        j += 1;
+    }
+    (chars.get(j) == Some(&'"')).then_some(n)
+}
+
+/// Does the `"` at `chars[i]` close a raw string with `h` hashes?
+fn closes_raw(chars: &[char], i: usize, h: u32) -> bool {
+    (1..=h as usize).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// If a char literal starts at `chars[i] == '\''`, return the index
+/// of its closing quote; `None` for lifetimes.
+fn char_literal_end(chars: &[char], i: usize) -> Option<usize> {
+    match chars.get(i + 1) {
+        Some('\\') => {
+            // Escaped: skip to the next unescaped quote (covers
+            // \n, \', \u{..}).
+            let mut j = i + 2;
+            while j < chars.len() && chars[j] != '\'' && chars[j] != '\n' {
+                j += 1;
+            }
+            (chars.get(j) == Some(&'\'')).then_some(j)
+        }
+        Some(_) => (chars.get(i + 2) == Some(&'\'')).then_some(i + 2),
+        None => None,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pragmas
+// ---------------------------------------------------------------------
+
+/// Lines (1-based) on which each rule is suppressed. A pragma on line
+/// `n` suppresses its rule on lines `n` and `n + 1`, so it can sit
+/// either on the flagged line or directly above it.
+fn collect_allows(comments: &[String]) -> BTreeMap<Rule, Vec<usize>> {
+    let mut allows: BTreeMap<Rule, Vec<usize>> = BTreeMap::new();
+    for (idx, com) in comments.iter().enumerate() {
+        let mut rest = com.as_str();
+        while let Some(p) = rest.find("lint:allow(") {
+            rest = &rest[p + "lint:allow(".len()..];
+            if let Some(close) = rest.find(')') {
+                if let Some(rule) = Rule::from_id(rest[..close].trim()) {
+                    let e = allows.entry(rule).or_default();
+                    e.push(idx + 1);
+                    e.push(idx + 2);
+                }
+                rest = &rest[close + 1..];
+            } else {
+                break;
+            }
+        }
+    }
+    allows
+}
+
+fn allowed(allows: &BTreeMap<Rule, Vec<usize>>, rule: Rule, line: usize) -> bool {
+    allows.get(&rule).is_some_and(|v| v.contains(&line))
+}
+
+// ---------------------------------------------------------------------
+// Pattern helpers (word-boundary aware, on stripped code text)
+// ---------------------------------------------------------------------
+
+/// Byte offsets of word-boundary occurrences of `word` in `line`:
+/// neither neighbour is an identifier character.
+fn word_positions(line: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = line[from..].find(word) {
+        let at = from + p;
+        let before_ok = at == 0
+            || !line[..at].chars().next_back().is_some_and(is_ident);
+        let after = at + word.len();
+        let after_ok =
+            !line[after..].chars().next().is_some_and(is_ident);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + word.len();
+    }
+    out
+}
+
+fn contains_word(line: &str, word: &str) -> bool {
+    !word_positions(line, word).is_empty()
+}
+
+// ---------------------------------------------------------------------
+// The rules
+// ---------------------------------------------------------------------
+
+/// Lint a single source file. `rel_path` is the `/`-separated path
+/// relative to the source root (it selects decision-module rules).
+pub fn lint_source(rel_path: &str, src: &str) -> Vec<Finding> {
+    let stripped = strip(src);
+    let allows = collect_allows(&stripped.comments);
+    let decision = in_decision_module(rel_path);
+    let mut out = Vec::new();
+    let mut push = |rule: Rule, line: usize, msg: String| {
+        if !allowed(&allows, rule, line) {
+            out.push(Finding { file: rel_path.to_string(), line, rule, msg });
+        }
+    };
+
+    rule_float_sort(&stripped.code, &mut push);
+    rule_unsafe_safety(&stripped.code, &stripped.comments, &mut push);
+    rule_naive_parity(&stripped.code, &mut push);
+    if decision {
+        rule_wall_clock(&stripped.code, &mut push);
+        rule_hash_iter(&stripped.code, &mut push);
+    }
+
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+fn rule_float_sort(code: &[String], push: &mut impl FnMut(Rule, usize, String)) {
+    for (idx, line) in code.iter().enumerate() {
+        if !contains_word(line, "partial_cmp") {
+            continue;
+        }
+        // `fn partial_cmp` is PartialOrd impl boilerplate, not a use.
+        if line.contains("fn partial_cmp") {
+            continue;
+        }
+        push(
+            Rule::FloatSort,
+            idx + 1,
+            "partial_cmp on floats can panic or misorder on NaN; \
+             use f64::total_cmp"
+                .to_string(),
+        );
+    }
+}
+
+fn rule_unsafe_safety(
+    code: &[String],
+    comments: &[String],
+    push: &mut impl FnMut(Rule, usize, String),
+) {
+    for (idx, line) in code.iter().enumerate() {
+        if !contains_word(line, "unsafe") {
+            continue;
+        }
+        // Accept a SAFETY: comment on the same line or up to three
+        // lines above.
+        let lo = idx.saturating_sub(3);
+        let documented = comments[lo..=idx]
+            .iter()
+            .any(|c| c.contains("SAFETY:"));
+        if !documented {
+            push(
+                Rule::UnsafeSafety,
+                idx + 1,
+                "unsafe without a `// SAFETY:` comment in the three \
+                 lines above"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+fn rule_naive_parity(
+    code: &[String],
+    push: &mut impl FnMut(Rule, usize, String),
+) {
+    let has_naive = code.iter().any(|l| l.contains("fn naive("));
+    for (idx, line) in code.iter().enumerate() {
+        if line.contains("impl") && line.contains("Scheduler for ") && !has_naive
+        {
+            push(
+                Rule::NaiveParity,
+                idx + 1,
+                "Scheduler impl without a naive() parity reference in \
+                 this file; add one or document the exemption"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+fn rule_wall_clock(
+    code: &[String],
+    push: &mut impl FnMut(Rule, usize, String),
+) {
+    const BANNED: [(&str, &str); 4] = [
+        ("Instant", "std::time::Instant in a decision module"),
+        ("SystemTime", "std::time::SystemTime in a decision module"),
+        ("thread_rng", "ambient RNG in a decision module"),
+        ("from_entropy", "entropy-seeded RNG in a decision module"),
+    ];
+    for (idx, line) in code.iter().enumerate() {
+        for (pat, what) in BANNED {
+            if contains_word(line, pat) {
+                push(
+                    Rule::WallClock,
+                    idx + 1,
+                    format!(
+                        "{what}; decision paths must be deterministic \
+                         (seeded util::rng::Pcg32 only)"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Methods on a hash container whose results depend on hash order.
+const HASH_ITER_METHODS: [&str; 8] = [
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".drain(",
+    ".into_iter()",
+    ".retain(",
+];
+
+fn rule_hash_iter(code: &[String], push: &mut impl FnMut(Rule, usize, String)) {
+    // Pass A: names bound to HashMap/HashSet in this file (lets,
+    // struct fields, consts — anything of the form `name: HashMap<`
+    // or `name = HashMap::`).
+    let mut hash_names: Vec<String> = Vec::new();
+    for line in code {
+        for ty in ["HashMap", "HashSet"] {
+            for at in word_positions(line, ty) {
+                if let Some(name) = bound_name(&line[..at]) {
+                    if !hash_names.contains(&name) {
+                        hash_names.push(name);
+                    }
+                }
+            }
+        }
+    }
+    // Pass B: flag hash-order iteration over any such name. Matches
+    // are word-boundary occurrences of the name followed by an
+    // order-dependent method, or preceded by a `for … in` header.
+    for (idx, line) in code.iter().enumerate() {
+        for name in &hash_names {
+            let hit = word_positions(line, name).into_iter().any(|at| {
+                let after = &line[at + name.len()..];
+                let before = &line[..at];
+                let method = HASH_ITER_METHODS
+                    .iter()
+                    .any(|m| after.starts_with(m));
+                let for_loop = contains_word(line, "for")
+                    && (before.ends_with("in ")
+                        || before.ends_with("in &")
+                        || before.ends_with("in &mut "));
+                method || for_loop
+            });
+            if hit {
+                push(
+                    Rule::HashIter,
+                    idx + 1,
+                    format!(
+                        "iteration over hash container `{name}` in a \
+                         decision module; hash order is \
+                         nondeterministic — use BTreeMap/Vec or prove \
+                         order-independence with lint:allow"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Given the code text before a `HashMap`/`HashSet` occurrence,
+/// extract the name it is bound to: the last identifier immediately
+/// followed (modulo spaces) by `:` or `=`.
+fn bound_name(before: &str) -> Option<String> {
+    let trimmed = before.trim_end();
+    let sep = trimmed.chars().next_back()?;
+    let head = match sep {
+        ':' => {
+            // Exclude paths (`std::collections::HashMap`).
+            let h = trimmed[..trimmed.len() - 1].trim_end();
+            if h.ends_with(':') {
+                return None;
+            }
+            h
+        }
+        '=' => trimmed[..trimmed.len() - 1].trim_end(),
+        _ => return None,
+    };
+    let name: String = head
+        .chars()
+        .rev()
+        .take_while(|&c| is_ident(c))
+        .collect::<Vec<_>>()
+        .into_iter()
+        .rev()
+        .collect();
+    (!name.is_empty() && !name.chars().next().unwrap().is_numeric())
+        .then_some(name)
+}
+
+// ---------------------------------------------------------------------
+// Tree walking
+// ---------------------------------------------------------------------
+
+/// Lint every `.rs` file under `src_root`, in sorted path order.
+/// Returns findings sorted by `(file, line, rule)`.
+pub fn lint_tree(src_root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs(src_root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for f in files {
+        let rel = f
+            .strip_prefix(src_root)
+            .unwrap_or(&f)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = std::fs::read_to_string(&f)?;
+        out.extend(lint_source(&rel, &src));
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Embedded violation corpus
+// ---------------------------------------------------------------------
+
+/// Minimal sources that each violate exactly one rule, as
+/// `(virtual path, source)` pairs. The linter must report at least
+/// one finding on every entry: the self-tests assert per-rule hits,
+/// and `drfh lint --corpus true` must exit non-zero in CI.
+pub const VIOLATION_CORPUS: [(&str, &str); 5] = [
+    (
+        "sched/corpus_hash_iter.rs",
+        r#"use std::collections::HashMap;
+fn f() {
+    let m: HashMap<u32, f64> = HashMap::new();
+    for (k, v) in &m {
+        println!("{k} {v}");
+    }
+    let total: f64 = m.values().sum();
+    let _ = total;
+}
+"#,
+    ),
+    (
+        "metrics/corpus_float_sort.rs",
+        r#"fn f(xs: &mut Vec<f64>) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+"#,
+    ),
+    (
+        "sim/corpus_wall_clock.rs",
+        r#"fn f() -> std::time::Instant {
+    std::time::Instant::now()
+}
+"#,
+    ),
+    (
+        "sched/corpus_naive_parity.rs",
+        r#"struct P;
+impl Scheduler for P {
+    fn name(&self) -> &'static str { "p" }
+}
+"#,
+    ),
+    (
+        "util/corpus_unsafe.rs",
+        r#"fn f(xs: &[u64]) -> u64 {
+    unsafe { *xs.get_unchecked(0) }
+}
+"#,
+    ),
+];
+
+/// Lint the embedded corpus, as the CLI `--corpus true` mode does.
+pub fn lint_corpus() -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (path, src) in VIOLATION_CORPUS {
+        out.extend(lint_source(path, src));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_hit(findings: &[Finding]) -> Vec<Rule> {
+        let mut r: Vec<Rule> = findings.iter().map(|f| f.rule).collect();
+        r.sort();
+        r.dedup();
+        r
+    }
+
+    #[test]
+    fn corpus_trips_every_rule() {
+        let findings = lint_corpus();
+        assert_eq!(rules_hit(&findings), Rule::ALL.to_vec());
+        // Each corpus entry produces at least one finding.
+        for (path, src) in VIOLATION_CORPUS {
+            assert!(
+                !lint_source(path, src).is_empty(),
+                "corpus entry {path} produced no findings"
+            );
+        }
+    }
+
+    #[test]
+    fn hash_iter_flags_iteration_not_lookup() {
+        let (path, src) = VIOLATION_CORPUS[0];
+        let f = lint_source(path, src);
+        // Both the for-loop and the .values() sum are flagged.
+        assert_eq!(f.iter().filter(|x| x.rule == Rule::HashIter).count(), 2);
+
+        // Keyed lookups are fine.
+        let ok = "use std::collections::HashMap;\n\
+                  fn f() {\n\
+                  let mut m: HashMap<u32, f64> = HashMap::new();\n\
+                  m.entry(3).or_insert(1.0);\n\
+                  let _ = m.get(&3);\n\
+                  }\n";
+        assert!(lint_source("sched/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn hash_iter_scoped_to_decision_modules() {
+        let (_, src) = VIOLATION_CORPUS[0];
+        // Same source outside sched/sim/cluster/workload: legal.
+        assert!(lint_source("experiments/x.rs", src)
+            .iter()
+            .all(|f| f.rule != Rule::HashIter));
+    }
+
+    #[test]
+    fn float_sort_spares_partialord_boilerplate() {
+        let src = "impl PartialOrd for K {\n\
+                   fn partial_cmp(&self, o: &K) -> Option<Ordering> {\n\
+                   Some(self.cmp(o))\n\
+                   }\n\
+                   }\n";
+        assert!(lint_source("sched/k.rs", src).is_empty());
+        let bad = "let m = xs.iter().max_by(|a, b| \
+                   a.partial_cmp(b).unwrap());\n";
+        assert_eq!(lint_source("sched/k.rs", bad).len(), 1);
+    }
+
+    #[test]
+    fn wall_clock_only_in_decision_modules() {
+        let (_, src) = VIOLATION_CORPUS[2];
+        assert_eq!(lint_source("sim/t.rs", src).len(), 1);
+        assert!(lint_source("util/bench.rs", src).is_empty());
+    }
+
+    #[test]
+    fn naive_parity_satisfied_by_naive_constructor() {
+        let src = "impl S {\n\
+                   pub fn naive() -> Self { S }\n\
+                   }\n\
+                   impl Scheduler for S {}\n";
+        assert!(lint_source("sched/s.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_with_safety_comment_passes() {
+        let src = "fn f(xs: &[u64]) -> u64 {\n\
+                   // SAFETY: caller guarantees xs is non-empty.\n\
+                   unsafe { *xs.get_unchecked(0) }\n\
+                   }\n";
+        assert!(lint_source("util/u.rs", src).is_empty());
+    }
+
+    #[test]
+    fn pragma_suppresses_same_and_next_line() {
+        let same = "fn f(xs: &mut Vec<f64>) {\n\
+                    xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); \
+                    // lint:allow(float-sort) upstream sanitized\n\
+                    }\n";
+        assert!(lint_source("sim/p.rs", same).is_empty());
+        let above = "fn f(xs: &mut Vec<f64>) {\n\
+                     // lint:allow(float-sort) upstream sanitized\n\
+                     xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
+                     }\n";
+        assert!(lint_source("sim/p.rs", above).is_empty());
+        // A pragma for a different rule does not suppress.
+        let wrong = "fn f(xs: &mut Vec<f64>) {\n\
+                     // lint:allow(hash-iter)\n\
+                     xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
+                     }\n";
+        assert_eq!(lint_source("sim/p.rs", wrong).len(), 1);
+    }
+
+    #[test]
+    fn literals_and_comments_do_not_trip_rules() {
+        let src = "fn f() {\n\
+                   let s = \"partial_cmp unsafe Instant\";\n\
+                   let r = r#\"thread_rng SystemTime\"#;\n\
+                   // partial_cmp unsafe in prose is fine\n\
+                   /* Instant::now() in a block comment */\n\
+                   let c = 'u';\n\
+                   let _ = (s, r, c);\n\
+                   }\n";
+        assert!(lint_source("sim/lit.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        // A lifetime after `<` must not start a fake literal that
+        // swallows the rest of the line.
+        let src = "fn f<'a>(xs: &'a [f64]) -> &'a f64 {\n\
+                   xs.iter().max_by(|a, b| a.partial_cmp(b).unwrap()).unwrap()\n\
+                   }\n";
+        assert_eq!(lint_source("sim/lt.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn multiline_block_comment_tracked() {
+        let src = "/*\n\
+                   partial_cmp() over lines\n\
+                   unsafe too\n\
+                   */\n\
+                   fn f() {}\n";
+        assert!(lint_source("sched/m.rs", src).is_empty());
+    }
+
+    #[test]
+    fn tree_walk_is_deterministic_and_clean_on_self() {
+        // The linter's own source must lint clean (it lives outside
+        // the decision modules, and its pattern constants are string
+        // literals the lexer blanks).
+        let f = lint_source("analysis/lint.rs", include_str!("lint.rs"));
+        assert!(f.is_empty(), "self-lint: {f:?}");
+    }
+}

@@ -1,0 +1,23 @@
+//! Static analysis: the in-tree determinism conformance linter.
+//!
+//! Every fairness property the DRFH reproduction defends (exact global
+//! dominant-share argmin, bit-exact parity against the `naive()`
+//! references) rests on source-level conventions that the compiler and
+//! clippy cannot express: no hash-order iteration in decision paths,
+//! total-order float comparisons, no wall-clock or entropy sources in
+//! the simulation, every [`crate::sched::Scheduler`] paired with a
+//! parity reference. [`lint`] machine-checks those conventions with a
+//! zero-dependency lexer in the spirit of [`crate::util::toml_lite`]:
+//! no syn, no regex, just enough token discipline (comments, strings,
+//! raw strings, char literals) to scan real Rust without false hits
+//! inside literals.
+//!
+//! Entry points: [`lint::lint_tree`] walks a source tree,
+//! [`lint::lint_source`] lints one file (what the embedded violation
+//! corpus and the self-tests use). The `drfh lint` CLI subcommand and
+//! the CI gate sit on top of these. The rule table lives in
+//! ARCHITECTURE.md §"Correctness tooling".
+
+pub mod lint;
+
+pub use lint::{lint_source, lint_tree, Finding, Rule, VIOLATION_CORPUS};

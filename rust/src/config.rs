@@ -16,6 +16,7 @@
 //! metrics = "full"         # full | streaming (bounded memory)
 //! share_sketch = 2048      # optional: per-user share-sketch point budget (0 = exact)
 //! shards = "auto"          # 1 (sequential, default) | N | "auto" (per-core data-plane shards)
+//! audit = false            # wave-boundary invariant auditor (sim::audit; also DRFH_AUDIT=1)
 //! [scheduler]
 //! policy = "bestfit"       # bestfit | firstfit | slots | bestfit-xla
 //! slots_per_max = 14       # slots policy only
@@ -77,6 +78,10 @@ pub struct SimConfig {
     /// (one shard per core). Reports are bit-identical across all
     /// choices; this is purely a wall-clock lever.
     pub shards: String,
+    /// Wave-boundary invariant auditing (`crate::sim::audit`):
+    /// decision-neutral, so reports stay bit-identical; panics with a
+    /// structured dump on the first violated invariant.
+    pub audit: bool,
 }
 
 impl Default for SimConfig {
@@ -89,6 +94,7 @@ impl Default for SimConfig {
             metrics: "full".into(),
             share_sketch: None,
             shards: "1".into(),
+            audit: false,
         }
     }
 }
@@ -157,6 +163,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_usize("sim", "share_sketch") {
             cfg.sim.share_sketch = Some(v);
+        }
+        if let Some(v) = doc.get_bool("sim", "audit") {
+            cfg.sim.audit = v;
         }
         // shards accepts both a bare integer and the string "auto"
         if let Some(v) = doc.get_usize("sim", "shards") {
@@ -247,6 +256,7 @@ impl ExperimentConfig {
             metrics,
             share_sketch: self.sim.share_sketch,
             shards,
+            audit: self.sim.audit,
         })
     }
 }
@@ -343,6 +353,15 @@ mod tests {
         let c =
             ExperimentConfig::from_toml("[sim]\nshards = 'many'").unwrap();
         assert!(c.sim_opts().is_err());
+    }
+
+    #[test]
+    fn audit_parses_and_defaults_off() {
+        let c = ExperimentConfig::from_toml("").unwrap();
+        assert!(!c.sim_opts().unwrap().audit);
+        let c =
+            ExperimentConfig::from_toml("[sim]\naudit = true").unwrap();
+        assert!(c.sim_opts().unwrap().audit);
     }
 
     #[test]

@@ -33,6 +33,8 @@ pub fn run_fig6(setup: &EvalSetup) -> Fig6Result {
     );
     let slots = reports.pop().expect("slots report");
     let bf = reports.pop().expect("best-fit report");
+    // order-independent HashMap use: keyed `get` lookups only (the
+    // iteration below runs over `bf.jobs`, in record order)
     let by_id: HashMap<usize, &JobRecord> =
         slots.jobs.iter().map(|j| (j.job, j)).collect();
     let matched = bf

@@ -66,8 +66,7 @@ pub fn print(rows: &[SlotRow]) {
         .iter()
         .max_by(|a, b| {
             (a.cpu_util + a.mem_util)
-                .partial_cmp(&(b.cpu_util + b.mem_util))
-                .unwrap()
+                .total_cmp(&(b.cpu_util + b.mem_util))
         })
         .unwrap();
     println!("best overall: {} slots (paper: 14)", best.slots);

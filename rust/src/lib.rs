@@ -30,13 +30,17 @@
 //! * [`coordinator`] — the online (tokio) scheduling service;
 //! * [`experiments`] — one harness per paper table/figure, plus the
 //!   §Perf harnesses (`sim-scale`, `user-scale`) on the parallel
-//!   sweep runner ([`experiments::runner`]).
+//!   sweep runner ([`experiments::runner`]);
+//! * [`analysis`] — the in-tree determinism conformance linter behind
+//!   `drfh lint` (see also the wave-boundary invariant auditor,
+//!   [`sim::audit`]).
 //!
 //! ARCHITECTURE.md (repo root) maps these modules, the event-wave
 //! data flow, the parity-reference convention, and which bench emits
 //! which `BENCH_*.json`; README.md has the CLI quickstart.
 
 pub mod allocator;
+pub mod analysis;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;

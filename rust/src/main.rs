@@ -5,6 +5,7 @@
 //!          [--seed N] [--servers K] [--users N] [--duration S]
 //!          regenerate a paper figure/table or run a §Perf harness
 //! drfh sim --config exp.toml                      run a configured simulation
+//! drfh lint [--src DIR] [--corpus true]           determinism conformance linter
 //! drfh solve                                      exact fluid DRFH on the Fig. 1 example
 //! drfh picker-check [--trials N] [--seed N]       native vs XLA decision parity
 //! drfh serve [--servers K] [--users N] [--tasks T] online coordinator demo
@@ -29,6 +30,7 @@ USAGE:
   drfh exp <fig4|fig4-fluid|table2|fig5|fig6|fig7|fig8|sim-scale|user-scale|all>
            [--seed N] [--servers K] [--users N] [--duration SECONDS]
   drfh sim --config <exp.toml>
+  drfh lint [--src DIR] [--corpus true]
   drfh solve
   drfh picker-check [--trials N] [--seed N]
   drfh serve [--servers K] [--users N] [--tasks T]
@@ -97,6 +99,10 @@ fn main() -> Result<()> {
                 .get_str("config")
                 .ok_or_else(|| anyhow!("sim needs --config"))?;
             run_sim(std::path::Path::new(cfg))
+        }
+        "lint" => {
+            let flags = Flags::parse(&args[1..])?;
+            run_lint(flags.get_str("src"), flags.get("corpus", false)?)
         }
         "solve" => run_solve(),
         "picker-check" => {
@@ -225,6 +231,38 @@ fn run_sim(path: &std::path::Path) -> Result<()> {
         report.job_stats.count()
     );
     Ok(())
+}
+
+fn run_lint(src: Option<&str>, corpus: bool) -> Result<()> {
+    use drfh::analysis::lint;
+    let findings = if corpus {
+        // CI sanity check: the embedded violation corpus must trip
+        // every rule, so `drfh lint --corpus true` must exit non-zero.
+        lint::lint_corpus()
+    } else {
+        let root = match src {
+            Some(dir) => std::path::PathBuf::from(dir),
+            // Works from the repo root (CI) and from rust/ alike.
+            None => ["rust/src", "src"]
+                .iter()
+                .map(std::path::PathBuf::from)
+                .find(|p| p.join("lib.rs").is_file())
+                .ok_or_else(|| {
+                    anyhow!("cannot find the source tree; pass --src DIR")
+                })?,
+        };
+        lint::lint_tree(&root)
+            .map_err(|e| anyhow!("lint walk failed: {e}"))?
+    };
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        println!("drfh lint: clean");
+        Ok(())
+    } else {
+        bail!("drfh lint: {} finding(s)", findings.len())
+    }
 }
 
 fn run_solve() -> Result<()> {

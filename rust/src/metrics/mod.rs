@@ -235,6 +235,8 @@ pub fn jct_reduction_by_bucket(
     base: &[JobRecord],
 ) -> Vec<(String, f64, usize)> {
     use std::collections::HashMap;
+    // order-independent HashMap use: keyed `get` lookups only (the
+    // iteration below runs over `ours`, in record order)
     let by_id: HashMap<usize, &JobRecord> =
         base.iter().map(|j| (j.job, j)).collect();
     JCT_BUCKETS

@@ -123,6 +123,19 @@ impl Scheduler for FirstFitDrfh {
             core.set_shards(shards);
         }
     }
+
+    fn audit_indices(
+        &mut self,
+        cluster: &Cluster,
+        users: &[UserState],
+        eligible: &[bool],
+    ) -> Result<(), String> {
+        // the naive path has no index to drift
+        match &mut self.core {
+            Some(core) => core.audit_check(cluster, users, eligible),
+            None => Ok(()),
+        }
+    }
 }
 
 #[cfg(test)]

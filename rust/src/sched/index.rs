@@ -920,6 +920,49 @@ impl IndexedCore {
     pub fn on_ready(&mut self, user: usize) {
         self.share.mark_dirty(user);
     }
+
+    /// Wave-boundary cross-check for [`crate::sim::audit`]: prove both
+    /// halves of the core against fresh naive scans of the
+    /// authoritative state — the share argmin against
+    /// [`super::min_share_user`], and (when a user is selectable) the
+    /// placement argmin against the naive server scan of the same
+    /// [`ScoreKind`]. Decision-neutral: only the refreshes and lazy
+    /// pops the next [`IndexedCore::pick`] would perform anyway, so
+    /// audit-on runs stay bit-identical to audit-off runs.
+    pub fn audit_check(
+        &mut self,
+        cluster: &Cluster,
+        users: &[UserState],
+        eligible: &[bool],
+    ) -> Result<(), String> {
+        self.share.refresh(users, eligible);
+        self.servers.refresh(cluster, users);
+        let got = self.share.peek_min(users, eligible);
+        let want = super::min_share_user(users, eligible);
+        if got != want {
+            return Err(format!(
+                "share index argmin {got:?} != naive min_share_user {want:?}"
+            ));
+        }
+        if let Some(u) = got {
+            let got_l = self.servers.best_server(u);
+            let want_l = match self.servers.kind {
+                ScoreKind::BestFit => {
+                    super::best_fit::best_server(cluster, &users[u].demand)
+                }
+                ScoreKind::FirstFit => {
+                    super::first_fit::first_server(cluster, &users[u].demand)
+                }
+            };
+            if got_l != want_l {
+                return Err(format!(
+                    "placement index best_server({u}) = {got_l:?} \
+                     != naive scan {want_l:?}"
+                ));
+            }
+        }
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------- BlockedIndex

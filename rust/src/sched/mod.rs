@@ -283,6 +283,24 @@ pub trait Scheduler {
     /// stays shard-local; the cross-shard argmin keeps selections
     /// identical, so ignoring this (the default) is always correct.
     fn on_topology(&mut self, _shards: usize) {}
+
+    /// Audit hook for the wave-boundary invariant auditor
+    /// ([`crate::sim::audit`]): cross-check any incremental decision
+    /// index this policy maintains against a fresh naive scan of the
+    /// authoritative engine state, returning `Err(description)` on
+    /// divergence. Implementations MUST be decision-neutral — only
+    /// the refreshes and lazy pops the next `pick`/`drain` would have
+    /// performed anyway are allowed, so an audit-enabled run stays
+    /// bit-identical to an audit-off run. Policies without an index
+    /// (the naive references) keep this default no-op.
+    fn audit_indices(
+        &mut self,
+        _cluster: &Cluster,
+        _users: &[UserState],
+        _eligible: &[bool],
+    ) -> Result<(), String> {
+        Ok(())
+    }
 }
 
 /// Lowest weighted-share eligible user (first on ties) — the

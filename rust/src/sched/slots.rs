@@ -219,6 +219,39 @@ impl Scheduler for SlotsScheduler {
             idx.mark_dirty(user);
         }
     }
+
+    fn audit_indices(
+        &mut self,
+        _cluster: &Cluster,
+        users: &[UserState],
+        eligible: &[bool],
+    ) -> Result<(), String> {
+        // cross-check the class-keyed user index against the naive
+        // keep-first slot-key scan (the indexless `pick` path above);
+        // refresh + peek are exactly what the next pick would do, so
+        // this stays decision-neutral
+        let Some(idx) = &mut self.users_index else {
+            return Ok(());
+        };
+        idx.refresh(users, eligible);
+        let got = idx.peek_min(users, eligible);
+        let mut want: Option<usize> = None;
+        for i in 0..users.len() {
+            if !eligible[i] || users[i].pending == 0 {
+                continue;
+            }
+            match want {
+                Some(b) if slot_key(&users[b]) <= slot_key(&users[i]) => {}
+                _ => want = Some(i),
+            }
+        }
+        if got != want {
+            return Err(format!(
+                "slots user index argmin {got:?} != naive slot scan {want:?}"
+            ));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

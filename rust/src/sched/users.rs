@@ -248,6 +248,9 @@ impl ClassedShareIndex {
         self.groups.clear();
         self.fallback = None;
         self.group_of = Vec::with_capacity(n);
+        // order-independent HashMap use (lint hash-iter rule): keyed
+        // `entry` lookups only, never iterated — group ids are assigned
+        // by user order (first appearance), not by map order
         let mut seen: HashMap<(u64, u64), u32> = HashMap::new();
         for u in users {
             let w = effective_weight(u.weight);

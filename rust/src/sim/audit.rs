@@ -1,0 +1,389 @@
+//! Wave-boundary invariant auditor (`[sim] audit` / `DRFH_AUDIT=1`).
+//!
+//! The static linter (`drfh lint`, [`crate::analysis`]) proves the
+//! *source* obeys the determinism discipline; this module proves the
+//! *running engine* obeys its invariants, by re-deriving ground truth
+//! from the authoritative state after every event wave and comparing
+//! it against everything the engine maintains incrementally. Enabled
+//! by [`crate::sim::SimOpts::audit`], the `[sim] audit` config key, or
+//! `DRFH_AUDIT=1`; the first violation panics with a structured dump
+//! (timestamp, wave number, seq counter, policy name, every violated
+//! invariant).
+//!
+//! Checked at every wave boundary (after the scheduler drain):
+//!
+//! * **capacity conservation** — per server: the PS run-entry count
+//!   matches the committed task count, the vector sum of running
+//!   demands matches the tracked usage to release/commit rounding
+//!   (±1e-6 per component), and non-overcommitting policies never
+//!   exceed capacity;
+//! * **index-vs-naive decision cross-checks** — each policy's
+//!   [`crate::sched::Scheduler::audit_indices`] hook re-proves its
+//!   incremental indexes (`ShareHeap` / `ClassedShareIndex` argmin,
+//!   `PlacementIndex` best-server) against fresh naive scans;
+//! * **drain-order monotonicity** — every event popped off the
+//!   [`crate::sim::wheel::ShardedQueue`] carries a strictly increasing
+//!   `(time, seq)` key, whatever the lane routing or queue kind
+//!   (noted at each pop, checked incrementally);
+//! * **shard-ownership routing** — every queued `ServerCheck` sits on
+//!   its owning shard's event lane, arrivals and samples on lane 0,
+//!   and every queued event sorts strictly after the last drained one;
+//! * **arena / user accounting** — per-job `unplaced <= open <= len`
+//!   cursor consistency, per-user pending counts vs. the queued-job
+//!   ring, per-user running counts vs. the PS run entries, the
+//!   bitwise dominant-share invariant
+//!   `dom_share == running as f64 * dom_delta` (recomputed, never
+//!   accumulated — see `engine::commit_completion`), and the global
+//!   placed-minus-completed balance;
+//! * **blocked-set validity** — `eligible` is exactly the complement
+//!   of the blocked set, no eligible user still has pending work
+//!   after a drain (post-wave quiescence), and every blocked user
+//!   truly fits on *no* server under the policy's own
+//!   [`crate::sched::Scheduler::can_fit`].
+//!
+//! Every check is read-only on engine state; the one mutating path —
+//! the policies' index refresh + lazy pops inside `audit_indices` —
+//! performs exactly the maintenance the next `pick`/`drain` would
+//! have performed anyway, so an audited run's [`crate::sim::SimReport`]
+//! is bit-identical to an unaudited one (`tests/engine_parity.rs`
+//! pins this across the shard matrix).
+
+use super::engine::{EventKind, Simulation};
+use super::wheel::EventQueue;
+use crate::cluster::ResVec;
+use std::cmp::Ordering;
+
+/// Absolute per-component tolerance for accumulated commit/release
+/// float rounding (mirrors the residue clamp in
+/// `cluster::Server::release`).
+const TOL: f64 = 1e-6;
+
+/// Cap on violations listed in one panic dump.
+const MAX_DUMPED: usize = 16;
+
+/// Auditor bookkeeping carried by the engine when auditing is on
+/// (opaque outside the simulator; see the module docs).
+pub struct AuditState {
+    /// `(time, seq)` of the last drained event.
+    last: Option<(f64, u64)>,
+    /// Completed wave boundaries so far.
+    waves: u64,
+}
+
+impl AuditState {
+    pub fn new() -> Self {
+        AuditState { last: None, waves: 0 }
+    }
+}
+
+impl Default for AuditState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Simulation<'_> {
+    /// Record one drained event and enforce drain-order monotonicity:
+    /// the merged `(time, seq)` pop stream must be strictly
+    /// increasing under the same total order every queue in
+    /// [`crate::sim::wheel`] drains by. No-op when auditing is off.
+    #[inline]
+    pub(super) fn audit_note(&mut self, time: f64, seq: u64) {
+        let Some(state) = &self.audit else { return };
+        let last = state.last;
+        if seq > self.seq {
+            self.audit_fail(vec![format!(
+                "drain-order: popped seq {seq} exceeds the push counter \
+                 {}",
+                self.seq
+            )]);
+        }
+        if let Some((lt, ls)) = last {
+            let ord =
+                time.total_cmp(&lt).then_with(|| seq.cmp(&ls));
+            if ord != Ordering::Greater {
+                self.audit_fail(vec![format!(
+                    "drain-order: popped ({time}, {seq}) does not sort \
+                     strictly after the previous pop ({lt}, {ls})"
+                )]);
+            }
+        }
+        if let Some(state) = &mut self.audit {
+            state.last = Some((time, seq));
+        }
+    }
+
+    /// Run every wave-boundary check (module docs); panics with a
+    /// structured dump on the first violating wave. No-op when
+    /// auditing is off.
+    pub(super) fn audit_wave(&mut self) {
+        let Some(state) = &mut self.audit else { return };
+        state.waves += 1;
+        let mut violations: Vec<String> = Vec::new();
+
+        self.audit_servers(&mut violations);
+        self.audit_users(&mut violations);
+        self.audit_arena(&mut violations);
+        self.audit_blocked(&mut violations);
+        self.audit_routing(&mut violations);
+        if let Err(e) = self.scheduler.audit_indices(
+            &self.cluster,
+            &self.users,
+            &self.eligible,
+        ) {
+            violations.push(format!("index-vs-naive: {e}"));
+        }
+
+        if !violations.is_empty() {
+            self.audit_fail(violations);
+        }
+    }
+
+    /// Per-server capacity conservation.
+    fn audit_servers(&self, out: &mut Vec<String>) {
+        let m = self.cluster.dims();
+        let overcommit = self.scheduler.allows_overcommit();
+        let mut total_running = 0usize;
+        for (l, srv) in self.servers.iter().enumerate() {
+            let s = &self.cluster.servers[l];
+            total_running += srv.running.len();
+            if s.tasks != srv.running.len() {
+                out.push(format!(
+                    "capacity: server {l} counts {} tasks but holds {} \
+                     run entries",
+                    s.tasks,
+                    srv.running.len()
+                ));
+            }
+            let mut sum = ResVec::zeros(m);
+            for entry in srv.running.iter() {
+                sum.add_assign(&self.users[entry.user as usize].demand);
+            }
+            for r in 0..m {
+                if (sum[r] - s.usage[r]).abs() > TOL {
+                    out.push(format!(
+                        "capacity: server {l} resource {r} usage \
+                         {:.9} != running-demand sum {:.9}",
+                        s.usage[r], sum[r]
+                    ));
+                }
+                if !overcommit && s.usage[r] > s.capacity[r] + TOL {
+                    out.push(format!(
+                        "capacity: server {l} resource {r} usage \
+                         {:.9} exceeds capacity {:.9} without \
+                         overcommit",
+                        s.usage[r], s.capacity[r]
+                    ));
+                }
+            }
+        }
+        let balance = self
+            .report
+            .tasks_placed
+            .checked_sub(self.report.tasks_completed);
+        if balance != Some(total_running) {
+            out.push(format!(
+                "capacity: placed {} - completed {} != {} total run \
+                 entries",
+                self.report.tasks_placed,
+                self.report.tasks_completed,
+                total_running
+            ));
+        }
+    }
+
+    /// Per-user share/usage/counter accounting against the PS ground
+    /// truth.
+    fn audit_users(&self, out: &mut Vec<String>) {
+        let m = self.cluster.dims();
+        let mut running = vec![0usize; self.users.len()];
+        for srv in &self.servers {
+            for entry in srv.running.iter() {
+                running[entry.user as usize] += 1;
+            }
+        }
+        for (u, us) in self.users.iter().enumerate() {
+            if us.running != running[u] {
+                out.push(format!(
+                    "user {u}: tracked running {} != {} run entries",
+                    us.running, running[u]
+                ));
+            }
+            // bitwise, not approximate: the engine recomputes the
+            // product on every transition precisely so this never
+            // drifts (see engine::commit_completion)
+            let want = us.running as f64 * us.dom_delta;
+            if us.dom_share.to_bits() != want.to_bits() {
+                out.push(format!(
+                    "user {u}: dom_share {:.17} is not bit-identical \
+                     to running * dom_delta = {want:.17}",
+                    us.dom_share
+                ));
+            }
+            for r in 0..m {
+                let want = us.running as f64 * us.demand[r];
+                if (us.usage[r] - want).abs() > TOL {
+                    out.push(format!(
+                        "user {u}: usage[{r}] {:.9} != running * \
+                         demand = {want:.9}",
+                        us.usage[r]
+                    ));
+                }
+            }
+            let queued: usize = self.queues[u]
+                .iter()
+                .map(|&j| self.arena.unplaced(j as usize))
+                .sum();
+            if us.pending != queued {
+                out.push(format!(
+                    "user {u}: pending {} != {} unplaced tasks across \
+                     its queued jobs",
+                    us.pending, queued
+                ));
+            }
+            for &j in &self.queues[u] {
+                if self.arena.job_user(j as usize) != u {
+                    out.push(format!(
+                        "user {u}: queued job {j} belongs to user {}",
+                        self.arena.job_user(j as usize)
+                    ));
+                }
+            }
+        }
+    }
+
+    /// Arena countdown/cursor consistency.
+    fn audit_arena(&self, out: &mut Vec<String>) {
+        for j in 0..self.arena.len() {
+            let (unplaced, open, len) = (
+                self.arena.unplaced(j),
+                self.arena.open(j),
+                self.arena.job_len(j),
+            );
+            if unplaced > open || open > len {
+                out.push(format!(
+                    "arena: job {j} cursors violate unplaced {unplaced} \
+                     <= open {open} <= len {len}"
+                ));
+            }
+        }
+    }
+
+    /// Blocked-set validity: `eligible` is the exact complement of the
+    /// blocked index, the wave left no eligible pending user behind,
+    /// and every blocked user truly fits nowhere.
+    fn audit_blocked(&self, out: &mut Vec<String>) {
+        let k = self.cluster.len();
+        let mut blocked_n = 0usize;
+        for (u, us) in self.users.iter().enumerate() {
+            let blocked = self.blocked.is_blocked(u);
+            if blocked == self.eligible[u] {
+                out.push(format!(
+                    "blocked-set: user {u} eligible={} but \
+                     is_blocked={blocked}",
+                    self.eligible[u]
+                ));
+                continue;
+            }
+            if !blocked {
+                if us.pending > 0 {
+                    out.push(format!(
+                        "blocked-set: eligible user {u} still has {} \
+                         pending tasks after the drain",
+                        us.pending
+                    ));
+                }
+                continue;
+            }
+            blocked_n += 1;
+            // a completion on server l exact-probes every candidate
+            // blocked class against l (engine::unblock_for_server),
+            // so a blocked survivor must fit on no server at all
+            if let Some(l) = (0..k).find(|&l| {
+                self.scheduler.can_fit(&self.cluster, &self.users, u, l)
+            }) {
+                out.push(format!(
+                    "blocked-set: blocked user {u} fits on server {l}"
+                ));
+            }
+        }
+        if blocked_n != self.blocked.len() {
+            out.push(format!(
+                "blocked-set: index reports {} members, eligibility \
+                 mask implies {blocked_n}",
+                self.blocked.len()
+            ));
+        }
+    }
+
+    /// Shard-ownership lane routing of every queued event, plus the
+    /// queued-after-drained ordering bound.
+    fn audit_routing(&self, out: &mut Vec<String>) {
+        let last = self.audit.as_ref().and_then(|a| a.last);
+        let push_seq = self.seq;
+        self.events.for_each_lane(|lane, ev| {
+            let want = match ev.payload {
+                EventKind::ServerCheck { server, .. } => {
+                    self.spec.owner_of(server)
+                }
+                EventKind::Arrival(_) | EventKind::Sample => 0,
+            };
+            if lane != want {
+                out.push(format!(
+                    "routing: {:?} at ({}, {}) rides lane {lane}, owner \
+                     lane is {want}",
+                    ev.payload, ev.time, ev.seq
+                ));
+            }
+            if ev.seq > push_seq {
+                out.push(format!(
+                    "routing: queued seq {} exceeds the push counter \
+                     {push_seq}",
+                    ev.seq
+                ));
+            }
+            if let Some((lt, ls)) = last {
+                let ord = ev
+                    .time
+                    .total_cmp(&lt)
+                    .then_with(|| ev.seq.cmp(&ls));
+                if ord != Ordering::Greater {
+                    out.push(format!(
+                        "routing: queued ({}, {}) does not sort after \
+                         the last drained ({lt}, {ls})",
+                        ev.time, ev.seq
+                    ));
+                }
+            }
+        });
+    }
+
+    /// Structured failure dump. Never returns.
+    fn audit_fail(&self, violations: Vec<String>) -> ! {
+        let shown = violations.len().min(MAX_DUMPED);
+        let mut dump = String::new();
+        for v in &violations[..shown] {
+            dump.push_str("\n  * ");
+            dump.push_str(v);
+        }
+        if violations.len() > shown {
+            dump.push_str(&format!(
+                "\n  * ... and {} more",
+                violations.len() - shown
+            ));
+        }
+        panic!(
+            "DRFH audit failure: {} invariant violation(s) at t={:.6} \
+             (wave {}, seq {}, scheduler '{}', {} servers, {} users, \
+             {} queued events):{dump}",
+            violations.len(),
+            self.now,
+            self.audit.as_ref().map_or(0, |a| a.waves),
+            self.seq,
+            self.scheduler.name(),
+            self.cluster.len(),
+            self.users.len(),
+            self.events.len(),
+        );
+    }
+}

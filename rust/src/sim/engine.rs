@@ -184,6 +184,16 @@ pub struct SimOpts {
     /// core. `DRFH_SEQ=1` disables the worker threads without
     /// changing results.
     pub shards: ShardCount,
+    /// Wave-boundary invariant auditing ([`crate::sim::audit`]): after
+    /// every event wave, prove capacity conservation, index-vs-naive
+    /// decision cross-checks, drain-order monotonicity, shard-lane
+    /// routing and arena/user accounting against the authoritative
+    /// state, panicking with a structured dump on the first violation.
+    /// Decision-neutral by construction — an audit-enabled run
+    /// produces a bit-identical [`SimReport`] to an audit-off run
+    /// (`tests/engine_parity.rs`). Also switchable per-process via
+    /// `DRFH_AUDIT=1` and per-config via `[sim] audit`.
+    pub audit: bool,
 }
 
 impl Default for SimOpts {
@@ -196,6 +206,7 @@ impl Default for SimOpts {
             metrics: MetricsMode::Full,
             share_sketch: None,
             shards: ShardCount::Fixed(1),
+            audit: false,
         }
     }
 }
@@ -231,14 +242,14 @@ pub struct SimReport {
 // ---------------------------------------------------------------- events
 
 #[derive(Clone, Copy, Debug, PartialEq)]
-enum EventKind {
+pub(super) enum EventKind {
     Arrival(usize),
     ServerCheck { server: usize, gen: u64 },
     Sample,
 }
 
 type Event = wheel::Event<EventKind>;
-type Events = ShardedQueue<EventKind>;
+pub(super) type Events = ShardedQueue<EventKind>;
 
 /// `(index within the current segment, server, generation)` of one
 /// gathered `ServerCheck` — the unit of shard-local propose work.
@@ -253,11 +264,11 @@ const PAR_MIN_CHECKS: usize = 32;
 // ------------------------------------------------------------- run state
 
 #[derive(Clone, Copy, Debug)]
-struct RunEntry {
-    vfinish: f64,
-    seq: u64,
-    user: u32,
-    job: u32,
+pub(super) struct RunEntry {
+    pub(super) vfinish: f64,
+    pub(super) seq: u64,
+    pub(super) user: u32,
+    pub(super) job: u32,
 }
 
 impl PartialEq for RunEntry {
@@ -281,12 +292,12 @@ impl Ord for RunEntry {
     }
 }
 
-struct ServerSim {
-    vtime: f64,
-    t_last: f64,
-    rate: f64,
-    gen: u64,
-    running: BinaryHeap<RunEntry>,
+pub(super) struct ServerSim {
+    pub(super) vtime: f64,
+    pub(super) t_last: f64,
+    pub(super) rate: f64,
+    pub(super) gen: u64,
+    pub(super) running: BinaryHeap<RunEntry>,
 }
 
 impl ServerSim {
@@ -315,8 +326,8 @@ impl ServerSim {
 pub struct Simulation<'a> {
     pub cluster: Cluster,
     pub users: Vec<UserState>,
-    scheduler: Box<dyn Scheduler + 'a>,
-    opts: SimOpts,
+    pub(super) scheduler: Box<dyn Scheduler + 'a>,
+    pub(super) opts: SimOpts,
 
     /// Per-user round-robin ring of job ids with un-placed tasks.
     /// Tasks are drawn round-robin across the user's jobs (Hadoop
@@ -324,16 +335,16 @@ pub struct Simulation<'a> {
     /// a small job is never buried behind an earlier big one. The
     /// job's un-placed frontier itself is a u32 cursor in the arena —
     /// no per-job containers on this path.
-    queues: Vec<VecDeque<u32>>,
+    pub(super) queues: Vec<VecDeque<u32>>,
     /// Flat SoA job/task state, durations borrowed from the trace.
-    arena: TaskArena<'a>,
-    servers: Vec<ServerSim>,
-    events: Events,
-    seq: u64,
-    now: f64,
+    pub(super) arena: TaskArena<'a>,
+    pub(super) servers: Vec<ServerSim>,
+    pub(super) events: Events,
+    pub(super) seq: u64,
+    pub(super) now: f64,
 
-    eligible: Vec<bool>,
-    blocked: BlockedIndex,
+    pub(super) eligible: Vec<bool>,
+    pub(super) blocked: BlockedIndex,
     /// Scratch buffers for unblock candidates (users / demand
     /// classes), avoiding per-completion allocation.
     scratch_unblock: Vec<usize>,
@@ -342,7 +353,7 @@ pub struct Simulation<'a> {
     /// §Perf: sharded data plane (module docs). `spec` partitions the
     /// server pool; shard count 1 routes through the sequential
     /// [`Simulation::run`] loop unchanged.
-    spec: ShardSpec,
+    pub(super) spec: ShardSpec,
     /// Whether the propose phase may use worker threads at all
     /// (multiple shards, no `DRFH_SEQ`, more than one core). The
     /// inline fallback runs the identical function, so this gate is
@@ -353,8 +364,13 @@ pub struct Simulation<'a> {
     scratch_checks: Vec<Vec<ShardCheck>>,
     scratch_proposed: Vec<Option<Vec<RunEntry>>>,
 
-    report: SimReport,
+    pub(super) report: SimReport,
     total: ResVec,
+
+    /// Wave-boundary invariant auditor state; `Some` iff auditing is
+    /// on ([`SimOpts::audit`] or `DRFH_AUDIT=1`). See
+    /// [`crate::sim::audit`].
+    pub(super) audit: Option<super::audit::AuditState>,
 }
 
 impl<'a> Simulation<'a> {
@@ -424,6 +440,11 @@ impl<'a> Simulation<'a> {
             kind => Events::new(kind, nshards),
         };
         let sketch_budget = opts.share_sketch;
+        // same env-override convention as DRFH_SEQ: the CI smoke and
+        // ad-hoc reproduction runs flip auditing on without touching
+        // any call site
+        let audit_on =
+            opts.audit || std::env::var_os("DRFH_AUDIT").is_some();
 
         let mut sim = Simulation {
             cluster,
@@ -466,6 +487,7 @@ impl<'a> Simulation<'a> {
                 avg_mem_util: 0.0,
             },
             total,
+            audit: audit_on.then(super::audit::AuditState::new),
         };
         for (j, job) in trace.jobs.iter().enumerate() {
             if job.submit <= opts.horizon {
@@ -501,6 +523,7 @@ impl<'a> Simulation<'a> {
             return self.run_sharded();
         }
         while let Some(ev) = self.events.pop() {
+            self.audit_note(ev.time, ev.seq);
             if ev.time > self.opts.horizon {
                 break;
             }
@@ -511,11 +534,13 @@ impl<'a> Simulation<'a> {
                     break;
                 }
                 let next = self.events.pop().unwrap();
+                self.audit_note(next.time, next.seq);
                 need_sched |= self.apply(next.payload);
             }
             if need_sched {
                 self.schedule_loop();
             }
+            self.audit_wave();
         }
         self.report.avg_cpu_util = self.report.cpu_util.time_avg();
         self.report.avg_mem_util = self.report.mem_util.time_avg();
@@ -756,6 +781,7 @@ impl<'a> Simulation<'a> {
     fn run_sharded(mut self) -> SimReport {
         let mut wave: Vec<Event> = Vec::new();
         while let Some(ev) = self.events.pop() {
+            self.audit_note(ev.time, ev.seq);
             if ev.time > self.opts.horizon {
                 break;
             }
@@ -768,7 +794,9 @@ impl<'a> Simulation<'a> {
                     if next.time > self.now {
                         break;
                     }
-                    wave.push(self.events.pop().unwrap());
+                    let next = self.events.pop().unwrap();
+                    self.audit_note(next.time, next.seq);
+                    wave.push(next);
                 }
                 need_sched |= self.apply_wave(&wave);
                 wave.clear();
@@ -780,6 +808,7 @@ impl<'a> Simulation<'a> {
             if need_sched {
                 self.schedule_loop();
             }
+            self.audit_wave();
         }
         self.report.avg_cpu_util = self.report.cpu_util.time_avg();
         self.report.avg_mem_util = self.report.mem_util.time_avg();

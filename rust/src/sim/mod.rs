@@ -3,8 +3,11 @@
 //!
 //! The trace-scale data plane (timer-wheel event queue, SoA task
 //! arena, streaming metrics) is documented in [`engine`] §Perf; the
-//! queue implementations live in [`wheel`].
+//! queue implementations live in [`wheel`]; the wave-boundary
+//! invariant auditor ([`SimOpts::audit`] / `DRFH_AUDIT=1`) lives in
+//! [`audit`].
 
+pub mod audit;
 pub mod engine;
 pub mod wheel;
 
@@ -204,7 +207,7 @@ mod tests {
         assert_eq!(r.jobs.len(), 2);
         let mut finishes: Vec<f64> =
             r.jobs.iter().map(|j| j.finish).collect();
-        finishes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        finishes.sort_by(|a, b| a.total_cmp(b));
         assert!((finishes[0] - 80.0).abs() < 1e-6, "A at {}", finishes[0]);
         assert!((finishes[1] - 100.0).abs() < 1e-6, "B at {}", finishes[1]);
     }

@@ -115,6 +115,15 @@ impl<T: Copy> HeapQueue<T> {
     pub fn new() -> Self {
         HeapQueue { heap: BinaryHeap::new() }
     }
+
+    /// Visit every queued event in unspecified order (diagnostics /
+    /// the [`crate::sim::audit`] invariant auditor; never on the hot
+    /// path).
+    pub fn for_each(&self, mut f: impl FnMut(&Event<T>)) {
+        for h in self.heap.iter() {
+            f(&h.0);
+        }
+    }
 }
 
 impl<T: Copy> Default for HeapQueue<T> {
@@ -265,6 +274,20 @@ impl<T: Copy> TimerWheel<T> {
             self.sorted = true;
         }
     }
+
+    /// Visit every queued event in unspecified order (diagnostics /
+    /// the [`crate::sim::audit`] invariant auditor; never on the hot
+    /// path). Covers both the near window and the `far` overflow.
+    pub fn for_each(&self, mut f: impl FnMut(&Event<T>)) {
+        for bucket in &self.buckets {
+            for ev in bucket {
+                f(ev);
+            }
+        }
+        for ev in &self.far {
+            f(ev);
+        }
+    }
 }
 
 impl<T: Copy> Default for TimerWheel<T> {
@@ -413,6 +436,15 @@ impl<T: Copy> SimQueue<T> {
     pub fn naive() -> Self {
         Self::new(QueueKind::Heap)
     }
+
+    /// Visit every queued event in unspecified order (diagnostics /
+    /// the [`crate::sim::audit`] invariant auditor).
+    pub fn for_each(&self, f: impl FnMut(&Event<T>)) {
+        match self {
+            SimQueue::Heap(q) => q.for_each(f),
+            SimQueue::Wheel(q) => q.for_each(f),
+        }
+    }
 }
 
 impl<T: Copy> EventQueue<T> for SimQueue<T> {
@@ -504,6 +536,16 @@ impl<T: Copy> ShardedQueue<T> {
     pub fn push_to(&mut self, lane: usize, ev: Event<T>) {
         self.lanes[lane].push(ev);
         self.len += 1;
+    }
+
+    /// Visit every queued event together with the lane it sits on, in
+    /// unspecified order. The [`crate::sim::audit`] auditor uses this
+    /// to prove the engine's shard-ownership routing (every
+    /// `ServerCheck` on its owner's lane); never on the hot path.
+    pub fn for_each_lane(&self, mut f: impl FnMut(usize, &Event<T>)) {
+        for (i, lane) in self.lanes.iter().enumerate() {
+            lane.for_each(|ev| f(i, ev));
+        }
     }
 
     /// The lane whose head is the globally earliest event, or `None`

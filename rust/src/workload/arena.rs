@@ -159,6 +159,9 @@ pub fn intern_rows<'a>(
 ) -> (Vec<ResVec>, Vec<u32>) {
     let mut rows: Vec<ResVec> = Vec::new();
     let mut class_of = Vec::new();
+    // order-independent HashMap use (lint hash-iter rule): keyed
+    // `entry` lookups only, never iterated — class ids are assigned by
+    // input order (first appearance), not by map order
     let mut seen: HashMap<Vec<u64>, u32> = HashMap::new();
     for d in rows_in {
         let key: Vec<u64> =

@@ -147,7 +147,7 @@ impl TraceGenerator {
                 t += rng.exp(rate);
             }
         }
-        jobs.sort_by(|a, b| a.submit.partial_cmp(&b.submit).unwrap());
+        sort_by_submit(&mut jobs);
         for (i, j) in jobs.iter_mut().enumerate() {
             j.id = i;
         }
@@ -155,6 +155,14 @@ impl TraceGenerator {
         debug_assert!(trace.validate().is_ok());
         trace
     }
+}
+
+/// Global submit-time order. `total_cmp`, not `partial_cmp().unwrap()`:
+/// the order must stay total (and the sort panic-free) even for the
+/// NaN submits a degenerate generator config could produce — same
+/// convention as `util::stats`.
+fn sort_by_submit(jobs: &mut [JobSpec]) {
+    jobs.sort_by(|a, b| a.submit.total_cmp(&b.submit));
 }
 
 /// The paper's Fig. 4 dynamic scenario: three users with fixed demands
@@ -257,8 +265,30 @@ mod tests {
         // median dominant demand well below half the max server
         let mut doms: Vec<f64> =
             t.users.iter().map(|u| u.demand.max()).collect();
-        doms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        doms.sort_by(|a, b| a.total_cmp(b));
         assert!(doms[doms.len() / 2] < 0.25, "median={}", doms[doms.len() / 2]);
+    }
+
+    #[test]
+    fn submit_sort_tolerates_nan() {
+        // regression: this sort used `partial_cmp().unwrap()`, which
+        // panics on the first NaN submit; `total_cmp` ranks NaN
+        // deterministically instead. Both NaN signs, mirroring
+        // `util::stats::percentile_and_cdf_tolerate_nan`.
+        let mk = |submit| JobSpec {
+            id: 0,
+            user: 0,
+            submit,
+            tasks: vec![TaskSpec { duration: 1.0 }],
+        };
+        let mut jobs =
+            vec![mk(3.0), mk(f64::NAN), mk(1.0), mk(-f64::NAN), mk(2.0)];
+        sort_by_submit(&mut jobs);
+        assert!(jobs[0].submit.is_nan()); // -NaN ranks first
+        assert_eq!(jobs[1].submit, 1.0);
+        assert_eq!(jobs[2].submit, 2.0);
+        assert_eq!(jobs[3].submit, 3.0);
+        assert!(jobs[4].submit.is_nan()); // +NaN ranks last
     }
 
     #[test]

@@ -1116,3 +1116,229 @@ fn streaming_metrics_decision_parity() {
         rf.avg_cpu_util
     );
 }
+
+// ------------------------------------------- wave-boundary auditor
+
+/// Audit-mode decision neutrality: a run with the wave-boundary
+/// invariant auditor enabled (`SimOpts::audit`) must produce a
+/// [`drfh::sim::SimReport`] bit-identical to the unaudited run, at
+/// every shard count. The audited leg doubles as a full-trace
+/// invariant pass — any violated invariant panics the run.
+fn assert_audit_parity<S, F>(
+    label: &str,
+    cluster: &Cluster,
+    trace: &Trace,
+    opts: &SimOpts,
+    mk: F,
+) where
+    S: Scheduler + 'static,
+    F: Fn() -> S,
+{
+    for shards in [1usize, 3, 8] {
+        let base = SimOpts {
+            shards: ShardCount::Fixed(shards),
+            ..opts.clone()
+        };
+        let r_off = run(
+            cluster.clone(),
+            trace,
+            Box::new(mk()),
+            SimOpts { audit: false, ..base.clone() },
+        );
+        let r_on = run(
+            cluster.clone(),
+            trace,
+            Box::new(mk()),
+            SimOpts { audit: true, ..base },
+        );
+        assert!(
+            r_off.tasks_placed > 0,
+            "{label} S={shards}: degenerate run placed nothing"
+        );
+        assert_eq!(
+            r_off, r_on,
+            "{label} S={shards}: audited run diverged from unaudited"
+        );
+    }
+}
+
+/// The engineered same-timestamp collision trace of
+/// `cross_shard_simultaneous_events_tiebreak`, as a reusable builder:
+/// every wave mixes arrivals, cross-shard completions, and a sample
+/// barrier on a 10 s grid.
+fn tiebreak_trace(seed: u64) -> (Cluster, Trace) {
+    let mut rng = Pcg32::seeded(seed);
+    let cluster = Cluster::google_sample(10, &mut rng);
+    let users: Vec<UserSpec> = (0..5)
+        .map(|_| UserSpec {
+            demand: ResVec::cpu_mem(
+                rng.uniform(0.1, 0.4),
+                rng.uniform(0.1, 0.4),
+            ),
+            weight: 1.0,
+        })
+        .collect();
+    let jobs: Vec<JobSpec> = (0..25)
+        .map(|j| JobSpec {
+            id: j,
+            user: j % 5,
+            submit: ((j / 5) as f64) * 10.0,
+            tasks: vec![
+                TaskSpec { duration: 10.0 * (1 + j % 4) as f64 };
+                12
+            ],
+        })
+        .collect();
+    (cluster, Trace { users, jobs })
+}
+
+/// The satellite acceptance matrix: audit-on vs audit-off over the
+/// Fig. 5 configuration (every report surface tracked) and the
+/// engineered cross-shard tie-break trace, for the indexed DRFH
+/// policies, the naive reference, and the overcommitting Slots
+/// baseline — each across shard counts {1, 3, 8}.
+#[test]
+fn audit_mode_is_decision_neutral() {
+    use drfh::experiments::EvalSetup;
+    let setup = EvalSetup::with_duration(42, 150, 15, 6_000.0);
+    let opts = SimOpts { track_user_series: true, ..setup.opts.clone() };
+    assert_audit_parity(
+        "audit fig5 bestfit",
+        &setup.cluster,
+        &setup.trace,
+        &opts,
+        BestFitDrfh::default,
+    );
+    assert_audit_parity(
+        "audit fig5 firstfit",
+        &setup.cluster,
+        &setup.trace,
+        &opts,
+        FirstFitDrfh::default,
+    );
+
+    let (cluster, trace) = tiebreak_trace(4343);
+    let opts = SimOpts {
+        horizon: 1_000.0,
+        sample_dt: 10.0,
+        track_user_series: false,
+        ..SimOpts::default()
+    };
+    assert_audit_parity(
+        "audit tie-break bestfit",
+        &cluster,
+        &trace,
+        &opts,
+        BestFitDrfh::default,
+    );
+    assert_audit_parity(
+        "audit tie-break naive bestfit",
+        &cluster,
+        &trace,
+        &opts,
+        BestFitDrfh::naive,
+    );
+    assert_audit_parity(
+        "audit tie-break slots",
+        &cluster,
+        &trace,
+        &opts,
+        || SlotsScheduler::new(&cluster, 14),
+    );
+}
+
+/// The auditor actually audits: corrupting engine state that every
+/// unaudited run would silently accept must panic the audited run
+/// with the structured "DRFH audit failure" dump at the first wave.
+#[test]
+fn audit_trips_on_corrupted_server_state() {
+    use drfh::sim::Simulation;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    let mut rng = Pcg32::seeded(99);
+    let cluster = Cluster::google_sample(4, &mut rng);
+    let trace = Trace {
+        users: vec![UserSpec {
+            demand: ResVec::cpu_mem(0.2, 0.2),
+            weight: 1.0,
+        }],
+        jobs: vec![JobSpec {
+            id: 0,
+            user: 0,
+            submit: 0.0,
+            tasks: vec![TaskSpec { duration: 10.0 }; 4],
+        }],
+    };
+    let opts = SimOpts { audit: true, ..SimOpts::default() };
+    let mut sim = Simulation::new(
+        cluster,
+        &trace,
+        Box::new(BestFitDrfh::default()),
+        opts,
+    );
+    // phantom usage with no backing run entries: capacity
+    // conservation is violated from the first wave on
+    sim.cluster.servers[0].usage = ResVec::cpu_mem(0.5, 0.5);
+    let err = catch_unwind(AssertUnwindSafe(move || sim.run()))
+        .expect_err("audited run accepted corrupted server usage");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .unwrap_or_else(|| {
+            err.downcast_ref::<&str>().map(|s| s.to_string()).unwrap()
+        });
+    assert!(
+        msg.contains("DRFH audit failure"),
+        "unexpected panic message: {msg}"
+    );
+    assert!(msg.contains("capacity"), "unexpected panic message: {msg}");
+}
+
+/// The index-vs-naive cross-check trips on real index drift: mutating
+/// a user's dominant share behind the policy's back (no `mark_dirty`,
+/// no engine notification) makes the cached `ShareHeap` argmin
+/// disagree with a fresh naive scan, and
+/// [`Scheduler::audit_indices`] must report it.
+#[test]
+fn corrupted_index_trips_audit_indices() {
+    let mut rng = Pcg32::seeded(77);
+    let cluster = Cluster::google_sample(4, &mut rng);
+    // engine-consistent users: `dom_share == running as f64 * dom_delta`
+    // holds bitwise (the classed index re-derives shares from the
+    // running count, the per-user heap caches `share_key` — both must
+    // agree with the naive scan on healthy state)
+    let mk_user = |running: usize| UserState {
+        demand: ResVec::cpu_mem(0.1, 0.1),
+        weight: 1.0,
+        pending: 5,
+        running,
+        dom_share: running as f64 * 0.01,
+        usage: ResVec::zeros(2),
+        dom_delta: 0.01,
+    };
+    let mut users = vec![mk_user(50), mk_user(0)];
+    let eligible = vec![true, true];
+    for sched in [BestFitDrfh::per_user, BestFitDrfh::default] {
+        let mut sched = sched();
+        // a real pick builds the incremental indexes: user 1 holds
+        // the lowest share
+        match sched.pick(&cluster, &users, &eligible) {
+            Pick::Place { user, .. } => assert_eq!(user, 1),
+            p => panic!("expected a placement, got {p:?}"),
+        }
+        assert!(
+            sched.audit_indices(&cluster, &users, &eligible).is_ok(),
+            "audit_indices flagged a healthy index"
+        );
+        // corrupt the authoritative state without any notification:
+        // the cached argmin (user 1) now disagrees with a naive scan
+        // (user 0)
+        users[0].dom_share = -1.0;
+        let res = sched.audit_indices(&cluster, &users, &eligible);
+        assert!(
+            res.is_err(),
+            "audit_indices missed a stale share index"
+        );
+        users[0].dom_share = 50.0 * 0.01; // restore for the next variant
+    }
+}
