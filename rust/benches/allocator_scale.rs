@@ -6,6 +6,10 @@
 //! on the k = 2000 configs; because container timers are unreliable,
 //! the deterministic simplex **search-pivot counts** are recorded next
 //! to the wall-clock numbers and are the primary savings metric.
+//! A user-count sweep (10³ → 10⁶ users over ~10 demand archetypes)
+//! pins down the class-collapse claim: the LP's variable count — and
+//! near enough its solve time — stays flat while the per-user
+//! reference LP grows a variable block per user.
 //!
 //! All case groups fan out on `experiments::runner` (quiet timing on
 //! the workers, rows printed after each fan-out). Results go to
@@ -19,6 +23,7 @@ use drfh::allocator::incremental::{IncrementalDrfh, UserId};
 use drfh::allocator::{self, per_server_drf, FluidUser};
 use drfh::cluster::{Cluster, ResVec};
 use drfh::experiments::runner::{self, Job};
+use drfh::solver::SolveStats;
 use drfh::util::bench::{bench_n_quiet, header, write_suite_json, BenchResult};
 use drfh::util::json::Json;
 use drfh::util::Pcg32;
@@ -81,9 +86,16 @@ fn event_stream(
 }
 
 /// Warm path: one solver/basis across the whole stream. Returns a
-/// trajectory checksum (Σ of all dominant shares) and total search
-/// pivots.
-fn run_warm(cluster: &Cluster, init: &[FluidUser], evs: &[Ev]) -> (f64, u64) {
+/// trajectory checksum (Σ of all dominant shares), total search
+/// pivots, and the stream's cumulative solver accounting (the
+/// `dual_cap_hits` counter in particular: a non-zero value means the
+/// dual-simplex repair gave up mid-stream and fell back cold — worth
+/// surfacing next to the pivot savings it erodes).
+fn run_warm(
+    cluster: &Cluster,
+    init: &[FluidUser],
+    evs: &[Ev],
+) -> (f64, u64, SolveStats) {
     let mut inc = IncrementalDrfh::new(cluster);
     let mut ids: Vec<UserId> =
         init.iter().map(|u| inc.add_user(u.clone())).collect();
@@ -106,7 +118,8 @@ fn run_warm(cluster: &Cluster, init: &[FluidUser], evs: &[Ev]) -> (f64, u64) {
         pivots += a.lp_pivots;
         check += a.g.iter().sum::<f64>();
     }
-    (check, pivots)
+    let stats = inc.solver_stats();
+    (check, pivots, stats)
 }
 
 /// From-scratch reference: identical event applications on a plain
@@ -151,6 +164,9 @@ struct StreamCase {
     scratch: BenchResult,
     warm_pivots: u64,
     scratch_pivots: u64,
+    /// Times the warm path's dual-simplex repair hit its iteration cap
+    /// and forced a cold fallback (from `SolveStats::dual_cap_hits`).
+    dual_cap_hits: u64,
 }
 
 fn stream_case(
@@ -165,13 +181,15 @@ fn stream_case(
     let (init, evs) = event_stream(seed * 31 + 7, users, events);
     let mut warm_pivots = 0u64;
     let mut warm_check = 0.0f64;
+    let mut dual_cap_hits = 0u64;
     let warm = bench_n_quiet(
         &format!("stream-warm k={servers} n={users} e={events}"),
         iters,
         || {
-            let (c, p) = run_warm(&cluster, &init, &evs);
+            let (c, p, st) = run_warm(&cluster, &init, &evs);
             warm_check = c;
             warm_pivots = p;
+            dual_cap_hits = st.dual_cap_hits;
             p
         },
     );
@@ -200,7 +218,23 @@ fn stream_case(
         scratch,
         warm_pivots,
         scratch_pivots,
+        dual_cap_hits,
     }
+}
+
+/// One user-count sweep point: the class-collapsed LP must keep its
+/// size (and near enough its solve time) flat as the user count grows
+/// past it by orders of magnitude.
+struct SweepCase {
+    n: usize,
+    classed: BenchResult,
+    /// Per-user-variable reference — only run while tractable.
+    per_user: Option<BenchResult>,
+    alloc_classes: usize,
+    lp_vars: usize,
+    /// LP variable-count change from one more join on a live class
+    /// (must be zero: the acceptance criterion for class-keyed state).
+    join_lp_vars_delta: usize,
 }
 
 fn main() {
@@ -311,8 +345,124 @@ fn main() {
             format!("stream_{}_speedup_wallclock", case.tag),
             Json::Num(speedup),
         ));
+        meta.push((
+            format!("stream_{}_dual_cap_hits", case.tag),
+            Json::Num(case.dual_cap_hits as f64),
+        ));
         results.push(case.warm);
         results.push(case.scratch);
+    }
+
+    // ---- user-count sweep: classed LP vs per-user LP ---------------
+    // ~10 demand archetypes regardless of n, so the collapsed LP keeps
+    // ~10 variable blocks while the per-user reference grows a block
+    // per user; the reference is only run while it stays tractable.
+    let user_sweep: &[usize] = if smoke {
+        &[1_000]
+    } else {
+        &[1_000, 10_000, 100_000, 1_000_000]
+    };
+    const PER_USER_MAX: usize = 1_000;
+    let sweep_iters = if smoke { 1 } else { 2 };
+    header("user-count sweep at 10 demand classes: classed vs per-user");
+    let jobs: Vec<Job<'_, SweepCase>> = user_sweep
+        .iter()
+        .map(|&n| {
+            let job: Job<'_, SweepCase> = Box::new(move || {
+                let mut rng = Pcg32::seeded(2024);
+                let cluster = Cluster::google_sample(200, &mut rng);
+                let archetypes: Vec<ResVec> = (0..10)
+                    .map(|_| {
+                        ResVec::cpu_mem(
+                            rng.uniform(0.02, 0.5),
+                            rng.uniform(0.02, 0.5),
+                        )
+                    })
+                    .collect();
+                let users: Vec<FluidUser> = (0..n)
+                    .map(|i| FluidUser::unweighted(archetypes[i % 10]))
+                    .collect();
+                let mut alloc_classes = 0usize;
+                let classed = bench_n_quiet(
+                    &format!("classed solve n={n}"),
+                    sweep_iters,
+                    || {
+                        let a = allocator::solve(&cluster, &users);
+                        alloc_classes = a.alloc_classes;
+                        a.g.len()
+                    },
+                );
+                let per_user = (n <= PER_USER_MAX).then(|| {
+                    bench_n_quiet(
+                        &format!("per-user solve n={n}"),
+                        sweep_iters,
+                        || allocator::solve_per_user(&cluster, &users).g.len(),
+                    )
+                });
+                // LP-shape introspection via the standing allocator:
+                // one more member of a live class appends nothing
+                let mut inc = IncrementalDrfh::new(&cluster);
+                for u in &users {
+                    inc.add_user(u.clone());
+                }
+                let lp_vars = inc.lp_vars();
+                inc.add_user(FluidUser::unweighted(archetypes[0]));
+                let join_lp_vars_delta = inc.lp_vars() - lp_vars;
+                SweepCase {
+                    n,
+                    classed,
+                    per_user,
+                    alloc_classes,
+                    lp_vars,
+                    join_lp_vars_delta,
+                }
+            });
+            job
+        })
+        .collect();
+    for case in runner::run_parallel(jobs) {
+        case.classed.print();
+        let n = case.n;
+        println!(
+            "{:<44} {} classes, {} LP vars, join delta {}",
+            format!("  users_{n}"),
+            case.alloc_classes,
+            case.lp_vars,
+            case.join_lp_vars_delta
+        );
+        if case.join_lp_vars_delta != 0 {
+            println!(
+                "WARNING: users_{n} join on a live class appended {} vars",
+                case.join_lp_vars_delta
+            );
+        }
+        meta.push((
+            format!("users_{n}_alloc_classes"),
+            Json::Num(case.alloc_classes as f64),
+        ));
+        meta.push((
+            format!("users_{n}_lp_vars"),
+            Json::Num(case.lp_vars as f64),
+        ));
+        meta.push((
+            format!("users_{n}_join_lp_vars_delta"),
+            Json::Num(case.join_lp_vars_delta as f64),
+        ));
+        results.push(case.classed);
+        if let Some(per_user) = case.per_user {
+            per_user.print();
+            let speedup = per_user.mean.as_secs_f64()
+                / case.classed.mean.as_secs_f64().max(1e-12);
+            println!(
+                "{:<44} {speedup:.2}x classed speedup",
+                format!("  users_{n}")
+            );
+            meta.push((
+                format!("users_{n}_speedup_classed"),
+                Json::Num(speedup),
+            ));
+            results.push(per_user);
+        }
     }
 
     // ---- finite caps (progressive rounds) -------------------------

@@ -10,21 +10,39 @@
 //! the LP shrinks from `n·k` to `n·C` variables (C <= 10 for the Google
 //! Table I pool) while remaining exact.
 //!
+//! The same argument collapses the *user* axis. Users with bit-identical
+//! normalized demand row, weight, and cap are interchangeable in eq. (7):
+//! averaging any feasible solution over the members of such an
+//! **allocation class** preserves feasibility (the capacity rows only see
+//! class totals) and every per-user equality row `Σ_l g_il = frozen_i +
+//! w·δ` forces the same total on each member. [`solve`] therefore builds
+//! one variable block per allocation class — `Σ_c x_Ac − k_A·w_A·δ =
+//! k_A·frozen_A` for a class of `k_A` members — and recovers per-user
+//! shares by deterministic equal split (`x_i = x_A / k_A`, bitwise
+//! identical across members). LP size scales with (server classes ×
+//! demand classes), independent of the user count; demand rows are
+//! interned through the same `workload::intern_rows` the class-keyed
+//! scheduler uses.
+//!
 //! Finite task demands (paper Sec. V-A) are handled by progressive
 //! filling rounds: all unsaturated users' dominant shares grow at rates
 //! proportional to their weights until one hits its cap, which freezes
-//! it; repeat until no user can grow.
+//! it; repeat until no user can grow. Class members share one cap (the
+//! cap is part of the class key), so classes saturate atomically.
 //!
-//! [`solve`] re-solves each round's LP from scratch. It is the
-//! from-scratch parity reference (the `::naive()` convention of
-//! `sched::index`) for [`super::incremental::IncrementalDrfh`], which
-//! maintains the same LP statefully and re-solves from a warm simplex
+//! [`solve_per_user`] keeps the seed's one-variable-block-per-user LP in
+//! tree as the from-scratch parity reference (the `::naive()` convention
+//! of `sched::index`) for the classed path, and [`solve`] itself is the
+//! reference for [`super::incremental::IncrementalDrfh`], which maintains
+//! the same classed LP statefully and re-solves from a warm simplex
 //! basis across rounds and join/departure/cap/weight events.
 
 use super::NormalizedDemand;
 use crate::cluster::{Cluster, ResVec, ServerClass};
 use crate::sched::effective_weight;
 use crate::solver::{self, Lp, LpResult};
+use crate::workload::intern_rows;
+use std::collections::HashMap;
 
 /// A user as seen by the fluid allocator.
 #[derive(Clone, Debug)]
@@ -64,6 +82,10 @@ pub struct FluidAllocation {
     pub lp_pivots: u64,
     /// Number of LP solves (one per progressive-filling round).
     pub lp_solves: u32,
+    /// Allocation classes the LP was actually built over: distinct
+    /// (demand row, weight, cap) triples for the classed path, the raw
+    /// user count for the per-user reference path.
+    pub alloc_classes: usize,
 }
 
 impl FluidAllocation {
@@ -110,19 +132,21 @@ impl FluidAllocation {
     }
 }
 
-/// Solve the exact fluid DRFH allocation for `users` on `cluster`.
-pub fn solve(cluster: &Cluster, users: &[FluidUser]) -> FluidAllocation {
-    solve_classes(&cluster.classes(), &cluster.total_capacity(), users)
+/// Per-user inputs the progressive-filling loops need, shared by the
+/// classed and per-user paths: guarded weights, normalized demands,
+/// caps in dominant-share units, class capacities in pool-share units.
+struct Inputs {
+    weights: Vec<f64>,
+    demands: Vec<NormalizedDemand>,
+    caps: Vec<f64>,
+    cap_share: Vec<ResVec>,
 }
 
-/// Same, over pre-aggregated server classes.
-pub fn solve_classes(
+fn inputs(
     classes: &[ServerClass],
     total: &ResVec,
     users: &[FluidUser],
-) -> FluidAllocation {
-    let n = users.len();
-    let nc = classes.len();
+) -> Inputs {
     let m = total.dims();
     // Guarded weights throughout: trace validation allows weight 0
     // (ranked as weight 1.0 everywhere via `sched::effective_weight`);
@@ -155,6 +179,223 @@ pub fn solve_classes(
             v
         })
         .collect();
+    Inputs { weights, demands, caps, cap_share }
+}
+
+/// Solve the exact fluid DRFH allocation for `users` on `cluster`
+/// (class-collapsed LP — see the module docs).
+pub fn solve(cluster: &Cluster, users: &[FluidUser]) -> FluidAllocation {
+    solve_classes(&cluster.classes(), &cluster.total_capacity(), users)
+}
+
+/// Same, over pre-aggregated server classes.
+pub fn solve_classes(
+    classes: &[ServerClass],
+    total: &ResVec,
+    users: &[FluidUser],
+) -> FluidAllocation {
+    let n = users.len();
+    let nc = classes.len();
+    let m = total.dims();
+    let Inputs { weights, demands, caps, cap_share } =
+        inputs(classes, total, users);
+
+    // Allocation classes: distinct (normalized demand row, weight,
+    // cap) triples, all compared by exact bit pattern. The demand rows
+    // go through the scheduler's interner; weight and cap key the
+    // second level.
+    let (_, drow_class) = intern_rows(demands.iter().map(|d| &d.norm));
+    let mut class_of: Vec<usize> = Vec::with_capacity(n);
+    let mut members: Vec<usize> = Vec::new(); // per class
+    let mut rep: Vec<usize> = Vec::new(); // representative user
+    // order-independent HashMap use (lint hash-iter rule): keyed
+    // `entry` lookups only, never iterated — class ids are assigned by
+    // input order (first appearance), not by map order
+    let mut seen: HashMap<(u32, u64, u64), usize> = HashMap::new();
+    for i in 0..n {
+        let key =
+            (drow_class[i], weights[i].to_bits(), caps[i].to_bits());
+        let a = *seen.entry(key).or_insert_with(|| {
+            rep.push(i);
+            members.push(0);
+            rep.len() - 1
+        });
+        members[a] += 1;
+        class_of.push(a);
+    }
+    let na = rep.len();
+
+    // Per-allocation-class state (members are bit-identical, so they
+    // freeze and saturate together): frozen = per-member dominant
+    // share fixed so far.
+    let a_weight: Vec<f64> = rep.iter().map(|&i| weights[i]).collect();
+    let a_cap: Vec<f64> = rep.iter().map(|&i| caps[i]).collect();
+    let mut frozen = vec![0.0f64; na];
+    let mut saturated = vec![false; na];
+    let mut xa = vec![vec![0.0f64; nc]; na];
+    let mut lp_pivots = 0u64;
+    let mut lp_solves = 0u32;
+
+    // Classes already at cap 0 are trivially saturated.
+    for a in 0..na {
+        if a_cap[a] <= 1e-15 {
+            saturated[a] = true;
+        }
+    }
+
+    for _round in 0..na + 1 {
+        if saturated.iter().all(|&s| s) {
+            break;
+        }
+        // LP variables: x_Ac (na·nc class totals) then delta.
+        let nv = na * nc + 1;
+        let var = |a: usize, c: usize| a * nc + c;
+        let dvar = nv - 1;
+
+        let mut c_obj = vec![0.0; nv];
+        c_obj[dvar] = 1.0;
+
+        let mut a_ub: Vec<Vec<f64>> = Vec::new();
+        let mut b_ub: Vec<f64> = Vec::new();
+        // server-class capacity rows (class totals already include the
+        // member count — no per-user fan-out)
+        for (c, cs) in cap_share.iter().enumerate() {
+            for r in 0..m {
+                let mut row = vec![0.0; nv];
+                for (a, &ri) in rep.iter().enumerate() {
+                    row[var(a, c)] = demands[ri].norm[r];
+                }
+                a_ub.push(row);
+                b_ub.push(cs[r]);
+            }
+        }
+        // delta bounded by the tightest remaining cap among active
+        // classes (per-member units, identical within a class)
+        let mut delta_max = f64::INFINITY;
+        for a in 0..na {
+            if !saturated[a] && a_cap[a].is_finite() {
+                delta_max =
+                    delta_max.min((a_cap[a] - frozen[a]) / a_weight[a]);
+            }
+        }
+        if delta_max.is_finite() {
+            let mut row = vec![0.0; nv];
+            row[dvar] = 1.0;
+            a_ub.push(row);
+            b_ub.push(delta_max.max(0.0));
+        }
+
+        let mut a_eq: Vec<Vec<f64>> = Vec::new();
+        let mut b_eq: Vec<f64> = Vec::new();
+        for a in 0..na {
+            let k = members[a] as f64;
+            let mut row = vec![0.0; nv];
+            for c in 0..nc {
+                row[var(a, c)] = 1.0;
+            }
+            if saturated[a] {
+                // frozen classes keep their total dominant share
+                a_eq.push(row);
+                b_eq.push(k * frozen[a]);
+            } else {
+                row[dvar] = -k * a_weight[a];
+                a_eq.push(row);
+                b_eq.push(k * frozen[a]);
+            }
+        }
+
+        let lp = Lp { n: nv, c: c_obj, a_ub, b_ub, a_eq, b_eq };
+        let (sol, delta) = match solver::solve(&lp) {
+            LpResult::Optimal { x, obj, pivots } => {
+                lp_pivots += pivots.search() as u64;
+                lp_solves += 1;
+                (x, obj)
+            }
+            other => panic!("DRFH round LP not optimal: {other:?}"),
+        };
+        // commit class totals
+        for a in 0..na {
+            for c in 0..nc {
+                xa[a][c] = sol[var(a, c)];
+            }
+        }
+        if delta <= 1e-12 {
+            break; // capacity exhausted for all active classes
+        }
+        let mut newly = 0;
+        for a in 0..na {
+            if !saturated[a] {
+                frozen[a] += a_weight[a] * delta;
+                if a_cap[a].is_finite() && frozen[a] >= a_cap[a] - 1e-9 {
+                    frozen[a] = a_cap[a];
+                    saturated[a] = true;
+                    newly += 1;
+                }
+            }
+        }
+        if newly == 0 {
+            break; // no cap hit: capacity-limited optimum reached
+        }
+    }
+
+    // Recover per-user shares: deterministic equal split within each
+    // class — one division per (class, server class), fanned out, so
+    // members are bitwise identical.
+    let mut x = vec![vec![0.0f64; nc]; n];
+    let split: Vec<Vec<f64>> = (0..na)
+        .map(|a| {
+            let k = members[a] as f64;
+            (0..nc).map(|c| xa[a][c] / k).collect()
+        })
+        .collect();
+    for i in 0..n {
+        x[i].copy_from_slice(&split[class_of[i]]);
+    }
+
+    let g: Vec<f64> = x.iter().map(|xi| xi.iter().sum()).collect();
+    let tasks: Vec<f64> = g
+        .iter()
+        .zip(&demands)
+        .map(|(&gi, d)| gi / d.share[d.dominant])
+        .collect();
+    FluidAllocation {
+        classes: classes.to_vec(),
+        total: *total,
+        demands,
+        x,
+        g,
+        tasks,
+        lp_pivots,
+        lp_solves,
+        alloc_classes: na,
+    }
+}
+
+/// Per-user-variable reference: the seed's LP with one variable block
+/// per user. Exponentially larger than [`solve`] on class-collapsible
+/// populations — kept as the parity reference and bench baseline.
+pub fn solve_per_user(
+    cluster: &Cluster,
+    users: &[FluidUser],
+) -> FluidAllocation {
+    solve_classes_per_user(
+        &cluster.classes(),
+        &cluster.total_capacity(),
+        users,
+    )
+}
+
+/// Same, over pre-aggregated server classes.
+pub fn solve_classes_per_user(
+    classes: &[ServerClass],
+    total: &ResVec,
+    users: &[FluidUser],
+) -> FluidAllocation {
+    let n = users.len();
+    let nc = classes.len();
+    let m = total.dims();
+    let Inputs { weights, demands, caps, cap_share } =
+        inputs(classes, total, users);
 
     // Progressive filling: frozen[i] = dominant share fixed so far.
     let mut frozen = vec![0.0f64; n];
@@ -276,6 +517,7 @@ pub fn solve_classes(
         tasks,
         lp_pivots,
         lp_solves,
+        alloc_classes: n,
     }
 }
 
@@ -301,6 +543,7 @@ mod tests {
         assert!((a.tasks[0] - 10.0).abs() < 1e-5);
         assert!((a.tasks[1] - 10.0).abs() < 1e-5);
         assert!(a.is_feasible(1e-9));
+        assert_eq!(a.alloc_classes, 2);
     }
 
     #[test]
@@ -460,6 +703,123 @@ mod tests {
                 a.g
             );
             assert!(gmin > 0.0, "trial {trial}: zero share");
+        }
+    }
+
+    // ---- class collapse ------------------------------------------
+
+    /// Duplicated users collapse into one variable block, and the
+    /// equal split hands every member a bitwise-identical share.
+    #[test]
+    fn duplicate_users_collapse_and_split_exactly() {
+        let cluster = Cluster::fig1_example();
+        let mut users = Vec::new();
+        for _ in 0..6 {
+            users.push(FluidUser::unweighted(ResVec::cpu_mem(0.2, 1.0)));
+        }
+        for _ in 0..4 {
+            users.push(FluidUser {
+                demand: ResVec::cpu_mem(1.0, 0.2),
+                weight: 2.0,
+                task_cap: Some(3.0),
+            });
+        }
+        let a = solve(&cluster, &users);
+        assert_eq!(a.alloc_classes, 2, "10 users, 2 allocation classes");
+        // bitwise-equal shares within each class (f64 ==, not a
+        // tolerance: the split is one division fanned out)
+        for i in 1..6 {
+            assert_eq!(a.g[0], a.g[i], "class-0 split not exact");
+            assert_eq!(a.x[0], a.x[i]);
+        }
+        for i in 7..10 {
+            assert_eq!(a.g[6], a.g[i], "class-1 split not exact");
+            assert_eq!(a.x[6], a.x[i]);
+        }
+        assert!(a.is_feasible(1e-9));
+    }
+
+    /// A user whose demand row differs by one ulp must NOT share a
+    /// class — bit-identical semantics above all.
+    #[test]
+    fn class_key_is_bitwise() {
+        let cluster = Cluster::fig1_example();
+        let d = ResVec::cpu_mem(0.2, 1.0);
+        let mut d2 = d;
+        d2[0] = f64::from_bits(d[0].to_bits() + 1);
+        let users = vec![
+            FluidUser::unweighted(d),
+            FluidUser::unweighted(d),
+            FluidUser::unweighted(d2),
+        ];
+        let a = solve(&cluster, &users);
+        assert_eq!(a.alloc_classes, 2);
+        // weight and cap are part of the key too
+        let mut w = FluidUser::unweighted(d);
+        w.weight = 2.0;
+        let mut cp = FluidUser::unweighted(d);
+        cp.task_cap = Some(5.0);
+        let a = solve(
+            &cluster,
+            &[
+                FluidUser::unweighted(d),
+                w,
+                cp,
+                FluidUser::unweighted(d),
+            ],
+        );
+        assert_eq!(a.alloc_classes, 3);
+    }
+
+    /// The classed LP must agree with the per-user reference LP on
+    /// random class-collapsible instances: same shares, caps, weights.
+    #[test]
+    fn classed_matches_per_user_reference() {
+        use crate::util::Pcg32;
+        let mut rng = Pcg32::seeded(77);
+        for trial in 0..15 {
+            let k = 2 + rng.below(4);
+            let caps: Vec<ResVec> = (0..k)
+                .map(|_| {
+                    ResVec::cpu_mem(rng.uniform(2.0, 8.0), rng.uniform(2.0, 8.0))
+                })
+                .collect();
+            let cluster = Cluster::from_capacities(&caps);
+            // a few archetypes, many members each
+            let narch = 1 + rng.below(3);
+            let archetypes: Vec<FluidUser> = (0..narch)
+                .map(|a| FluidUser {
+                    demand: ResVec::cpu_mem(
+                        rng.uniform(0.05, 0.8),
+                        rng.uniform(0.05, 0.8),
+                    ),
+                    weight: 1.0 + a as f64,
+                    task_cap: if rng.below(2) == 0 {
+                        Some(1.0 + rng.below(8) as f64)
+                    } else {
+                        None
+                    },
+                })
+                .collect();
+            let n = 3 + rng.below(6);
+            let users: Vec<FluidUser> =
+                (0..n).map(|i| archetypes[i % narch].clone()).collect();
+            let classed = solve(&cluster, &users);
+            let reference = solve_per_user(&cluster, &users);
+            assert!(
+                classed.alloc_classes <= narch,
+                "trial {trial}: {} classes for {narch} archetypes",
+                classed.alloc_classes
+            );
+            for i in 0..n {
+                assert!(
+                    (classed.g[i] - reference.g[i]).abs() < 1e-7,
+                    "trial {trial} user {i}: classed {} vs per-user {}",
+                    classed.g[i],
+                    reference.g[i]
+                );
+            }
+            assert!(classed.is_feasible(1e-6), "trial {trial}");
         }
     }
 }

@@ -1,6 +1,7 @@
 //! Event-driven dynamic DRFH: the exact fluid allocation (paper
 //! eq. (7) + the progressive-filling rounds of Sec. V-A) maintained
-//! *incrementally* across user churn.
+//! *incrementally* across user churn, with one LP variable block per
+//! **allocation class**, not per user.
 //!
 //! [`IncrementalDrfh`] owns one [`crate::solver::Solver`] for the whole
 //! lifetime of the cluster and caches everything that survives events:
@@ -15,27 +16,53 @@
 //! consecutive solves near-incremental: a handful of dual/primal repair
 //! pivots per event instead of hundreds of phase-1/phase-2 pivots.
 //!
+//! ## Allocation classes
+//!
+//! Users with bit-identical normalized demand row, guarded weight, and
+//! cap (in dominant-share units) are interchangeable in eq. (7) — see
+//! the `drfh` module docs for the averaging argument — so they share
+//! one **class slot**: one `x_Ac` variable per server class plus one
+//! pair of growth rows, scaled by the member count `k_A`. The LP
+//! therefore sizes with (server classes × allocation classes),
+//! independent of the user count, and the common events are trivial:
+//!
+//! * `add_user` on a live class increments its member count — **no
+//!   column append, no row append, no coefficient edit** (the member
+//!   scale `k_A` enters the growth rows at the next `allocate()`,
+//!   which rewrites those coefficients every call anyway);
+//! * `remove_user` that leaves the class populated is the same in
+//!   reverse; the *last* departure pins the slot's rows to
+//!   `Σ_c x_Ac = 0` and recycles the slot (LIFO) for the next new
+//!   class;
+//! * `set_cap` / `set_weight` migrate the user between classes
+//!   (detach + attach) — at most one slot retire plus one slot rewire,
+//!   still pure rhs/coefficient edits.
+//!
+//! Per-user shares come out by deterministic equal split,
+//! `x_i = x_A / k_A`, bitwise identical across a class's members.
+//!
 //! ## LP shape and basis-reuse invariants
 //!
-//! Variables: one `x_ic` per (user slot, server class) — the dominant
-//! share user *i* draws from class *c* — plus one shared *cumulative*
-//! growth variable `G` (the filling level since the current
-//! `allocate()` began; the objective). Rows:
+//! Variables: one `x_Ac` per (class slot, server class) — the total
+//! dominant share class *A* draws from server class *c* — plus one
+//! shared *cumulative* growth variable `G` (the filling level since
+//! the current `allocate()` began; the objective). Rows:
 //!
-//! * class capacity rows `Σ_i x_ic · d_ir <= cap_cr` — created once,
-//!   never touched except to rewire a slot's demand coefficients;
-//! * per slot, the user's growth equality — `Σ_c x_ic − w_i G = 0`
-//!   while the user is actively filling, `Σ_c x_ic = cap_i` once its
-//!   task cap saturates — split into a **pair of `<=` rows**
+//! * server-class capacity rows `Σ_A x_Ac · d_Ar <= cap_cr` — created
+//!   once, never touched except to rewire a slot's demand
+//!   coefficients when a new class claims it;
+//! * per class slot, the growth equality — `Σ_c x_Ac − k_A·w_A·G = 0`
+//!   while the class is actively filling, `Σ_c x_Ac = k_A·cap_A` once
+//!   its task cap saturates — split into a **pair of `<=` rows**
 //!   (`row_up` / `row_lo`). The pairing is what keeps every event
 //!   warm-startable: appending or re-targeting a `<=` row only
 //!   adds/retunes a slack, which the dual simplex repairs from the
 //!   current basis, whereas a true equality row would need a fresh
-//!   phase-1 artificial (see `solver::simplex` docs);
+//!   phase-1 artificial (see `solver::revised` docs);
 //! * one `G <= g_max` cap row whose rhs is retuned every round. When
-//!   no finite task cap remains among the active users the row must
+//!   no finite task cap remains among the active classes the row must
 //!   not bind, and its stand-in rhs must stay **O(1)**: `G` provably
-//!   never exceeds `1/max_active_weight` (an active user's dominant
+//!   never exceeds `1/max_active_weight` (an active member's dominant
 //!   share `w·G` is at most the whole pool), so `2/max_active_weight`
 //!   is slack and scale-safe. A huge sentinel (say 1e12) would be
 //!   numerically catastrophic here: whenever a warm refactorization
@@ -43,30 +70,25 @@
 //!   every row containing `G` and its absorption error (~1e12 · ε)
 //!   wipes out the 1e-9 parity budget.
 //!
-//! The growth variable is *cumulative* (`Σx = w·G`, not
-//! `Σx = f + w·δ` with per-round resets) precisely so that active
+//! The growth variable is *cumulative* (`Σx = k·w·G`, not
+//! `Σx = f + k·w·δ` with per-round resets) precisely so that active
 //! rows keep `rhs = 0` across rounds and the round-*r* optimum stays
 //! feasible — literally the same point — after a saturation switch:
-//! the newly saturated user's rows flip to `Σ_c x_ic = cap_i`, which
-//! the current solution already satisfies (`w·G* = cap_i` up to the
-//! clamp epsilon). The refactorized basis is therefore primal
+//! the newly saturated class's rows flip to `Σ_c x_Ac = k·cap`, which
+//! the current solution already satisfies (`w·G* = cap` per member up
+//! to the clamp epsilon). The refactorized basis is therefore primal
 //! feasible and the next round continues with ordinary warm primal
 //! pivots instead of falling back to a cold solve; only the *first*
-//! round after user churn may go cold (its coefficient edits can lose
+//! round after class churn may go cold (its coefficient edits can lose
 //! both feasibilities).
-//!
-//! Departed users keep their slot: the pair rows get `rhs 0` and a zero
-//! `δ` coefficient, which pins `Σ_c x_ic = 0` (hence every `x_ic = 0`,
-//! releasing the capacity) without deactivating anything — the basis
-//! stays valid and the slot is rewired on the next join. Saturation
-//! (a user hitting its task cap mid-filling) likewise only edits the
-//! pair rows' `δ` coefficient and rhs.
 //!
 //! Parity: the round structure, `delta_max` computation, saturation
 //! thresholds and termination tests mirror `drfh::solve_classes`
-//! line-for-line, and each round's LP has the identical feasible set,
-//! so the per-user dominant shares `g` (unique across alternate LP
-//! optima) match the from-scratch path to solver precision;
+//! class for class (members are bit-identical, so the reference's
+//! per-user filling state collapses to the same per-class state), and
+//! each round's LP has the identical feasible set, so the per-user
+//! dominant shares `g` (unique across alternate LP optima) match the
+//! from-scratch path to solver precision;
 //! `tests/incremental_parity.rs` enforces this across randomized event
 //! sequences. The per-class split `x` may differ between the two paths
 //! when the optimum is non-unique — both splits are optimal.
@@ -76,35 +98,55 @@ use super::NormalizedDemand;
 use crate::cluster::{Cluster, ResVec, ServerClass};
 use crate::sched::effective_weight;
 use crate::solver::{LpResult, RowId, SolveStats, Solver, VarId};
+use std::collections::HashMap;
 
 /// Placeholder rhs for the growth-cap row at construction; every
 /// `allocate()` round overwrites it before solving.
 const GROWTH_CAP_INIT: f64 = 1.0;
 
-/// Handle to a user slot inside an [`IncrementalDrfh`]. Stays valid
-/// until `remove_user`; never reused while the user is present.
+/// Handle to a user inside an [`IncrementalDrfh`]. Stays valid until
+/// `remove_user`; never reused while the user is present.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct UserId(usize);
 
+/// Allocation-class identity: normalized demand row, guarded weight,
+/// and cap in dominant-share units — all by exact bit pattern.
+type ClassKey = (Vec<u64>, u64, u64);
+
+/// The live population of one class slot.
 #[derive(Clone, Debug)]
-struct SlotUser {
-    spec: FluidUser,
+struct ClassUser {
+    key: ClassKey,
     demand: NormalizedDemand,
-    /// Guarded weight (`sched::effective_weight`).
+    /// Guarded weight (`sched::effective_weight`), per member.
     weight: f64,
-    /// Task cap in dominant-share units (`inf` when uncapped).
+    /// Task cap in dominant-share units (`inf` when uncapped), per
+    /// member.
     cap: f64,
+    /// Number of users sharing this block.
+    members: usize,
 }
 
 #[derive(Clone, Debug)]
 struct Slot {
-    /// One x_ic variable per server class.
+    /// One x_Ac variable per server class.
     vars: Vec<VarId>,
-    /// `Σ_c x_ic − w δ <= f`
+    /// `Σ_c x_Ac − k·w·G <= k·f`
     row_up: RowId,
-    /// `−Σ_c x_ic + w δ <= −f`
+    /// `−Σ_c x_Ac + k·w·G <= −k·f`
     row_lo: RowId,
-    user: Option<SlotUser>,
+    class: Option<ClassUser>,
+}
+
+/// One present user: their own spec and normalized demand (kept
+/// per-user — class members share a *norm* row but may differ in
+/// absolute `share`, which `tasks` recovery needs) plus the class slot
+/// currently holding them.
+#[derive(Clone, Debug)]
+struct UserRec {
+    spec: FluidUser,
+    demand: NormalizedDemand,
+    slot: usize,
 }
 
 /// The warm-started incremental fluid DRFH allocator. See module docs.
@@ -119,9 +161,16 @@ pub struct IncrementalDrfh {
     /// Class capacity rows, `[class][resource]`.
     cap_rows: Vec<Vec<RowId>>,
     slots: Vec<Slot>,
-    /// Free (departed) slot indices, reused LIFO.
-    free: Vec<usize>,
-    /// Occupied slots in insertion order — the user order of every
+    /// Vacant class-slot indices, reused LIFO.
+    slot_free: Vec<usize>,
+    /// Live allocation classes by identity. Order-independent HashMap
+    /// use (lint hash-iter rule): keyed lookups only, never iterated —
+    /// every traversal runs over `order` or ascending slot indices.
+    by_key: HashMap<ClassKey, usize>,
+    users: Vec<Option<UserRec>>,
+    /// Vacant user-id indices, reused LIFO.
+    user_free: Vec<usize>,
+    /// Present user ids in insertion order — the user order of every
     /// [`FluidAllocation`] this allocator returns.
     order: Vec<usize>,
 }
@@ -158,7 +207,10 @@ impl IncrementalDrfh {
             delta_cap,
             cap_rows,
             slots: Vec::new(),
-            free: Vec::new(),
+            slot_free: Vec::new(),
+            by_key: HashMap::new(),
+            users: Vec::new(),
+            user_free: Vec::new(),
             order: Vec::new(),
         }
     }
@@ -187,7 +239,7 @@ impl IncrementalDrfh {
     pub fn users(&self) -> Vec<FluidUser> {
         self.order
             .iter()
-            .map(|&si| self.slots[si].user.as_ref().unwrap().spec.clone())
+            .map(|&u| self.users[u].as_ref().unwrap().spec.clone())
             .collect()
     }
 
@@ -196,18 +248,40 @@ impl IncrementalDrfh {
         self.solver.stats()
     }
 
-    /// Join event. Reuses a departed slot's variables and pair rows
-    /// when one is free; otherwise appends fresh ones (which keeps the
-    /// warm basis either way).
-    pub fn add_user(&mut self, user: FluidUser) -> UserId {
-        let demand = NormalizedDemand::from_absolute(&user.demand, &self.total);
-        let weight = effective_weight(user.weight);
-        let cap = user
-            .task_cap
-            .map(|t| t * demand.share[demand.dominant])
-            .unwrap_or(f64::INFINITY);
+    /// Live allocation classes (occupied class slots).
+    pub fn live_classes(&self) -> usize {
+        self.by_key.len()
+    }
+
+    /// Structural variables of the standing LP — the LP-shape
+    /// introspection hook: stays put when users join existing classes.
+    pub fn lp_vars(&self) -> usize {
+        self.solver.num_vars()
+    }
+
+    /// Find or create the class slot for `(demand, weight, cap)` and
+    /// count one more member into it. Joining a live class touches the
+    /// LP not at all; a new class reuses a vacant slot's variables and
+    /// pair rows when one exists (rewiring its capacity-row
+    /// coefficients) and appends fresh ones only otherwise — the warm
+    /// basis survives every branch.
+    fn attach(
+        &mut self,
+        demand: NormalizedDemand,
+        weight: f64,
+        cap: f64,
+    ) -> usize {
+        let key: ClassKey = (
+            demand.norm.as_slice().iter().map(|x| x.to_bits()).collect(),
+            weight.to_bits(),
+            cap.to_bits(),
+        );
+        if let Some(&si) = self.by_key.get(&key) {
+            self.slots[si].class.as_mut().unwrap().members += 1;
+            return si;
+        }
         let nc = self.classes.len();
-        let si = match self.free.pop() {
+        let si = match self.slot_free.pop() {
             Some(si) => si,
             None => {
                 let vars: Vec<VarId> =
@@ -218,7 +292,7 @@ impl IncrementalDrfh {
                     vars.iter().map(|&v| (v, -1.0)).collect();
                 let row_up = self.solver.add_row_le(&up, 0.0);
                 let row_lo = self.solver.add_row_le(&lo, 0.0);
-                self.slots.push(Slot { vars, row_up, row_lo, user: None });
+                self.slots.push(Slot { vars, row_up, row_lo, class: None });
                 self.slots.len() - 1
             }
         };
@@ -230,54 +304,116 @@ impl IncrementalDrfh {
                 self.solver.set_coeff(row, var, demand.norm[r]);
             }
         }
-        self.slots[si].user = Some(SlotUser { spec: user, demand, weight, cap });
-        self.order.push(si);
-        UserId(si)
+        self.by_key.insert(key.clone(), si);
+        self.slots[si].class =
+            Some(ClassUser { key, demand, weight, cap, members: 1 });
+        si
     }
 
-    /// Departure event. The slot's pair rows collapse to
-    /// `Σ_c x_ic = 0`, which releases the user's capacity without
-    /// disturbing the basis; the slot is recycled on the next join.
-    pub fn remove_user(&mut self, id: UserId) {
-        let si = id.0;
-        assert!(
-            self.slots[si].user.is_some(),
-            "remove_user on an empty slot"
-        );
-        self.slots[si].user = None;
+    /// Count one member out of slot `si`. The last departure pins the
+    /// slot's pair rows to `Σ_c x_Ac = 0` (releasing the capacity
+    /// without disturbing the basis) and recycles the slot.
+    fn detach(&mut self, si: usize) {
+        let class = self.slots[si].class.as_mut().unwrap();
+        class.members -= 1;
+        if class.members > 0 {
+            return;
+        }
+        let key = class.key.clone();
+        self.slots[si].class = None;
+        self.by_key.remove(&key);
         let (up, lo) = (self.slots[si].row_up, self.slots[si].row_lo);
         self.solver.set_coeff(up, self.delta, 0.0);
         self.solver.set_coeff(lo, self.delta, 0.0);
         self.solver.set_rhs(up, 0.0);
         self.solver.set_rhs(lo, 0.0);
-        self.order.retain(|&s| s != si);
-        self.free.push(si);
+        self.slot_free.push(si);
     }
 
-    /// Task-cap change event (paper Sec. V-A finite demands).
-    pub fn set_cap(&mut self, id: UserId, task_cap: Option<f64>) {
-        let u = self.slots[id.0]
-            .user
-            .as_mut()
-            .expect("set_cap on a removed user");
-        u.spec.task_cap = task_cap;
-        u.cap = task_cap
-            .map(|t| t * u.demand.share[u.demand.dominant])
+    fn class_params(
+        &self,
+        user: &FluidUser,
+    ) -> (NormalizedDemand, f64, f64) {
+        let demand =
+            NormalizedDemand::from_absolute(&user.demand, &self.total);
+        let weight = effective_weight(user.weight);
+        let cap = user
+            .task_cap
+            .map(|t| t * demand.share[demand.dominant])
             .unwrap_or(f64::INFINITY);
+        (demand, weight, cap)
     }
 
-    /// Weight change event.
+    /// Join event. On an existing allocation class this is a pure
+    /// member-count bump — no LP mutation of any kind.
+    pub fn add_user(&mut self, user: FluidUser) -> UserId {
+        let (demand, weight, cap) = self.class_params(&user);
+        let slot = self.attach(demand.clone(), weight, cap);
+        let rec = UserRec { spec: user, demand, slot };
+        let uid = match self.user_free.pop() {
+            Some(u) => {
+                self.users[u] = Some(rec);
+                u
+            }
+            None => {
+                self.users.push(Some(rec));
+                self.users.len() - 1
+            }
+        };
+        self.order.push(uid);
+        UserId(uid)
+    }
+
+    /// Departure event. Leaving a still-populated class is a pure
+    /// member-count drop; the last member out retires the class slot
+    /// (see [`Self::detach`] — capacity released, basis undisturbed).
+    pub fn remove_user(&mut self, id: UserId) {
+        let rec = self.users[id.0]
+            .take()
+            .expect("remove_user on an absent user");
+        self.detach(rec.slot);
+        self.order.retain(|&u| u != id.0);
+        self.user_free.push(id.0);
+    }
+
+    /// Re-key a present user after a spec change: detach from the old
+    /// class, attach to the (possibly new, possibly same) one.
+    fn rekey(&mut self, id: UserId, spec: FluidUser) {
+        let (demand, weight, cap) = self.class_params(&spec);
+        let old_slot = self.users[id.0].as_ref().unwrap().slot;
+        // detach first so a sole member's class slot frees up for
+        // immediate LIFO reuse by the new key
+        self.detach(old_slot);
+        let slot = self.attach(demand.clone(), weight, cap);
+        self.users[id.0] = Some(UserRec { spec, demand, slot });
+    }
+
+    /// Task-cap change event (paper Sec. V-A finite demands). May
+    /// migrate the user between allocation classes.
+    pub fn set_cap(&mut self, id: UserId, task_cap: Option<f64>) {
+        let mut spec = self.users[id.0]
+            .as_ref()
+            .expect("set_cap on a removed user")
+            .spec
+            .clone();
+        spec.task_cap = task_cap;
+        self.rekey(id, spec);
+    }
+
+    /// Weight change event. May migrate the user between allocation
+    /// classes.
     pub fn set_weight(&mut self, id: UserId, weight: f64) {
-        let u = self.slots[id.0]
-            .user
-            .as_mut()
-            .expect("set_weight on a removed user");
-        u.spec.weight = weight;
-        u.weight = effective_weight(weight);
+        let mut spec = self.users[id.0]
+            .as_ref()
+            .expect("set_weight on a removed user")
+            .spec
+            .clone();
+        spec.weight = weight;
+        self.rekey(id, spec);
     }
 
     /// Re-equalize: run the progressive-filling rounds for the current
-    /// user set, warm from the standing basis. Mirrors
+    /// class population, warm from the standing basis. Mirrors
     /// `drfh::solve_classes` round for round (same `delta_max`, same
     /// saturation thresholds, same termination) so the resulting
     /// dominant shares match the from-scratch path.
@@ -287,7 +423,7 @@ impl IncrementalDrfh {
         let demands: Vec<NormalizedDemand> = self
             .order
             .iter()
-            .map(|&si| self.slots[si].user.as_ref().unwrap().demand.clone())
+            .map(|&u| self.users[u].as_ref().unwrap().demand.clone())
             .collect();
         if n == 0 {
             return FluidAllocation {
@@ -299,63 +435,74 @@ impl IncrementalDrfh {
                 tasks: Vec::new(),
                 lp_pivots: 0,
                 lp_solves: 0,
+                alloc_classes: 0,
             };
         }
-        let weights: Vec<f64> = self
-            .order
-            .iter()
-            .map(|&si| self.slots[si].user.as_ref().unwrap().weight)
+        // live class slots, ascending slot index — the deterministic
+        // iteration order for everything per-class below
+        let live: Vec<usize> = (0..self.slots.len())
+            .filter(|&si| self.slots[si].class.is_some())
             .collect();
-        let caps: Vec<f64> = self
-            .order
+        let na = live.len();
+        let weights: Vec<f64> = live
             .iter()
-            .map(|&si| self.slots[si].user.as_ref().unwrap().cap)
+            .map(|&si| self.slots[si].class.as_ref().unwrap().weight)
+            .collect();
+        let caps: Vec<f64> = live
+            .iter()
+            .map(|&si| self.slots[si].class.as_ref().unwrap().cap)
+            .collect();
+        let counts: Vec<f64> = live
+            .iter()
+            .map(|&si| self.slots[si].class.as_ref().unwrap().members as f64)
             .collect();
 
-        // Reset the filling state: every present user grows from zero
+        // Reset the filling state: every present class grows from zero
         // again (dynamic DRFH re-equalizes the whole allocation on
         // every event; only the solver basis carries over). Active
-        // rows are `Σx − w·G = 0` and stay untouched until the user
+        // rows are `Σx − k·w·G = 0` and stay untouched until the class
         // saturates — see the module docs for why the growth variable
-        // is cumulative.
-        let mut frozen = vec![0.0f64; n];
+        // is cumulative. The member scale k enters here, which is why
+        // joins/departures on live classes need no LP edits of their
+        // own.
+        let mut frozen = vec![0.0f64; na];
         let mut saturated: Vec<bool> =
             caps.iter().map(|&c| c <= 1e-15).collect();
-        let mut x = vec![vec![0.0f64; nc]; n];
+        let mut xa = vec![vec![0.0f64; nc]; na];
         let mut lp_pivots = 0u64;
         let mut lp_solves = 0u32;
-        for k in 0..n {
-            let si = self.order[k];
+        for (a, &si) in live.iter().enumerate() {
             let (up, lo) = (self.slots[si].row_up, self.slots[si].row_lo);
-            let w = if saturated[k] { 0.0 } else { weights[k] };
-            self.solver.set_coeff(up, self.delta, -w);
-            self.solver.set_coeff(lo, self.delta, w);
+            let kw = if saturated[a] { 0.0 } else { counts[a] * weights[a] };
+            self.solver.set_coeff(up, self.delta, -kw);
+            self.solver.set_coeff(lo, self.delta, kw);
             self.solver.set_rhs(up, 0.0);
             self.solver.set_rhs(lo, 0.0);
         }
 
         // cumulative filling level committed so far (G in the docs)
         let mut g_cum = 0.0f64;
-        for _round in 0..n + 1 {
+        for _round in 0..na + 1 {
             if saturated.iter().all(|&s| s) {
                 break;
             }
-            // G bounded by the tightest cap among active users; equals
-            // the reference's `frozen + delta_max` since active users
-            // hold frozen = w·G exactly. With no finite cap the row
-            // gets the O(1) never-binding stand-in (see module docs).
+            // G bounded by the tightest cap among active classes;
+            // equals the reference's `frozen + delta_max` since active
+            // classes hold frozen = w·G exactly (per member). With no
+            // finite cap the row gets the O(1) never-binding stand-in
+            // (see module docs).
             let mut g_max = f64::INFINITY;
             let mut max_w = 0.0f64;
-            for k in 0..n {
-                if !saturated[k] {
-                    max_w = max_w.max(weights[k]);
-                    if caps[k].is_finite() {
-                        g_max = g_max.min(caps[k] / weights[k]);
+            for a in 0..na {
+                if !saturated[a] {
+                    max_w = max_w.max(weights[a]);
+                    if caps[a].is_finite() {
+                        g_max = g_max.min(caps[a] / weights[a]);
                     }
                 }
             }
             // any bound >= 2/max_w can never bind (G <= 1/max_w), so
-            // clamping there changes nothing while keeping the tableau
+            // clamping there changes nothing while keeping the LP
             // free of large-magnitude rhs values
             let rhs = g_max.max(0.0).min(2.0 / max_w);
             self.solver.set_rhs(self.delta_cap, rhs);
@@ -370,43 +517,60 @@ impl IncrementalDrfh {
                     panic!("incremental DRFH round LP not optimal: {other:?}")
                 }
             };
-            for k in 0..n {
-                let si = self.order[k];
+            for (a, &si) in live.iter().enumerate() {
                 for c in 0..nc {
-                    x[k][c] = sol[self.slots[si].vars[c].index()];
+                    xa[a][c] = sol[self.slots[si].vars[c].index()];
                 }
             }
             // the reference's per-round progressive-filling increment
             let delta = g_star - g_cum;
             if delta <= 1e-12 {
-                break; // capacity exhausted for all active users
+                break; // capacity exhausted for all active classes
             }
             g_cum = g_star;
             let mut newly = 0;
-            for k in 0..n {
-                if saturated[k] {
+            for (a, &si) in live.iter().enumerate() {
+                if saturated[a] {
                     continue;
                 }
-                frozen[k] += weights[k] * delta;
-                if caps[k].is_finite() && frozen[k] >= caps[k] - 1e-9 {
-                    frozen[k] = caps[k];
-                    saturated[k] = true;
+                frozen[a] += weights[a] * delta;
+                if caps[a].is_finite() && frozen[a] >= caps[a] - 1e-9 {
+                    frozen[a] = caps[a];
+                    saturated[a] = true;
                     newly += 1;
-                    // freeze: Σx = cap — the current optimum already
-                    // satisfies this (w·G* = cap up to the clamp
-                    // epsilon), so the basis stays primal feasible
-                    let si = self.order[k];
+                    // freeze: Σx = k·cap — the current optimum already
+                    // satisfies this (w·G* = cap per member up to the
+                    // clamp epsilon), so the basis stays primal
+                    // feasible
                     let (up, lo) =
                         (self.slots[si].row_up, self.slots[si].row_lo);
                     self.solver.set_coeff(up, self.delta, 0.0);
                     self.solver.set_coeff(lo, self.delta, 0.0);
-                    self.solver.set_rhs(up, caps[k]);
-                    self.solver.set_rhs(lo, -caps[k]);
+                    self.solver.set_rhs(up, counts[a] * caps[a]);
+                    self.solver.set_rhs(lo, -counts[a] * caps[a]);
                 }
             }
             if newly == 0 {
                 break; // no cap hit: capacity-limited optimum reached
             }
+        }
+
+        // Recover per-user shares: deterministic equal split within
+        // each class — one division per (class, server class), fanned
+        // out, so members are bitwise identical.
+        let mut split_of_slot = vec![usize::MAX; self.slots.len()];
+        let split: Vec<Vec<f64>> = live
+            .iter()
+            .enumerate()
+            .map(|(a, &si)| {
+                split_of_slot[si] = a;
+                (0..nc).map(|c| xa[a][c] / counts[a]).collect()
+            })
+            .collect();
+        let mut x = vec![vec![0.0f64; nc]; n];
+        for (k, &u) in self.order.iter().enumerate() {
+            let si = self.users[u].as_ref().unwrap().slot;
+            x[k].copy_from_slice(&split[split_of_slot[si]]);
         }
 
         let g: Vec<f64> = x.iter().map(|xi| xi.iter().sum()).collect();
@@ -424,6 +588,7 @@ impl IncrementalDrfh {
             tasks,
             lp_pivots,
             lp_solves,
+            alloc_classes: na,
         }
     }
 }
@@ -468,6 +633,7 @@ mod tests {
         assert!((a.g[1] - 5.0 / 7.0).abs() < 1e-6, "g2={}", a.g[1]);
         assert!((a.tasks[0] - 10.0).abs() < 1e-5);
         assert!((a.tasks[1] - 10.0).abs() < 1e-5);
+        assert_eq!(a.alloc_classes, 2);
     }
 
     #[test]
@@ -480,8 +646,10 @@ mod tests {
         inc.allocate();
         inc.remove_user(id0);
         assert_eq!(inc.len(), 1);
+        assert_eq!(inc.live_classes(), 1);
         assert_matches_scratch(&mut inc, &cluster);
-        // rejoin with a different demand: the freed slot is rewired
+        // rejoin with a different demand: the freed class slot is
+        // rewired for the new key
         inc.add_user(FluidUser::unweighted(ResVec::cpu_mem(0.5, 0.5)));
         assert_eq!(inc.len(), 2);
         // slot recycled, no new slot appended
@@ -536,11 +704,13 @@ mod tests {
         let mut inc = IncrementalDrfh::new(&cluster);
         let a = inc.allocate();
         assert!(a.g.is_empty() && a.tasks.is_empty());
+        assert_eq!(a.alloc_classes, 0);
         let id = inc.add_user(fig1_users()[0].clone());
         assert_matches_scratch(&mut inc, &cluster);
         inc.remove_user(id);
         let a = inc.allocate();
         assert!(a.g.is_empty());
+        assert_eq!(inc.live_classes(), 0);
     }
 
     #[test]
@@ -552,9 +722,10 @@ mod tests {
         }
         inc.allocate();
         for i in 0..6usize {
-            // non-binding caps (fair share is 10 tasks): the churn is
-            // rhs-only, so every round after the first solve re-solves
-            // warm from the standing basis
+            // non-binding caps (fair share is 10 tasks): each rekey
+            // recycles the just-freed slot with bit-identical demand
+            // coefficients, so the standing LP only sees rhs churn and
+            // every round after the first solve re-solves warm
             inc.set_cap(UserId(i % 2), Some(30.0 + i as f64));
             let a = inc.allocate();
             assert!((a.g[0] - 5.0 / 7.0).abs() < 1e-6, "g={:?}", a.g);
@@ -564,5 +735,68 @@ mod tests {
             st.warm_solves > st.cold_solves + st.fallbacks,
             "warm path barely used: {st:?}"
         );
+    }
+
+    #[test]
+    fn joining_an_existing_class_adds_no_columns() {
+        let cluster = Cluster::fig1_example();
+        let nc = cluster.classes().len();
+        let mut inc = IncrementalDrfh::new(&cluster);
+        let archetypes = [
+            ResVec::cpu_mem(0.2, 1.0),
+            ResVec::cpu_mem(1.0, 0.2),
+            ResVec::cpu_mem(0.5, 0.5),
+        ];
+        for i in 0..100 {
+            inc.add_user(FluidUser::unweighted(
+                archetypes[i % archetypes.len()],
+            ));
+        }
+        assert_eq!(inc.len(), 100);
+        assert_eq!(inc.live_classes(), 3);
+        // LP sized by (allocation classes x server classes) + G,
+        // independent of the 100 users
+        assert_eq!(inc.lp_vars(), 1 + 3 * nc);
+        let before = inc.lp_vars();
+        let extra = inc.add_user(FluidUser::unweighted(archetypes[0]));
+        assert_eq!(inc.lp_vars(), before, "join on a live class appended");
+        assert_eq!(inc.live_classes(), 3);
+        let a = inc.allocate();
+        assert_eq!(a.alloc_classes, 3);
+        assert_matches_scratch(&mut inc, &cluster);
+        inc.remove_user(extra);
+        assert_eq!(inc.lp_vars(), before);
+    }
+
+    #[test]
+    fn class_members_split_bitwise_equal() {
+        let cluster = Cluster::fig1_example();
+        let mut inc = IncrementalDrfh::new(&cluster);
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); 2];
+        for i in 0..8usize {
+            let d = if i % 2 == 0 {
+                ResVec::cpu_mem(0.2, 1.0)
+            } else {
+                ResVec::cpu_mem(1.0, 0.2)
+            };
+            inc.add_user(FluidUser::unweighted(d));
+            groups[i % 2].push(i);
+        }
+        let a = inc.allocate();
+        assert_eq!(a.alloc_classes, 2);
+        for members in &groups {
+            let first = members[0];
+            for &i in &members[1..] {
+                assert_eq!(
+                    a.g[i].to_bits(),
+                    a.g[first].to_bits(),
+                    "class members diverge: {} vs {}",
+                    a.g[i],
+                    a.g[first]
+                );
+                assert_eq!(a.x[i], a.x[first]);
+            }
+        }
+        assert_matches_scratch(&mut inc, &cluster);
     }
 }

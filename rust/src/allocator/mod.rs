@@ -14,7 +14,7 @@ pub mod drfh;
 pub mod incremental;
 pub mod per_server_drf;
 
-pub use drfh::{solve, FluidAllocation, FluidUser};
+pub use drfh::{solve, solve_per_user, FluidAllocation, FluidUser};
 pub use incremental::IncrementalDrfh;
 
 use crate::cluster::ResVec;

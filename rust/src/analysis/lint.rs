@@ -17,6 +17,14 @@
 //! (`get`/`entry`/`contains_key`) stay legal there; only iteration
 //! order can leak `RandomState` nondeterminism into decisions.
 //!
+//! The harness trees — `benches/**` and `tests/**`, walked by
+//! [`lint_crate`] alongside `src/` — get the `float-sort` and
+//! `wall-clock` rules: bench checksums and parity assertions sorted
+//! with `partial_cmp` can mis-rank on NaN exactly like decision code,
+//! and raw `Instant`/`SystemTime` reads there bypass the repo's
+//! unreliable-container-timer policy (timing belongs in
+//! `util::bench`, which reports mean/min/max from one audited site).
+//!
 //! Findings carry `file:line` plus the rule id and are suppressible
 //! with a `// lint:allow(rule-id)` pragma on the same line or the
 //! line above, followed by prose justifying the exemption. The linter
@@ -104,6 +112,13 @@ fn in_decision_module(rel_path: &str) -> bool {
     let first = rel_path.split('/').next().unwrap_or("");
     let stem = first.strip_suffix(".rs").unwrap_or(first);
     DECISION_MODULES.contains(&stem)
+}
+
+/// Harness trees ([`lint_crate`] walks them with `benches/` and
+/// `tests/` path prefixes): only `float-sort` and `wall-clock` apply.
+fn in_harness_tree(rel_path: &str) -> bool {
+    let first = rel_path.split('/').next().unwrap_or("");
+    first == "benches" || first == "tests"
 }
 
 // ---------------------------------------------------------------------
@@ -365,12 +380,20 @@ pub fn lint_source(rel_path: &str, src: &str) -> Vec<Finding> {
         }
     };
 
-    rule_float_sort(&stripped.code, &mut push);
-    rule_unsafe_safety(&stripped.code, &stripped.comments, &mut push);
-    rule_naive_parity(&stripped.code, &mut push);
-    if decision {
-        rule_wall_clock(&stripped.code, &mut push);
-        rule_hash_iter(&stripped.code, &mut push);
+    if in_harness_tree(rel_path) {
+        // Bench/test harness files: float ordering and timer
+        // discipline only — hash iteration and unsafe are the
+        // harness's own business there.
+        rule_float_sort(&stripped.code, &mut push);
+        rule_wall_clock(&stripped.code, "a bench/test harness", &mut push);
+    } else {
+        rule_float_sort(&stripped.code, &mut push);
+        rule_unsafe_safety(&stripped.code, &stripped.comments, &mut push);
+        rule_naive_parity(&stripped.code, &mut push);
+        if decision {
+            rule_wall_clock(&stripped.code, "a decision module", &mut push);
+            rule_hash_iter(&stripped.code, &mut push);
+        }
     }
 
     out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
@@ -444,13 +467,14 @@ fn rule_naive_parity(
 
 fn rule_wall_clock(
     code: &[String],
+    where_: &str,
     push: &mut impl FnMut(Rule, usize, String),
 ) {
     const BANNED: [(&str, &str); 4] = [
-        ("Instant", "std::time::Instant in a decision module"),
-        ("SystemTime", "std::time::SystemTime in a decision module"),
-        ("thread_rng", "ambient RNG in a decision module"),
-        ("from_entropy", "entropy-seeded RNG in a decision module"),
+        ("Instant", "std::time::Instant"),
+        ("SystemTime", "std::time::SystemTime"),
+        ("thread_rng", "ambient RNG"),
+        ("from_entropy", "entropy-seeded RNG"),
     ];
     for (idx, line) in code.iter().enumerate() {
         for (pat, what) in BANNED {
@@ -459,8 +483,8 @@ fn rule_wall_clock(
                     Rule::WallClock,
                     idx + 1,
                     format!(
-                        "{what}; decision paths must be deterministic \
-                         (seeded util::rng::Pcg32 only)"
+                        "{what} in {where_}; use seeded util::rng::Pcg32 \
+                         for randomness and util::bench for timing"
                     ),
                 );
             }
@@ -584,6 +608,35 @@ pub fn lint_tree(src_root: &Path) -> std::io::Result<Vec<Finding>> {
     Ok(out)
 }
 
+/// Lint the whole crate: the source tree at `src_root` with the full
+/// rule set, plus the sibling `benches/` and `tests/` harness trees
+/// (when present) with the `float-sort` and `wall-clock` rules.
+pub fn lint_crate(src_root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut out = lint_tree(src_root)?;
+    let crate_root = src_root.parent().unwrap_or(Path::new(""));
+    for sub in ["benches", "tests"] {
+        let dir = crate_root.join(sub);
+        if !dir.is_dir() {
+            continue;
+        }
+        let mut files = Vec::new();
+        collect_rs(&dir, &mut files)?;
+        files.sort();
+        for f in files {
+            let rel = f
+                .strip_prefix(&dir)
+                .unwrap_or(&f)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            let src = std::fs::read_to_string(&f)?;
+            out.extend(lint_source(&format!("{sub}/{rel}"), &src));
+        }
+    }
+    Ok(out)
+}
+
 fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
     for entry in std::fs::read_dir(dir)? {
         let entry = entry?;
@@ -605,7 +658,7 @@ fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
 /// `(virtual path, source)` pairs. The linter must report at least
 /// one finding on every entry: the self-tests assert per-rule hits,
 /// and `drfh lint --corpus true` must exit non-zero in CI.
-pub const VIOLATION_CORPUS: [(&str, &str); 5] = [
+pub const VIOLATION_CORPUS: [(&str, &str); 7] = [
     (
         "sched/corpus_hash_iter.rs",
         r#"use std::collections::HashMap;
@@ -645,6 +698,21 @@ impl Scheduler for P {
         "util/corpus_unsafe.rs",
         r#"fn f(xs: &[u64]) -> u64 {
     unsafe { *xs.get_unchecked(0) }
+}
+"#,
+    ),
+    (
+        "benches/corpus_bench_wall_clock.rs",
+        r#"fn f() -> u128 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos()
+}
+"#,
+    ),
+    (
+        "tests/corpus_test_float_sort.rs",
+        r#"fn f(xs: &mut Vec<f64>) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
 }
 "#,
     ),
@@ -723,10 +791,35 @@ mod tests {
     }
 
     #[test]
-    fn wall_clock_only_in_decision_modules() {
+    fn wall_clock_in_decision_modules_and_harness_trees() {
         let (_, src) = VIOLATION_CORPUS[2];
         assert_eq!(lint_source("sim/t.rs", src).len(), 1);
         assert!(lint_source("util/bench.rs", src).is_empty());
+        // harness trees get the rule too (corpus entry [5])
+        let (path, src) = VIOLATION_CORPUS[5];
+        let f = lint_source(path, src);
+        assert!(
+            f.iter().any(|x| x.rule == Rule::WallClock),
+            "bench harness Instant not flagged: {f:?}"
+        );
+        assert!(lint_source("tests/t.rs", src)
+            .iter()
+            .any(|x| x.rule == Rule::WallClock));
+    }
+
+    #[test]
+    fn harness_trees_get_float_sort_but_not_hash_iter() {
+        // corpus entry [6]: partial_cmp in tests/ fires
+        let (path, src) = VIOLATION_CORPUS[6];
+        let f = lint_source(path, src);
+        assert!(
+            f.iter().any(|x| x.rule == Rule::FloatSort),
+            "test harness partial_cmp not flagged: {f:?}"
+        );
+        // hash iteration in a test harness is the harness's business
+        let (_, hash_src) = VIOLATION_CORPUS[0];
+        assert!(lint_source("tests/h.rs", hash_src).is_empty());
+        assert!(lint_source("benches/h.rs", hash_src).is_empty());
     }
 
     #[test]

@@ -12,7 +12,10 @@
 //! raw strings, char literals) to scan real Rust without false hits
 //! inside literals.
 //!
-//! Entry points: [`lint::lint_tree`] walks a source tree,
+//! Entry points: [`lint::lint_crate`] walks the whole package —
+//! `src/` with the full rule set plus the `benches/` and `tests/`
+//! harness trees with the `float-sort` and `wall-clock` rules —
+//! [`lint::lint_tree`] walks one source tree, and
 //! [`lint::lint_source`] lints one file (what the embedded violation
 //! corpus and the self-tests use). The `drfh lint` CLI subcommand and
 //! the CI gate sit on top of these. The rule table lives in
@@ -20,4 +23,6 @@
 
 pub mod lint;
 
-pub use lint::{lint_source, lint_tree, Finding, Rule, VIOLATION_CORPUS};
+pub use lint::{
+    lint_crate, lint_source, lint_tree, Finding, Rule, VIOLATION_CORPUS,
+};

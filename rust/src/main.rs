@@ -251,7 +251,10 @@ fn run_lint(src: Option<&str>, corpus: bool) -> Result<()> {
                     anyhow!("cannot find the source tree; pass --src DIR")
                 })?,
         };
-        lint::lint_tree(&root)
+        // lint_crate also walks the sibling benches/ and tests/
+        // harness trees (skipped when absent, so a bare --src dir
+        // still lints).
+        lint::lint_crate(&root)
             .map_err(|e| anyhow!("lint walk failed: {e}"))?
     };
     for f in &findings {

@@ -1,10 +1,12 @@
-//! Optimization substrates: a dense two-phase simplex LP solver (the
-//! substrate for the paper's eq. (7)) plus the warm-startable
-//! [`Solver`] that the incremental dynamic-DRFH allocator
-//! (`allocator::incremental`) re-solves from a recorded basis.
+//! Optimization substrates for the paper's eq. (7) LP: the sparse
+//! revised-simplex [`Solver`] (warm-startable — what the incremental
+//! dynamic-DRFH allocator `allocator::incremental` re-solves from a
+//! recorded basis) and the dense two-phase [`solve`] kept as its
+//! 1e-9 parity reference (`tests/solver_fuzz.rs` holds the two cores
+//! to each other).
 
+pub mod revised;
 pub mod simplex;
 
-pub use simplex::{
-    solve, Lp, LpResult, PivotCounts, RowId, SolveStats, Solver, VarId,
-};
+pub use revised::{RowId, SolveStats, Solver, VarId};
+pub use simplex::{solve, Lp, LpResult, PivotCounts};

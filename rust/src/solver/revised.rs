@@ -1,0 +1,1482 @@
+//! Sparse revised simplex with a warm-startable [`Solver`].
+//!
+//! The production pivot core behind the exact fluid DRFH allocator
+//! (paper eq. (7) is a linear program) and the event-driven
+//! `allocator::incremental` path. Same problem form as the dense
+//! reference [`super::simplex::solve`]:
+//!
+//! ```text
+//!   maximize    c · x
+//!   subject to  A_ub x <= b_ub
+//!               A_eq x  = b_eq
+//!               x >= 0
+//! ```
+//!
+//! ## Revised simplex, product form
+//!
+//! The dense tableau costs O(rows · cols) *per pivot* because it
+//! updates every entry it will mostly never read. The revised method
+//! keeps the constraint matrix in sparse CSC columns ([`Cols`]) —
+//! untouched for the whole solve — and represents the basis inverse as
+//! a **product form**: an eta file, one [`Eta`] (elementary
+//! Gauss-Jordan column) per factorization elimination or pivot.
+//! Per iteration it computes only what the pivot rules read:
+//!
+//! * pricing: one BTRAN (`y = B^-T c_B`, etas applied in reverse)
+//!   then a sparse dot per candidate column for the reduced cost;
+//! * ratio test: one FTRAN (`d = B^-1 A_q`, etas applied in order)
+//!   for the entering column only;
+//! * update: O(nnz(d)) on the basic solution plus one appended eta.
+//!
+//! The eta file is refactorized from the current basis set every
+//! [`ETA_REFRESH`] pivots (or on warm start), which both bounds the
+//! FTRAN/BTRAN cost and washes out accumulated floating-point drift —
+//! the same role the dense path's full rebuild played. A refresh that
+//! turns out numerically singular is skipped and retried later; the
+//! eta file it would have replaced is still valid.
+//!
+//! Pivot *rules* are byte-for-byte the dense reference's: Dantzig
+//! entering (most negative reduced cost, first-of-max wins) with a
+//! stall detector that falls back to Bland's rule, min-ratio leaving
+//! with ties broken toward the lowest basic column id, and the same
+//! column layout (structural | slacks | artificials), so the two cores
+//! agree to 1e-9 on the fuzz corpus (`tests/solver_fuzz.rs`) and the
+//! dense path stays in-tree as the parity reference.
+//!
+//! ## Basis-reuse invariants (unchanged from the dense `Solver`)
+//!
+//! The recorded basis is a **set of column identities** — structural
+//! variable, the slack of row *r*, or the phase-1 artificial of row
+//! *r* (kept only as a placeholder for redundant rows) — never
+//! positions or numeric state. Every warm solve rebuilds the sparse
+//! columns from the *current* row data and refactorizes the recorded
+//! set (partial row pivoting), so no numerical error survives across
+//! solves; only the combinatorial basis does. Edits maintain the set:
+//! an appended `<=` row contributes its own slack, a deactivated row
+//! retires its own slack/artificial. Edits that cannot keep the set
+//! valid (appending an equality row, fixing a basic variable,
+//! deactivating a row whose slack is not basic) invalidate it — the
+//! next solve is cold. The warm path never trades correctness for
+//! speed: a singular refactorization, a basis that is neither primal-
+//! nor dual-feasible, a dual-simplex iteration-cap hit (counted in
+//! [`SolveStats::dual_cap_hits`]), or a nonzero artificial placeholder
+//! all fall back to the cold two-phase solve.
+//!
+//! Sized for the class-collapsed allocator: LP dimensions scale with
+//! (server classes × demand classes), independent of user count, and
+//! each event re-solve is a refactorization plus a handful of
+//! dual/primal pivots.
+
+use super::simplex::{Lp, LpResult, PivotCounts, EPS};
+
+/// Minimum acceptable pivot magnitude when factorizing a basis;
+/// anything smaller is treated as singular (cold fallback on the warm
+/// path, skipped refresh mid-solve).
+const SINGULAR_EPS: f64 = 1e-8;
+
+/// Refactorize the eta file once it has grown this many etas past the
+/// last factorization — bounds FTRAN/BTRAN cost and numerical drift.
+const ETA_REFRESH: usize = 64;
+
+/// Handle to a structural variable of a [`Solver`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VarId(pub(crate) usize);
+
+impl VarId {
+    /// Index of the variable in solution vectors returned by
+    /// [`Solver::solve`].
+    #[inline]
+    pub fn index(&self) -> usize {
+        self.0
+    }
+}
+
+/// Handle to a constraint row of a [`Solver`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowId(pub(crate) usize);
+
+impl RowId {
+    pub fn index(&self) -> usize {
+        self.0
+    }
+}
+
+/// Cumulative [`Solver`] accounting across solves.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SolveStats {
+    pub solves: u64,
+    pub warm_solves: u64,
+    pub cold_solves: u64,
+    /// Warm attempts abandoned to a cold solve (singular basis, lost
+    /// primal+dual feasibility, nonzero artificial placeholder, ...).
+    pub fallbacks: u64,
+    /// Search pivots (phase-1 + phase-2 + dual) across all solves.
+    pub pivots: u64,
+    /// Basis factorization eliminations across all solves (warm
+    /// refactorizations plus in-solve eta-file refreshes).
+    pub factor_elims: u64,
+    pub stall_events: u64,
+    /// Dual-simplex repair attempts that exhausted the iteration cap
+    /// (`200 + 4·(rows+cols)`) and fell back to a cold solve. A warm
+    /// path that stops saving pivots shows up here before it shows up
+    /// in wall-clock — surfaced in the `allocator_scale` bench meta.
+    pub dual_cap_hits: u64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum RowKind {
+    Le,
+    Eq,
+}
+
+/// One column identity of the recorded basis set (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Basic {
+    /// Structural variable (index into the solver's variable list).
+    Var(usize),
+    /// Slack of row `r` (also stands in for the surplus of a row the
+    /// cold path flipped: the surplus of `-a·x <= -b` *is* `b - a·x`,
+    /// the same quantity as the slack of `a·x <= b`).
+    Slack(usize),
+    /// Phase-1 artificial of row `r`, basic at zero on a redundant row.
+    Art(usize),
+}
+
+/// One constraint row, stored sparsely: `(var, coeff)` pairs sorted by
+/// variable id, no explicit zeros. Appending a variable to the solver
+/// therefore costs nothing per row, and a class-collapsed allocator
+/// row touches only the few variables of its own class block.
+#[derive(Clone, Debug)]
+struct RowData {
+    coeffs: Vec<(u32, f64)>,
+    rhs: f64,
+    kind: RowKind,
+    active: bool,
+}
+
+impl RowData {
+    /// Set one coefficient, keeping the pair list sorted and zero-free.
+    fn set(&mut self, v: usize, a: f64) {
+        let vid = v as u32;
+        match self.coeffs.binary_search_by_key(&vid, |&(i, _)| i) {
+            Ok(k) => {
+                if a == 0.0 {
+                    self.coeffs.remove(k);
+                } else {
+                    self.coeffs[k].1 = a;
+                }
+            }
+            Err(k) => {
+                if a != 0.0 {
+                    self.coeffs.insert(k, (vid, a));
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------ sparse kernel
+
+/// CSC-style sparse column storage for one solve's constraint matrix:
+/// structural columns, slack columns (±1), artificial columns (+1),
+/// built once per solve and never modified.
+struct Cols {
+    ptr: Vec<usize>,
+    idx: Vec<u32>,
+    val: Vec<f64>,
+}
+
+impl Cols {
+    fn from_entries(columns: Vec<Vec<(u32, f64)>>) -> Self {
+        let nnz: usize = columns.iter().map(Vec::len).sum();
+        let mut ptr = Vec::with_capacity(columns.len() + 1);
+        let mut idx = Vec::with_capacity(nnz);
+        let mut val = Vec::with_capacity(nnz);
+        ptr.push(0);
+        for col in columns {
+            for (i, v) in col {
+                idx.push(i);
+                val.push(v);
+            }
+            ptr.push(idx.len());
+        }
+        Cols { ptr, idx, val }
+    }
+
+    /// Number of columns.
+    #[inline]
+    fn n(&self) -> usize {
+        self.ptr.len() - 1
+    }
+
+    /// Sparse dot of column `j` with a dense vector.
+    #[inline]
+    fn dot(&self, j: usize, y: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for k in self.ptr[j]..self.ptr[j + 1] {
+            s += self.val[k] * y[self.idx[k] as usize];
+        }
+        s
+    }
+
+    /// Scatter column `j` into a dense work vector (zeroed first).
+    fn scatter(&self, j: usize, w: &mut [f64]) {
+        for x in w.iter_mut() {
+            *x = 0.0;
+        }
+        for k in self.ptr[j]..self.ptr[j + 1] {
+            w[self.idx[k] as usize] = self.val[k];
+        }
+    }
+}
+
+/// One elementary Gauss-Jordan column of the product-form inverse:
+/// identity with column `row` replaced by the pivot column (`pivot` on
+/// the diagonal, `nz` off-diagonal).
+struct Eta {
+    row: u32,
+    pivot: f64,
+    nz: Vec<(u32, f64)>,
+}
+
+impl Eta {
+    fn from_col(r: usize, w: &[f64]) -> Self {
+        let mut nz = Vec::new();
+        for (i, &v) in w.iter().enumerate() {
+            if i != r && v != 0.0 {
+                nz.push((i as u32, v));
+            }
+        }
+        Eta { row: r as u32, pivot: w[r], nz }
+    }
+}
+
+/// FTRAN: `w := B^-1 w`, applying etas in creation order.
+fn ftran(etas: &[Eta], w: &mut [f64]) {
+    for e in etas {
+        let r = e.row as usize;
+        let t = w[r] / e.pivot;
+        if t != 0.0 {
+            for &(i, d) in &e.nz {
+                w[i as usize] -= d * t;
+            }
+        }
+        w[r] = t;
+    }
+}
+
+/// BTRAN: `w := B^-T w`, applying etas transposed in reverse order.
+fn btran(etas: &[Eta], w: &mut [f64]) {
+    for e in etas.iter().rev() {
+        let r = e.row as usize;
+        let mut s = w[r];
+        for &(i, d) in &e.nz {
+            s -= d * w[i as usize];
+        }
+        w[r] = s / e.pivot;
+    }
+}
+
+enum DualOutcome {
+    /// Primal feasibility restored after `n` pivots.
+    Feasible(u32),
+    /// A row certifies primal infeasibility (after `n` pivots).
+    Infeasible(u32),
+    /// Pivot budget exhausted after `n` pivots — caller should fall
+    /// back to cold (and still account for the wasted pivots).
+    GaveUp(u32),
+}
+
+/// One solve's working state: sparse columns, raw rhs, phase cost,
+/// basis (column index per row), basic solution, and the eta file.
+struct Engine {
+    m: usize,
+    cols: Cols,
+    /// Raw right-hand side (never modified; `xb` is re-derived from it
+    /// on every refactorization).
+    b: Vec<f64>,
+    /// Phase cost per column (phase-1: -1 on artificials; phase-2: the
+    /// objective over structural columns).
+    cost: Vec<f64>,
+    /// Basic column per row.
+    basic: Vec<usize>,
+    /// Basic solution `x_B = B^-1 b`, pivot-updated.
+    xb: Vec<f64>,
+    etas: Vec<Eta>,
+    /// Refactorize once `etas.len()` reaches this.
+    refresh_at: usize,
+    /// Factorization eliminations performed (one eta per basic column).
+    factor: u32,
+}
+
+impl Engine {
+    fn new(cols: Cols, b: Vec<f64>, cost: Vec<f64>) -> Self {
+        let m = b.len();
+        debug_assert_eq!(cost.len(), cols.n());
+        Engine {
+            m,
+            cols,
+            xb: b.clone(),
+            b,
+            cost,
+            basic: vec![usize::MAX; m],
+            etas: Vec::new(),
+            refresh_at: ETA_REFRESH,
+            factor: 0,
+        }
+    }
+
+    /// `B^-1 A_j` for one column.
+    fn ftran_col(&self, j: usize) -> Vec<f64> {
+        let mut w = vec![0.0; self.m];
+        self.cols.scatter(j, &mut w);
+        ftran(&self.etas, &mut w);
+        w
+    }
+
+    /// Row `r` of `B^-1` (as a dense vector): `B^-T e_r`.
+    fn btran_unit(&self, r: usize) -> Vec<f64> {
+        let mut w = vec![0.0; self.m];
+        w[r] = 1.0;
+        btran(&self.etas, &mut w);
+        w
+    }
+
+    /// Simplex multipliers `y = B^-T c_B`.
+    fn multipliers(&self) -> Vec<f64> {
+        let mut y = vec![0.0; self.m];
+        for r in 0..self.m {
+            y[r] = self.cost[self.basic[r]];
+        }
+        btran(&self.etas, &mut y);
+        y
+    }
+
+    /// Reduced cost of column `j` (dense tableau's objective row):
+    /// `y·A_j - c_j`; entering candidates are `< -EPS`.
+    #[inline]
+    fn row0(&self, j: usize, y: &[f64]) -> f64 {
+        self.cols.dot(j, y) - self.cost[j]
+    }
+
+    /// Current objective value `c_B · x_B` under the phase cost.
+    fn obj(&self) -> f64 {
+        (0..self.m).map(|r| self.cost[self.basic[r]] * self.xb[r]).sum()
+    }
+
+    /// Factorize the basis set `set` (column ids, in recorded order)
+    /// from scratch: Gauss-Jordan with partial row pivoting, one eta
+    /// per column, re-deriving the row assignment. Commits the new eta
+    /// file, basis, and `x_B = B^-1 b` only on success; on a singular
+    /// set the engine state is untouched and `false` is returned.
+    fn factorize(&mut self, set: &[usize]) -> bool {
+        debug_assert_eq!(set.len(), self.m);
+        let mut etas: Vec<Eta> = Vec::with_capacity(self.m);
+        let mut basic = vec![usize::MAX; self.m];
+        let mut assigned = vec![false; self.m];
+        let mut w = vec![0.0; self.m];
+        let mut factor = 0u32;
+        for &cj in set {
+            self.cols.scatter(cj, &mut w);
+            ftran(&etas, &mut w);
+            let mut best_r = usize::MAX;
+            let mut best_a = SINGULAR_EPS;
+            for (r, done) in assigned.iter().enumerate() {
+                if !done {
+                    let a = w[r].abs();
+                    if a > best_a {
+                        best_a = a;
+                        best_r = r;
+                    }
+                }
+            }
+            if best_r == usize::MAX {
+                return false; // singular
+            }
+            etas.push(Eta::from_col(best_r, &w));
+            assigned[best_r] = true;
+            basic[best_r] = cj;
+            factor += 1;
+        }
+        self.etas = etas;
+        self.basic = basic;
+        self.factor += factor;
+        self.refresh_at = self.etas.len() + ETA_REFRESH;
+        let mut xb = self.b.clone();
+        ftran(&self.etas, &mut xb);
+        self.xb = xb;
+        true
+    }
+
+    /// Refactorize once the eta file has grown past `refresh_at`. A
+    /// numerically singular refresh is skipped (the old eta file is
+    /// still a valid inverse) and retried another `ETA_REFRESH` pivots
+    /// later rather than every iteration.
+    fn maybe_refresh(&mut self) {
+        if self.etas.len() < self.refresh_at {
+            return;
+        }
+        let set = self.basic.clone();
+        if !self.factorize(&set) {
+            self.refresh_at = self.etas.len() + ETA_REFRESH;
+        }
+    }
+
+    /// Pivot column `q` in at row `pr`, given its FTRANed column `d`:
+    /// update `x_B`, append one eta, reassign the row.
+    fn pivot(&mut self, pr: usize, q: usize, d: &[f64]) {
+        // the entering guard tests d[pr] against EPS *before* the
+        // FTRAN is reused here, so only exact zero would divide badly
+        debug_assert!(d[pr] != 0.0);
+        let t = self.xb[pr] / d[pr];
+        let mut nz = Vec::new();
+        for (i, &di) in d.iter().enumerate() {
+            if i != pr && di != 0.0 {
+                self.xb[i] -= di * t;
+                nz.push((i as u32, di));
+            }
+        }
+        self.xb[pr] = t;
+        self.etas.push(Eta { row: pr as u32, pivot: d[pr], nz });
+        self.basic[pr] = q;
+    }
+
+    /// Primal simplex on the current phase cost, maximizing. Dantzig
+    /// entering rule; a stall (no objective improvement for
+    /// `rows + 16` consecutive pivots, rows counted as the dense
+    /// tableau did — m + 1) switches to Bland's rule until the next
+    /// strict improvement, which guarantees termination on degenerate
+    /// instances. Returns `(bounded, pivots, stalls)`.
+    fn optimize(&mut self, allowed_cols: usize) -> (bool, u32, u32) {
+        let mut pivots = 0u32;
+        let mut stalls = 0u32;
+        let mut bland = false;
+        let mut since_improve = 0u32;
+        let stall_limit = (self.m + 1) as u32 + 16;
+        let mut last_obj = self.obj();
+        loop {
+            self.maybe_refresh();
+            let y = self.multipliers();
+            // entering column: reduced profit must be positive
+            let mut enter = None;
+            if bland {
+                // lowest-index rule (anti-cycling)
+                for j in 0..allowed_cols {
+                    if self.row0(j, &y) < -EPS {
+                        enter = Some(j);
+                        break;
+                    }
+                }
+            } else {
+                // most negative reduced cost
+                let mut best = -EPS;
+                for j in 0..allowed_cols {
+                    let v = self.row0(j, &y);
+                    if v < best {
+                        best = v;
+                        enter = Some(j);
+                    }
+                }
+            }
+            let Some(q) = enter else { return (true, pivots, stalls) };
+            let d = self.ftran_col(q);
+            // leaving: min ratio, ties -> lowest basic column (Bland)
+            let mut leave: Option<(usize, f64)> = None;
+            for r in 0..self.m {
+                let a = d[r];
+                if a > EPS {
+                    let ratio = self.xb[r] / a;
+                    match leave {
+                        None => leave = Some((r, ratio)),
+                        Some((br, bratio)) => {
+                            if ratio < bratio - EPS
+                                || (ratio < bratio + EPS
+                                    && self.basic[r] < self.basic[br])
+                            {
+                                leave = Some((r, ratio));
+                            }
+                        }
+                    }
+                }
+            }
+            let Some((pr, _)) = leave else { return (false, pivots, stalls) };
+            self.pivot(pr, q, &d);
+            pivots += 1;
+            let obj = self.obj();
+            if obj > last_obj + EPS {
+                last_obj = obj;
+                since_improve = 0;
+                bland = false;
+            } else {
+                since_improve += 1;
+                if !bland && since_improve >= stall_limit {
+                    bland = true;
+                    stalls += 1;
+                }
+            }
+        }
+    }
+
+    /// Dual simplex: restore `x_B >= 0` while keeping all reduced
+    /// costs over the first `allowed_cols` columns non-negative.
+    /// Requires a dual-feasible start. Artificial placeholder columns
+    /// (beyond `allowed_cols`) are not real variables and are excluded
+    /// from the entering set *and* from the infeasibility certificate.
+    /// The iteration cap matches the dense reference's operand sizes
+    /// (tableau rows m+1, columns incl. rhs).
+    fn dual_simplex(&mut self, allowed_cols: usize) -> DualOutcome {
+        let mut pivots = 0u32;
+        let cap =
+            200 + 4 * ((self.m as u32 + 1) + (self.cols.n() as u32 + 1));
+        loop {
+            self.maybe_refresh();
+            // leaving row: most negative basic value
+            let mut leave: Option<(usize, f64)> = None;
+            for r in 0..self.m {
+                let b = self.xb[r];
+                if b < -EPS && leave.map_or(true, |(_, bb)| b < bb) {
+                    leave = Some((r, b));
+                }
+            }
+            let Some((pr, _)) = leave else {
+                return DualOutcome::Feasible(pivots);
+            };
+            // entering: min |reduced cost / coeff| over negative
+            // coefficients (first index wins ties — Bland-ish)
+            let y = self.multipliers();
+            let rho = self.btran_unit(pr);
+            let mut enter: Option<(usize, f64)> = None;
+            for j in 0..allowed_cols {
+                let a = self.cols.dot(j, &rho);
+                if a < -EPS {
+                    let ratio = self.row0(j, &y) / (-a);
+                    if enter.map_or(true, |(_, br)| ratio < br - EPS) {
+                        enter = Some((j, ratio));
+                    }
+                }
+            }
+            let Some((q, _)) = enter else {
+                return DualOutcome::Infeasible(pivots);
+            };
+            let d = self.ftran_col(q);
+            self.pivot(pr, q, &d);
+            pivots += 1;
+            if pivots > cap {
+                return DualOutcome::GaveUp(pivots);
+            }
+        }
+    }
+
+    /// Drive basic artificials (columns `>= art_start`) out of the
+    /// basis after phase 1: pivot in the first eligible structural or
+    /// slack column per row; a row with none is redundant and keeps
+    /// its artificial basic at 0. Uncounted deterministic cleanup,
+    /// like the dense reference.
+    fn drive_out_artificials(&mut self, art_start: usize) {
+        for r in 0..self.m {
+            if self.basic[r] >= art_start {
+                let rho = self.btran_unit(r);
+                for c in 0..art_start {
+                    if self.cols.dot(c, &rho).abs() > EPS {
+                        let d = self.ftran_col(c);
+                        self.pivot(r, c, &d);
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------- Solver
+
+/// Search pivots burnt by an abandoned warm attempt, carried into the
+/// cold fallback so per-solve pivot reporting never undercounts the
+/// warm path's true work: `(dual, phase2, stalls)`.
+type WastedPivots = (u32, u32, u32);
+
+/// A stateful LP that records its optimal basis and re-solves
+/// incrementally after edits, on the sparse revised-simplex core. See
+/// the module docs for the basis-reuse invariants;
+/// [`super::simplex::solve`] stays as the one-shot dense parity
+/// reference.
+#[derive(Clone, Debug)]
+pub struct Solver {
+    obj: Vec<f64>,
+    fixed: Vec<Option<f64>>,
+    rows: Vec<RowData>,
+    basis: Vec<Basic>,
+    has_basis: bool,
+    stats: SolveStats,
+}
+
+impl Default for Solver {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Solver {
+    /// An empty problem (no variables, no rows).
+    pub fn new() -> Self {
+        Solver {
+            obj: Vec::new(),
+            fixed: Vec::new(),
+            rows: Vec::new(),
+            basis: Vec::new(),
+            has_basis: false,
+            stats: SolveStats::default(),
+        }
+    }
+
+    /// Build a solver from a one-shot [`Lp`] (variables in order, then
+    /// the `a_ub` rows, then the `a_eq` rows).
+    pub fn from_lp(lp: &Lp) -> Self {
+        let n = lp.n;
+        assert_eq!(lp.c.len(), n);
+        assert_eq!(lp.a_ub.len(), lp.b_ub.len());
+        assert_eq!(lp.a_eq.len(), lp.b_eq.len());
+        for row in lp.a_ub.iter().chain(&lp.a_eq) {
+            assert_eq!(row.len(), n);
+        }
+        let mut s = Solver::new();
+        let vars: Vec<VarId> = lp.c.iter().map(|&c| s.add_var(c)).collect();
+        for (a, &b) in lp.a_ub.iter().zip(&lp.b_ub) {
+            let coeffs: Vec<(VarId, f64)> =
+                vars.iter().zip(a).map(|(&v, &x)| (v, x)).collect();
+            s.add_row_le(&coeffs, b);
+        }
+        for (a, &b) in lp.a_eq.iter().zip(&lp.b_eq) {
+            let coeffs: Vec<(VarId, f64)> =
+                vars.iter().zip(a).map(|(&v, &x)| (v, x)).collect();
+            s.add_row_eq(&coeffs, b);
+        }
+        s
+    }
+
+    /// Number of structural variables.
+    pub fn num_vars(&self) -> usize {
+        self.obj.len()
+    }
+
+    /// Cumulative solve accounting.
+    pub fn stats(&self) -> SolveStats {
+        self.stats
+    }
+
+    /// True when the next [`Solver::solve`] will attempt a warm start.
+    pub fn has_warm_basis(&self) -> bool {
+        self.has_basis
+    }
+
+    /// Append a structural variable (objective coefficient `obj`,
+    /// zero coefficients in every existing row — free, since rows are
+    /// sparse). Keeps any recorded basis valid: the new variable
+    /// enters nonbasic at 0.
+    pub fn add_var(&mut self, obj: f64) -> VarId {
+        let id = self.obj.len();
+        self.obj.push(obj);
+        self.fixed.push(None);
+        VarId(id)
+    }
+
+    fn add_row(&mut self, kind: RowKind, rhs: f64) -> RowId {
+        let id = self.rows.len();
+        self.rows.push(RowData {
+            coeffs: Vec::new(),
+            rhs,
+            kind,
+            active: true,
+        });
+        if self.has_basis {
+            match kind {
+                // the new row's own slack joins the basis (B gains a
+                // unit row/column: still nonsingular); a negative
+                // residual is repaired by the dual simplex
+                RowKind::Le => self.basis.push(Basic::Slack(id)),
+                // an equality row has no slack to hide behind
+                RowKind::Eq => self.invalidate_basis(),
+            }
+        }
+        RowId(id)
+    }
+
+    /// Append a `coeffs · x <= rhs` row.
+    pub fn add_row_le(&mut self, coeffs: &[(VarId, f64)], rhs: f64) -> RowId {
+        let r = self.add_row(RowKind::Le, rhs);
+        for &(v, a) in coeffs {
+            self.rows[r.0].set(v.0, a);
+        }
+        r
+    }
+
+    /// Append a `coeffs · x == rhs` row (invalidates any warm basis —
+    /// prefer paired `<=` rows for incrementally maintained problems).
+    pub fn add_row_eq(&mut self, coeffs: &[(VarId, f64)], rhs: f64) -> RowId {
+        let r = self.add_row(RowKind::Eq, rhs);
+        for &(v, a) in coeffs {
+            self.rows[r.0].set(v.0, a);
+        }
+        r
+    }
+
+    /// Replace a row's right-hand side. Basis-preserving.
+    pub fn set_rhs(&mut self, r: RowId, rhs: f64) {
+        self.rows[r.0].rhs = rhs;
+    }
+
+    /// Replace one coefficient of a row. Basis-preserving (the warm
+    /// refactorization revalidates numerically).
+    pub fn set_coeff(&mut self, r: RowId, v: VarId, a: f64) {
+        self.rows[r.0].set(v.0, a);
+    }
+
+    /// Replace a variable's objective coefficient. Basis-preserving.
+    pub fn set_obj(&mut self, v: VarId, c: f64) {
+        self.obj[v.0] = c;
+    }
+
+    /// Drop a row from the problem (it can be re-activated later).
+    pub fn deactivate_row(&mut self, r: RowId) {
+        if !self.rows[r.0].active {
+            return;
+        }
+        self.rows[r.0].active = false;
+        if self.has_basis {
+            // retire the row's own slack/artificial from the basis; if
+            // neither is basic (the row was tight) the set no longer
+            // matches the rows and the next solve is cold
+            if let Some(pos) = self.basis.iter().position(
+                |b| matches!(b, Basic::Slack(i) | Basic::Art(i) if *i == r.0),
+            ) {
+                self.basis.swap_remove(pos);
+            } else {
+                self.invalidate_basis();
+            }
+        }
+    }
+
+    /// Re-introduce a previously deactivated row.
+    pub fn activate_row(&mut self, r: RowId) {
+        if self.rows[r.0].active {
+            return;
+        }
+        self.rows[r.0].active = true;
+        if self.has_basis {
+            match self.rows[r.0].kind {
+                RowKind::Le => self.basis.push(Basic::Slack(r.0)),
+                RowKind::Eq => self.invalidate_basis(),
+            }
+        }
+    }
+
+    /// Freeze a variable at `value`: it leaves the column set and its
+    /// contribution folds into every row's rhs. Invalidates the basis
+    /// only if the variable is currently basic.
+    pub fn fix_var(&mut self, v: VarId, value: f64) {
+        self.fixed[v.0] = Some(value);
+        if self.has_basis
+            && self
+                .basis
+                .iter()
+                .any(|b| matches!(b, Basic::Var(i) if *i == v.0))
+        {
+            self.invalidate_basis();
+        }
+    }
+
+    /// Release a frozen variable (re-enters nonbasic at 0).
+    pub fn unfix_var(&mut self, v: VarId) {
+        self.fixed[v.0] = None;
+    }
+
+    /// Forget the recorded basis; the next solve is cold.
+    pub fn invalidate_basis(&mut self) {
+        self.has_basis = false;
+        self.basis.clear();
+    }
+
+    /// Solve the current problem: warm from the recorded basis when one
+    /// is valid, falling back to the cold two-phase solve otherwise.
+    /// Pivots burnt by an abandoned warm attempt are folded into the
+    /// fallback solve's [`PivotCounts`], so per-solve reporting counts
+    /// the warm path's full cost.
+    pub fn solve(&mut self) -> LpResult {
+        self.stats.solves += 1;
+        let mut wasted: WastedPivots = (0, 0, 0);
+        if self.has_basis {
+            match self.try_warm() {
+                Ok(res) => {
+                    self.stats.warm_solves += 1;
+                    return res;
+                }
+                Err(w) => {
+                    self.stats.fallbacks += 1;
+                    self.stats.pivots += (w.0 + w.1) as u64;
+                    self.stats.stall_events += w.2 as u64;
+                    self.invalidate_basis();
+                    wasted = w;
+                }
+            }
+        }
+        self.stats.cold_solves += 1;
+        let res = self.cold();
+        match res {
+            LpResult::Optimal { x, obj, mut pivots } => {
+                pivots.dual += wasted.0;
+                pivots.phase2 += wasted.1;
+                pivots.stalls += wasted.2;
+                LpResult::Optimal { x, obj, pivots }
+            }
+            other => other,
+        }
+    }
+
+    fn record(&mut self, basic: &[usize], owner: &[Basic]) {
+        self.basis = basic.iter().map(|&c| owner[c]).collect();
+        self.has_basis = true;
+    }
+
+    /// Warm solve: rebuild the sparse columns from current row data,
+    /// refactorize the recorded basis set, then repair with
+    /// dual/primal pivots. `Err` = fall back to cold, carrying any
+    /// search pivots the abandoned attempt burnt.
+    fn try_warm(&mut self) -> Result<LpResult, WastedPivots> {
+        let act: Vec<usize> =
+            (0..self.rows.len()).filter(|&i| self.rows[i].active).collect();
+        let m = act.len();
+        if self.basis.len() != m {
+            return Err((0, 0, 0));
+        }
+        let nvars = self.obj.len();
+        let mut col_of_var = vec![usize::MAX; nvars];
+        let mut free: Vec<usize> = Vec::new();
+        for v in 0..nvars {
+            if self.fixed[v].is_none() {
+                col_of_var[v] = free.len();
+                free.push(v);
+            }
+        }
+        let nf = free.len();
+
+        // column layout: free vars | slack per active <= row |
+        // artificial placeholders (rows with a recorded Art entry) —
+        // same order as the dense reference so tie-breaks agree
+        let mut owner: Vec<Basic> = Vec::with_capacity(nf + m + 4);
+        for &v in &free {
+            owner.push(Basic::Var(v));
+        }
+        let mut slack_col = vec![usize::MAX; self.rows.len()];
+        for &ri in &act {
+            if self.rows[ri].kind == RowKind::Le {
+                slack_col[ri] = owner.len();
+                owner.push(Basic::Slack(ri));
+            }
+        }
+        let allowed = owner.len();
+        let mut art_col = vec![usize::MAX; self.rows.len()];
+        for b in &self.basis {
+            if let Basic::Art(ri) = *b {
+                if art_col[ri] == usize::MAX {
+                    art_col[ri] = owner.len();
+                    owner.push(Basic::Art(ri));
+                }
+            }
+        }
+        let ncols = owner.len();
+
+        // sparse columns + rhs, fixed variables folded into the rhs;
+        // no sign normalization — the dual simplex handles negative b
+        let mut entries: Vec<Vec<(u32, f64)>> = vec![Vec::new(); ncols];
+        let mut b = Vec::with_capacity(m);
+        for (k, &ri) in act.iter().enumerate() {
+            let mut rhs = self.rows[ri].rhs;
+            for &(v, a) in &self.rows[ri].coeffs {
+                let v = v as usize;
+                match self.fixed[v] {
+                    Some(val) => rhs -= a * val,
+                    None => entries[col_of_var[v]].push((k as u32, a)),
+                }
+            }
+            if slack_col[ri] != usize::MAX {
+                entries[slack_col[ri]].push((k as u32, 1.0));
+            }
+            if art_col[ri] != usize::MAX {
+                entries[art_col[ri]].push((k as u32, 1.0));
+            }
+            b.push(rhs);
+        }
+        // phase-2 cost from the start (artificial placeholders cost 0)
+        let mut cost = vec![0.0; ncols];
+        for (j, &v) in free.iter().enumerate() {
+            cost[j] = self.obj[v];
+        }
+
+        // map the recorded basis set to columns
+        let mut bcols: Vec<usize> = Vec::with_capacity(m);
+        for bb in &self.basis {
+            let c = match *bb {
+                Basic::Var(v) => {
+                    if self.fixed[v].is_some() {
+                        return Err((0, 0, 0));
+                    }
+                    col_of_var[v]
+                }
+                Basic::Slack(ri) => slack_col[ri],
+                Basic::Art(ri) => art_col[ri],
+            };
+            if c == usize::MAX {
+                return Err((0, 0, 0));
+            }
+            bcols.push(c);
+        }
+        {
+            let mut seen = bcols.clone();
+            seen.sort_unstable();
+            if seen.windows(2).any(|w| w[0] == w[1]) {
+                return Err((0, 0, 0)); // duplicate basis column: singular
+            }
+        }
+
+        let mut eng = Engine::new(Cols::from_entries(entries), b, cost);
+        if !eng.factorize(&bcols) {
+            return Err((0, 0, 0)); // singular refactorization
+        }
+        self.stats.factor_elims += eng.factor as u64;
+        let committed = eng.factor;
+        let mut counts =
+            PivotCounts { factor: eng.factor, warm: true, ..Default::default() };
+
+        let primal_ok = eng.xb.iter().all(|&v| v >= -EPS);
+        let y = eng.multipliers();
+        let dual_ok = (0..allowed).all(|j| eng.row0(j, &y) >= -EPS);
+        if !primal_ok {
+            if !dual_ok {
+                // neither simplex applies from here; don't guess
+                return Err((0, 0, 0));
+            }
+            match eng.dual_simplex(allowed) {
+                DualOutcome::Feasible(p) => {
+                    counts.dual = p;
+                }
+                DualOutcome::Infeasible(p) => {
+                    counts.dual = p;
+                    self.stats.pivots += p as u64;
+                    self.stats.factor_elims += (eng.factor - committed) as u64;
+                    self.record(&eng.basic, &owner);
+                    return Ok(LpResult::Infeasible);
+                }
+                DualOutcome::GaveUp(p) => {
+                    self.stats.dual_cap_hits += 1;
+                    self.stats.factor_elims += (eng.factor - committed) as u64;
+                    return Err((p, 0, 0));
+                }
+            }
+        }
+        let (ok, p2, stalls) = eng.optimize(allowed);
+        counts.phase2 = p2;
+        counts.stalls = stalls;
+        self.stats.factor_elims += (eng.factor - committed) as u64;
+        counts.factor = eng.factor;
+        // artificial placeholders are not real variables: with one
+        // basic at a nonzero value the working problem is a strict
+        // relaxation of the real one, so neither an optimal point nor
+        // an unbounded ray in it proves anything (the real problem may
+        // be infeasible) — only the cold phase-1 can decide
+        for r in 0..m {
+            if eng.basic[r] >= allowed && eng.xb[r].abs() > 1e-7 {
+                return Err((counts.dual, p2, stalls));
+            }
+        }
+        if !ok {
+            self.stats.pivots += (counts.dual + p2) as u64;
+            self.stats.stall_events += stalls as u64;
+            self.record(&eng.basic, &owner);
+            return Ok(LpResult::Unbounded);
+        }
+        self.stats.pivots += (counts.dual + p2) as u64;
+        self.stats.stall_events += stalls as u64;
+
+        let mut x = vec![0.0; nvars];
+        for v in 0..nvars {
+            if let Some(val) = self.fixed[v] {
+                x[v] = val;
+            }
+        }
+        for r in 0..m {
+            let bc = eng.basic[r];
+            if bc < nf {
+                x[free[bc]] = eng.xb[r].max(0.0);
+            }
+        }
+        let obj = self.obj.iter().zip(&x).map(|(a, b)| a * b).sum();
+        self.record(&eng.basic, &owner);
+        Ok(LpResult::Optimal { x, obj, pivots: counts })
+    }
+
+    /// Cold two-phase solve on the sparse core, recording the final
+    /// basis for warm reuse. Row normalization, column layout, and
+    /// pivot rules mirror the dense reference exactly.
+    fn cold(&mut self) -> LpResult {
+        let act: Vec<usize> =
+            (0..self.rows.len()).filter(|&i| self.rows[i].active).collect();
+        let m = act.len();
+        let nvars = self.obj.len();
+        let mut col_of_var = vec![usize::MAX; nvars];
+        let mut free: Vec<usize> = Vec::new();
+        for v in 0..nvars {
+            if self.fixed[v].is_none() {
+                col_of_var[v] = free.len();
+                free.push(v);
+            }
+        }
+        let nf = free.len();
+
+        // Normalize rows to b >= 0 over the free columns (fixed
+        // variables folded into the rhs).
+        // <= with b>=0 -> slack(+1);  flipped(>=) -> surplus(-1)+artificial;
+        // == -> artificial.
+        let mut rows_b: Vec<f64> = Vec::with_capacity(m);
+        let mut flip: Vec<bool> = Vec::with_capacity(m);
+        let mut kind: Vec<u8> = Vec::with_capacity(m); // 0 = <=, 1 = >=, 2 = ==
+        for &ri in &act {
+            let row = &self.rows[ri];
+            let mut b = row.rhs;
+            for &(v, a) in &row.coeffs {
+                if let Some(val) = self.fixed[v as usize] {
+                    b -= a * val;
+                }
+            }
+            let f = b < 0.0;
+            rows_b.push(if f { -b } else { b });
+            flip.push(f);
+            kind.push(match (row.kind, f) {
+                (RowKind::Le, false) => 0,
+                (RowKind::Le, true) => 1,
+                (RowKind::Eq, _) => 2,
+            });
+        }
+
+        let n_slack = kind.iter().filter(|&&k| k != 2).count();
+        let n_art = kind.iter().filter(|&&k| k != 0).count();
+        let art_start = nf + n_slack;
+        let ncols = nf + n_slack + n_art;
+
+        // column owners, for recording the basis after the solve (the
+        // surplus of a flipped row is the same quantity as its slack)
+        let mut owner: Vec<Basic> = Vec::with_capacity(ncols);
+        for &v in &free {
+            owner.push(Basic::Var(v));
+        }
+        for (r, &ri) in act.iter().enumerate() {
+            if kind[r] != 2 {
+                owner.push(Basic::Slack(ri));
+            }
+        }
+        for (r, &ri) in act.iter().enumerate() {
+            if kind[r] != 0 {
+                owner.push(Basic::Art(ri));
+            }
+        }
+
+        // sparse columns + initial (all-slack/artificial, identity)
+        // basis — no factorization needed
+        let mut entries: Vec<Vec<(u32, f64)>> = vec![Vec::new(); ncols];
+        for (r, &ri) in act.iter().enumerate() {
+            let s = if flip[r] { -1.0 } else { 1.0 };
+            for &(v, a) in &self.rows[ri].coeffs {
+                let v = v as usize;
+                if self.fixed[v].is_none() {
+                    entries[col_of_var[v]].push((r as u32, s * a));
+                }
+            }
+        }
+        let mut basic0 = vec![usize::MAX; m];
+        let mut slack_i = 0;
+        let mut art_i = 0;
+        for (r, &k) in kind.iter().enumerate() {
+            match k {
+                0 => {
+                    entries[nf + slack_i].push((r as u32, 1.0));
+                    basic0[r] = nf + slack_i;
+                    slack_i += 1;
+                }
+                1 => {
+                    entries[nf + slack_i].push((r as u32, -1.0)); // surplus
+                    slack_i += 1;
+                    entries[art_start + art_i].push((r as u32, 1.0));
+                    basic0[r] = art_start + art_i;
+                    art_i += 1;
+                }
+                _ => {
+                    entries[art_start + art_i].push((r as u32, 1.0));
+                    basic0[r] = art_start + art_i;
+                    art_i += 1;
+                }
+            }
+        }
+
+        let cost = vec![0.0; ncols];
+        let mut eng = Engine::new(Cols::from_entries(entries), rows_b, cost);
+        eng.basic = basic0;
+
+        let mut counts = PivotCounts::default();
+
+        // ---- Phase 1: maximize -(sum of artificials) ----
+        if n_art > 0 {
+            for c in art_start..ncols {
+                eng.cost[c] = -1.0;
+            }
+            let (ok, p1, s1) = eng.optimize(ncols);
+            counts.phase1 = p1;
+            counts.stalls += s1;
+            self.stats.pivots += p1 as u64;
+            self.stats.stall_events += s1 as u64;
+            if !ok {
+                // phase 1 cannot be unbounded
+                self.stats.factor_elims += eng.factor as u64;
+                self.record(&eng.basic, &owner);
+                return LpResult::Infeasible;
+            }
+            let infeas = -eng.obj();
+            if infeas.abs() > 1e-6 {
+                self.stats.factor_elims += eng.factor as u64;
+                self.record(&eng.basic, &owner);
+                return LpResult::Infeasible;
+            }
+            // drive remaining basic artificials out of the basis (a
+            // row with no eligible column is redundant and keeps its
+            // artificial basic at 0)
+            eng.drive_out_artificials(art_start);
+        }
+
+        // ---- Phase 2: maximize c·x ----
+        for c in eng.cost.iter_mut() {
+            *c = 0.0;
+        }
+        for (j, &v) in free.iter().enumerate() {
+            eng.cost[j] = self.obj[v];
+        }
+        // forbid artificials from re-entering: only structural + slack
+        let (ok, p2, s2) = eng.optimize(art_start);
+        counts.phase2 = p2;
+        counts.stalls += s2;
+        counts.factor = eng.factor;
+        self.stats.pivots += p2 as u64;
+        self.stats.stall_events += s2 as u64;
+        self.stats.factor_elims += eng.factor as u64;
+        self.record(&eng.basic, &owner);
+        if !ok {
+            return LpResult::Unbounded;
+        }
+
+        let mut x = vec![0.0; nvars];
+        for v in 0..nvars {
+            if let Some(val) = self.fixed[v] {
+                x[v] = val;
+            }
+        }
+        for r in 0..m {
+            let bc = eng.basic[r];
+            if bc < nf {
+                x[free[bc]] = eng.xb[r].max(0.0);
+            }
+        }
+        let obj = self.obj.iter().zip(&x).map(|(a, b)| a * b).sum();
+        LpResult::Optimal { x, obj, pivots: counts }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::simplex::solve;
+    use super::*;
+
+    fn solver_optimal(s: &mut Solver) -> (Vec<f64>, f64, PivotCounts) {
+        match s.solve() {
+            LpResult::Optimal { x, obj, pivots } => (x, obj, pivots),
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sparse_matches_dense_on_fixed_instances() {
+        // the dense `solve` is the in-tree parity reference; the
+        // sparse core must agree to 1e-9 on shapes it will meet
+        let cases = vec![
+            Lp {
+                n: 2,
+                c: vec![1.0, 1.0],
+                a_ub: vec![
+                    vec![1.0, 0.0],
+                    vec![0.0, 1.0],
+                    vec![1.0, 1.0],
+                ],
+                b_ub: vec![2.0, 3.0, 4.0],
+                ..Default::default()
+            },
+            Lp {
+                n: 2,
+                c: vec![3.0, 2.0],
+                a_ub: vec![vec![1.0, 0.0]],
+                b_ub: vec![3.0],
+                a_eq: vec![vec![1.0, 1.0]],
+                b_eq: vec![4.0],
+            },
+            Lp {
+                n: 1,
+                c: vec![-1.0],
+                a_ub: vec![vec![-1.0]],
+                b_ub: vec![-2.0],
+                ..Default::default()
+            },
+        ];
+        for (i, lp) in cases.iter().enumerate() {
+            let dense = solve(lp);
+            let sparse = Solver::from_lp(lp).solve();
+            match (dense, sparse) {
+                (
+                    LpResult::Optimal { obj: od, x: xd, .. },
+                    LpResult::Optimal { obj: os, x: xs, .. },
+                ) => {
+                    assert!((od - os).abs() < 1e-9, "case {i}: {od} vs {os}");
+                    for (a, b) in xd.iter().zip(&xs) {
+                        assert!((a - b).abs() < 1e-9, "case {i}: x differs");
+                    }
+                }
+                (d, s) => panic!("case {i}: dense {d:?} vs sparse {s:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_detects_infeasible_and_unbounded() {
+        let inf = Lp {
+            n: 1,
+            c: vec![1.0],
+            a_ub: vec![vec![1.0]],
+            b_ub: vec![1.0],
+            a_eq: vec![vec![1.0]],
+            b_eq: vec![2.0],
+        };
+        assert_eq!(Solver::from_lp(&inf).solve(), LpResult::Infeasible);
+        let unb = Lp {
+            n: 2,
+            c: vec![1.0, 0.0],
+            a_ub: vec![vec![-1.0, 0.0]],
+            b_ub: vec![0.0],
+            ..Default::default()
+        };
+        assert_eq!(Solver::from_lp(&unb).solve(), LpResult::Unbounded);
+    }
+
+    #[test]
+    fn degenerate_does_not_cycle_sparse() {
+        // classic degeneracy example (cycles under unguarded Dantzig;
+        // the stall detector's Bland fallback must terminate it)
+        let lp = Lp {
+            n: 4,
+            c: vec![0.75, -150.0, 0.02, -6.0],
+            a_ub: vec![
+                vec![0.25, -60.0, -0.04, 9.0],
+                vec![0.5, -90.0, -0.02, 3.0],
+                vec![0.0, 0.0, 1.0, 0.0],
+            ],
+            b_ub: vec![0.0, 0.0, 1.0],
+            ..Default::default()
+        };
+        match Solver::from_lp(&lp).solve() {
+            LpResult::Optimal { obj, .. } => {
+                assert!((obj - 0.05).abs() < 1e-6, "obj={obj}")
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn eta_refresh_keeps_long_solves_exact() {
+        // enough pivots to cross the ETA_REFRESH boundary at least
+        // once: a chain of coupled caps forces one pivot per variable
+        let n = 3 * ETA_REFRESH;
+        let c = vec![1.0; n];
+        let mut a_ub = Vec::with_capacity(n);
+        let mut b_ub = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut row = vec![0.0; n];
+            row[i] = 1.0;
+            if i > 0 {
+                row[i - 1] = 0.5;
+            }
+            a_ub.push(row);
+            b_ub.push(1.0 + (i % 7) as f64 * 0.25);
+        }
+        let lp = Lp { n, c, a_ub, b_ub, ..Default::default() };
+        let dense = solve(&lp);
+        let sparse = Solver::from_lp(&lp).solve();
+        match (dense, sparse) {
+            (
+                LpResult::Optimal { obj: od, .. },
+                LpResult::Optimal { obj: os, pivots, .. },
+            ) => {
+                assert!((od - os).abs() < 1e-9, "{od} vs {os}");
+                assert!(
+                    pivots.phase2 as usize >= ETA_REFRESH,
+                    "test must cross the refresh boundary: {pivots:?}"
+                );
+            }
+            (d, s) => panic!("dense {d:?} vs sparse {s:?}"),
+        }
+    }
+
+    // ---- warm-start behaviour (ported from the dense Solver) ------
+
+    #[test]
+    fn warm_rhs_edit_resolves_from_basis() {
+        // max x + y st x <= 2, y <= 3, x + y <= 4
+        let mut s = Solver::new();
+        let x = s.add_var(1.0);
+        let y = s.add_var(1.0);
+        s.add_row_le(&[(x, 1.0)], 2.0);
+        s.add_row_le(&[(y, 1.0)], 3.0);
+        let rxy = s.add_row_le(&[(x, 1.0), (y, 1.0)], 4.0);
+        let (_, obj, p) = solver_optimal(&mut s);
+        assert!((obj - 4.0).abs() < 1e-9);
+        assert!(!p.warm);
+        // loosen the joint cap: primal re-optimization from the basis
+        s.set_rhs(rxy, 6.0);
+        let (xv, obj, p) = solver_optimal(&mut s);
+        assert!((obj - 5.0).abs() < 1e-9, "obj={obj}");
+        assert!((xv[0] - 2.0).abs() < 1e-9 && (xv[1] - 3.0).abs() < 1e-9);
+        assert!(p.warm, "expected a warm solve");
+        assert!(p.search() <= 3, "too many warm pivots: {p:?}");
+        // tighten it below the current point: dual-simplex repair
+        s.set_rhs(rxy, 3.0);
+        let (_, obj, p) = solver_optimal(&mut s);
+        assert!((obj - 3.0).abs() < 1e-9, "obj={obj}");
+        assert!(p.warm);
+        assert!(p.dual >= 1, "expected dual repair pivots: {p:?}");
+        let st = s.stats();
+        assert_eq!(st.solves, 3);
+        assert_eq!(st.cold_solves, 1);
+        assert_eq!(st.warm_solves, 2);
+        assert_eq!(st.dual_cap_hits, 0);
+    }
+
+    #[test]
+    fn warm_append_and_deactivate_row() {
+        let mut s = Solver::new();
+        let x = s.add_var(1.0);
+        s.add_row_le(&[(x, 1.0)], 5.0);
+        let (_, obj, _) = solver_optimal(&mut s);
+        assert!((obj - 5.0).abs() < 1e-9);
+        // appended binding row: warm dual repair down to x = 2
+        let tight = s.add_row_le(&[(x, 1.0)], 2.0);
+        let (_, obj, p) = solver_optimal(&mut s);
+        assert!((obj - 2.0).abs() < 1e-9, "obj={obj}");
+        assert!(p.warm && p.dual >= 1, "{p:?}");
+        // appended slack row stays warm through deactivation
+        let loose = s.add_row_le(&[(x, 1.0)], 9.0);
+        let (_, obj, p) = solver_optimal(&mut s);
+        assert!((obj - 2.0).abs() < 1e-9);
+        assert!(p.warm);
+        s.deactivate_row(loose);
+        let (_, obj, p) = solver_optimal(&mut s);
+        assert!((obj - 2.0).abs() < 1e-9);
+        assert!(p.warm, "slack-basic row removal should stay warm");
+        // removing the binding row (its slack is nonbasic) goes cold,
+        // and must still be correct
+        s.deactivate_row(tight);
+        let (_, obj, _) = solver_optimal(&mut s);
+        assert!((obj - 5.0).abs() < 1e-9, "obj={obj}");
+    }
+
+    #[test]
+    fn fix_and_unfix_var() {
+        // max x + y st x + y <= 4, x <= 2
+        let mut s = Solver::new();
+        let x = s.add_var(1.0);
+        let y = s.add_var(1.0);
+        s.add_row_le(&[(x, 1.0), (y, 1.0)], 4.0);
+        s.add_row_le(&[(x, 1.0)], 2.0);
+        let (_, obj, _) = solver_optimal(&mut s);
+        assert!((obj - 4.0).abs() < 1e-9);
+        s.fix_var(y, 1.0);
+        let (xv, obj, _) = solver_optimal(&mut s);
+        assert!((obj - 3.0).abs() < 1e-9, "obj={obj}");
+        assert!((xv[0] - 2.0).abs() < 1e-9 && (xv[1] - 1.0).abs() < 1e-9);
+        s.unfix_var(y);
+        let (_, obj, _) = solver_optimal(&mut s);
+        assert!((obj - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn appended_var_enters_warm() {
+        // max x st x <= 3; then add y with obj 2, y <= 1 coupled row
+        let mut s = Solver::new();
+        let x = s.add_var(1.0);
+        s.add_row_le(&[(x, 1.0)], 3.0);
+        let (_, obj, _) = solver_optimal(&mut s);
+        assert!((obj - 3.0).abs() < 1e-9);
+        let y = s.add_var(2.0);
+        s.add_row_le(&[(y, 1.0)], 1.0);
+        let (xv, obj, p) = solver_optimal(&mut s);
+        assert!((obj - 5.0).abs() < 1e-9, "obj={obj}");
+        assert!((xv[1] - 1.0).abs() < 1e-9);
+        assert!(p.warm, "new column should enter from the warm basis");
+    }
+
+    #[test]
+    fn warm_matches_cold_on_random_edits() {
+        use crate::util::Pcg32;
+        let mut rng = Pcg32::seeded(4242);
+        for trial in 0..30 {
+            let n = 2 + rng.below(4);
+            let mu = 2 + rng.below(4);
+            let c: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 1.0)).collect();
+            let a_ub: Vec<Vec<f64>> = (0..mu)
+                .map(|_| (0..n).map(|_| rng.uniform(0.05, 1.0)).collect())
+                .collect();
+            let b_ub: Vec<f64> =
+                (0..mu).map(|_| rng.uniform(0.5, 2.0)).collect();
+            let mut lp = Lp { n, c, a_ub, b_ub, ..Default::default() };
+            let mut s = Solver::from_lp(&lp);
+            s.solve();
+            for edit in 0..4 {
+                let r = rng.below(mu);
+                let nb = rng.uniform(0.3, 2.5);
+                lp.b_ub[r] = nb;
+                s.set_rhs(RowId(r), nb);
+                let warm = s.solve();
+                let cold = solve(&lp);
+                match (warm, cold) {
+                    (
+                        LpResult::Optimal { obj: ow, x: xw, .. },
+                        LpResult::Optimal { obj: oc, .. },
+                    ) => {
+                        assert!(
+                            (ow - oc).abs() < 1e-7,
+                            "trial {trial} edit {edit}: {ow} vs {oc}"
+                        );
+                        // warm solution must satisfy the edited rows
+                        for (row, &b) in lp.a_ub.iter().zip(&lp.b_ub) {
+                            let lhs: f64 = row
+                                .iter()
+                                .zip(&xw)
+                                .map(|(a, v)| a * v)
+                                .sum();
+                            assert!(
+                                lhs <= b + 1e-6,
+                                "trial {trial} edit {edit} violated"
+                            );
+                        }
+                    }
+                    (w, c) => {
+                        panic!("trial {trial} edit {edit}: {w:?} vs {c:?}")
+                    }
+                }
+            }
+            let st = s.stats();
+            assert!(st.warm_solves > 0, "trial {trial}: never warm");
+        }
+    }
+}

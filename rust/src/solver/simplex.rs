@@ -1,4 +1,4 @@
-//! Dense two-phase primal simplex with a warm-startable [`Solver`].
+//! Dense two-phase primal simplex — the one-shot **parity reference**.
 //!
 //! Substrate for the exact fluid DRFH allocator (paper eq. (7) is a
 //! linear program). Solves
@@ -10,46 +10,18 @@
 //!               x >= 0
 //! ```
 //!
-//! Two entry points:
-//!
-//! * [`solve`] — the one-shot reference path: build, two-phase solve,
-//!   discard. Kept as the parity baseline for the incremental path
-//!   (`allocator::solve` uses it on every progressive-filling round).
-//! * [`Solver`] — a *stateful* problem that survives edits. After a
-//!   solve it records the optimal **basis** (which columns were basic);
-//!   subsequent RHS/coefficient edits, appended or deactivated rows,
-//!   and frozen variables re-solve *from that basis* instead of from
-//!   scratch: refactorize, then a handful of dual/primal pivots instead
-//!   of a full phase-1 + phase-2 pass. `allocator::incremental` builds
-//!   the event-driven dynamic-DRFH allocator on top of this.
-//!
-//! ## Basis-reuse invariants
-//!
-//! The recorded basis is a **set of column identities** — structural
-//! variable, the slack of row *r*, or the phase-1 artificial of row *r*
-//! (kept only as a placeholder for redundant rows) — never tableau
-//! positions or numeric state. Every warm solve rebuilds the raw
-//! tableau from the *current* row data and refactorizes by pivoting the
-//! recorded columns back in (partial row pivoting), so no numerical
-//! error survives across solves; only the combinatorial basis does.
-//! Edits maintain the set: an appended `<=` row contributes its own
-//! slack, a deactivated row retires its own slack/artificial. Edits
-//! that cannot keep the set valid (appending an equality row, fixing a
-//! basic variable, deactivating a row whose slack is not basic) simply
-//! invalidate it — the next solve is cold. The warm path never trades
-//! correctness for speed: a singular refactorization, a basis that is
-//! neither primal- nor dual-feasible, or a nonzero artificial
-//! placeholder all fall back to the cold two-phase solve.
+//! [`solve`] builds a dense tableau, runs phase 1 (feasibility) and
+//! phase 2 (optimality), and discards everything. It is deliberately
+//! the simplest correct implementation in the tree: the sparse revised
+//! simplex behind the warm-startable [`super::revised::Solver`] must
+//! agree with it to 1e-9 on every instance (`tests/solver_fuzz.rs`),
+//! the same naive-reference discipline as `sched::index::naive` and
+//! `allocator::drfh::solve_per_user`.
 //!
 //! Pivoting uses Dantzig's rule (most negative reduced cost) with a
 //! stall detector that falls back to Bland's rule when the objective
 //! stops improving, which guarantees termination on degenerate
-//! instances; pivot counts are surfaced in [`PivotCounts`] so benches
-//! can report warm-start savings, not just wall-clock.
-//!
-//! Sized for the allocator's use: a few hundred rows by a few thousand
-//! columns (server *classes* × users, not raw servers —
-//! `Cluster::classes()` collapses identical servers first).
+//! instances; pivot counts are surfaced in [`PivotCounts`].
 
 /// A linear program in standard inequality/equality form.
 #[derive(Clone, Debug, Default)]
@@ -76,9 +48,10 @@ pub struct PivotCounts {
     pub phase2: u32,
     /// Dual-simplex repair pivots — warm solves only.
     pub dual: u32,
-    /// Refactorization eliminations (one per basic column) — warm
-    /// solves only. Deterministic O(rows) work, kept separate from the
-    /// *search* pivots above.
+    /// Basis factorization eliminations (one eta per basic column):
+    /// the warm-start refactorization plus any in-solve eta-file
+    /// refreshes of the sparse core. Deterministic O(rows) work, kept
+    /// separate from the *search* pivots above.
     pub factor: u32,
     /// Stall events that tripped the Bland's-rule fallback.
     pub stalls: u32,
@@ -102,93 +75,13 @@ pub enum LpResult {
     Unbounded,
 }
 
-/// Cumulative [`Solver`] accounting across solves.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct SolveStats {
-    pub solves: u64,
-    pub warm_solves: u64,
-    pub cold_solves: u64,
-    /// Warm attempts abandoned to a cold solve (singular basis, lost
-    /// primal+dual feasibility, nonzero artificial placeholder, ...).
-    pub fallbacks: u64,
-    /// Search pivots (phase-1 + phase-2 + dual) across all solves.
-    pub pivots: u64,
-    /// Refactorization eliminations across all warm solves.
-    pub factor_elims: u64,
-    pub stall_events: u64,
-}
-
-const EPS: f64 = 1e-9;
-/// Minimum acceptable pivot magnitude when refactorizing a recorded
-/// basis; anything smaller is treated as singular (cold fallback).
-const SINGULAR_EPS: f64 = 1e-8;
-
-/// Handle to a structural variable of a [`Solver`].
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct VarId(usize);
-
-impl VarId {
-    /// Index of the variable in solution vectors returned by
-    /// [`Solver::solve`].
-    #[inline]
-    pub fn index(&self) -> usize {
-        self.0
-    }
-}
-
-/// Handle to a constraint row of a [`Solver`].
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct RowId(usize);
-
-impl RowId {
-    pub fn index(&self) -> usize {
-        self.0
-    }
-}
-
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum RowKind {
-    Le,
-    Eq,
-}
-
-/// One column identity of the recorded basis set (see module docs).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum Basic {
-    /// Structural variable (index into the solver's variable list).
-    Var(usize),
-    /// Slack of row `r` (also stands in for the surplus of a row the
-    /// cold path flipped: the surplus of `-a·x <= -b` *is* `b - a·x`,
-    /// the same quantity as the slack of `a·x <= b`).
-    Slack(usize),
-    /// Phase-1 artificial of row `r`, basic at zero on a redundant row.
-    Art(usize),
-}
-
-#[derive(Clone, Debug)]
-struct RowData {
-    /// Dense coefficients over all structural variables.
-    coeffs: Vec<f64>,
-    rhs: f64,
-    kind: RowKind,
-    active: bool,
-}
+pub(super) const EPS: f64 = 1e-9;
 
 struct Tableau {
     rows: usize,
     cols: usize, // structural + slack + artificial + rhs
     t: Vec<f64>,
     basis: Vec<usize>,
-}
-
-enum DualOutcome {
-    /// Primal feasibility restored after `n` pivots.
-    Feasible(u32),
-    /// A row certifies primal infeasibility (after `n` pivots).
-    Infeasible(u32),
-    /// Pivot budget exhausted after `n` pivots — caller should fall
-    /// back to cold (and still account for the wasted pivots).
-    GaveUp(u32),
 }
 
 impl Tableau {
@@ -295,700 +188,165 @@ impl Tableau {
             }
         }
     }
-
-    /// Dual simplex: restore `rhs >= 0` while keeping all reduced costs
-    /// over the first `allowed_cols` columns non-negative. Requires a
-    /// dual-feasible start. Artificial placeholder columns (beyond
-    /// `allowed_cols`) are not real variables and are excluded from the
-    /// entering set *and* from the infeasibility certificate.
-    fn dual_simplex(&mut self, allowed_cols: usize) -> DualOutcome {
-        let mut pivots = 0u32;
-        let cap = 200 + 4 * (self.rows as u32 + self.cols as u32);
-        loop {
-            // leaving row: most negative basic value
-            let mut leave: Option<(usize, f64)> = None;
-            for r in 1..self.rows {
-                let b = self.at(r, self.cols - 1);
-                if b < -EPS && leave.map_or(true, |(_, bb)| b < bb) {
-                    leave = Some((r, b));
-                }
-            }
-            let Some((pr, _)) = leave else {
-                return DualOutcome::Feasible(pivots);
-            };
-            // entering: min |reduced cost / coeff| over negative
-            // coefficients (first index wins ties — Bland-ish)
-            let mut enter: Option<(usize, f64)> = None;
-            for c in 0..allowed_cols {
-                let a = self.at(pr, c);
-                if a < -EPS {
-                    let ratio = self.at(0, c) / (-a);
-                    if enter.map_or(true, |(_, br)| ratio < br - EPS) {
-                        enter = Some((c, ratio));
-                    }
-                }
-            }
-            let Some((pc, _)) = enter else {
-                return DualOutcome::Infeasible(pivots);
-            };
-            self.pivot(pr, pc);
-            pivots += 1;
-            if pivots > cap {
-                return DualOutcome::GaveUp(pivots);
-            }
-        }
-    }
 }
 
-/// Search pivots burnt by an abandoned warm attempt, carried into the
-/// cold fallback so per-solve pivot reporting never undercounts the
-/// warm path's true work: `(dual, phase2, stalls)`.
-type WastedPivots = (u32, u32, u32);
-
-/// A stateful LP that records its optimal basis and re-solves
-/// incrementally after edits. See the module docs for the basis-reuse
-/// invariants; [`solve`] stays as the one-shot reference wrapper.
-#[derive(Clone, Debug)]
-pub struct Solver {
-    obj: Vec<f64>,
-    fixed: Vec<Option<f64>>,
-    rows: Vec<RowData>,
-    basis: Vec<Basic>,
-    has_basis: bool,
-    stats: SolveStats,
-}
-
-impl Default for Solver {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl Solver {
-    /// An empty problem (no variables, no rows).
-    pub fn new() -> Self {
-        Solver {
-            obj: Vec::new(),
-            fixed: Vec::new(),
-            rows: Vec::new(),
-            basis: Vec::new(),
-            has_basis: false,
-            stats: SolveStats::default(),
-        }
-    }
-
-    /// Build a solver from a one-shot [`Lp`] (variables in order, then
-    /// the `a_ub` rows, then the `a_eq` rows).
-    pub fn from_lp(lp: &Lp) -> Self {
-        let n = lp.n;
-        assert_eq!(lp.c.len(), n);
-        assert_eq!(lp.a_ub.len(), lp.b_ub.len());
-        assert_eq!(lp.a_eq.len(), lp.b_eq.len());
-        for row in lp.a_ub.iter().chain(&lp.a_eq) {
-            assert_eq!(row.len(), n);
-        }
-        let mut s = Solver::new();
-        let vars: Vec<VarId> = lp.c.iter().map(|&c| s.add_var(c)).collect();
-        for (a, &b) in lp.a_ub.iter().zip(&lp.b_ub) {
-            let coeffs: Vec<(VarId, f64)> =
-                vars.iter().zip(a).map(|(&v, &x)| (v, x)).collect();
-            s.add_row_le(&coeffs, b);
-        }
-        for (a, &b) in lp.a_eq.iter().zip(&lp.b_eq) {
-            let coeffs: Vec<(VarId, f64)> =
-                vars.iter().zip(a).map(|(&v, &x)| (v, x)).collect();
-            s.add_row_eq(&coeffs, b);
-        }
-        s
-    }
-
-    /// Number of structural variables.
-    pub fn num_vars(&self) -> usize {
-        self.obj.len()
-    }
-
-    /// Cumulative solve accounting.
-    pub fn stats(&self) -> SolveStats {
-        self.stats
-    }
-
-    /// True when the next [`Solver::solve`] will attempt a warm start.
-    pub fn has_warm_basis(&self) -> bool {
-        self.has_basis
-    }
-
-    /// Append a structural variable (objective coefficient `obj`,
-    /// zero coefficients in every existing row). Keeps any recorded
-    /// basis valid: the new variable enters nonbasic at 0.
-    pub fn add_var(&mut self, obj: f64) -> VarId {
-        let id = self.obj.len();
-        self.obj.push(obj);
-        self.fixed.push(None);
-        for row in &mut self.rows {
-            row.coeffs.push(0.0);
-        }
-        VarId(id)
-    }
-
-    fn add_row(&mut self, kind: RowKind, rhs: f64) -> RowId {
-        let id = self.rows.len();
-        self.rows.push(RowData {
-            coeffs: vec![0.0; self.obj.len()],
-            rhs,
-            kind,
-            active: true,
-        });
-        if self.has_basis {
-            match kind {
-                // the new row's own slack joins the basis (B gains a
-                // unit row/column: still nonsingular); a negative
-                // residual is repaired by the dual simplex
-                RowKind::Le => self.basis.push(Basic::Slack(id)),
-                // an equality row has no slack to hide behind
-                RowKind::Eq => self.invalidate_basis(),
-            }
-        }
-        RowId(id)
-    }
-
-    /// Append a `coeffs · x <= rhs` row.
-    pub fn add_row_le(&mut self, coeffs: &[(VarId, f64)], rhs: f64) -> RowId {
-        let r = self.add_row(RowKind::Le, rhs);
-        for &(v, a) in coeffs {
-            self.rows[r.0].coeffs[v.0] = a;
-        }
-        r
-    }
-
-    /// Append a `coeffs · x == rhs` row (invalidates any warm basis —
-    /// prefer paired `<=` rows for incrementally maintained problems).
-    pub fn add_row_eq(&mut self, coeffs: &[(VarId, f64)], rhs: f64) -> RowId {
-        let r = self.add_row(RowKind::Eq, rhs);
-        for &(v, a) in coeffs {
-            self.rows[r.0].coeffs[v.0] = a;
-        }
-        r
-    }
-
-    /// Replace a row's right-hand side. Basis-preserving.
-    pub fn set_rhs(&mut self, r: RowId, rhs: f64) {
-        self.rows[r.0].rhs = rhs;
-    }
-
-    /// Replace one coefficient of a row. Basis-preserving (the warm
-    /// refactorization revalidates numerically).
-    pub fn set_coeff(&mut self, r: RowId, v: VarId, a: f64) {
-        self.rows[r.0].coeffs[v.0] = a;
-    }
-
-    /// Replace a variable's objective coefficient. Basis-preserving.
-    pub fn set_obj(&mut self, v: VarId, c: f64) {
-        self.obj[v.0] = c;
-    }
-
-    /// Drop a row from the problem (it can be re-activated later).
-    pub fn deactivate_row(&mut self, r: RowId) {
-        if !self.rows[r.0].active {
-            return;
-        }
-        self.rows[r.0].active = false;
-        if self.has_basis {
-            // retire the row's own slack/artificial from the basis; if
-            // neither is basic (the row was tight) the set no longer
-            // matches the rows and the next solve is cold
-            if let Some(pos) = self.basis.iter().position(
-                |b| matches!(b, Basic::Slack(i) | Basic::Art(i) if *i == r.0),
-            ) {
-                self.basis.swap_remove(pos);
-            } else {
-                self.invalidate_basis();
-            }
-        }
-    }
-
-    /// Re-introduce a previously deactivated row.
-    pub fn activate_row(&mut self, r: RowId) {
-        if self.rows[r.0].active {
-            return;
-        }
-        self.rows[r.0].active = true;
-        if self.has_basis {
-            match self.rows[r.0].kind {
-                RowKind::Le => self.basis.push(Basic::Slack(r.0)),
-                RowKind::Eq => self.invalidate_basis(),
-            }
-        }
-    }
-
-    /// Freeze a variable at `value`: it leaves the column set and its
-    /// contribution folds into every row's rhs. Invalidates the basis
-    /// only if the variable is currently basic.
-    pub fn fix_var(&mut self, v: VarId, value: f64) {
-        self.fixed[v.0] = Some(value);
-        if self.has_basis
-            && self
-                .basis
-                .iter()
-                .any(|b| matches!(b, Basic::Var(i) if *i == v.0))
-        {
-            self.invalidate_basis();
-        }
-    }
-
-    /// Release a frozen variable (re-enters nonbasic at 0).
-    pub fn unfix_var(&mut self, v: VarId) {
-        self.fixed[v.0] = None;
-    }
-
-    /// Forget the recorded basis; the next solve is cold.
-    pub fn invalidate_basis(&mut self) {
-        self.has_basis = false;
-        self.basis.clear();
-    }
-
-    /// Solve the current problem: warm from the recorded basis when one
-    /// is valid, falling back to the cold two-phase solve otherwise.
-    /// Pivots burnt by an abandoned warm attempt are folded into the
-    /// fallback solve's [`PivotCounts`], so per-solve reporting counts
-    /// the warm path's full cost.
-    pub fn solve(&mut self) -> LpResult {
-        self.stats.solves += 1;
-        let mut wasted: WastedPivots = (0, 0, 0);
-        if self.has_basis {
-            match self.try_warm() {
-                Ok(res) => {
-                    self.stats.warm_solves += 1;
-                    return res;
-                }
-                Err(w) => {
-                    self.stats.fallbacks += 1;
-                    self.stats.pivots += (w.0 + w.1) as u64;
-                    self.stats.stall_events += w.2 as u64;
-                    self.invalidate_basis();
-                    wasted = w;
-                }
-            }
-        }
-        self.stats.cold_solves += 1;
-        let res = self.cold();
-        match res {
-            LpResult::Optimal { x, obj, mut pivots } => {
-                pivots.dual += wasted.0;
-                pivots.phase2 += wasted.1;
-                pivots.stalls += wasted.2;
-                LpResult::Optimal { x, obj, pivots }
-            }
-            other => other,
-        }
-    }
-
-    fn record(&mut self, tab: &Tableau, owner: &[Basic]) {
-        self.basis = tab.basis.iter().map(|&c| owner[c]).collect();
-        self.has_basis = true;
-    }
-
-    /// Warm solve: rebuild the raw tableau from current row data,
-    /// refactorize by pivoting the recorded basis columns back in, then
-    /// repair with dual/primal pivots. `Err` = fall back to cold,
-    /// carrying any search pivots the abandoned attempt burnt.
-    fn try_warm(&mut self) -> Result<LpResult, WastedPivots> {
-        let act: Vec<usize> =
-            (0..self.rows.len()).filter(|&i| self.rows[i].active).collect();
-        let m = act.len();
-        if self.basis.len() != m {
-            return Err((0, 0, 0));
-        }
-        let nvars = self.obj.len();
-        let mut col_of_var = vec![usize::MAX; nvars];
-        let mut free: Vec<usize> = Vec::new();
-        for v in 0..nvars {
-            if self.fixed[v].is_none() {
-                col_of_var[v] = free.len();
-                free.push(v);
-            }
-        }
-        let nf = free.len();
-
-        // column layout: free vars | slack per active <= row |
-        // artificial placeholders (rows with a recorded Art entry) | rhs
-        let mut owner: Vec<Basic> = Vec::with_capacity(nf + m + 4);
-        for &v in &free {
-            owner.push(Basic::Var(v));
-        }
-        let mut slack_col = vec![usize::MAX; self.rows.len()];
-        for &ri in &act {
-            if self.rows[ri].kind == RowKind::Le {
-                slack_col[ri] = owner.len();
-                owner.push(Basic::Slack(ri));
-            }
-        }
-        let allowed = owner.len();
-        let mut art_col = vec![usize::MAX; self.rows.len()];
-        for b in &self.basis {
-            if let Basic::Art(ri) = *b {
-                if art_col[ri] == usize::MAX {
-                    art_col[ri] = owner.len();
-                    owner.push(Basic::Art(ri));
-                }
-            }
-        }
-        let cols = owner.len() + 1;
-        let rhs_c = cols - 1;
-
-        let mut tab = Tableau {
-            rows: m + 1,
-            cols,
-            t: vec![0.0; (m + 1) * cols],
-            basis: vec![usize::MAX; m],
-        };
-        // objective row (phase-2 style): -c over the free columns
-        for (c, &v) in free.iter().enumerate() {
-            *tab.at_mut(0, c) = -self.obj[v];
-        }
-        // constraint rows, fixed variables folded into the rhs; no
-        // sign normalization — the dual simplex handles negative rhs
-        for (k, &ri) in act.iter().enumerate() {
-            let r = k + 1;
-            let mut b = self.rows[ri].rhs;
-            for v in 0..nvars {
-                let a = self.rows[ri].coeffs[v];
-                if a == 0.0 {
-                    continue;
-                }
-                match self.fixed[v] {
-                    Some(val) => b -= a * val,
-                    None => *tab.at_mut(r, col_of_var[v]) = a,
-                }
-            }
-            if slack_col[ri] != usize::MAX {
-                *tab.at_mut(r, slack_col[ri]) = 1.0;
-            }
-            if art_col[ri] != usize::MAX {
-                *tab.at_mut(r, art_col[ri]) = 1.0;
-            }
-            *tab.at_mut(r, rhs_c) = b;
-        }
-
-        // map the recorded basis set to columns
-        let mut bcols: Vec<usize> = Vec::with_capacity(m);
-        for b in &self.basis {
-            let c = match *b {
-                Basic::Var(v) => {
-                    if self.fixed[v].is_some() {
-                        return Err((0, 0, 0));
-                    }
-                    col_of_var[v]
-                }
-                Basic::Slack(ri) => slack_col[ri],
-                Basic::Art(ri) => art_col[ri],
-            };
-            if c == usize::MAX {
-                return Err((0, 0, 0));
-            }
-            bcols.push(c);
-        }
-        {
-            let mut seen = bcols.clone();
-            seen.sort_unstable();
-            if seen.windows(2).any(|w| w[0] == w[1]) {
-                return Err((0, 0, 0)); // duplicate basis column: singular
-            }
-        }
-
-        // refactorize: Gauss-Jordan, partial row pivoting per column.
-        // Pivoting through row 0 prices the objective out as we go.
-        let mut done = vec![false; m];
-        let mut factor = 0u32;
-        for &bc in &bcols {
-            let mut best_r = usize::MAX;
-            let mut best_a = SINGULAR_EPS;
-            for r in 1..=m {
-                if done[r - 1] {
-                    continue;
-                }
-                let a = tab.at(r, bc).abs();
-                if a > best_a {
-                    best_a = a;
-                    best_r = r;
-                }
-            }
-            if best_r == usize::MAX {
-                return Err((0, 0, 0)); // singular refactorization
-            }
-            tab.pivot(best_r, bc);
-            done[best_r - 1] = true;
-            factor += 1;
-        }
-        self.stats.factor_elims += factor as u64;
-        let mut counts = PivotCounts { factor, warm: true, ..Default::default() };
-
-        let primal_ok = (1..=m).all(|r| tab.at(r, rhs_c) >= -EPS);
-        let dual_ok = (0..allowed).all(|c| tab.at(0, c) >= -EPS);
-        if !primal_ok {
-            if !dual_ok {
-                // neither simplex applies from here; don't guess
-                return Err((0, 0, 0));
-            }
-            match tab.dual_simplex(allowed) {
-                DualOutcome::Feasible(p) => {
-                    counts.dual = p;
-                }
-                DualOutcome::Infeasible(p) => {
-                    counts.dual = p;
-                    self.stats.pivots += p as u64;
-                    self.record(&tab, &owner);
-                    return Ok(LpResult::Infeasible);
-                }
-                DualOutcome::GaveUp(p) => return Err((p, 0, 0)),
-            }
-        }
-        let (ok, p2, stalls) = tab.optimize(allowed);
-        counts.phase2 = p2;
-        counts.stalls = stalls;
-        if !ok {
-            self.stats.pivots += (counts.dual + p2) as u64;
-            self.stats.stall_events += stalls as u64;
-            self.record(&tab, &owner);
-            return Ok(LpResult::Unbounded);
-        }
-        // artificial placeholders are not real variables: if one ended
-        // basic at a nonzero value the solution violates its row —
-        // only the cold phase-1 can repair that
-        for r in 1..=m {
-            if tab.basis[r - 1] >= allowed && tab.at(r, rhs_c).abs() > 1e-7 {
-                return Err((counts.dual, p2, stalls));
-            }
-        }
-        self.stats.pivots += (counts.dual + p2) as u64;
-        self.stats.stall_events += stalls as u64;
-
-        let mut x = vec![0.0; nvars];
-        for v in 0..nvars {
-            if let Some(val) = self.fixed[v] {
-                x[v] = val;
-            }
-        }
-        for r in 1..=m {
-            let bc = tab.basis[r - 1];
-            if bc < nf {
-                x[free[bc]] = tab.at(r, rhs_c).max(0.0);
-            }
-        }
-        let obj = self.obj.iter().zip(&x).map(|(a, b)| a * b).sum();
-        self.record(&tab, &owner);
-        Ok(LpResult::Optimal { x, obj, pivots: counts })
-    }
-
-    /// Cold two-phase solve, recording the final basis for warm reuse.
-    fn cold(&mut self) -> LpResult {
-        let act: Vec<usize> =
-            (0..self.rows.len()).filter(|&i| self.rows[i].active).collect();
-        let m = act.len();
-        let nvars = self.obj.len();
-        let mut col_of_var = vec![usize::MAX; nvars];
-        let mut free: Vec<usize> = Vec::new();
-        for v in 0..nvars {
-            if self.fixed[v].is_none() {
-                col_of_var[v] = free.len();
-                free.push(v);
-            }
-        }
-        let nf = free.len();
-
-        // Normalize rows to b >= 0 over the free columns (fixed
-        // variables folded into the rhs).
-        // <= with b>=0 -> slack(+1);  flipped(>=) -> surplus(-1)+artificial;
-        // == -> artificial.
-        let mut rows_a: Vec<Vec<f64>> = Vec::with_capacity(m);
-        let mut rows_b: Vec<f64> = Vec::with_capacity(m);
-        let mut kind: Vec<u8> = Vec::with_capacity(m); // 0 = <=, 1 = >=, 2 = ==
-        for &ri in &act {
-            let row = &self.rows[ri];
-            let mut a = vec![0.0; nf];
-            let mut b = row.rhs;
-            for v in 0..nvars {
-                let coeff = row.coeffs[v];
-                if coeff == 0.0 {
-                    continue;
-                }
-                match self.fixed[v] {
-                    Some(val) => b -= coeff * val,
-                    None => a[col_of_var[v]] = coeff,
-                }
-            }
-            let flip = b < 0.0;
-            if flip {
-                for x in a.iter_mut() {
-                    *x = -*x;
-                }
-                b = -b;
-            }
-            rows_a.push(a);
-            rows_b.push(b);
-            kind.push(match (row.kind, flip) {
-                (RowKind::Le, false) => 0,
-                (RowKind::Le, true) => 1,
-                (RowKind::Eq, _) => 2,
-            });
-        }
-
-        let n_slack = kind.iter().filter(|&&k| k != 2).count();
-        let n_art = kind.iter().filter(|&&k| k != 0).count();
-        let art_start = nf + n_slack;
-        let cols = nf + n_slack + n_art + 1;
-
-        // column owners, for recording the basis after the solve (the
-        // surplus of a flipped row is the same quantity as its slack)
-        let mut owner: Vec<Basic> = Vec::with_capacity(cols - 1);
-        for &v in &free {
-            owner.push(Basic::Var(v));
-        }
-        for (r, &ri) in act.iter().enumerate() {
-            if kind[r] != 2 {
-                owner.push(Basic::Slack(ri));
-            }
-        }
-        for (r, &ri) in act.iter().enumerate() {
-            if kind[r] != 0 {
-                owner.push(Basic::Art(ri));
-            }
-        }
-
-        let mut tab = Tableau {
-            rows: m + 1,
-            cols,
-            t: vec![0.0; (m + 1) * cols],
-            basis: vec![0; m],
-        };
-
-        // fill constraint rows
-        let mut slack_i = 0;
-        let mut art_i = 0;
-        for r in 0..m {
-            for c in 0..nf {
-                *tab.at_mut(r + 1, c) = rows_a[r][c];
-            }
-            *tab.at_mut(r + 1, cols - 1) = rows_b[r];
-            match kind[r] {
-                0 => {
-                    *tab.at_mut(r + 1, nf + slack_i) = 1.0;
-                    tab.basis[r] = nf + slack_i;
-                    slack_i += 1;
-                }
-                1 => {
-                    *tab.at_mut(r + 1, nf + slack_i) = -1.0; // surplus
-                    slack_i += 1;
-                    *tab.at_mut(r + 1, art_start + art_i) = 1.0;
-                    tab.basis[r] = art_start + art_i;
-                    art_i += 1;
-                }
-                _ => {
-                    *tab.at_mut(r + 1, art_start + art_i) = 1.0;
-                    tab.basis[r] = art_start + art_i;
-                    art_i += 1;
-                }
-            }
-        }
-
-        let mut counts = PivotCounts::default();
-
-        // ---- Phase 1: maximize -(sum of artificials) ----
-        if n_art > 0 {
-            for c in art_start..art_start + n_art {
-                *tab.at_mut(0, c) = 1.0; // minimize sum == maximize negative
-            }
-            // price out: subtract artificial basic rows from objective
-            for r in 0..m {
-                if tab.basis[r] >= art_start {
-                    for c in 0..cols {
-                        let v = tab.at(r + 1, c);
-                        *tab.at_mut(0, c) -= v;
-                    }
-                }
-            }
-            let (ok, p1, s1) = tab.optimize(cols - 1);
-            counts.phase1 = p1;
-            counts.stalls += s1;
-            self.stats.pivots += p1 as u64;
-            self.stats.stall_events += s1 as u64;
-            if !ok {
-                // phase 1 cannot be unbounded
-                self.record(&tab, &owner);
-                return LpResult::Infeasible;
-            }
-            let obj1 = -tab.at(0, cols - 1);
-            if obj1.abs() > 1e-6 {
-                self.record(&tab, &owner);
-                return LpResult::Infeasible;
-            }
-            // drive remaining basic artificials out of the basis
-            for r in 0..m {
-                if tab.basis[r] >= art_start {
-                    for c in 0..art_start {
-                        if tab.at(r + 1, c).abs() > EPS {
-                            tab.pivot(r + 1, c);
-                            break;
-                        }
-                    }
-                    // no structural pivot available: redundant row,
-                    // leave the artificial basic at 0
-                }
-            }
-        }
-
-        // ---- Phase 2: maximize c·x ----
-        for c in 0..cols {
-            *tab.at_mut(0, c) = 0.0;
-        }
-        for (c, &v) in free.iter().enumerate() {
-            *tab.at_mut(0, c) = -self.obj[v];
-        }
-        // price out basic structural variables
-        for r in 0..m {
-            let b = tab.basis[r];
-            if b < nf {
-                let f = self.obj[free[b]];
-                if f != 0.0 {
-                    for c in 0..cols {
-                        let v = tab.at(r + 1, c);
-                        *tab.at_mut(0, c) += f * v;
-                    }
-                }
-            }
-        }
-        // forbid artificials from re-entering: only structural + slack
-        let (ok, p2, s2) = tab.optimize(art_start);
-        counts.phase2 = p2;
-        counts.stalls += s2;
-        self.stats.pivots += p2 as u64;
-        self.stats.stall_events += s2 as u64;
-        self.record(&tab, &owner);
-        if !ok {
-            return LpResult::Unbounded;
-        }
-
-        let mut x = vec![0.0; nvars];
-        for v in 0..nvars {
-            if let Some(val) = self.fixed[v] {
-                x[v] = val;
-            }
-        }
-        for r in 0..m {
-            let b = tab.basis[r];
-            if b < nf {
-                x[free[b]] = tab.at(r + 1, cols - 1).max(0.0);
-            }
-        }
-        let obj = self.obj.iter().zip(&x).map(|(a, b)| a * b).sum();
-        LpResult::Optimal { x, obj, pivots: counts }
-    }
-}
-
-/// Solve the LP one-shot. See module docs for the accepted form. Thin
-/// wrapper over a throwaway [`Solver`] — the parity reference for the
-/// warm-started paths.
+/// Solve the LP one-shot with the dense two-phase tableau. See module
+/// docs for the accepted form. This is the parity reference for the
+/// sparse revised [`super::revised::Solver`].
 pub fn solve(lp: &Lp) -> LpResult {
-    Solver::from_lp(lp).solve()
+    let n = lp.n;
+    assert_eq!(lp.c.len(), n);
+    assert_eq!(lp.a_ub.len(), lp.b_ub.len());
+    assert_eq!(lp.a_eq.len(), lp.b_eq.len());
+    for row in lp.a_ub.iter().chain(&lp.a_eq) {
+        assert_eq!(row.len(), n);
+    }
+    let m = lp.a_ub.len() + lp.a_eq.len();
+
+    // Normalize rows to b >= 0.
+    // <= with b>=0 -> slack(+1);  flipped(>=) -> surplus(-1)+artificial;
+    // == -> artificial.
+    let mut rows_a: Vec<Vec<f64>> = Vec::with_capacity(m);
+    let mut rows_b: Vec<f64> = Vec::with_capacity(m);
+    let mut kind: Vec<u8> = Vec::with_capacity(m); // 0 = <=, 1 = >=, 2 = ==
+    let ub = lp.a_ub.iter().zip(&lp.b_ub).map(|(a, &b)| (a, b, false));
+    let eq = lp.a_eq.iter().zip(&lp.b_eq).map(|(a, &b)| (a, b, true));
+    for (a, b, is_eq) in ub.chain(eq) {
+        let flip = b < 0.0;
+        let (a, b) = if flip {
+            (a.iter().map(|&x| -x).collect(), -b)
+        } else {
+            (a.clone(), b)
+        };
+        rows_a.push(a);
+        rows_b.push(b);
+        kind.push(match (is_eq, flip) {
+            (false, false) => 0,
+            (false, true) => 1,
+            (true, _) => 2,
+        });
+    }
+
+    let n_slack = kind.iter().filter(|&&k| k != 2).count();
+    let n_art = kind.iter().filter(|&&k| k != 0).count();
+    let art_start = n + n_slack;
+    let cols = n + n_slack + n_art + 1;
+
+    let mut tab = Tableau {
+        rows: m + 1,
+        cols,
+        t: vec![0.0; (m + 1) * cols],
+        basis: vec![0; m],
+    };
+
+    // fill constraint rows
+    let mut slack_i = 0;
+    let mut art_i = 0;
+    for r in 0..m {
+        for c in 0..n {
+            *tab.at_mut(r + 1, c) = rows_a[r][c];
+        }
+        *tab.at_mut(r + 1, cols - 1) = rows_b[r];
+        match kind[r] {
+            0 => {
+                *tab.at_mut(r + 1, n + slack_i) = 1.0;
+                tab.basis[r] = n + slack_i;
+                slack_i += 1;
+            }
+            1 => {
+                *tab.at_mut(r + 1, n + slack_i) = -1.0; // surplus
+                slack_i += 1;
+                *tab.at_mut(r + 1, art_start + art_i) = 1.0;
+                tab.basis[r] = art_start + art_i;
+                art_i += 1;
+            }
+            _ => {
+                *tab.at_mut(r + 1, art_start + art_i) = 1.0;
+                tab.basis[r] = art_start + art_i;
+                art_i += 1;
+            }
+        }
+    }
+
+    let mut counts = PivotCounts::default();
+
+    // ---- Phase 1: maximize -(sum of artificials) ----
+    if n_art > 0 {
+        for c in art_start..art_start + n_art {
+            *tab.at_mut(0, c) = 1.0; // minimize sum == maximize negative
+        }
+        // price out: subtract artificial basic rows from objective
+        for r in 0..m {
+            if tab.basis[r] >= art_start {
+                for c in 0..cols {
+                    let v = tab.at(r + 1, c);
+                    *tab.at_mut(0, c) -= v;
+                }
+            }
+        }
+        let (ok, p1, s1) = tab.optimize(cols - 1);
+        counts.phase1 = p1;
+        counts.stalls += s1;
+        if !ok {
+            // phase 1 cannot be unbounded
+            return LpResult::Infeasible;
+        }
+        let obj1 = -tab.at(0, cols - 1);
+        if obj1.abs() > 1e-6 {
+            return LpResult::Infeasible;
+        }
+        // drive remaining basic artificials out of the basis
+        for r in 0..m {
+            if tab.basis[r] >= art_start {
+                for c in 0..art_start {
+                    if tab.at(r + 1, c).abs() > EPS {
+                        tab.pivot(r + 1, c);
+                        break;
+                    }
+                }
+                // no structural pivot available: redundant row,
+                // leave the artificial basic at 0
+            }
+        }
+    }
+
+    // ---- Phase 2: maximize c·x ----
+    for c in 0..cols {
+        *tab.at_mut(0, c) = 0.0;
+    }
+    for (c, &v) in lp.c.iter().enumerate() {
+        *tab.at_mut(0, c) = -v;
+    }
+    // price out basic structural variables
+    for r in 0..m {
+        let b = tab.basis[r];
+        if b < n {
+            let f = lp.c[b];
+            if f != 0.0 {
+                for c in 0..cols {
+                    let v = tab.at(r + 1, c);
+                    *tab.at_mut(0, c) += f * v;
+                }
+            }
+        }
+    }
+    // forbid artificials from re-entering: only structural + slack
+    let (ok, p2, s2) = tab.optimize(art_start);
+    counts.phase2 = p2;
+    counts.stalls += s2;
+    if !ok {
+        return LpResult::Unbounded;
+    }
+
+    let mut x = vec![0.0; n];
+    for r in 0..m {
+        let b = tab.basis[r];
+        if b < n {
+            x[b] = tab.at(r + 1, cols - 1).max(0.0);
+        }
+    }
+    let obj = lp.c.iter().zip(&x).map(|(a, b)| a * b).sum();
+    LpResult::Optimal { x, obj, pivots: counts }
 }
 
 #[cfg(test)]
@@ -1174,164 +532,6 @@ mod tests {
                 }
                 LpResult::Infeasible => panic!("trial {trial} infeasible"),
             }
-        }
-    }
-
-    // ---- Solver (warm-start) tests --------------------------------
-
-    fn solver_optimal(s: &mut Solver) -> (Vec<f64>, f64, PivotCounts) {
-        match s.solve() {
-            LpResult::Optimal { x, obj, pivots } => (x, obj, pivots),
-            other => panic!("expected optimal, got {other:?}"),
-        }
-    }
-
-    #[test]
-    fn warm_rhs_edit_resolves_from_basis() {
-        // max x + y st x <= 2, y <= 3, x + y <= 4
-        let mut s = Solver::new();
-        let x = s.add_var(1.0);
-        let y = s.add_var(1.0);
-        s.add_row_le(&[(x, 1.0)], 2.0);
-        s.add_row_le(&[(y, 1.0)], 3.0);
-        let rxy = s.add_row_le(&[(x, 1.0), (y, 1.0)], 4.0);
-        let (_, obj, p) = solver_optimal(&mut s);
-        assert!((obj - 4.0).abs() < 1e-9);
-        assert!(!p.warm);
-        // loosen the joint cap: primal re-optimization from the basis
-        s.set_rhs(rxy, 6.0);
-        let (xv, obj, p) = solver_optimal(&mut s);
-        assert!((obj - 5.0).abs() < 1e-9, "obj={obj}");
-        assert!((xv[0] - 2.0).abs() < 1e-9 && (xv[1] - 3.0).abs() < 1e-9);
-        assert!(p.warm, "expected a warm solve");
-        assert!(p.search() <= 3, "too many warm pivots: {p:?}");
-        // tighten it below the current point: dual-simplex repair
-        s.set_rhs(rxy, 3.0);
-        let (_, obj, p) = solver_optimal(&mut s);
-        assert!((obj - 3.0).abs() < 1e-9, "obj={obj}");
-        assert!(p.warm);
-        assert!(p.dual >= 1, "expected dual repair pivots: {p:?}");
-        let st = s.stats();
-        assert_eq!(st.solves, 3);
-        assert_eq!(st.cold_solves, 1);
-        assert_eq!(st.warm_solves, 2);
-    }
-
-    #[test]
-    fn warm_append_and_deactivate_row() {
-        let mut s = Solver::new();
-        let x = s.add_var(1.0);
-        s.add_row_le(&[(x, 1.0)], 5.0);
-        let (_, obj, _) = solver_optimal(&mut s);
-        assert!((obj - 5.0).abs() < 1e-9);
-        // appended binding row: warm dual repair down to x = 2
-        let tight = s.add_row_le(&[(x, 1.0)], 2.0);
-        let (_, obj, p) = solver_optimal(&mut s);
-        assert!((obj - 2.0).abs() < 1e-9, "obj={obj}");
-        assert!(p.warm && p.dual >= 1, "{p:?}");
-        // appended slack row stays warm through deactivation
-        let loose = s.add_row_le(&[(x, 1.0)], 9.0);
-        let (_, obj, p) = solver_optimal(&mut s);
-        assert!((obj - 2.0).abs() < 1e-9);
-        assert!(p.warm);
-        s.deactivate_row(loose);
-        let (_, obj, p) = solver_optimal(&mut s);
-        assert!((obj - 2.0).abs() < 1e-9);
-        assert!(p.warm, "slack-basic row removal should stay warm");
-        // removing the binding row (its slack is nonbasic) goes cold,
-        // and must still be correct
-        s.deactivate_row(tight);
-        let (_, obj, _) = solver_optimal(&mut s);
-        assert!((obj - 5.0).abs() < 1e-9, "obj={obj}");
-    }
-
-    #[test]
-    fn fix_and_unfix_var() {
-        // max x + y st x + y <= 4, x <= 2
-        let mut s = Solver::new();
-        let x = s.add_var(1.0);
-        let y = s.add_var(1.0);
-        s.add_row_le(&[(x, 1.0), (y, 1.0)], 4.0);
-        s.add_row_le(&[(x, 1.0)], 2.0);
-        let (_, obj, _) = solver_optimal(&mut s);
-        assert!((obj - 4.0).abs() < 1e-9);
-        s.fix_var(y, 1.0);
-        let (xv, obj, _) = solver_optimal(&mut s);
-        assert!((obj - 3.0).abs() < 1e-9, "obj={obj}");
-        assert!((xv[0] - 2.0).abs() < 1e-9 && (xv[1] - 1.0).abs() < 1e-9);
-        s.unfix_var(y);
-        let (_, obj, _) = solver_optimal(&mut s);
-        assert!((obj - 4.0).abs() < 1e-9);
-    }
-
-    #[test]
-    fn appended_var_enters_warm() {
-        // max x st x <= 3; then add y with obj 2, y <= 1 coupled row
-        let mut s = Solver::new();
-        let x = s.add_var(1.0);
-        s.add_row_le(&[(x, 1.0)], 3.0);
-        let (_, obj, _) = solver_optimal(&mut s);
-        assert!((obj - 3.0).abs() < 1e-9);
-        let y = s.add_var(2.0);
-        s.add_row_le(&[(y, 1.0)], 1.0);
-        let (xv, obj, p) = solver_optimal(&mut s);
-        assert!((obj - 5.0).abs() < 1e-9, "obj={obj}");
-        assert!((xv[1] - 1.0).abs() < 1e-9);
-        assert!(p.warm, "new column should enter from the warm basis");
-    }
-
-    #[test]
-    fn warm_matches_cold_on_random_edits() {
-        use crate::util::Pcg32;
-        let mut rng = Pcg32::seeded(4242);
-        for trial in 0..30 {
-            let n = 2 + rng.below(4);
-            let mu = 2 + rng.below(4);
-            let c: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 1.0)).collect();
-            let a_ub: Vec<Vec<f64>> = (0..mu)
-                .map(|_| (0..n).map(|_| rng.uniform(0.05, 1.0)).collect())
-                .collect();
-            let b_ub: Vec<f64> =
-                (0..mu).map(|_| rng.uniform(0.5, 2.0)).collect();
-            let mut lp = Lp { n, c, a_ub, b_ub, ..Default::default() };
-            let mut s = Solver::from_lp(&lp);
-            s.solve();
-            for edit in 0..4 {
-                let r = rng.below(mu);
-                let nb = rng.uniform(0.3, 2.5);
-                lp.b_ub[r] = nb;
-                s.set_rhs(RowId(r), nb);
-                let warm = s.solve();
-                let cold = solve(&lp);
-                match (warm, cold) {
-                    (
-                        LpResult::Optimal { obj: ow, x: xw, .. },
-                        LpResult::Optimal { obj: oc, .. },
-                    ) => {
-                        assert!(
-                            (ow - oc).abs() < 1e-7,
-                            "trial {trial} edit {edit}: {ow} vs {oc}"
-                        );
-                        // warm solution must satisfy the edited rows
-                        for (row, &b) in lp.a_ub.iter().zip(&lp.b_ub) {
-                            let lhs: f64 = row
-                                .iter()
-                                .zip(&xw)
-                                .map(|(a, v)| a * v)
-                                .sum();
-                            assert!(
-                                lhs <= b + 1e-6,
-                                "trial {trial} edit {edit} violated"
-                            );
-                        }
-                    }
-                    (w, c) => {
-                        panic!("trial {trial} edit {edit}: {w:?} vs {c:?}")
-                    }
-                }
-            }
-            let st = s.stats();
-            assert!(st.warm_solves > 0, "trial {trial}: never warm");
         }
     }
 

@@ -182,3 +182,112 @@ fn repeated_drain_and_refill_keeps_parity() {
         }
     }
 }
+
+/// Equal-split determinism and envy-freeness *within* an allocation
+/// class, maintained across churn: after every event of a
+/// join/depart/cap/weight stream drawn from chunky archetype pools
+/// (so bit-identical (demand, weight, cap) triples actually recur),
+/// users sharing a triple must hold **bitwise identical** allocations
+/// — same dominant share, same per-class split, same task count — so
+/// no class member can envy another. The scratch path is cross-checked
+/// on top so the property can't be satisfied by a wrong-but-symmetric
+/// allocation.
+#[test]
+fn class_members_split_bitwise_under_event_stream() {
+    let demand_pool = [
+        ResVec::cpu_mem(0.25, 1.0),
+        ResVec::cpu_mem(1.0, 0.25),
+        ResVec::cpu_mem(0.5, 0.5),
+    ];
+    let weight_pool = [1.0, 2.0];
+    let cap_pool = [None, Some(6.0), Some(18.0)];
+    let mut rng = Pcg32::seeded(31337);
+    let cluster = Cluster::google_sample(40, &mut rng);
+    let mut inc = IncrementalDrfh::new(&cluster);
+    let mut ids: Vec<UserId> = Vec::new();
+    let mut mirror: Vec<FluidUser> = Vec::new();
+    let mut collapsed_any = false;
+    for ev in 0..40 {
+        let r = rng.f64();
+        if (r < 0.4 && ids.len() < 14) || ids.len() <= 2 {
+            let u = FluidUser {
+                demand: demand_pool[rng.below(demand_pool.len())],
+                weight: weight_pool[rng.below(weight_pool.len())],
+                task_cap: cap_pool[rng.below(cap_pool.len())],
+            };
+            ids.push(inc.add_user(u.clone()));
+            mirror.push(u);
+        } else if r < 0.55 {
+            let i = rng.below(ids.len());
+            inc.remove_user(ids.remove(i));
+            mirror.remove(i);
+        } else if r < 0.8 {
+            let i = rng.below(ids.len());
+            let cap = cap_pool[rng.below(cap_pool.len())];
+            inc.set_cap(ids[i], cap);
+            mirror[i].task_cap = cap;
+        } else {
+            let i = rng.below(ids.len());
+            let w = weight_pool[rng.below(weight_pool.len())];
+            inc.set_weight(ids[i], w);
+            mirror[i].weight = w;
+        }
+        let warm = inc.allocate();
+
+        // group users by exact spec bits (a refinement of the
+        // allocator's class key: same absolute demand + same weight +
+        // same task cap certainly shares an allocation class);
+        // linear-scan grouping keeps the traversal deterministic
+        let key_of = |u: &FluidUser| -> (u64, u64, u64, u64) {
+            (
+                u.demand[0].to_bits(),
+                u.demand[1].to_bits(),
+                u.weight.to_bits(),
+                u.task_cap.unwrap_or(f64::NAN).to_bits(),
+            )
+        };
+        let mut groups: Vec<((u64, u64, u64, u64), Vec<usize>)> = Vec::new();
+        for (i, u) in mirror.iter().enumerate() {
+            let k = key_of(u);
+            match groups.iter_mut().find(|(gk, _)| *gk == k) {
+                Some((_, v)) => v.push(i),
+                None => groups.push((k, vec![i])),
+            }
+        }
+        assert!(
+            warm.alloc_classes <= groups.len(),
+            "event {ev}: {} classes from {} distinct specs",
+            warm.alloc_classes,
+            groups.len()
+        );
+        for (_, members) in &groups {
+            let f = members[0];
+            for &i in &members[1..] {
+                assert_eq!(
+                    warm.g[i].to_bits(),
+                    warm.g[f].to_bits(),
+                    "event {ev}: class members {f},{i} g diverge: {} vs {}",
+                    warm.g[f],
+                    warm.g[i]
+                );
+                assert_eq!(
+                    warm.x[i], warm.x[f],
+                    "event {ev}: class members {f},{i} split diverges"
+                );
+                assert_eq!(
+                    warm.tasks[i].to_bits(),
+                    warm.tasks[f].to_bits(),
+                    "event {ev}: class members {f},{i} tasks diverge"
+                );
+            }
+        }
+
+        collapsed_any |= warm.alloc_classes < mirror.len();
+
+        let scratch = allocator::solve(&cluster, &mirror);
+        assert_parity(&warm, &scratch, &format!("class-split event {ev}"));
+    }
+    // the stream must actually have exercised collapse: at some event
+    // two users shared an LP variable block
+    assert!(collapsed_any, "stream never produced a shared class");
+}

@@ -1,0 +1,432 @@
+//! Randomized cross-validation of the two simplex cores: the sparse
+//! revised solver (`solver::Solver`, product-form inverse + eta file)
+//! against the dense two-phase tableau (`solver::solve`), which stays
+//! in-tree precisely to be this reference.
+//!
+//! Instance families: guaranteed-feasible (random point + slacked
+//! rows, so negative coefficients and bounded/unbounded mixes all
+//! occur), certificate-infeasible (appended nonnegative row with
+//! negative rhs), certificate-unbounded (costed variable absent from
+//! every row), and degenerate (duplicated rows/columns, zero-slack
+//! rows). On every instance both cores must return the same result
+//! variant, and optimal objectives must agree to **1e-9** (relative);
+//! both `x` vectors are checked feasible against the raw LP data.
+//!
+//! The edit-stream test drives the sparse solver's warm path through
+//! random `set_rhs` / `set_coeff` / `set_obj` / row-(de)activation /
+//! var-append / fix-unfix sequences while an independently maintained
+//! shadow LP is solved dense from scratch after every edit — warm and
+//! scratch must never disagree.
+//!
+//! `SOLVER_FUZZ_SMOKE=1` shrinks the trial counts for the dedicated
+//! CI step; the full counts run in the regular `cargo test` pass.
+
+use drfh::solver::{self, Lp, LpResult, RowId, Solver, VarId};
+use drfh::util::Pcg32;
+
+fn smoke() -> bool {
+    std::env::var_os("SOLVER_FUZZ_SMOKE").is_some()
+}
+
+/// Guaranteed-feasible instance: draw a nonnegative point `x0`, then
+/// give every `<=` row a nonnegative slack at `x0` and every `==` row
+/// the exact rhs. Coefficients may be negative, so boundedness is NOT
+/// guaranteed — both cores must agree on Unbounded too.
+fn solvable_lp(rng: &mut Pcg32) -> Lp {
+    let n = 1 + rng.below(6);
+    let mu = 1 + rng.below(6);
+    let me = if rng.f64() < 0.4 { rng.below(3) } else { 0 };
+    let x0: Vec<f64> = (0..n)
+        .map(|_| if rng.f64() < 0.3 { 0.0 } else { rng.uniform(0.0, 3.0) })
+        .collect();
+    let mut lp = Lp {
+        n,
+        c: (0..n).map(|_| rng.uniform(-2.0, 3.0)).collect(),
+        ..Lp::default()
+    };
+    for _ in 0..mu {
+        let row: Vec<f64> = (0..n)
+            .map(|_| {
+                if rng.f64() < 0.35 {
+                    0.0
+                } else {
+                    rng.uniform(-1.5, 2.5)
+                }
+            })
+            .collect();
+        let at_x0: f64 = row.iter().zip(&x0).map(|(a, x)| a * x).sum();
+        // zero slack with some probability: degenerate vertex at x0
+        let slack =
+            if rng.f64() < 0.25 { 0.0 } else { rng.uniform(0.0, 4.0) };
+        lp.b_ub.push(at_x0 + slack);
+        lp.a_ub.push(row);
+    }
+    for _ in 0..me {
+        let row: Vec<f64> = (0..n)
+            .map(|_| {
+                if rng.f64() < 0.35 {
+                    0.0
+                } else {
+                    rng.uniform(-1.0, 2.0)
+                }
+            })
+            .collect();
+        let at_x0: f64 = row.iter().zip(&x0).map(|(a, x)| a * x).sum();
+        lp.b_eq.push(at_x0);
+        lp.a_eq.push(row);
+    }
+    lp
+}
+
+/// Certificate-infeasible: a nonnegative row with negative rhs can
+/// never be satisfied by x >= 0.
+fn infeasible_lp(rng: &mut Pcg32) -> Lp {
+    let mut lp = solvable_lp(rng);
+    let row: Vec<f64> =
+        (0..lp.n).map(|_| rng.uniform(0.1, 1.0)).collect();
+    let rhs = -rng.uniform(0.5, 2.0);
+    if rng.f64() < 0.5 {
+        lp.a_ub.push(row);
+        lp.b_ub.push(rhs);
+    } else {
+        lp.a_eq.push(row);
+        lp.b_eq.push(rhs);
+    }
+    lp
+}
+
+/// Certificate-unbounded: append a variable with positive cost that
+/// appears in no row of the (feasible) instance.
+fn unbounded_lp(rng: &mut Pcg32) -> Lp {
+    let mut lp = solvable_lp(rng);
+    lp.n += 1;
+    lp.c.push(rng.uniform(0.5, 2.0));
+    for row in lp.a_ub.iter_mut().chain(lp.a_eq.iter_mut()) {
+        row.push(0.0);
+    }
+    lp
+}
+
+/// Degeneracy stress: duplicate a row and a column of a solvable
+/// instance verbatim.
+fn degenerate_lp(rng: &mut Pcg32) -> Lp {
+    let mut lp = solvable_lp(rng);
+    if !lp.a_ub.is_empty() {
+        let r = rng.below(lp.a_ub.len());
+        lp.a_ub.push(lp.a_ub[r].clone());
+        lp.b_ub.push(lp.b_ub[r]);
+    }
+    let j = rng.below(lp.n);
+    lp.n += 1;
+    lp.c.push(lp.c[j]);
+    for row in lp.a_ub.iter_mut().chain(lp.a_eq.iter_mut()) {
+        let a = row[j];
+        row.push(a);
+    }
+    lp
+}
+
+fn assert_feasible(lp: &Lp, x: &[f64], ctx: &str) {
+    assert_eq!(x.len(), lp.n, "{ctx}: solution length");
+    for (j, &xj) in x.iter().enumerate() {
+        assert!(xj >= -1e-9, "{ctx}: x[{j}] = {xj} negative");
+    }
+    for (i, row) in lp.a_ub.iter().enumerate() {
+        let lhs: f64 = row.iter().zip(x).map(|(a, v)| a * v).sum();
+        assert!(
+            lhs <= lp.b_ub[i] + 1e-6 * (1.0 + lp.b_ub[i].abs()),
+            "{ctx}: ub row {i} violated: {lhs} > {}",
+            lp.b_ub[i]
+        );
+    }
+    for (i, row) in lp.a_eq.iter().enumerate() {
+        let lhs: f64 = row.iter().zip(x).map(|(a, v)| a * v).sum();
+        assert!(
+            (lhs - lp.b_eq[i]).abs() <= 1e-6 * (1.0 + lp.b_eq[i].abs()),
+            "{ctx}: eq row {i} violated: {lhs} != {}",
+            lp.b_eq[i]
+        );
+    }
+}
+
+/// The core check: identical result variant; on Optimal, objectives
+/// within 1e-9 (relative) and both solutions feasible.
+fn check_parity(lp: &Lp, ctx: &str) {
+    let dense = solver::solve(lp);
+    let sparse = Solver::from_lp(lp).solve();
+    match (&dense, &sparse) {
+        (
+            LpResult::Optimal { x: xd, obj: od, .. },
+            LpResult::Optimal { x: xs, obj: os, .. },
+        ) => {
+            assert!(
+                (od - os).abs() <= 1e-9 * (1.0 + od.abs()),
+                "{ctx}: objective parity: dense {od} vs sparse {os}"
+            );
+            assert_feasible(lp, xd, &format!("{ctx} dense"));
+            assert_feasible(lp, xs, &format!("{ctx} sparse"));
+            // the sparse objective is consistent with its own x
+            let dot: f64 = lp.c.iter().zip(xs).map(|(c, v)| c * v).sum();
+            assert!(
+                (dot - os).abs() <= 1e-7 * (1.0 + os.abs()),
+                "{ctx}: sparse obj {os} vs c.x {dot}"
+            );
+        }
+        (LpResult::Infeasible, LpResult::Infeasible)
+        | (LpResult::Unbounded, LpResult::Unbounded) => {}
+        _ => panic!(
+            "{ctx}: result variant mismatch: dense {dense:?} vs sparse \
+             {sparse:?}"
+        ),
+    }
+}
+
+#[test]
+fn sparse_dense_parity_on_random_instances() {
+    let trials = if smoke() { 40 } else { 160 };
+    let mut rng = Pcg32::seeded(0xF0221);
+    for t in 0..trials {
+        let lp = solvable_lp(&mut rng);
+        check_parity(&lp, &format!("solvable trial {t}"));
+    }
+}
+
+#[test]
+fn infeasible_and_unbounded_instances_agree() {
+    let trials = if smoke() { 20 } else { 80 };
+    let mut rng = Pcg32::seeded(0xF0222);
+    for t in 0..trials {
+        let lp = infeasible_lp(&mut rng);
+        let ctx = format!("infeasible trial {t}");
+        assert_eq!(
+            solver::solve(&lp),
+            LpResult::Infeasible,
+            "{ctx}: dense"
+        );
+        check_parity(&lp, &ctx);
+
+        let lp = unbounded_lp(&mut rng);
+        let ctx = format!("unbounded trial {t}");
+        assert_eq!(solver::solve(&lp), LpResult::Unbounded, "{ctx}: dense");
+        check_parity(&lp, &ctx);
+    }
+}
+
+#[test]
+fn degenerate_instances_agree() {
+    let trials = if smoke() { 20 } else { 80 };
+    let mut rng = Pcg32::seeded(0xF0223);
+    for t in 0..trials {
+        let lp = degenerate_lp(&mut rng);
+        check_parity(&lp, &format!("degenerate trial {t}"));
+    }
+}
+
+// ---- warm-vs-cold edit streams ------------------------------------
+
+/// Dense mirror of the incrementally edited solver state. Fixed
+/// variables are only ever fixed at 0.0 here, so mirroring them is
+/// "column vanishes": zero objective + zero coefficients.
+struct Shadow {
+    obj: Vec<f64>,
+    fixed: Vec<bool>,
+    rows: Vec<ShadowRow>,
+}
+
+struct ShadowRow {
+    coeffs: Vec<f64>,
+    rhs: f64,
+    eq: bool,
+    active: bool,
+}
+
+impl Shadow {
+    fn to_lp(&self) -> Lp {
+        let n = self.obj.len();
+        let mut lp = Lp {
+            n,
+            c: (0..n)
+                .map(|j| if self.fixed[j] { 0.0 } else { self.obj[j] })
+                .collect(),
+            ..Lp::default()
+        };
+        for row in &self.rows {
+            if !row.active {
+                continue;
+            }
+            let coeffs: Vec<f64> = (0..n)
+                .map(|j| if self.fixed[j] { 0.0 } else { row.coeffs[j] })
+                .collect();
+            if row.eq {
+                lp.a_eq.push(coeffs);
+                lp.b_eq.push(row.rhs);
+            } else {
+                lp.a_ub.push(coeffs);
+                lp.b_ub.push(row.rhs);
+            }
+        }
+        lp
+    }
+}
+
+#[test]
+fn warm_vs_cold_after_edit_streams() {
+    let streams = if smoke() { 6 } else { 18 };
+    let edits = if smoke() { 12 } else { 24 };
+    for stream in 0..streams {
+        let mut rng = Pcg32::seeded(0xED17 + stream);
+        // seed state: a solvable instance, loaded into both sides
+        let lp0 = solvable_lp(&mut rng);
+        let mut s = Solver::new();
+        let mut vids: Vec<VarId> = Vec::new();
+        let mut rids: Vec<RowId> = Vec::new();
+        let mut shadow = Shadow {
+            obj: lp0.c.clone(),
+            fixed: vec![false; lp0.n],
+            rows: Vec::new(),
+        };
+        for &c in &lp0.c {
+            vids.push(s.add_var(c));
+        }
+        for (row, &rhs) in lp0.a_ub.iter().zip(&lp0.b_ub) {
+            let coeffs: Vec<(VarId, f64)> = vids
+                .iter()
+                .zip(row)
+                .filter(|(_, &a)| a != 0.0)
+                .map(|(&v, &a)| (v, a))
+                .collect();
+            rids.push(s.add_row_le(&coeffs, rhs));
+            shadow.rows.push(ShadowRow {
+                coeffs: row.clone(),
+                rhs,
+                eq: false,
+                active: true,
+            });
+        }
+        for (row, &rhs) in lp0.a_eq.iter().zip(&lp0.b_eq) {
+            let coeffs: Vec<(VarId, f64)> = vids
+                .iter()
+                .zip(row)
+                .filter(|(_, &a)| a != 0.0)
+                .map(|(&v, &a)| (v, a))
+                .collect();
+            rids.push(s.add_row_eq(&coeffs, rhs));
+            shadow.rows.push(ShadowRow {
+                coeffs: row.clone(),
+                rhs,
+                eq: true,
+                active: true,
+            });
+        }
+
+        for ev in 0..edits {
+            let ctx = format!("stream {stream} edit {ev}");
+            let r = rng.f64();
+            if r < 0.25 {
+                let i = rng.below(rids.len());
+                let rhs = rng.uniform(-1.0, 5.0);
+                s.set_rhs(rids[i], rhs);
+                shadow.rows[i].rhs = rhs;
+            } else if r < 0.45 {
+                let i = rng.below(rids.len());
+                let j = rng.below(vids.len());
+                let a = if rng.f64() < 0.25 {
+                    0.0
+                } else {
+                    rng.uniform(-1.5, 2.5)
+                };
+                s.set_coeff(rids[i], vids[j], a);
+                shadow.rows[i].coeffs[j] = a;
+            } else if r < 0.6 {
+                let j = rng.below(vids.len());
+                let c = rng.uniform(-2.0, 3.0);
+                s.set_obj(vids[j], c);
+                shadow.obj[j] = c;
+            } else if r < 0.7 {
+                let i = rng.below(rids.len());
+                if shadow.rows[i].active {
+                    s.deactivate_row(rids[i]);
+                    shadow.rows[i].active = false;
+                } else {
+                    s.activate_row(rids[i]);
+                    shadow.rows[i].active = true;
+                }
+            } else if r < 0.8 {
+                let j = rng.below(vids.len());
+                if shadow.fixed[j] {
+                    s.unfix_var(vids[j]);
+                    shadow.fixed[j] = false;
+                } else {
+                    s.fix_var(vids[j], 0.0);
+                    shadow.fixed[j] = true;
+                }
+            } else if r < 0.9 {
+                let c = rng.uniform(-1.0, 2.0);
+                vids.push(s.add_var(c));
+                shadow.obj.push(c);
+                shadow.fixed.push(false);
+                for row in &mut shadow.rows {
+                    row.coeffs.push(0.0);
+                }
+            } else {
+                let coeffs: Vec<f64> = (0..vids.len())
+                    .map(|_| {
+                        if rng.f64() < 0.5 {
+                            0.0
+                        } else {
+                            rng.uniform(-1.0, 2.0)
+                        }
+                    })
+                    .collect();
+                let rhs = rng.uniform(0.0, 5.0);
+                let sparse_coeffs: Vec<(VarId, f64)> = vids
+                    .iter()
+                    .zip(&coeffs)
+                    .filter(|(_, &a)| a != 0.0)
+                    .map(|(&v, &a)| (v, a))
+                    .collect();
+                rids.push(s.add_row_le(&sparse_coeffs, rhs));
+                shadow.rows.push(ShadowRow {
+                    coeffs,
+                    rhs,
+                    eq: false,
+                    active: true,
+                });
+            }
+
+            let warm = s.solve();
+            let mirror = shadow.to_lp();
+            let dense = solver::solve(&mirror);
+            let cold = Solver::from_lp(&mirror).solve();
+            match (&dense, &warm) {
+                (
+                    LpResult::Optimal { obj: od, .. },
+                    LpResult::Optimal { x: xw, obj: ow, .. },
+                ) => {
+                    assert!(
+                        (od - ow).abs() <= 1e-9 * (1.0 + od.abs()),
+                        "{ctx}: warm obj {ow} vs dense {od}"
+                    );
+                    // the warm solution, restricted to unfixed
+                    // columns, must satisfy the mirror LP
+                    assert_feasible(&mirror, xw, &format!("{ctx} warm"));
+                }
+                (LpResult::Infeasible, LpResult::Infeasible)
+                | (LpResult::Unbounded, LpResult::Unbounded) => {}
+                _ => panic!(
+                    "{ctx}: dense {dense:?} vs warm {warm:?}"
+                ),
+            }
+            assert_eq!(
+                std::mem::discriminant(&cold),
+                std::mem::discriminant(&warm),
+                "{ctx}: cold-sparse vs warm-sparse variant"
+            );
+        }
+        let st = s.stats();
+        assert!(
+            st.warm_solves > 0,
+            "stream {stream}: warm path never engaged: {st:?}"
+        );
+    }
+}
