@@ -1,0 +1,280 @@
+//! §Perf + robustness harness for the fault-injection layer: the
+//! Fig. 5 Best-Fit configuration at k = 2,000 servers under a
+//! crash-rate × retry-policy sweep, on the wheel + streaming data
+//! plane.
+//!
+//! Measured per cell: wall time, goodput / wasted service hours,
+//! evictions, retries, lost tasks, and fairness-recovery latency.
+//! Alongside the sweep the bench enforces the two replay guarantees
+//! cheaply (the bit-exact proofs live in `tests/engine_parity.rs`):
+//!
+//! * `FaultPlan::none()` parity — the no-fault run matches the
+//!   pre-fault engine's counts at 1 shard and at the core count;
+//! * seeded replay — the same plan + seed reproduces goodput and
+//!   wasted-work floats bit-for-bit, sharded or not.
+//!
+//! Results go to `BENCH_faults.json` at the repo root (override with
+//! `BENCH_OUT=/path.json`); CI runs the small-scale smoke via
+//! `FAULT_SMOKE=1`.
+//!
+//! Run: `cargo bench --bench fault_scale`
+
+use drfh::experiments::EvalSetup;
+use drfh::metrics::MetricsMode;
+use drfh::sched::BestFitDrfh;
+use drfh::sim::{
+    run, FaultPlan, QueueKind, RetryPolicy, ShardCount, SimOpts, SimReport,
+};
+use drfh::util::bench::{bench_n, header, write_suite_json, BenchResult};
+use drfh::util::json::Json;
+use drfh::workload::{generate_faults, FaultGenConfig};
+
+struct Case {
+    bench: BenchResult,
+    report: SimReport,
+}
+
+fn run_case(
+    name: &str,
+    setup: &EvalSetup,
+    plan: &FaultPlan,
+    retry: RetryPolicy,
+    shards: usize,
+) -> Case {
+    let mut report = None;
+    let bench = bench_n(name, 1, || {
+        let opts = SimOpts {
+            queue: QueueKind::Wheel,
+            metrics: MetricsMode::streaming(),
+            shards: ShardCount::Fixed(shards),
+            faults: plan.clone(),
+            retry,
+            ..setup.opts.clone()
+        };
+        let rep = run(
+            setup.cluster.clone(),
+            &setup.trace,
+            Box::new(BestFitDrfh::default()),
+            opts,
+        );
+        let placed = rep.tasks_placed;
+        report = Some(rep);
+        placed
+    });
+    Case { bench, report: report.expect("bench ran at least once") }
+}
+
+fn mean_recovery(rep: &SimReport) -> f64 {
+    let times: Vec<f64> =
+        rep.outages.iter().filter_map(|o| o.recovery_time()).collect();
+    if times.is_empty() {
+        0.0
+    } else {
+        times.iter().sum::<f64>() / times.len() as f64
+    }
+}
+
+fn main() {
+    let smoke = std::env::var_os("FAULT_SMOKE").is_some();
+    let (servers, users, duration) = if smoke {
+        (200usize, 20usize, 3_600.0f64)
+    } else {
+        (2_000, 100, 32_400.0)
+    };
+    let setup = EvalSetup::with_duration(2024, servers, users, duration);
+    let offered = setup.trace.total_tasks();
+    let hw = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    println!(
+        "fault_scale: k={servers} n={users} horizon={duration:.0}s \
+         ({offered} tasks offered, {hw} cores){}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    // ---- replay guards first: none-plan parity and seeded replay
+    header("fault_scale: replay guards");
+    let none = FaultPlan::none();
+    let baseline =
+        run_case("none-s1", &setup, &none, RetryPolicy::default(), 1);
+    let baseline_sharded =
+        run_case("none-shw", &setup, &none, RetryPolicy::default(), hw);
+    assert_eq!(
+        baseline.report.tasks_placed, baseline_sharded.report.tasks_placed,
+        "FaultPlan::none() parity: placement counts diverged across shards"
+    );
+    assert_eq!(
+        baseline.report.job_stats, baseline_sharded.report.job_stats,
+        "FaultPlan::none() parity: job stats diverged across shards"
+    );
+    assert_eq!(baseline.report.evictions, 0);
+    assert_eq!(baseline.report.wasted_s, 0.0);
+    assert!(baseline.report.outages.is_empty());
+
+    let guard_cfg = FaultGenConfig {
+        crash_rate: if smoke { 2e-5 } else { 2e-6 },
+        mean_downtime: 1_800.0,
+        flash_at: Some(duration / 3.0),
+        flash_fraction: 0.2,
+        flash_downtime: 1_800.0,
+        ..FaultGenConfig::default()
+    };
+    let guard_plan =
+        generate_faults(&guard_cfg, servers, duration, setup.seed);
+    let replay_a =
+        run_case("replay-a", &setup, &guard_plan, RetryPolicy::default(), 1);
+    let replay_b =
+        run_case("replay-b", &setup, &guard_plan, RetryPolicy::default(), 1);
+    let replay_s =
+        run_case("replay-shw", &setup, &guard_plan, RetryPolicy::default(), hw);
+    for (label, r) in
+        [("same-seed rerun", &replay_b), ("sharded rerun", &replay_s)]
+    {
+        assert_eq!(
+            replay_a.report.goodput_s.to_bits(),
+            r.report.goodput_s.to_bits(),
+            "{label}: goodput not bit-identical"
+        );
+        assert_eq!(
+            replay_a.report.wasted_s.to_bits(),
+            r.report.wasted_s.to_bits(),
+            "{label}: wasted work not bit-identical"
+        );
+        assert_eq!(
+            (
+                replay_a.report.tasks_placed,
+                replay_a.report.evictions,
+                replay_a.report.retries,
+                replay_a.report.tasks_lost,
+            ),
+            (
+                r.report.tasks_placed,
+                r.report.evictions,
+                r.report.retries,
+                r.report.tasks_lost,
+            ),
+            "{label}: counters diverged"
+        );
+        assert_eq!(
+            replay_a.report.outages, r.report.outages,
+            "{label}: outage records diverged"
+        );
+    }
+    assert!(
+        replay_a.report.evictions > 0,
+        "guard plan evicted nothing — the sweep below would be vacuous"
+    );
+    println!(
+        "guards ok: none-plan parity at S=1/{hw}, seeded replay \
+         bit-identical ({} evictions)",
+        replay_a.report.evictions
+    );
+
+    // ---- the sweep: crash rate x retry policy
+    let crash_rates: &[f64] = if smoke {
+        &[1e-5, 4e-5]
+    } else {
+        &[1e-6, 4e-6]
+    };
+    let policies: &[(&str, RetryPolicy)] = &[
+        ("no-retry", RetryPolicy { max_attempts: 1, ..RetryPolicy::default() }),
+        ("default", RetryPolicy::default()),
+        (
+            "eager",
+            RetryPolicy {
+                max_attempts: 6,
+                base: 5.0,
+                cap: 600.0,
+                jitter: 0.5,
+            },
+        ),
+    ];
+    header("fault_scale: crash rate x retry policy (Best-Fit, sharded)");
+    println!(
+        "{:<22} {:>9} {:>11} {:>10} {:>7} {:>7} {:>6} {:>10}",
+        "case", "outages", "goodput h", "wasted h", "evict", "retry",
+        "lost", "mean rec s"
+    );
+    let mut cells: Vec<(String, f64, Case)> = Vec::new();
+    for &rate in crash_rates {
+        let cfg = FaultGenConfig {
+            crash_rate: rate,
+            mean_downtime: 1_800.0,
+            ..FaultGenConfig::default()
+        };
+        let plan = generate_faults(&cfg, servers, duration, setup.seed);
+        for (pname, policy) in policies {
+            let name = format!("crash-{rate:.0e}-{pname}");
+            let case = run_case(&name, &setup, &plan, *policy, hw);
+            let r = &case.report;
+            println!(
+                "{:<22} {:>9} {:>11.1} {:>10.1} {:>7} {:>7} {:>6} {:>10.0}",
+                name,
+                r.outages.len(),
+                r.goodput_s / 3600.0,
+                r.wasted_s / 3600.0,
+                r.evictions,
+                r.retries,
+                r.tasks_lost,
+                mean_recovery(r),
+            );
+            cells.push((name, rate, case));
+        }
+    }
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_faults.json")
+            .to_string()
+    });
+    let mut meta: Vec<(String, Json)> = vec![
+        ("servers".to_string(), Json::Num(servers as f64)),
+        ("users".to_string(), Json::Num(users as f64)),
+        ("horizon_s".to_string(), Json::Num(duration)),
+        ("tasks_offered".to_string(), Json::Num(offered as f64)),
+        ("smoke".to_string(), Json::Bool(smoke)),
+        ("cores".to_string(), Json::Num(hw as f64)),
+        (
+            "guard_evictions".to_string(),
+            Json::Num(replay_a.report.evictions as f64),
+        ),
+        (
+            "baseline_goodput_s".to_string(),
+            Json::Num(baseline.report.goodput_s),
+        ),
+    ];
+    for (name, rate, case) in &cells {
+        let r = &case.report;
+        meta.push((format!("{name}_crash_rate"), Json::Num(*rate)));
+        meta.push((format!("{name}_goodput_s"), Json::Num(r.goodput_s)));
+        meta.push((format!("{name}_wasted_s"), Json::Num(r.wasted_s)));
+        meta.push((
+            format!("{name}_evictions"),
+            Json::Num(r.evictions as f64),
+        ));
+        meta.push((format!("{name}_retries"), Json::Num(r.retries as f64)));
+        meta.push((
+            format!("{name}_tasks_lost"),
+            Json::Num(r.tasks_lost as f64),
+        ));
+        meta.push((
+            format!("{name}_mean_recovery_s"),
+            Json::Num(mean_recovery(r)),
+        ));
+    }
+    let meta_refs: Vec<(&str, Json)> =
+        meta.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    let mut results = vec![
+        baseline.bench,
+        baseline_sharded.bench,
+        replay_a.bench,
+        replay_b.bench,
+        replay_s.bench,
+    ];
+    results.extend(cells.into_iter().map(|(_, _, c)| c.bench));
+    let path = std::path::PathBuf::from(&out);
+    if write_suite_json(&path, "fault_scale", &meta_refs, &results) {
+        println!("\nwrote {}", path.display());
+    } else {
+        println!("\ncould not write {} (read-only fs?)", path.display());
+    }
+}

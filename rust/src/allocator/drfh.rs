@@ -188,6 +188,35 @@ pub fn solve(cluster: &Cluster, users: &[FluidUser]) -> FluidAllocation {
     solve_classes(&cluster.classes(), &cluster.total_capacity(), users)
 }
 
+/// The well-defined allocation for a pool with an exhausted resource
+/// (a fault plan can crash every server holding one — see
+/// `sim::faults`): everybody gets zero. Without this guard the
+/// capacity rows divide by the zero total and feed NaN/inf into the
+/// simplex. Demands still normalize finitely
+/// ([`NormalizedDemand::from_absolute`] zero-total semantics).
+fn empty_allocation(
+    classes: &[ServerClass],
+    total: &ResVec,
+    users: &[FluidUser],
+) -> FluidAllocation {
+    let n = users.len();
+    let demands: Vec<NormalizedDemand> = users
+        .iter()
+        .map(|u| NormalizedDemand::from_absolute(&u.demand, total))
+        .collect();
+    FluidAllocation {
+        classes: classes.to_vec(),
+        total: *total,
+        demands,
+        x: vec![vec![0.0; classes.len()]; n],
+        g: vec![0.0; n],
+        tasks: vec![0.0; n],
+        lp_pivots: 0,
+        lp_solves: 0,
+        alloc_classes: 0,
+    }
+}
+
 /// Same, over pre-aggregated server classes.
 pub fn solve_classes(
     classes: &[ServerClass],
@@ -197,6 +226,9 @@ pub fn solve_classes(
     let n = users.len();
     let nc = classes.len();
     let m = total.dims();
+    if (0..m).any(|r| total[r] <= 0.0) {
+        return empty_allocation(classes, total, users);
+    }
     let Inputs { weights, demands, caps, cap_share } =
         inputs(classes, total, users);
 
@@ -394,6 +426,9 @@ pub fn solve_classes_per_user(
     let n = users.len();
     let nc = classes.len();
     let m = total.dims();
+    if (0..m).any(|r| total[r] <= 0.0) {
+        return empty_allocation(classes, total, users);
+    }
     let Inputs { weights, demands, caps, cap_share } =
         inputs(classes, total, users);
 
@@ -642,6 +677,37 @@ mod tests {
         let a = solve(&cluster, &users);
         assert!(a.tasks[0].abs() < 1e-9);
         assert!(a.tasks[1] > 11.0, "tasks={:?}", a.tasks);
+    }
+
+    /// Regression: a resource whose pool total hit zero (every server
+    /// holding it crashed) must yield the empty allocation, not NaN/inf
+    /// capacity rows inside the simplex.
+    #[test]
+    fn exhausted_resource_yields_empty_allocation() {
+        let users = fig1_users();
+        for caps in [
+            vec![ResVec::cpu_mem(0.0, 12.0)], // one resource exhausted
+            vec![ResVec::cpu_mem(0.0, 0.0)],  // pool fully gone
+            vec![ResVec::cpu_mem(0.0, 4.0), ResVec::cpu_mem(0.0, 8.0)],
+        ] {
+            let cluster = Cluster::from_capacities(&caps);
+            for a in
+                [solve(&cluster, &users), solve_per_user(&cluster, &users)]
+            {
+                assert!(a.g.iter().all(|&g| g == 0.0), "g = {:?}", a.g);
+                assert!(a.tasks.iter().all(|&t| t == 0.0));
+                assert!(a
+                    .x
+                    .iter()
+                    .all(|xi| xi.iter().all(|&v| v == 0.0)));
+                assert_eq!(a.lp_solves, 0);
+                assert_eq!(a.alloc_classes, 0);
+                assert!(a
+                    .demands
+                    .iter()
+                    .all(|d| d.norm.as_slice().iter().all(|v| v.is_finite())));
+            }
+        }
     }
 
     #[test]

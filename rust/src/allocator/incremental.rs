@@ -191,8 +191,14 @@ impl IncrementalDrfh {
         for class in &classes {
             let mut rows = Vec::with_capacity(m);
             for r in 0..m {
-                let cap_share =
-                    class.capacity[r] * class.count as f64 / total[r];
+                // zero-total guard (mirrors `drfh::empty_allocation`):
+                // an unprovisioned resource contributes no capacity,
+                // not a 0/0 NaN rhs
+                let cap_share = if total[r] > 0.0 {
+                    class.capacity[r] * class.count as f64 / total[r]
+                } else {
+                    0.0
+                };
                 rows.push(solver.add_row_le(&[], cap_share));
             }
             cap_rows.push(rows);
@@ -410,6 +416,27 @@ impl IncrementalDrfh {
             .clone();
         spec.weight = weight;
         self.rekey(id, spec);
+    }
+
+    /// Capacity event: server class `class` now has `count` live
+    /// members (a crash shrinks it, a recovery restores it — see
+    /// `sim::faults`). A pure rhs retune of the class's capacity rows:
+    /// the warm basis survives, the dual simplex repairs any row the
+    /// new rhs left violated. Shares stay normalized against the
+    /// *nominal* pool total cached at construction, so demands, class
+    /// keys, and every standing coefficient are untouched — only the
+    /// capacity available to the filling rounds moves.
+    pub fn set_class_count(&mut self, class: usize, count: usize) {
+        self.classes[class].count = count;
+        let cap = self.classes[class].capacity;
+        for r in 0..self.m {
+            let cap_share = if self.total[r] > 0.0 {
+                cap[r] * count as f64 / self.total[r]
+            } else {
+                0.0
+            };
+            self.solver.set_rhs(self.cap_rows[class][r], cap_share);
+        }
     }
 
     /// Re-equalize: run the progressive-filling rounds for the current
@@ -766,6 +793,66 @@ mod tests {
         assert_matches_scratch(&mut inc, &cluster);
         inc.remove_user(extra);
         assert_eq!(inc.lp_vars(), before);
+    }
+
+    /// `set_class_count` (the fault layer's capacity edit) must agree
+    /// with a from-scratch solve over the shrunken class list — and
+    /// recover exactly when the count is restored.
+    #[test]
+    fn class_count_edit_matches_scratch() {
+        let caps = [
+            ResVec::cpu_mem(2.0, 12.0),
+            ResVec::cpu_mem(2.0, 12.0),
+            ResVec::cpu_mem(12.0, 2.0),
+        ];
+        let cluster = Cluster::from_capacities(&caps);
+        let mut inc = IncrementalDrfh::new(&cluster);
+        for u in fig1_users() {
+            inc.add_user(u);
+        }
+        let nominal = inc.allocate();
+        // crash one of the two (2, 12) servers: its class count drops
+        let mem_class = (0..inc.classes().len())
+            .find(|&c| inc.classes()[c].count == 2)
+            .expect("duplicated class");
+        inc.set_class_count(mem_class, 1);
+        let degraded = inc.allocate();
+        let scratch = allocator::drfh::solve_classes(
+            inc.classes(),
+            inc.total(),
+            &inc.users(),
+        );
+        for i in 0..degraded.g.len() {
+            assert!(
+                (degraded.g[i] - scratch.g[i]).abs() < 1e-8,
+                "user {i}: warm g {} vs scratch {}",
+                degraded.g[i],
+                scratch.g[i]
+            );
+            assert!(
+                degraded.g[i] < nominal.g[i] - 1e-9,
+                "losing a server must shrink shares: {} vs {}",
+                degraded.g[i],
+                nominal.g[i]
+            );
+        }
+        assert!(degraded.is_feasible(1e-7));
+        // recovery: restoring the count restores the nominal optimum
+        inc.set_class_count(mem_class, 2);
+        let recovered = inc.allocate();
+        for i in 0..recovered.g.len() {
+            assert!(
+                (recovered.g[i] - nominal.g[i]).abs() < 1e-8,
+                "user {i}: recovered g {} vs nominal {}",
+                recovered.g[i],
+                nominal.g[i]
+            );
+        }
+        // a fully-crashed class is a legal edit too
+        inc.set_class_count(mem_class, 0);
+        let gone = inc.allocate();
+        assert!(gone.is_feasible(1e-7));
+        assert!(gone.g.iter().all(|g| g.is_finite()));
     }
 
     #[test]

@@ -33,10 +33,27 @@ pub struct NormalizedDemand {
 
 impl NormalizedDemand {
     /// Normalize an absolute per-task demand against pool totals.
+    ///
+    /// A resource whose pool total is zero (every server holding it is
+    /// down, or it was never provisioned) contributes a zero share
+    /// rather than a NaN/inf from the division; if *every* demanded
+    /// resource has an empty pool the normalized profile is all-zero
+    /// and `dominant_share_of`/`tasks_of` report +inf (nothing binds —
+    /// callers treat the user as unallocatable, see `drfh::solve`).
     pub fn from_absolute(demand: &ResVec, total: &ResVec) -> Self {
-        let share = demand.div(total);
+        let m = demand.dims();
+        let mut share = ResVec::zeros(m);
+        for r in 0..m {
+            if total[r] > 0.0 {
+                share[r] = demand[r] / total[r];
+            }
+        }
         let dominant = share.argmax();
-        let norm = share.scale(1.0 / share[dominant]);
+        let norm = if share[dominant] > 0.0 {
+            share.scale(1.0 / share[dominant])
+        } else {
+            ResVec::zeros(m)
+        };
         NormalizedDemand { share, norm, dominant }
     }
 
@@ -83,6 +100,33 @@ mod tests {
         assert_eq!(nd.dominant, 1); // memory
         assert!((nd.norm[0] - 0.2).abs() < 1e-12);
         assert!((nd.norm[1] - 1.0).abs() < 1e-12);
+    }
+
+    /// Regression: a zeroed pool dimension (all servers holding that
+    /// resource down) must not poison the normalization with NaN/inf.
+    #[test]
+    fn zero_total_yields_finite_normalization() {
+        let demand = ResVec::cpu_mem(0.2, 1.0);
+        // memory pool empty: the share is zero there, CPU dominates
+        let nd = NormalizedDemand::from_absolute(
+            &demand,
+            &ResVec::cpu_mem(14.0, 0.0),
+        );
+        assert!((nd.share[0] - 0.2 / 14.0).abs() < 1e-12);
+        assert_eq!(nd.share[1], 0.0);
+        assert_eq!(nd.dominant, 0);
+        assert!((nd.norm[0] - 1.0).abs() < 1e-12);
+        assert_eq!(nd.norm[1], 0.0);
+        assert!(nd.share.as_slice().iter().all(|x| x.is_finite()));
+        assert!(nd.norm.as_slice().iter().all(|x| x.is_finite()));
+        // fully empty pool: all-zero profile, nothing binds
+        let nd = NormalizedDemand::from_absolute(
+            &demand,
+            &ResVec::cpu_mem(0.0, 0.0),
+        );
+        assert!(nd.share.as_slice().iter().all(|&x| x == 0.0));
+        assert!(nd.norm.as_slice().iter().all(|&x| x == 0.0));
+        assert_eq!(nd.dominant_share_of(&ResVec::cpu_mem(0.5, 0.5)), f64::INFINITY);
     }
 
     #[test]

@@ -658,7 +658,7 @@ fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
 /// `(virtual path, source)` pairs. The linter must report at least
 /// one finding on every entry: the self-tests assert per-rule hits,
 /// and `drfh lint --corpus true` must exit non-zero in CI.
-pub const VIOLATION_CORPUS: [(&str, &str); 7] = [
+pub const VIOLATION_CORPUS: [(&str, &str); 8] = [
     (
         "sched/corpus_hash_iter.rs",
         r#"use std::collections::HashMap;
@@ -713,6 +713,20 @@ impl Scheduler for P {
         "tests/corpus_test_float_sort.rs",
         r#"fn f(xs: &mut Vec<f64>) {
     xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+"#,
+    ),
+    // the fault layer's retry backoff must stay a pure function of
+    // (seed, task, attempt): this entry pins that `sim/faults.rs`
+    // sits inside the linted decision-module set, so an ambient
+    // clock sneaking into the backoff path fails CI
+    (
+        "sim/faults.rs",
+        r#"fn backoff_ms() -> u128 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_millis()
 }
 "#,
     ),
@@ -891,6 +905,24 @@ mod tests {
                    */\n\
                    fn f() {}\n";
         assert!(lint_source("sched/m.rs", src).is_empty());
+    }
+
+    #[test]
+    fn fault_module_is_lint_covered() {
+        // corpus entry [7]: an ambient clock in `sim/faults.rs` — the
+        // retry backoff's home — is flagged like any decision module,
+        // so the backoff stays a pure function of (seed, task, attempt)
+        let (path, src) = VIOLATION_CORPUS[7];
+        assert_eq!(path, "sim/faults.rs");
+        let f = lint_source(path, src);
+        assert!(
+            f.iter().any(|x| x.rule == Rule::WallClock),
+            "wall clock in the fault module not flagged: {f:?}"
+        );
+        // and the real module lints clean under the same rules
+        let real =
+            lint_source("sim/faults.rs", include_str!("../sim/faults.rs"));
+        assert!(real.is_empty(), "sim/faults.rs: {real:?}");
     }
 
     #[test]

@@ -20,6 +20,21 @@
 //! [scheduler]
 //! policy = "bestfit"       # bestfit | firstfit | slots | bestfit-xla
 //! slots_per_max = 14       # slots policy only
+//! [faults]
+//! crash_rate = 0.0         # per-server Poisson crash rate (events/s; 0 = off)
+//! mean_downtime = 300.0    # mean repair time for independent crashes
+//! rack_size = 0            # servers per rack for correlated outages (0 = off)
+//! rack_outage_rate = 0.0   # per-rack Poisson outage rate
+//! rack_downtime = 900.0    # mean rack repair time
+//! flash_at = 0.0           # one-off flash-failure instant (unset = off)
+//! flash_fraction = 0.1     # fraction of servers the flash takes down
+//! flash_downtime = 600.0   # how long flash-failed servers stay down
+//! seed = 0                 # fault-plan seed (unset = top-level seed)
+//! envy_eps = 0.05          # fairness-recovery tolerance
+//! retry_max_attempts = 3   # attempts per task before it counts lost
+//! retry_base = 30.0        # base backoff (doubles per attempt)
+//! retry_cap = 3600.0       # backoff ceiling
+//! retry_jitter = 0.5       # multiplicative seeded jitter span
 //! ```
 //!
 //! Parsed with the in-tree TOML-subset parser (`util::toml_lite`; the
@@ -27,10 +42,14 @@
 
 use crate::cluster::Cluster;
 use crate::sched::{BestFitDrfh, FirstFitDrfh, Scheduler, SlotsScheduler};
-use crate::sim::{MetricsMode, QueueKind, ShardCount, SimOpts};
+use crate::sim::{
+    FaultPlan, MetricsMode, QueueKind, RetryPolicy, ShardCount, SimOpts,
+};
 use crate::util::toml_lite;
 use crate::util::Pcg32;
-use crate::workload::{GoogleLikeConfig, TraceGenerator};
+use crate::workload::{
+    generate_faults, FaultGenConfig, GoogleLikeConfig, TraceGenerator,
+};
 use crate::util::error::{anyhow, bail, Context, Result};
 
 #[derive(Clone, Debug)]
@@ -99,6 +118,37 @@ impl Default for SimConfig {
     }
 }
 
+/// `[faults]`: the fault-injection processes ([`FaultGenConfig`]) plus
+/// the per-job retry policy. Defaults leave every process off, so the
+/// compiled plan is empty and the engine's fault layer stays fully
+/// dormant (bit-identical to a fault-free build — see
+/// `tests/engine_parity.rs`).
+#[derive(Clone, Debug)]
+pub struct FaultsConfig {
+    /// The three seeded generators (crash / rack / flash).
+    pub gen: FaultGenConfig,
+    /// Fault-plan seed; unset = the top-level experiment seed.
+    pub seed: Option<u64>,
+    pub retry_max_attempts: u32,
+    pub retry_base: f64,
+    pub retry_cap: f64,
+    pub retry_jitter: f64,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        let retry = RetryPolicy::default();
+        FaultsConfig {
+            gen: FaultGenConfig::default(),
+            seed: None,
+            retry_max_attempts: retry.max_attempts,
+            retry_base: retry.base,
+            retry_cap: retry.cap,
+            retry_jitter: retry.jitter,
+        }
+    }
+}
+
 /// Top-level experiment configuration.
 #[derive(Clone, Debug, Default)]
 pub struct ExperimentConfig {
@@ -107,6 +157,7 @@ pub struct ExperimentConfig {
     pub workload: GoogleLikeConfig,
     pub sim: SimConfig,
     pub scheduler: SchedulerConfig,
+    pub faults: FaultsConfig,
 }
 
 impl ExperimentConfig {
@@ -178,6 +229,50 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_usize("scheduler", "slots_per_max") {
             cfg.scheduler.slots_per_max = v;
+        }
+        let f = &mut cfg.faults;
+        if let Some(v) = doc.get_f64("faults", "crash_rate") {
+            f.gen.crash_rate = v;
+        }
+        if let Some(v) = doc.get_f64("faults", "mean_downtime") {
+            f.gen.mean_downtime = v;
+        }
+        if let Some(v) = doc.get_usize("faults", "rack_size") {
+            f.gen.rack_size = v;
+        }
+        if let Some(v) = doc.get_f64("faults", "rack_outage_rate") {
+            f.gen.rack_outage_rate = v;
+        }
+        if let Some(v) = doc.get_f64("faults", "rack_downtime") {
+            f.gen.rack_downtime = v;
+        }
+        if let Some(v) = doc.get_f64("faults", "flash_at") {
+            f.gen.flash_at = Some(v);
+        }
+        if let Some(v) = doc.get_f64("faults", "flash_fraction") {
+            f.gen.flash_fraction = v;
+        }
+        if let Some(v) = doc.get_f64("faults", "flash_downtime") {
+            f.gen.flash_downtime = v;
+        }
+        if let Some(v) = doc.get_f64("faults", "envy_eps") {
+            f.gen.envy_eps = v;
+        }
+        if let Some(v) = doc.get("faults", "seed").and_then(|v| v.as_u64())
+        {
+            f.seed = Some(v);
+        }
+        if let Some(v) = doc.get_usize("faults", "retry_max_attempts") {
+            f.retry_max_attempts = v as u32;
+        }
+        if let Some(v) = doc.get_f64("faults", "retry_base") {
+            f.retry_base = v;
+        }
+        if let Some(v) = doc.get_f64("faults", "retry_cap") {
+            f.retry_cap = v;
+        }
+        if let Some(v) = doc.get_f64("faults", "retry_jitter") {
+            f.retry_jitter = v;
         }
         Ok(cfg)
     }
@@ -257,7 +352,33 @@ impl ExperimentConfig {
             share_sketch: self.sim.share_sketch,
             shards,
             audit: self.sim.audit,
+            faults: FaultPlan::none(),
+            retry: self.retry_policy(),
         })
+    }
+
+    /// The `[faults]` retry policy.
+    pub fn retry_policy(&self) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: self.faults.retry_max_attempts,
+            base: self.faults.retry_base,
+            cap: self.faults.retry_cap,
+            jitter: self.faults.retry_jitter,
+        }
+    }
+
+    /// Compile the `[faults]` processes into a plan for a
+    /// `servers`-sized cluster ([`crate::workload::generate_faults`]).
+    /// Empty (and free) when every process is off; callers drop it into
+    /// `SimOpts::faults` — [`Self::sim_opts`] deliberately returns the
+    /// empty plan since it does not know the cluster size.
+    pub fn build_fault_plan(&self, servers: usize) -> FaultPlan {
+        generate_faults(
+            &self.faults.gen,
+            servers,
+            self.sim.horizon,
+            self.faults.seed.unwrap_or(self.seed),
+        )
     }
 }
 
@@ -362,6 +483,42 @@ mod tests {
         let c =
             ExperimentConfig::from_toml("[sim]\naudit = true").unwrap();
         assert!(c.sim_opts().unwrap().audit);
+    }
+
+    #[test]
+    fn faults_parse_and_default_off() {
+        let c = ExperimentConfig::from_toml("").unwrap();
+        assert!(c.faults.gen.is_empty());
+        assert!(c.build_fault_plan(100).is_empty());
+        let opts = c.sim_opts().unwrap();
+        assert!(opts.faults.is_empty());
+        assert_eq!(opts.retry, crate::sim::RetryPolicy::default());
+
+        let c = ExperimentConfig::from_toml(
+            "seed = 3\n[faults]\ncrash_rate = 0.001\nmean_downtime = \
+             120.0\nrack_size = 8\nrack_outage_rate = \
+             0.0001\nflash_at = 500.0\nflash_fraction = \
+             0.2\nenvy_eps = 0.1\nretry_max_attempts = \
+             5\nretry_base = 10.0\nretry_jitter = 0.0",
+        )
+        .unwrap();
+        assert!(!c.faults.gen.is_empty());
+        assert_eq!(c.faults.gen.rack_size, 8);
+        assert_eq!(c.faults.retry_max_attempts, 5);
+        let plan = c.build_fault_plan(64);
+        assert!(!plan.is_empty());
+        assert_eq!(plan.seed, 3, "defaults to the experiment seed");
+        assert_eq!(plan.envy_eps, 0.1);
+        let retry = c.retry_policy();
+        assert_eq!(retry.max_attempts, 5);
+        assert_eq!(retry.base, 10.0);
+        assert_eq!(retry.jitter, 0.0);
+        // a dedicated fault seed overrides the experiment seed
+        let c = ExperimentConfig::from_toml(
+            "seed = 3\n[faults]\nflash_at = 500.0\nseed = 11",
+        )
+        .unwrap();
+        assert_eq!(c.build_fault_plan(10).seed, 11);
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Faults experiment — server failures, retry with backoff, and
+//! fairness recovery: Best-Fit DRFH vs Slots under an identical
+//! deterministic fault plan, against a fault-free Best-Fit baseline
+//! and the fluid allocator's degraded-pool reference.
+//!
+//! The plan mixes the three generator processes (independent Poisson
+//! crash/repair per server, plus a one-off flash failure that downs a
+//! fraction of the pool at once); both schedulers replay the *same*
+//! plan on the same trace, so every difference in goodput, wasted
+//! work, and recovery latency is the scheduler's. The fluid reference
+//! uses [`IncrementalDrfh::set_class_count`] to shrink server-class
+//! counts to the plan's peak concurrent outage and reports how far the
+//! fair share floor drops while the pool is degraded.
+
+use super::runner;
+use super::{fig5, write_csv, EvalSetup};
+use crate::allocator::{FluidUser, IncrementalDrfh};
+use crate::sim::SimReport;
+use crate::workload::{generate_faults, FaultGenConfig};
+
+/// Reports for the fault comparison plus the fluid reference points.
+#[derive(Clone, Debug)]
+pub struct FaultsResult {
+    /// Best-Fit DRFH with no faults injected (the control run).
+    pub baseline: SimReport,
+    /// Best-Fit DRFH under the fault plan.
+    pub best_fit: SimReport,
+    /// Slots-14 under the same fault plan.
+    pub slots: SimReport,
+    /// Fluid min dominant share on the full pool.
+    pub fluid_nominal: f64,
+    /// Fluid min dominant share at the plan's peak concurrent outage.
+    pub fluid_degraded: f64,
+    /// Largest number of servers down at once.
+    pub peak_down: usize,
+    /// Total down/up transitions in the compiled plan.
+    pub plan_events: usize,
+}
+
+/// The default fault mix for `drfh exp faults`: sparse independent
+/// crashes over the whole horizon plus a flash failure that downs a
+/// quarter of the pool a third of the way in.
+pub fn default_fault_config(horizon: f64) -> FaultGenConfig {
+    FaultGenConfig {
+        crash_rate: 2e-6,
+        mean_downtime: 1_800.0,
+        flash_at: Some(horizon / 3.0),
+        flash_fraction: 0.25,
+        flash_downtime: 3_600.0,
+        ..FaultGenConfig::default()
+    }
+}
+
+/// Run the comparison: generate the plan from `cfg`, replay it under
+/// Best-Fit and Slots, run the fault-free Best-Fit control, and solve
+/// the fluid references on the nominal and peak-degraded pools.
+pub fn run_faults(setup: &EvalSetup, cfg: &FaultGenConfig) -> FaultsResult {
+    let plan = generate_faults(
+        cfg,
+        setup.cluster.len(),
+        setup.opts.horizon,
+        setup.seed,
+    );
+    let plan_events = plan.events.len();
+
+    // peak concurrent outage, tallied per server class for the fluid
+    // reference (class index = position in `Cluster::classes`)
+    let classes = setup.cluster.classes();
+    let class_of: Vec<usize> = setup
+        .cluster
+        .servers
+        .iter()
+        .map(|s| {
+            classes
+                .iter()
+                .position(|c| c.capacity == s.capacity)
+                .expect("server capacity missing from its own class list")
+        })
+        .collect();
+    let mut down = vec![false; setup.cluster.len()];
+    let mut cur = 0usize;
+    let mut peak_down = 0usize;
+    let mut peak_per_class = vec![0usize; classes.len()];
+    for ev in &plan.events {
+        if ev.up {
+            if down[ev.server] {
+                down[ev.server] = false;
+                cur -= 1;
+            }
+        } else if !down[ev.server] {
+            down[ev.server] = true;
+            cur += 1;
+        }
+        if cur > peak_down {
+            peak_down = cur;
+            peak_per_class.iter_mut().for_each(|c| *c = 0);
+            for (l, &d) in down.iter().enumerate() {
+                if d {
+                    peak_per_class[class_of[l]] += 1;
+                }
+            }
+        }
+    }
+
+    // fluid reference: fair share floor on the full pool, then with
+    // each class shrunk by its peak outage (a pure rhs retune — the
+    // warm basis survives), then restored
+    let mut inc = IncrementalDrfh::new(&setup.cluster);
+    for u in &setup.trace.users {
+        inc.add_user(FluidUser {
+            demand: u.demand,
+            weight: u.weight,
+            task_cap: None,
+        });
+    }
+    let min_g = |g: &[f64]| g.iter().copied().fold(f64::INFINITY, f64::min);
+    let fluid_nominal = min_g(&inc.allocate().g);
+    for (c, &d) in peak_per_class.iter().enumerate() {
+        if d > 0 {
+            inc.set_class_count(c, classes[c].count - d);
+        }
+    }
+    let fluid_degraded = min_g(&inc.allocate().g);
+
+    // faulted head-to-head: the exact Fig. 6/7 pairing, same plan
+    let mut fopts = setup.opts.clone();
+    fopts.faults = plan;
+    let mut faulted = runner::sweep(
+        &setup.cluster,
+        &setup.trace,
+        &fopts,
+        fig5::bestfit_vs_slots_factories(),
+    );
+    let slots = faulted.pop().expect("slots report");
+    let best_fit = faulted.pop().expect("best-fit report");
+
+    // fault-free control (FaultPlan::none() — bit-identical to the
+    // pre-fault engine)
+    let mut control = runner::sweep(
+        &setup.cluster,
+        &setup.trace,
+        &setup.opts,
+        vec![fig5::bestfit_vs_slots_factories().swap_remove(0)],
+    );
+    let baseline = control.pop().expect("baseline report");
+
+    FaultsResult {
+        baseline,
+        best_fit,
+        slots,
+        fluid_nominal,
+        fluid_degraded,
+        peak_down,
+        plan_events,
+    }
+}
+
+/// `(resolved, total, mean recovery seconds over resolved)`.
+fn recovery_stats(r: &SimReport) -> (usize, usize, f64) {
+    let times: Vec<f64> =
+        r.outages.iter().filter_map(|o| o.recovery_time()).collect();
+    let mean = if times.is_empty() {
+        0.0
+    } else {
+        times.iter().sum::<f64>() / times.len() as f64
+    };
+    (times.len(), r.outages.len(), mean)
+}
+
+pub fn print(res: &FaultsResult) {
+    println!("== Faults: goodput, wasted work, fairness recovery ==");
+    println!(
+        "(plan: {} transitions, peak {} servers down at once)",
+        res.plan_events, res.peak_down
+    );
+    println!(
+        "{:<18} {:>11} {:>10} {:>7} {:>7} {:>6} {:>11} {:>10} {:>10}",
+        "scheduler",
+        "goodput h",
+        "wasted h",
+        "evict",
+        "retry",
+        "lost",
+        "tasks done",
+        "recovered",
+        "mean rec s"
+    );
+    for (label, r) in [
+        ("bestfit (clean)", &res.baseline),
+        ("bestfit", &res.best_fit),
+        ("slots-14", &res.slots),
+    ] {
+        let (resolved, total, mean) = recovery_stats(r);
+        println!(
+            "{:<18} {:>11.1} {:>10.1} {:>7} {:>7} {:>6} {:>11} {:>7}/{:<2} {:>10.0}",
+            label,
+            r.goodput_s / 3600.0,
+            r.wasted_s / 3600.0,
+            r.evictions,
+            r.retries,
+            r.tasks_lost,
+            r.tasks_completed,
+            resolved,
+            total,
+            mean,
+        );
+    }
+    println!(
+        "fluid min dominant share: nominal {:.4} -> degraded {:.4} \
+         (peak outage removes {:.1}% of it)",
+        res.fluid_nominal,
+        res.fluid_degraded,
+        if res.fluid_nominal > 0.0 {
+            (1.0 - res.fluid_degraded / res.fluid_nominal) * 100.0
+        } else {
+            0.0
+        }
+    );
+    // per-outage recovery CSV (Best-Fit run)
+    let rows: Vec<String> = res
+        .best_fit
+        .outages
+        .iter()
+        .map(|o| {
+            format!(
+                "{:.1},{},{:.6},{},{}",
+                o.at,
+                o.server,
+                o.baseline_envy,
+                o.recovered_at.map_or(String::new(), |t| format!("{t:.1}")),
+                o.recovery_time()
+                    .map_or(String::new(), |t| format!("{t:.1}")),
+            )
+        })
+        .collect();
+    write_csv(
+        "faults_recovery.csv",
+        "crash_t,server,baseline_envy,recovered_at,recovery_s",
+        &rows,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_run_conserves_work_and_recovers() {
+        let setup = EvalSetup::with_duration(17, 60, 8, 6_000.0);
+        let cfg = FaultGenConfig {
+            crash_rate: 1e-5,
+            mean_downtime: 600.0,
+            flash_at: Some(1_500.0),
+            flash_fraction: 0.25,
+            flash_downtime: 1_200.0,
+            // generous tolerance: every outage must resolve at the
+            // first sample tick, making recovery deterministic to test
+            envy_eps: 1e9,
+            ..FaultGenConfig::default()
+        };
+        let res = run_faults(&setup, &cfg);
+
+        // the flash failure lands in the saturated regime: something
+        // must actually get evicted and retried
+        assert!(res.plan_events > 0);
+        assert!(res.peak_down >= 15, "peak {}", res.peak_down);
+        assert!(res.best_fit.evictions > 0, "flash evicted nothing");
+        // every eviction either re-queues or exhausts its budget
+        assert_eq!(
+            res.best_fit.evictions,
+            res.best_fit.retries + res.best_fit.tasks_lost
+        );
+        assert!(res.best_fit.wasted_s > 0.0);
+
+        // work conservation: a task's completing attempt carries only
+        // its remaining duration, so goodput + wasted never exceeds
+        // the trace's total service demand
+        let total_work: f64 = setup
+            .trace
+            .jobs
+            .iter()
+            .flat_map(|j| &j.tasks)
+            .map(|t| t.duration)
+            .sum();
+        for r in [&res.baseline, &res.best_fit, &res.slots] {
+            assert!(
+                r.goodput_s + r.wasted_s <= total_work + 1e-6,
+                "{}: goodput {} + wasted {} > demand {}",
+                r.scheduler,
+                r.goodput_s,
+                r.wasted_s,
+                total_work
+            );
+        }
+        // the control run injects nothing
+        assert_eq!(res.baseline.evictions, 0);
+        assert_eq!(res.baseline.wasted_s, 0.0);
+        assert!(res.baseline.outages.is_empty());
+
+        // with an unbounded tolerance every outage resolves at the
+        // first sample tick after its crash
+        let downs = res.plan_events / 2;
+        assert_eq!(res.best_fit.outages.len(), downs);
+        assert!(res
+            .best_fit
+            .outages
+            .iter()
+            .all(|o| o.recovered_at.is_some()));
+
+        // shrinking the pool can only lower the fluid share floor
+        assert!(res.fluid_nominal.is_finite() && res.fluid_nominal > 0.0);
+        assert!(res.fluid_degraded <= res.fluid_nominal + 1e-9);
+    }
+}

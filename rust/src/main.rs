@@ -1,9 +1,11 @@
 //! `drfh` — launcher CLI for the DRFH reproduction.
 //!
 //! ```text
-//! drfh exp <fig4|fig4-fluid|table2|fig5|fig6|fig7|fig8|sim-scale|user-scale|all>
+//! drfh exp <fig4|fig4-fluid|table2|fig5|fig6|fig7|fig8|faults|sim-scale|user-scale|all>
 //!          [--seed N] [--servers K] [--users N] [--duration S]
 //!          regenerate a paper figure/table or run a §Perf harness
+//!          (`faults` replays a seeded crash/flash plan and reports
+//!          goodput, wasted work, and fairness-recovery latency)
 //! drfh sim --config exp.toml                      run a configured simulation
 //! drfh lint [--src DIR] [--corpus true]           determinism conformance linter
 //! drfh solve                                      exact fluid DRFH on the Fig. 1 example
@@ -27,7 +29,7 @@ const USAGE: &str = "\
 drfh — Dominant Resource Fairness with Heterogeneous Servers (paper reproduction)
 
 USAGE:
-  drfh exp <fig4|fig4-fluid|table2|fig5|fig6|fig7|fig8|sim-scale|user-scale|all>
+  drfh exp <fig4|fig4-fluid|table2|fig5|fig6|fig7|fig8|faults|sim-scale|user-scale|all>
            [--seed N] [--servers K] [--users N] [--duration SECONDS]
   drfh sim --config <exp.toml>
   drfh lint [--src DIR] [--corpus true]
@@ -167,6 +169,12 @@ fn run_exp(
             let res = experiments::fig8::run_fig8(&s);
             experiments::fig8::print(&res);
         }
+        "faults" => {
+            let s = setup();
+            let cfg = experiments::faults::default_fault_config(duration);
+            let res = experiments::faults::run_faults(&s, &cfg);
+            experiments::faults::print(&res);
+        }
         "sim-scale" => {
             let s = setup();
             let res = experiments::sim_scale::run_sim_scale(&s);
@@ -219,7 +227,11 @@ fn run_sim(path: &std::path::Path) -> Result<()> {
         trace.total_tasks(),
         sched.name()
     );
-    let report = sim::run(cluster, &trace, sched, cfg.sim_opts()?);
+    let mut opts = cfg.sim_opts()?;
+    // [faults] section, when present, compiles to a deterministic plan
+    opts.faults = cfg.build_fault_plan(cluster.len());
+    let had_faults = !opts.faults.is_empty();
+    let report = sim::run(cluster, &trace, sched, opts);
     println!(
         "done: {} placed, {} completed, cpu {:.1}%, mem {:.1}%, jobs {}",
         report.tasks_placed,
@@ -230,6 +242,18 @@ fn run_sim(path: &std::path::Path) -> Result<()> {
         // empty under `metrics = "streaming"`
         report.job_stats.count()
     );
+    if had_faults {
+        println!(
+            "faults: {} outages, {} evictions, {} retries, {} lost, \
+             goodput {:.1} h, wasted {:.1} h",
+            report.outages.len(),
+            report.evictions,
+            report.retries,
+            report.tasks_lost,
+            report.goodput_s / 3600.0,
+            report.wasted_s / 3600.0
+        );
+    }
     Ok(())
 }
 

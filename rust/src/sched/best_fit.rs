@@ -192,6 +192,18 @@ impl Scheduler for BestFitDrfh {
         }
     }
 
+    fn on_server_down(&mut self, server: usize) {
+        if let Some(core) = &mut self.core {
+            core.on_server_down(server);
+        }
+    }
+
+    fn on_server_up(&mut self, server: usize) {
+        if let Some(core) = &mut self.core {
+            core.on_server_up(server);
+        }
+    }
+
     fn on_topology(&mut self, shards: usize) {
         if let Some(core) = &mut self.core {
             core.set_shards(shards);

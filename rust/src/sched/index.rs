@@ -440,6 +440,11 @@ pub struct PlacementIndex {
     /// same-sized clusters/user sets (see [`IndexedCore`] ownership).
     #[cfg(debug_assertions)]
     fingerprint: f64,
+    /// The engine legitimately edited capacity in place (fault layer:
+    /// zero on crash, restore on recovery) — re-baseline the
+    /// fingerprint instead of flagging reuse.
+    #[cfg(debug_assertions)]
+    fingerprint_dirty: bool,
 }
 
 /// Capacity+demand fingerprint for the debug reuse guard. Usage is
@@ -487,6 +492,8 @@ impl PlacementIndex {
             n_users: 0,
             #[cfg(debug_assertions)]
             fingerprint: 0.0,
+            #[cfg(debug_assertions)]
+            fingerprint_dirty: false,
         }
     }
 
@@ -530,18 +537,38 @@ impl PlacementIndex {
         }
     }
 
+    /// The engine edited server *capacity* in place (fault layer:
+    /// zeroed on crash, restored on recovery). Feasibility and score
+    /// updates ride the normal dirty path
+    /// ([`PlacementIndex::mark_server_dirty`]); this only re-baselines
+    /// the debug-build reuse fingerprint, which would otherwise read
+    /// the edit as "a different cluster".
+    pub fn note_capacity_edit(&mut self) {
+        #[cfg(debug_assertions)]
+        {
+            self.fingerprint_dirty = true;
+        }
+    }
+
     fn ensure_built(&mut self, cluster: &Cluster, users: &[UserState]) {
         if self.servers.is_some()
             && self.k == cluster.len()
             && self.n_users == users.len()
         {
             #[cfg(debug_assertions)]
-            debug_assert!(
-                (self.fingerprint - state_fingerprint(cluster, users)).abs()
-                    < 1e-9,
-                "PlacementIndex reused across a different cluster/user set; \
-                 construct a fresh policy per simulation"
-            );
+            {
+                if self.fingerprint_dirty {
+                    self.fingerprint_dirty = false;
+                    self.fingerprint = state_fingerprint(cluster, users);
+                }
+                debug_assert!(
+                    (self.fingerprint - state_fingerprint(cluster, users))
+                        .abs()
+                        < 1e-9,
+                    "PlacementIndex reused across a different cluster/user \
+                     set; construct a fresh policy per simulation"
+                );
+            }
             return;
         }
         let k = cluster.len();
@@ -919,6 +946,22 @@ impl IndexedCore {
     /// `user` (re-)entered the schedulable set.
     pub fn on_ready(&mut self, user: usize) {
         self.share.mark_dirty(user);
+    }
+
+    /// `server` crashed (fault layer): by the next refresh its
+    /// capacity reads zero, so the rescore finds it infeasible for
+    /// every demand class and the stamp bump stales its live heap
+    /// entries — the server drops out of every placement heap.
+    pub fn on_server_down(&mut self, server: usize) {
+        self.servers.mark_server_dirty(server);
+        self.servers.note_capacity_edit();
+    }
+
+    /// `server` recovered: its restored capacity re-scores as
+    /// feasible and the server re-enters the heaps it fits.
+    pub fn on_server_up(&mut self, server: usize) {
+        self.servers.mark_server_dirty(server);
+        self.servers.note_capacity_edit();
     }
 
     /// Wave-boundary cross-check for [`crate::sim::audit`]: prove both

@@ -276,6 +276,20 @@ pub trait Scheduler {
     /// work arrived or the engine unblocked it after a completion.
     fn on_ready(&mut self, _user: usize) {}
 
+    /// Notification: `server` crashed ([`crate::sim::FaultPlan`]).
+    /// Fired *after* the engine evicted its run entries (each eviction
+    /// fired [`Scheduler::on_complete`]) and before its capacity is
+    /// zeroed. Indexed policies drop the server from their placement
+    /// structures here; a zero-capacity server is infeasible to every
+    /// fit/score path anyway, so ignoring this (the default) is
+    /// correct for stateless policies.
+    fn on_server_down(&mut self, _server: usize) {}
+
+    /// Notification: `server` recovered — its saved capacity has just
+    /// been restored. Indexed policies re-admit the server; the
+    /// engine re-probes blocked users right after this returns.
+    fn on_server_up(&mut self, _server: usize) {}
+
     /// Notification: the engine runs its sharded data plane with
     /// `shards` server-pool shards (fired once, before any event).
     /// Indexed policies mirror the layout (per-shard placement heaps,

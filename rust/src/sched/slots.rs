@@ -43,8 +43,12 @@ fn slot_key(u: &UserState) -> f64 {
 pub struct SlotsScheduler {
     /// Number of slots the *maximum* server is divided into.
     pub slots_per_max: usize,
-    /// Per-server slot capacity, derived from the cluster.
+    /// Per-server slot capacity, derived from the cluster. A crashed
+    /// server's entry is zeroed ([`Scheduler::on_server_down`]) so the
+    /// cursor scan and `can_fit` both read it as full.
     slots_total: Vec<usize>,
+    /// Nominal slot capacities, restored on recovery.
+    slots_saved: Vec<usize>,
     /// First server index that might have a free slot (§Perf: the
     /// naive per-placement linear scan was 53% of saturated runs; the
     /// cursor only moves forward past full servers and is pulled back
@@ -72,7 +76,7 @@ impl SlotsScheduler {
             }
         }
         let slot = maxcap.scale(1.0 / slots_per_max as f64);
-        let slots_total = cluster
+        let slots_total: Vec<usize> = cluster
             .servers
             .iter()
             .map(|s| {
@@ -88,6 +92,7 @@ impl SlotsScheduler {
             .collect();
         SlotsScheduler {
             slots_per_max,
+            slots_saved: slots_total.clone(),
             slots_total,
             free_hint: 0,
             users_index: Some(ClassedShareIndex::by_weight()),
@@ -197,6 +202,20 @@ impl Scheduler for SlotsScheduler {
     }
 
     fn on_free(&mut self, server: usize) {
+        if server < self.free_hint {
+            self.free_hint = server;
+        }
+    }
+
+    fn on_server_down(&mut self, server: usize) {
+        // zero slots: the cursor skips it and `can_fit` rejects it; the
+        // cursor need not move back since the server only got *less*
+        // usable
+        self.slots_total[server] = 0;
+    }
+
+    fn on_server_up(&mut self, server: usize) {
+        self.slots_total[server] = self.slots_saved[server];
         if server < self.free_hint {
             self.free_hint = server;
         }
@@ -413,6 +432,48 @@ mod tests {
         // three weight classes, 16 users — aggregation engaged
         assert_eq!(fast.weight_groups(), Some(3));
         assert_eq!(naive.weight_groups(), None);
+    }
+
+    /// A crashed server offers zero slots (cursor skips it, `can_fit`
+    /// rejects it); recovery restores the nominal count and pulls the
+    /// cursor back so the server is re-probed.
+    #[test]
+    fn server_down_zeroes_slots_and_up_restores() {
+        let cluster = Cluster::from_capacities(&[
+            ResVec::cpu_mem(1.0, 1.0),
+            ResVec::cpu_mem(1.0, 1.0),
+        ]);
+        let users = vec![UserState {
+            demand: ResVec::cpu_mem(0.1, 0.1),
+            weight: 1.0,
+            pending: 1,
+            running: 0,
+            dom_share: 0.0,
+            usage: ResVec::zeros(2),
+            dom_delta: 0.1,
+        }];
+        for mut s in
+            [SlotsScheduler::new(&cluster, 2), SlotsScheduler::naive(&cluster, 2)]
+        {
+            let nominal = s.slots_of(0);
+            assert!(nominal >= 1);
+            s.on_server_down(0);
+            assert_eq!(s.slots_of(0), 0);
+            assert!(!s.can_fit(&cluster, &users, 0, 0));
+            // the cursor walks past the dead server to the next one
+            assert_eq!(
+                s.pick(&cluster, &users, &[true]),
+                Pick::Place { user: 0, server: 1 }
+            );
+            s.on_server_up(0);
+            assert_eq!(s.slots_of(0), nominal);
+            assert!(s.can_fit(&cluster, &users, 0, 0));
+            // cursor pulled back: server 0 is picked again
+            assert_eq!(
+                s.pick(&cluster, &users, &[true]),
+                Pick::Place { user: 0, server: 0 }
+            );
+        }
     }
 
     #[test]

@@ -35,6 +35,11 @@
 //!   `dom_share == running as f64 * dom_delta` (recomputed, never
 //!   accumulated — see `engine::commit_completion`), and the global
 //!   placed-minus-completed balance;
+//! * **fault invariants** (only when a fault plan is active) — every
+//!   down server is fully drained (zero capacity, zero usage, no run
+//!   entries, `can_fit` false for every pending user), and no attempt
+//!   counter — on a run entry, a ready retry, or a backoff-parked slab
+//!   payload — exceeds the configured retry budget;
 //! * **blocked-set validity** — `eligible` is exactly the complement
 //!   of the blocked set, no eligible user still has pending work
 //!   after a drain (post-wave quiescence), and every blocked user
@@ -126,6 +131,7 @@ impl Simulation<'_> {
         self.audit_arena(&mut violations);
         self.audit_blocked(&mut violations);
         self.audit_routing(&mut violations);
+        self.audit_faults(&mut violations);
         if let Err(e) = self.scheduler.audit_indices(
             &self.cluster,
             &self.users,
@@ -177,16 +183,20 @@ impl Simulation<'_> {
                 }
             }
         }
+        // evicted placements left the PS without completing, so they
+        // drop out of the balance (§Faults)
         let balance = self
             .report
             .tasks_placed
-            .checked_sub(self.report.tasks_completed);
+            .checked_sub(self.report.tasks_completed)
+            .and_then(|b| b.checked_sub(self.report.evictions));
         if balance != Some(total_running) {
             out.push(format!(
-                "capacity: placed {} - completed {} != {} total run \
-                 entries",
+                "capacity: placed {} - completed {} - evicted {} != {} \
+                 total run entries",
                 self.report.tasks_placed,
                 self.report.tasks_completed,
+                self.report.evictions,
                 total_running
             ));
         }
@@ -230,14 +240,17 @@ impl Simulation<'_> {
                     ));
                 }
             }
+            // fired retries wait in `retry_ready` rather than the
+            // arena, but count as pending until re-placed (§Faults)
             let queued: usize = self.queues[u]
                 .iter()
                 .map(|&j| self.arena.unplaced(j as usize))
-                .sum();
+                .sum::<usize>()
+                + self.retry_ready[u].len();
             if us.pending != queued {
                 out.push(format!(
                     "user {u}: pending {} != {} unplaced tasks across \
-                     its queued jobs",
+                     its queued jobs + ready retries",
                     us.pending, queued
                 ));
             }
@@ -316,6 +329,110 @@ impl Simulation<'_> {
         }
     }
 
+    /// Fault-layer invariants (§Faults in the engine docs): a down
+    /// server is fully drained — zero capacity, zero usage, no run
+    /// entries, and unplaceable under the policy's own `can_fit` (its
+    /// absence from the placement heaps is proved separately by the
+    /// `audit_indices` decision cross-check) — and no attempt counter
+    /// anywhere (running, ready, or backoff-parked) exceeds the retry
+    /// budget. Skipped when the fault plan is empty: nothing below can
+    /// change, and the skip keeps audited no-fault runs byte-for-byte
+    /// on the seed's check set.
+    fn audit_faults(&self, out: &mut Vec<String>) {
+        if !self.has_faults {
+            return;
+        }
+        let m = self.cluster.dims();
+        let cap = self.opts.retry.attempt_cap();
+        for (l, &is_down) in self.down.iter().enumerate() {
+            if !is_down {
+                continue;
+            }
+            let s = &self.cluster.servers[l];
+            for r in 0..m {
+                if s.capacity[r] != 0.0 {
+                    out.push(format!(
+                        "faults: down server {l} holds capacity[{r}] = \
+                         {:.9}, want 0",
+                        s.capacity[r]
+                    ));
+                }
+                if s.usage[r].abs() > TOL {
+                    out.push(format!(
+                        "faults: down server {l} holds usage[{r}] = \
+                         {:.9}, want 0",
+                        s.usage[r]
+                    ));
+                }
+            }
+            if s.tasks != 0 || !self.servers[l].running.is_empty() {
+                out.push(format!(
+                    "faults: down server {l} still runs {} tasks ({} \
+                     run entries)",
+                    s.tasks,
+                    self.servers[l].running.len()
+                ));
+            }
+            for (u, us) in self.users.iter().enumerate() {
+                if us.pending > 0
+                    && self.scheduler.can_fit(
+                        &self.cluster,
+                        &self.users,
+                        u,
+                        l,
+                    )
+                {
+                    out.push(format!(
+                        "faults: down server {l} reports can_fit for \
+                         pending user {u}"
+                    ));
+                }
+            }
+        }
+        for srv in &self.servers {
+            for entry in srv.running.iter() {
+                if entry.attempt < 1 || entry.attempt > cap {
+                    out.push(format!(
+                        "faults: run entry for user {} carries attempt \
+                         {} outside 1..={cap}",
+                        entry.user, entry.attempt
+                    ));
+                }
+            }
+        }
+        for (u, ready) in self.retry_ready.iter().enumerate() {
+            for rt in ready {
+                if rt.attempt >= cap {
+                    out.push(format!(
+                        "faults: ready retry for user {u} already spent \
+                         attempt {} of the {cap}-attempt budget",
+                        rt.attempt
+                    ));
+                }
+            }
+        }
+        // backoff-parked payloads: every queued Retry event must point
+        // into the slab, at a payload still under budget
+        self.events.for_each_lane(|_, ev| {
+            if let EventKind::Retry { slot } = ev.payload {
+                if slot as usize >= self.retry_pending.len() {
+                    out.push(format!(
+                        "faults: queued retry slot {slot} outside the \
+                         {}-entry slab",
+                        self.retry_pending.len()
+                    ));
+                } else if self.retry_pending[slot as usize].attempt >= cap
+                {
+                    out.push(format!(
+                        "faults: parked retry in slot {slot} already \
+                         spent attempt {} of the {cap}-attempt budget",
+                        self.retry_pending[slot as usize].attempt
+                    ));
+                }
+            }
+        });
+    }
+
     /// Shard-ownership lane routing of every queued event, plus the
     /// queued-after-drained ordering bound.
     fn audit_routing(&self, out: &mut Vec<String>) {
@@ -323,10 +440,14 @@ impl Simulation<'_> {
         let push_seq = self.seq;
         self.events.for_each_lane(|lane, ev| {
             let want = match ev.payload {
-                EventKind::ServerCheck { server, .. } => {
+                EventKind::ServerCheck { server, .. }
+                | EventKind::ServerDown { server }
+                | EventKind::ServerUp { server } => {
                     self.spec.owner_of(server)
                 }
-                EventKind::Arrival(_) | EventKind::Sample => 0,
+                EventKind::Arrival(_)
+                | EventKind::Sample
+                | EventKind::Retry { .. } => 0,
             };
             if lane != want {
                 out.push(format!(

@@ -126,6 +126,44 @@
 //! is bit-identical for every shard count — `S = 1` *is* the
 //! sequential engine, not a fork, and `tests/engine_parity.rs` pins
 //! the equivalence across `S × queue` choices.
+//!
+//! ## Faults: crash, retry, recover
+//!
+//! A [`FaultPlan`] ([`SimOpts::faults`], module
+//! [`crate::sim::faults`]) compiles into `ServerDown`/`ServerUp`
+//! events at construction time, pushed *after* every arrival and the
+//! first sample so an empty plan leaves seq assignment — and
+//! therefore every decision and every float — untouched
+//! (`FaultPlan::none()` parity, pinned in `tests/engine_parity.rs`).
+//!
+//! On `ServerDown` the engine advances the server's PS clock, evicts
+//! every [`RunEntry`] (releasing usage, crediting the consumed work
+//! to `wasted_s`), zeroes the server's capacity (saving the original
+//! for recovery — a zero-capacity server is infeasible to every
+//! fit/score path for free), bumps the PS generation so queued
+//! `ServerCheck`s go stale, and tells the policy through the
+//! default-no-op [`Scheduler::on_server_down`] hook to drop the
+//! server from its placement structures. Each evicted task re-enters
+//! its user's queue with its *remaining* work after a deterministic
+//! exponential backoff ([`RetryPolicy::backoff`] — a pure function of
+//! `(plan seed, task id, attempt)`), until the attempt budget is
+//! spent (`tasks_lost`). On `ServerUp` the capacity is restored, the
+//! policy notified ([`Scheduler::on_server_up`]), and blocked users
+//! re-probed exactly like after a completion.
+//!
+//! Degradation is measured, not fatal: users whose demand no longer
+//! fits anywhere park in the blocked index (no spinning), and the
+//! report gains goodput-vs-wasted seconds plus one [`OutageRecord`]
+//! per crash — the first sample tick where the spread of weighted
+//! dominant shares across active users re-enters the pre-crash
+//! baseline + ε closes the record (fairness-recovery time).
+//!
+//! Sharding: `ServerDown`/`ServerUp` are segment *barriers* like
+//! samples (they must order strictly against same-wave
+//! `ServerCheck`s, which a propose phase would otherwise batch);
+//! `Retry` events replay in the sequential commit like arrivals.
+//! Faults are rare relative to checks, so the barrier cost is noise,
+//! and every report float stays bit-identical across shard counts.
 
 use crate::cluster::{Cluster, ResVec, Server, ShardCount, ShardSpec};
 use crate::metrics::shares::ShareSketch;
@@ -134,6 +172,7 @@ use crate::metrics::{
 };
 use crate::sched::index::BlockedIndex;
 use crate::sched::{DrainCtx, Scheduler, UserState};
+use crate::sim::faults::{FaultPlan, OutageRecord, RetryPolicy};
 use crate::sim::wheel::{
     self, EventQueue, QueueKind, ShardedQueue, SimQueue, TimerWheel,
 };
@@ -194,6 +233,13 @@ pub struct SimOpts {
     /// (`tests/engine_parity.rs`). Also switchable per-process via
     /// `DRFH_AUDIT=1` and per-config via `[sim] audit`.
     pub audit: bool,
+    /// Deterministic server failure/recovery schedule (module docs,
+    /// §Faults). [`FaultPlan::none`] (the default) injects nothing
+    /// and leaves the engine bit-identical to a fault-free build.
+    pub faults: FaultPlan,
+    /// Retry discipline for tasks evicted by a crash (attempt budget
+    /// + deterministic exponential backoff).
+    pub retry: RetryPolicy,
 }
 
 impl Default for SimOpts {
@@ -207,6 +253,8 @@ impl Default for SimOpts {
             share_sketch: None,
             shards: ShardCount::Fixed(1),
             audit: false,
+            faults: FaultPlan::none(),
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -237,6 +285,24 @@ pub struct SimReport {
     /// Time-averaged utilizations over the horizon.
     pub avg_cpu_util: f64,
     pub avg_mem_util: f64,
+    /// Useful service seconds delivered: the full duration of every
+    /// *completed* task attempt (a retried task's lost progress is
+    /// never double-counted — its completing attempt carries only the
+    /// remaining work).
+    pub goodput_s: f64,
+    /// Service seconds destroyed by crashes: work a task had consumed
+    /// when its server went down.
+    pub wasted_s: f64,
+    /// Run entries evicted by `ServerDown` events.
+    pub evictions: usize,
+    /// Evicted tasks that re-entered a queue after backoff.
+    pub retries: usize,
+    /// Evicted tasks abandoned with a spent attempt budget (their
+    /// jobs never complete — measured degradation, not an error).
+    pub tasks_lost: usize,
+    /// One record per crash: pre-crash envy baseline and the sample
+    /// tick where fairness recovered (module docs, §Faults).
+    pub outages: Vec<OutageRecord>,
 }
 
 // ---------------------------------------------------------------- events
@@ -246,6 +312,14 @@ pub(super) enum EventKind {
     Arrival(usize),
     ServerCheck { server: usize, gen: u64 },
     Sample,
+    /// Fault plan: `server` crashes (evict + zero capacity).
+    ServerDown { server: usize },
+    /// Fault plan: `server` recovers (restore capacity).
+    ServerUp { server: usize },
+    /// Backoff expired for the retry payload parked in slab slot
+    /// `slot` (`Simulation::retry_pending`) — the slot index keeps
+    /// this variant pointer-sized instead of inlining the payload.
+    Retry { slot: u32 },
 }
 
 type Event = wheel::Event<EventKind>;
@@ -269,6 +343,28 @@ pub(super) struct RunEntry {
     pub(super) seq: u64,
     pub(super) user: u32,
     pub(super) job: u32,
+    /// Service demand of *this attempt* (virtual seconds): the trace
+    /// duration on attempt 1, the remaining work on a retry. Goodput
+    /// and wasted-work accounting both derive from it.
+    pub(super) dur: f64,
+    /// 1-based attempt number (audited against the retry budget).
+    pub(super) attempt: u32,
+    /// Stable task identity across retries: the seq of the task's
+    /// *first* placement. Deterministic at every shard count (seq
+    /// assignment is), and the backoff-jitter key.
+    pub(super) task: u64,
+}
+
+/// An evicted task waiting out its backoff (slab payload of
+/// [`EventKind::Retry`]) or already released into its user's retry
+/// queue (`Simulation::retry_ready`).
+#[derive(Clone, Copy, Debug)]
+pub(super) struct RetryTask {
+    pub(super) job: u32,
+    pub(super) attempt: u32,
+    pub(super) task: u64,
+    /// Work left when the crash hit (virtual seconds).
+    pub(super) remaining: f64,
 }
 
 impl PartialEq for RunEntry {
@@ -366,6 +462,24 @@ pub struct Simulation<'a> {
 
     pub(super) report: SimReport,
     total: ResVec,
+
+    /// Fault layer (module docs, §Faults). `down[l]` marks a crashed
+    /// server, `saved_cap[l]` holds its nominal capacity while the
+    /// live one is zeroed. All four vectors stay empty-of-effect when
+    /// the plan is empty — `has_faults` gates every hot-path touch.
+    pub(super) down: Vec<bool>,
+    pub(super) saved_cap: Vec<ResVec>,
+    /// Per-user queues of retries whose backoff has expired, consumed
+    /// ahead of fresh arena tasks by [`EngineCtx::place`].
+    pub(super) retry_ready: Vec<VecDeque<RetryTask>>,
+    /// Slab of in-flight (backoff-pending) retry payloads addressed
+    /// by [`EventKind::Retry`] slots, with a LIFO free list.
+    pub(super) retry_pending: Vec<RetryTask>,
+    pub(super) retry_free: Vec<u32>,
+    /// True iff the plan schedules at least one transition.
+    pub(super) has_faults: bool,
+    /// Outage records in `report.outages` not yet marked recovered.
+    unresolved_outages: usize,
 
     /// Wave-boundary invariant auditor state; `Some` iff auditing is
     /// on ([`SimOpts::audit`] or `DRFH_AUDIT=1`). See
@@ -485,8 +599,21 @@ impl<'a> Simulation<'a> {
                 tasks_completed: 0,
                 avg_cpu_util: 0.0,
                 avg_mem_util: 0.0,
+                goodput_s: 0.0,
+                wasted_s: 0.0,
+                evictions: 0,
+                retries: 0,
+                tasks_lost: 0,
+                outages: Vec::new(),
             },
             total,
+            down: vec![false; k],
+            saved_cap: vec![ResVec::zeros(m); k],
+            retry_ready: vec![VecDeque::new(); n],
+            retry_pending: Vec::new(),
+            retry_free: Vec::new(),
+            has_faults: !opts.faults.events.is_empty(),
+            unresolved_outages: 0,
             audit: audit_on.then(super::audit::AuditState::new),
         };
         for (j, job) in trace.jobs.iter().enumerate() {
@@ -495,6 +622,20 @@ impl<'a> Simulation<'a> {
             }
         }
         sim.push_event(0.0, EventKind::Sample);
+        // fault transitions last: an empty plan pushes nothing, so
+        // every pre-existing event keeps the seq it had before this
+        // layer existed — the FaultPlan::none() parity guarantee
+        for ev in &opts.faults.events {
+            assert!(ev.server < k, "fault plan names server {} of {k}", ev.server);
+            if ev.time <= opts.horizon {
+                let kind = if ev.up {
+                    EventKind::ServerUp { server: ev.server }
+                } else {
+                    EventKind::ServerDown { server: ev.server }
+                };
+                sim.push_event(ev.time.max(0.0), kind);
+            }
+        }
         sim
     }
 
@@ -559,6 +700,11 @@ impl<'a> Simulation<'a> {
                 self.on_sample();
                 false
             }
+            EventKind::ServerDown { server } => {
+                self.on_server_down_ev(server)
+            }
+            EventKind::ServerUp { server } => self.on_server_up_ev(server),
+            EventKind::Retry { slot } => self.on_retry(slot),
         }
     }
 
@@ -598,6 +744,144 @@ impl<'a> Simulation<'a> {
         completed_any
     }
 
+    /// Spread (max − min) of weighted dominant shares across *active*
+    /// users (running or pending work) — the envy measure behind
+    /// fairness-recovery records (module docs, §Faults).
+    fn envy_spread(&self) -> f64 {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for us in &self.users {
+            if us.running + us.pending == 0 {
+                continue;
+            }
+            let key = us.share_key();
+            lo = lo.min(key);
+            hi = hi.max(key);
+        }
+        if hi >= lo {
+            hi - lo
+        } else {
+            0.0
+        }
+    }
+
+    /// `ServerDown`: evict every running entry on `l` (remaining work
+    /// re-queued under the retry policy or counted lost), zero the
+    /// server's capacity, and stale its PS generation. Idempotent —
+    /// a crash of an already-down server is a no-op (plans built by
+    /// [`FaultPlan::from_intervals`] never produce one, hand-built
+    /// plans might). Never a scheduling opportunity: capacity only
+    /// shrank and no task became pending *now* (retries arrive
+    /// later, after backoff).
+    fn on_server_down_ev(&mut self, l: usize) -> bool {
+        if self.down[l] {
+            return false;
+        }
+        // pre-crash fairness baseline, before any eviction moves it
+        let baseline_envy = self.envy_spread();
+        self.servers[l].advance(self.now);
+        let vtime = self.servers[l].vtime;
+        let mut running = std::mem::take(&mut self.servers[l].running);
+        // drain in (vfinish, seq) heap order: deterministic retry
+        // slot/seq assignment at every shard count
+        while let Some(entry) = running.pop() {
+            let u = entry.user as usize;
+            let demand = self.users[u].demand;
+            self.cluster.servers[l].release(&demand);
+            self.cluster.servers[l].tasks -= 1;
+            self.scheduler.on_complete(u, l);
+            self.users[u].running -= 1;
+            self.users[u].dom_share =
+                self.users[u].running as f64 * self.users[u].dom_delta;
+            self.users[u].usage.sub_assign(&demand);
+            self.report.evictions += 1;
+            let remaining = (entry.vfinish - vtime).max(0.0);
+            self.report.wasted_s += (entry.dur - remaining).max(0.0);
+            if entry.attempt < self.opts.retry.attempt_cap() {
+                let rt = RetryTask {
+                    job: entry.job,
+                    attempt: entry.attempt,
+                    task: entry.task,
+                    remaining,
+                };
+                let slot = match self.retry_free.pop() {
+                    Some(s) => {
+                        self.retry_pending[s as usize] = rt;
+                        s
+                    }
+                    None => {
+                        self.retry_pending.push(rt);
+                        (self.retry_pending.len() - 1) as u32
+                    }
+                };
+                let delay = self.opts.retry.backoff(
+                    self.opts.faults.seed,
+                    entry.task,
+                    entry.attempt,
+                );
+                self.push_event(
+                    self.now + delay,
+                    EventKind::Retry { slot },
+                );
+            } else {
+                self.report.tasks_lost += 1;
+            }
+        }
+        self.servers[l].running = running;
+        self.scheduler.on_server_down(l);
+        self.down[l] = true;
+        self.saved_cap[l] = self.cluster.servers[l].capacity;
+        self.cluster.servers[l].capacity =
+            ResVec::zeros(self.cluster.dims());
+        // stale every queued check; pin the PS clock at a sane rate
+        // (usage/capacity is 0/0 while down — never ask `rate()`)
+        let srv = &mut self.servers[l];
+        srv.gen += 1;
+        srv.rate = 1.0;
+        srv.t_last = self.now;
+        self.report.outages.push(OutageRecord {
+            at: self.now,
+            server: l,
+            baseline_envy,
+            recovered_at: None,
+        });
+        self.unresolved_outages += 1;
+        false
+    }
+
+    /// `ServerUp`: restore the saved capacity, re-arm the PS state
+    /// (the next placement schedules the next check), tell the policy,
+    /// and re-probe blocked users exactly like after a completion.
+    fn on_server_up_ev(&mut self, l: usize) -> bool {
+        if !self.down[l] {
+            return false;
+        }
+        self.down[l] = false;
+        self.cluster.servers[l].capacity = self.saved_cap[l];
+        let srv = &mut self.servers[l];
+        srv.t_last = self.now;
+        srv.gen += 1;
+        srv.rate = self.cluster.servers[l].rate();
+        self.scheduler.on_server_up(l);
+        self.unblock_for_server(l);
+        true
+    }
+
+    /// `Retry`: the backoff expired — move the slab payload into the
+    /// user's ready queue and announce the user like an arrival does.
+    fn on_retry(&mut self, slot: u32) -> bool {
+        let rt = self.retry_pending[slot as usize];
+        self.retry_free.push(slot);
+        let u = self.arena.job_user(rt.job as usize);
+        self.retry_ready[u].push_back(rt);
+        self.users[u].pending += 1;
+        self.report.retries += 1;
+        if !self.blocked.is_blocked(u) {
+            self.scheduler.on_ready(u);
+        }
+        true
+    }
+
     fn complete_task(&mut self, l: usize, entry: RunEntry) {
         let demand = self.users[entry.user as usize].demand;
         self.cluster.servers[l].release(&demand);
@@ -625,6 +909,10 @@ impl<'a> Simulation<'a> {
             self.users[u].running as f64 * self.users[u].dom_delta;
         self.users[u].usage.sub_assign(&demand);
         self.report.tasks_completed += 1;
+        // the completing attempt's service demand is exactly the work
+        // delivered (a retried task carries only its remaining work,
+        // so crash-lost progress never double-counts here)
+        self.report.goodput_s += entry.dur;
         self.report.user_tasks[u].completed += 1;
         let j = entry.job as usize;
         if self.arena.complete_one(j) {
@@ -722,6 +1010,7 @@ impl<'a> Simulation<'a> {
             seq: &mut self.seq,
             now: self.now,
             report: &mut self.report,
+            retry_ready: &mut self.retry_ready,
             overcommit,
         };
         self.scheduler.drain(&mut ctx);
@@ -757,6 +1046,22 @@ impl<'a> Simulation<'a> {
                     self.report.user_dom_share[u].enforce_cap(series_cap);
                     self.report.user_cpu_share[u].enforce_cap(series_cap);
                     self.report.user_mem_share[u].enforce_cap(series_cap);
+                }
+            }
+        }
+        // fairness-recovery resolution (module docs, §Faults): close
+        // every open outage whose envy spread is back inside its
+        // pre-crash baseline + ε. Gated so fault-free runs never even
+        // compute the spread.
+        if self.has_faults && self.unresolved_outages > 0 {
+            let spread = self.envy_spread();
+            let eps = self.opts.faults.envy_eps;
+            for rec in &mut self.report.outages {
+                if rec.recovered_at.is_none()
+                    && spread <= rec.baseline_envy + eps
+                {
+                    rec.recovered_at = Some(self.now);
+                    self.unresolved_outages -= 1;
                 }
             }
         }
@@ -818,20 +1123,45 @@ impl<'a> Simulation<'a> {
     /// Apply one same-timestamp wave: samples are barriers (they read
     /// whole-cluster utilization mid-wave, so every earlier release
     /// must be visible and no later one may be), splitting the wave
-    /// into sample-free segments that each run propose + commit.
+    /// into segments that each run propose + commit. Fault
+    /// transitions are barriers too: a `ServerDown`/`ServerUp`
+    /// bumps the PS generation, so a same-wave `ServerCheck` sorting
+    /// *after* it must observe the bump (be stale) while one sorting
+    /// *before* must not — exactly the sequential order a propose
+    /// batch would blur. Faults are rare next to checks, so the extra
+    /// segment splits cost nothing measurable.
     fn apply_wave(&mut self, wave: &[Event]) -> bool {
+        let is_barrier = |kind: &EventKind| {
+            matches!(
+                kind,
+                EventKind::Sample
+                    | EventKind::ServerDown { .. }
+                    | EventKind::ServerUp { .. }
+            )
+        };
         let mut need = false;
         let mut i = 0;
         while i < wave.len() {
-            if matches!(wave[i].payload, EventKind::Sample) {
-                self.on_sample();
-                i += 1;
-                continue;
+            match wave[i].payload {
+                EventKind::Sample => {
+                    self.on_sample();
+                    i += 1;
+                    continue;
+                }
+                EventKind::ServerDown { server } => {
+                    need |= self.on_server_down_ev(server);
+                    i += 1;
+                    continue;
+                }
+                EventKind::ServerUp { server } => {
+                    need |= self.on_server_up_ev(server);
+                    i += 1;
+                    continue;
+                }
+                _ => {}
             }
             let mut j = i + 1;
-            while j < wave.len()
-                && !matches!(wave[j].payload, EventKind::Sample)
-            {
+            while j < wave.len() && !is_barrier(&wave[j].payload) {
                 j += 1;
             }
             need |= self.apply_segment(&wave[i..j]);
@@ -958,8 +1288,15 @@ impl<'a> Simulation<'a> {
                         }
                     }
                 }
-                EventKind::Sample => {
-                    unreachable!("samples are segment barriers")
+                // the backoff payload is engine-global (slab + user
+                // queue), not shard-local — replayed sequentially in
+                // seq order exactly like an arrival
+                EventKind::Retry { slot } => need |= self.on_retry(slot),
+                EventKind::Sample
+                | EventKind::ServerDown { .. }
+                | EventKind::ServerUp { .. } => {
+                    unreachable!("samples and fault transitions are \
+                                  segment barriers")
                 }
             }
         }
@@ -984,8 +1321,11 @@ fn push_event_into(
     // the exact global (time, seq) order for any assignment
     // ([`wheel::ShardedQueue`]).
     let lane = match kind {
-        EventKind::ServerCheck { server, .. } => spec.owner_of(server),
-        EventKind::Arrival(_) | EventKind::Sample => 0,
+        EventKind::ServerCheck { server, .. }
+        | EventKind::ServerDown { server }
+        | EventKind::ServerUp { server } => spec.owner_of(server),
+        EventKind::Arrival(_) | EventKind::Sample
+        | EventKind::Retry { .. } => 0,
     };
     events.push_to(lane, Event { time, seq: *seq, payload: kind });
 }
@@ -1080,6 +1420,7 @@ struct EngineCtx<'e, 't> {
     seq: &'e mut u64,
     now: f64,
     report: &'e mut SimReport,
+    retry_ready: &'e mut [VecDeque<RetryTask>],
     overcommit: bool,
 }
 
@@ -1107,15 +1448,31 @@ impl DrainCtx for EngineCtx<'_, '_> {
                 "scheduler violated capacity"
             );
         }
+        // retries first (their pending predates the fresh work), then
         // round-robin across the user's jobs: take one task from the
-        // front job, then rotate it to the back if it has more
-        let j = self.queues[u]
-            .pop_front()
-            .expect("placement without pending") as usize;
-        let duration = self.arena.take_next(j);
-        if self.arena.unplaced(j) > 0 {
-            self.queues[u].push_back(j as u32);
-        }
+        // front job, then rotate it to the back if it has more. With
+        // an empty fault plan the retry queue is always empty and
+        // this is byte-for-byte the pre-fault path.
+        let (j, duration, attempt, task) =
+            match self.retry_ready[u].pop_front() {
+                Some(rt) => (
+                    rt.job as usize,
+                    rt.remaining,
+                    rt.attempt + 1,
+                    Some(rt.task),
+                ),
+                None => {
+                    let j = self.queues[u]
+                        .pop_front()
+                        .expect("placement without pending")
+                        as usize;
+                    let duration = self.arena.take_next(j);
+                    if self.arena.unplaced(j) > 0 {
+                        self.queues[u].push_back(j as u32);
+                    }
+                    (j, duration, 1, None)
+                }
+            };
         self.users[u].pending -= 1;
         self.users[u].running += 1;
         // recompute, never accumulate — see `complete_task`
@@ -1133,6 +1490,12 @@ impl DrainCtx for EngineCtx<'_, '_> {
             seq: *self.seq,
             user: u as u32,
             job: j as u32,
+            dur: duration,
+            attempt,
+            // a fresh task is named by its first placement's seq —
+            // deterministic at every shard count, stable across
+            // retries
+            task: task.unwrap_or(*self.seq),
         };
         self.servers[l].running.push(entry);
         refresh_server_at(

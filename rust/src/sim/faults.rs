@@ -1,0 +1,308 @@
+//! Deterministic fault injection: failure plans, retry policy, and
+//! outage/recovery records.
+//!
+//! A [`FaultPlan`] is a pre-compiled, fully deterministic schedule of
+//! server down/up transitions. Plans are built offline — by the seeded
+//! generators in [`crate::workload::gen`] (Poisson crash/repair,
+//! correlated rack outages, one-off flash failures) or by hand from
+//! raw intervals ([`FaultPlan::from_intervals`]) — and handed to the
+//! engine through [`crate::sim::SimOpts::faults`]. The engine compiles
+//! the plan into `ServerDown`/`ServerUp` events at construction time
+//! and drains them through the one total `(time, seq)` order every
+//! other event obeys, so the same plan and seed replay bit-identically
+//! at every shard count, and [`FaultPlan::none`] pushes *zero* events
+//! — the no-fault engine is byte-for-byte the pre-fault engine
+//! (`tests/engine_parity.rs` pins both properties).
+//!
+//! Retries are governed by a [`RetryPolicy`]: a task evicted by a
+//! crash re-enters its user's queue with only its *remaining* work,
+//! after a deterministic exponential backoff computed as a pure
+//! function of `(plan seed, task id, attempt)` — no wall clock, no
+//! ambient RNG state, so the schedule is reproducible from the inputs
+//! alone (property-tested) and `drfh lint`'s wall-clock rule covers
+//! this module like every other decision-path module.
+
+use crate::util::Pcg32;
+
+/// One server transition in a fault plan (absolute simulation time).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// When the transition happens (seconds).
+    pub time: f64,
+    /// Which server (index into the cluster's pool).
+    pub server: usize,
+    /// `false` = the server crashes (down), `true` = it recovers (up).
+    pub up: bool,
+}
+
+/// A deterministic schedule of server failures and recoveries.
+///
+/// Invariants maintained by the constructors: events are sorted by
+/// `(time, server, up)`, per-server intervals are non-overlapping
+/// (overlaps are merged), and every down has a matching later up
+/// unless the outage extends past the generator's horizon.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for every derived deterministic draw (backoff jitter).
+    pub seed: u64,
+    /// Fairness-recovery tolerance: an outage counts as recovered at
+    /// the first sample tick where the spread of weighted dominant
+    /// shares across active users re-enters `baseline + envy_eps`
+    /// (see [`OutageRecord`]).
+    pub envy_eps: f64,
+    /// The compiled transition schedule.
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan: injects nothing, perturbs nothing. The engine
+    /// running under `FaultPlan::none()` produces a bit-identical
+    /// [`crate::sim::SimReport`] to the pre-fault engine at every
+    /// shard count.
+    pub fn none() -> Self {
+        FaultPlan { seed: 0, envy_eps: 0.05, events: Vec::new() }
+    }
+
+    /// True when the plan schedules no transitions.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Build a plan from raw per-server outage intervals
+    /// `(server, start, end)`: overlapping/adjacent intervals of the
+    /// same server are merged, then each merged interval compiles to
+    /// one down and one up event, sorted canonically by
+    /// `(time, server, up)` so the engine's seq assignment — and
+    /// therefore the whole replay — is a pure function of the
+    /// intervals.
+    pub fn from_intervals(
+        seed: u64,
+        envy_eps: f64,
+        intervals: &[(usize, f64, f64)],
+    ) -> Self {
+        let mut by_server: Vec<(usize, f64, f64)> = intervals
+            .iter()
+            .copied()
+            .filter(|&(_, s, e)| e > s && e > 0.0)
+            .map(|(l, s, e)| (l, s.max(0.0), e))
+            .collect();
+        by_server.sort_by(|a, b| {
+            a.0.cmp(&b.0).then_with(|| a.1.total_cmp(&b.1))
+        });
+        let mut events = Vec::new();
+        let mut i = 0;
+        while i < by_server.len() {
+            let (l, mut s, mut e) = by_server[i];
+            i += 1;
+            while i < by_server.len()
+                && by_server[i].0 == l
+                && by_server[i].1 <= e
+            {
+                e = e.max(by_server[i].2);
+                s = s.min(by_server[i].1);
+                i += 1;
+            }
+            events.push(FaultEvent { time: s, server: l, up: false });
+            events.push(FaultEvent { time: e, server: l, up: true });
+        }
+        events.sort_by(|a, b| {
+            a.time
+                .total_cmp(&b.time)
+                .then_with(|| a.server.cmp(&b.server))
+                .then_with(|| a.up.cmp(&b.up))
+        });
+        FaultPlan { seed, envy_eps, events }
+    }
+}
+
+/// Retry discipline for tasks evicted by a server crash.
+///
+/// A task's first run is attempt 1. When attempt `a` is evicted and
+/// `a < max_attempts`, the task's *remaining* work is re-queued after
+/// [`RetryPolicy::backoff`] seconds; at `a == max_attempts` the task
+/// is abandoned (counted in `SimReport::tasks_lost`, its job never
+/// completes — degradation is a measured outcome, not an error).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts a task may consume (first run included). 0 is
+    /// treated as 1 (the first run always happens).
+    pub max_attempts: u32,
+    /// Backoff after the first eviction (seconds).
+    pub base: f64,
+    /// Ceiling on the exponential term (seconds).
+    pub cap: f64,
+    /// Multiplicative jitter amplitude: the delay is scaled by a
+    /// deterministic factor in `[1, 1 + jitter)` drawn from
+    /// `(seed, task, attempt)`. 0 disables jitter.
+    pub jitter: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 3,
+            base: 30.0,
+            cap: 3600.0,
+            jitter: 0.5,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff delay after attempt `attempt` (1-based) of `task`
+    /// failed: `min(cap, base * 2^(attempt-1))`, scaled by the
+    /// deterministic jitter factor. A pure function of
+    /// `(seed, task, attempt)` — same inputs, same delay, on any
+    /// machine at any shard count; no wall clock anywhere
+    /// (`drfh lint` enforces this module stays that way).
+    pub fn backoff(&self, seed: u64, task: u64, attempt: u32) -> f64 {
+        let exp = attempt.saturating_sub(1).min(63);
+        let nominal = (self.base * (exp as f64).exp2()).min(self.cap);
+        if self.jitter <= 0.0 {
+            return nominal;
+        }
+        // stream split by task, sequenced by attempt: adjacent tasks
+        // and adjacent attempts draw from unrelated streams
+        let mut rng = Pcg32::new(
+            seed ^ task.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+            attempt as u64,
+        );
+        nominal * (1.0 + self.jitter * rng.f64())
+    }
+
+    /// The attempt budget with the "first run always happens" floor.
+    pub fn attempt_cap(&self) -> u32 {
+        self.max_attempts.max(1)
+    }
+}
+
+/// One outage and its measured fairness recovery.
+///
+/// `baseline_envy` is the spread (max − min) of weighted dominant
+/// shares (`UserState::share_key`) across *active* users (running or
+/// pending work), captured immediately before the crash evicts
+/// anything. `recovered_at` is the first sample tick at or after the
+/// crash where the spread re-enters `baseline_envy + envy_eps`
+/// ([`FaultPlan::envy_eps`]); `None` means fairness never recovered
+/// before the horizon.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OutageRecord {
+    /// Crash time (seconds).
+    pub at: f64,
+    /// The server that went down.
+    pub server: usize,
+    /// Pre-crash envy spread.
+    pub baseline_envy: f64,
+    /// First sample tick with the spread back inside the tolerance.
+    pub recovered_at: Option<f64>,
+}
+
+impl OutageRecord {
+    /// Recovery latency in seconds, when fairness recovered.
+    pub fn recovery_time(&self) -> Option<f64> {
+        self.recovered_at.map(|t| t - self.at)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_empty_and_cheap() {
+        let p = FaultPlan::none();
+        assert!(p.is_empty());
+        assert_eq!(p.events.len(), 0);
+    }
+
+    #[test]
+    fn intervals_merge_and_sort() {
+        // server 3: [10, 20) and [15, 30) overlap -> one outage
+        // [10, 30); server 1: [5, 8) stands alone.
+        let p = FaultPlan::from_intervals(
+            7,
+            0.05,
+            &[(3, 10.0, 20.0), (1, 5.0, 8.0), (3, 15.0, 30.0)],
+        );
+        assert_eq!(p.events, vec![
+            FaultEvent { time: 5.0, server: 1, up: false },
+            FaultEvent { time: 8.0, server: 1, up: true },
+            FaultEvent { time: 10.0, server: 3, up: false },
+            FaultEvent { time: 30.0, server: 3, up: true },
+        ]);
+    }
+
+    #[test]
+    fn degenerate_intervals_dropped() {
+        let p = FaultPlan::from_intervals(
+            0,
+            0.05,
+            &[(0, 10.0, 10.0), (0, 9.0, 3.0), (2, -5.0, -1.0)],
+        );
+        assert!(p.is_empty());
+        // negative starts clamp to 0, keeping the down event pushable
+        let p = FaultPlan::from_intervals(0, 0.05, &[(2, -5.0, 4.0)]);
+        assert_eq!(p.events, vec![
+            FaultEvent { time: 0.0, server: 2, up: false },
+            FaultEvent { time: 4.0, server: 2, up: true },
+        ]);
+    }
+
+    #[test]
+    fn backoff_is_pure_and_monotone_in_attempt() {
+        let pol = RetryPolicy::default();
+        let a = pol.backoff(42, 1001, 1);
+        let b = pol.backoff(42, 1001, 1);
+        assert_eq!(a.to_bits(), b.to_bits(), "same inputs, same bits");
+        // nominal doubling dominates the bounded jitter ratio
+        let mut prev = pol.backoff(42, 1001, 1);
+        for attempt in 2..6 {
+            let d = pol.backoff(42, 1001, attempt);
+            assert!(d > prev / (1.0 + pol.jitter), "attempt {attempt}");
+            prev = d;
+        }
+        // the cap binds eventually
+        let capped = RetryPolicy { jitter: 0.0, ..pol };
+        assert_eq!(capped.backoff(0, 0, 30), capped.cap);
+    }
+
+    #[test]
+    fn backoff_varies_by_task_and_seed() {
+        let pol = RetryPolicy::default();
+        let base = pol.backoff(42, 1001, 2);
+        assert_ne!(base.to_bits(), pol.backoff(42, 1002, 2).to_bits());
+        assert_ne!(base.to_bits(), pol.backoff(43, 1001, 2).to_bits());
+        // all draws stay inside the documented [1, 1+jitter) band
+        for task in 0..50u64 {
+            let d = pol.backoff(7, task, 3);
+            let nominal = pol.base * 4.0;
+            assert!(d >= nominal && d < nominal * (1.0 + pol.jitter));
+        }
+    }
+
+    #[test]
+    fn zero_jitter_is_exactly_exponential() {
+        let pol = RetryPolicy {
+            max_attempts: 5,
+            base: 10.0,
+            cap: 1e9,
+            jitter: 0.0,
+        };
+        assert_eq!(pol.backoff(9, 9, 1), 10.0);
+        assert_eq!(pol.backoff(9, 9, 2), 20.0);
+        assert_eq!(pol.backoff(9, 9, 3), 40.0);
+    }
+
+    #[test]
+    fn recovery_time() {
+        let rec = OutageRecord {
+            at: 100.0,
+            server: 4,
+            baseline_envy: 0.01,
+            recovered_at: Some(160.0),
+        };
+        assert_eq!(rec.recovery_time(), Some(60.0));
+        let open = OutageRecord { recovered_at: None, ..rec };
+        assert_eq!(open.recovery_time(), None);
+    }
+}

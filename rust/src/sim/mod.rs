@@ -5,15 +5,19 @@
 //! arena, streaming metrics) is documented in [`engine`] §Perf; the
 //! queue implementations live in [`wheel`]; the wave-boundary
 //! invariant auditor ([`SimOpts::audit`] / `DRFH_AUDIT=1`) lives in
-//! [`audit`].
+//! [`audit`]; the deterministic fault-injection layer (server
+//! crash/recovery plans, retry with backoff, fairness-recovery
+//! measurement) lives in [`faults`].
 
 pub mod audit;
 pub mod engine;
+pub mod faults;
 pub mod wheel;
 
 pub use crate::cluster::ShardCount;
 pub use crate::metrics::MetricsMode;
 pub use engine::{run, SimOpts, SimReport, Simulation};
+pub use faults::{FaultEvent, FaultPlan, OutageRecord, RetryPolicy};
 pub use wheel::{
     EventQueue, HeapQueue, QueueKind, ShardedQueue, SimQueue, TimerWheel,
 };

@@ -13,6 +13,7 @@
 
 use super::trace::{JobSpec, TaskSpec, Trace, UserSpec};
 use crate::cluster::ResVec;
+use crate::sim::FaultPlan;
 use crate::util::Pcg32;
 
 /// Demand profile classes (mirrors the paper's CPU-heavy / memory-heavy
@@ -186,6 +187,124 @@ pub fn fig4_trace(tasks: [usize; 3], durations: [f64; 3]) -> Trace {
     Trace { users, jobs }
 }
 
+/// Fault-process configuration (`[faults]` in the experiment config):
+/// three seeded generators compiled into one [`FaultPlan`] by
+/// [`generate_faults`]. All rates are per second; a rate of 0 disables
+/// that process.
+#[derive(Clone, Debug)]
+pub struct FaultGenConfig {
+    /// Per-server Poisson crash rate (events/s per server).
+    pub crash_rate: f64,
+    /// Mean repair time for independent crashes (exponential).
+    pub mean_downtime: f64,
+    /// Servers per rack for correlated outages (0 disables racks).
+    pub rack_size: usize,
+    /// Per-rack Poisson outage rate; an outage downs the whole rack.
+    pub rack_outage_rate: f64,
+    /// Mean rack repair time (exponential).
+    pub rack_downtime: f64,
+    /// One-off "flash failure": at this instant an `flash_fraction` of
+    /// all servers goes down at once (None disables).
+    pub flash_at: Option<f64>,
+    /// Fraction of servers the flash failure takes down.
+    pub flash_fraction: f64,
+    /// How long flash-failed servers stay down.
+    pub flash_downtime: f64,
+    /// Fairness-recovery tolerance carried into the plan
+    /// ([`FaultPlan::envy_eps`]).
+    pub envy_eps: f64,
+}
+
+impl Default for FaultGenConfig {
+    fn default() -> Self {
+        FaultGenConfig {
+            crash_rate: 0.0,
+            mean_downtime: 300.0,
+            rack_size: 0,
+            rack_outage_rate: 0.0,
+            rack_downtime: 900.0,
+            flash_at: None,
+            flash_fraction: 0.1,
+            flash_downtime: 600.0,
+            envy_eps: 0.05,
+        }
+    }
+}
+
+impl FaultGenConfig {
+    /// True when every process is disabled (the generated plan is
+    /// [`FaultPlan::none`]-equivalent).
+    pub fn is_empty(&self) -> bool {
+        self.crash_rate <= 0.0
+            && (self.rack_size == 0 || self.rack_outage_rate <= 0.0)
+            && self.flash_at.is_none()
+    }
+}
+
+/// Compile the configured fault processes for a `servers`-sized cluster
+/// into a [`FaultPlan`], deterministically from `seed`. Every process
+/// draws from its own Pcg32 *stream* (per-server crash processes on
+/// streams `0..k`, per-rack outages above `RACK_STREAM`, the flash
+/// shuffle on `FLASH_STREAM`), so plans are stable under changes to the
+/// other processes' configs and independent of generation order.
+pub fn generate_faults(
+    cfg: &FaultGenConfig,
+    servers: usize,
+    horizon: f64,
+    seed: u64,
+) -> FaultPlan {
+    const RACK_STREAM: u64 = 1 << 40;
+    const FLASH_STREAM: u64 = 1 << 41;
+    let mut intervals: Vec<(usize, f64, f64)> = Vec::new();
+    // independent per-server crash/repair renewal processes
+    if cfg.crash_rate > 0.0 && cfg.mean_downtime > 0.0 {
+        for l in 0..servers {
+            let mut rng = Pcg32::new(seed, l as u64);
+            let mut t = rng.exp(cfg.crash_rate);
+            while t < horizon {
+                let down = rng.exp(1.0 / cfg.mean_downtime);
+                intervals.push((l, t, t + down));
+                t += down + rng.exp(cfg.crash_rate);
+            }
+        }
+    }
+    // correlated rack-scoped outages
+    if cfg.rack_size > 0
+        && cfg.rack_outage_rate > 0.0
+        && cfg.rack_downtime > 0.0
+    {
+        let racks = servers.div_ceil(cfg.rack_size);
+        for rack in 0..racks {
+            let mut rng = Pcg32::new(seed, RACK_STREAM + rack as u64);
+            let lo = rack * cfg.rack_size;
+            let hi = (lo + cfg.rack_size).min(servers);
+            let mut t = rng.exp(cfg.rack_outage_rate);
+            while t < horizon {
+                let down = rng.exp(1.0 / cfg.rack_downtime);
+                for l in lo..hi {
+                    intervals.push((l, t, t + down));
+                }
+                t += down + rng.exp(cfg.rack_outage_rate);
+            }
+        }
+    }
+    // one-off flash failure of a uniform server subset
+    if let Some(at) = cfg.flash_at {
+        if at < horizon && cfg.flash_fraction > 0.0 && cfg.flash_downtime > 0.0
+        {
+            let n = ((cfg.flash_fraction * servers as f64) as usize)
+                .clamp(1, servers);
+            let mut order: Vec<usize> = (0..servers).collect();
+            let mut rng = Pcg32::new(seed, FLASH_STREAM);
+            rng.shuffle(&mut order);
+            for &l in &order[..n] {
+                intervals.push((l, at, at + cfg.flash_downtime));
+            }
+        }
+    }
+    FaultPlan::from_intervals(seed, cfg.envy_eps, &intervals)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -289,6 +408,92 @@ mod tests {
         assert_eq!(jobs[2].submit, 2.0);
         assert_eq!(jobs[3].submit, 3.0);
         assert!(jobs[4].submit.is_nan()); // +NaN ranks last
+    }
+
+    // ---- fault-plan generation -----------------------------------
+
+    #[test]
+    fn empty_fault_config_compiles_to_empty_plan() {
+        let cfg = FaultGenConfig::default();
+        assert!(cfg.is_empty());
+        let plan = generate_faults(&cfg, 50, 10_000.0, 7);
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn fault_plan_deterministic_given_seed() {
+        let cfg = FaultGenConfig {
+            crash_rate: 1.0 / 2000.0,
+            rack_size: 8,
+            rack_outage_rate: 1.0 / 5000.0,
+            flash_at: Some(4000.0),
+            ..Default::default()
+        };
+        let a = generate_faults(&cfg, 64, 10_000.0, 21);
+        let b = generate_faults(&cfg, 64, 10_000.0, 21);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        let c = generate_faults(&cfg, 64, 10_000.0, 22);
+        assert_ne!(a.events, c.events, "seed must matter");
+    }
+
+    #[test]
+    fn crash_process_streams_are_per_server() {
+        // growing the cluster must not move the existing servers'
+        // crash events: each server draws from its own Pcg32 stream
+        let cfg = FaultGenConfig {
+            crash_rate: 1.0 / 1000.0,
+            ..Default::default()
+        };
+        let small = generate_faults(&cfg, 16, 10_000.0, 5);
+        let big = generate_faults(&cfg, 32, 10_000.0, 5);
+        let carried: Vec<_> =
+            big.events.iter().filter(|e| e.server < 16).collect();
+        assert_eq!(small.events.len(), carried.len());
+        for (a, b) in small.events.iter().zip(carried) {
+            assert_eq!(a, b, "server stream drifted with cluster size");
+        }
+    }
+
+    #[test]
+    fn rack_outage_downs_whole_rack() {
+        let cfg = FaultGenConfig {
+            rack_size: 4,
+            rack_outage_rate: 1.0 / 3000.0,
+            ..Default::default()
+        };
+        let plan = generate_faults(&cfg, 8, 50_000.0, 3);
+        assert!(!plan.is_empty());
+        // every down time shared by a rack hits rack_size servers
+        let downs: Vec<_> =
+            plan.events.iter().filter(|e| !e.up).collect();
+        let t0 = downs[0].time;
+        let peers =
+            downs.iter().filter(|e| e.time == t0).count();
+        assert_eq!(peers % 4, 0, "rack outages must be rack-wide");
+    }
+
+    #[test]
+    fn flash_failure_hits_the_configured_fraction() {
+        let cfg = FaultGenConfig {
+            flash_at: Some(100.0),
+            flash_fraction: 0.25,
+            flash_downtime: 60.0,
+            ..Default::default()
+        };
+        let plan = generate_faults(&cfg, 40, 10_000.0, 9);
+        let downs: Vec<_> =
+            plan.events.iter().filter(|e| !e.up).collect();
+        assert_eq!(downs.len(), 10); // 25% of 40
+        assert!(downs.iter().all(|e| e.time == 100.0));
+        let ups: Vec<_> = plan.events.iter().filter(|e| e.up).collect();
+        assert!(ups.iter().all(|e| e.time == 160.0));
+        // distinct servers
+        let mut servers: Vec<usize> =
+            downs.iter().map(|e| e.server).collect();
+        servers.sort_unstable();
+        servers.dedup();
+        assert_eq!(servers.len(), 10);
     }
 
     #[test]

@@ -15,5 +15,7 @@ pub mod gen;
 pub mod trace;
 
 pub use arena::{intern_rows, DemandTable, TaskArena};
-pub use gen::{GoogleLikeConfig, TraceGenerator};
+pub use gen::{
+    generate_faults, FaultGenConfig, GoogleLikeConfig, TraceGenerator,
+};
 pub use trace::{JobSpec, TaskSpec, Trace, UserSpec};

@@ -19,10 +19,13 @@ use drfh::sched::{
     BestFitDrfh, DrainCtx, FirstFitDrfh, Pick, Scheduler, SlotsScheduler,
     UserState,
 };
-use drfh::sim::{run, QueueKind, ShardCount, SimOpts};
+use drfh::sim::{
+    run, FaultPlan, QueueKind, RetryPolicy, ShardCount, SimOpts,
+};
 use drfh::util::Pcg32;
 use drfh::workload::{
-    GoogleLikeConfig, JobSpec, TaskSpec, Trace, TraceGenerator, UserSpec,
+    generate_faults, FaultGenConfig, GoogleLikeConfig, JobSpec, TaskSpec,
+    Trace, TraceGenerator, UserSpec,
 };
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -121,6 +124,14 @@ impl<S: Scheduler> Scheduler for Recording<S> {
     fn on_ready(&mut self, user: usize) {
         self.inner.on_ready(user);
     }
+
+    fn on_server_down(&mut self, server: usize) {
+        self.inner.on_server_down(server);
+    }
+
+    fn on_server_up(&mut self, server: usize) {
+        self.inner.on_server_up(server);
+    }
 }
 
 /// Forces the single-pick reference drain over any policy: delegates
@@ -173,6 +184,14 @@ impl<S: Scheduler> Scheduler for SinglePick<S> {
 
     fn on_ready(&mut self, user: usize) {
         self.0.on_ready(user);
+    }
+
+    fn on_server_down(&mut self, server: usize) {
+        self.0.on_server_down(server);
+    }
+
+    fn on_server_up(&mut self, server: usize) {
+        self.0.on_server_up(server);
     }
 }
 
@@ -645,6 +664,14 @@ impl<S: Scheduler> Scheduler for AssertShares<S> {
 
     fn on_ready(&mut self, user: usize) {
         self.0.on_ready(user);
+    }
+
+    fn on_server_down(&mut self, server: usize) {
+        self.0.on_server_down(server);
+    }
+
+    fn on_server_up(&mut self, server: usize) {
+        self.0.on_server_up(server);
     }
 }
 
@@ -1341,4 +1368,291 @@ fn corrupted_index_trips_audit_indices() {
         );
         users[0].dom_share = 50.0 * 0.01; // restore for the next variant
     }
+}
+
+// ------------------------------------------------- fault injection
+
+/// `FaultPlan::none()` parity (the PR's acceptance gate): an explicit
+/// empty plan — and a plan whose outages all land past the horizon, so
+/// it compiles to zero queued events — must produce a [`drfh::sim::
+/// SimReport`] bit-identical to the default run, for Best-Fit,
+/// First-Fit, and Slots, at S ∈ {1, 3, 8}. A non-default retry policy
+/// rides along on the empty-plan leg: with nothing to evict it must
+/// never be consulted.
+#[test]
+fn fault_plan_none_is_bit_identical() {
+    use drfh::experiments::EvalSetup;
+    let setup = EvalSetup::with_duration(42, 120, 12, 5_000.0);
+    let h = setup.opts.horizon;
+    let mks: Vec<(&str, fn(&Cluster) -> Box<dyn Scheduler>)> = vec![
+        ("bestfit", |_| Box::new(BestFitDrfh::default())),
+        ("firstfit", |_| Box::new(FirstFitDrfh::default())),
+        ("slots", |c| Box::new(SlotsScheduler::new(c, 14))),
+    ];
+    for (name, mk) in mks {
+        for shards in [1usize, 3, 8] {
+            let base = SimOpts {
+                shards: ShardCount::Fixed(shards),
+                ..setup.opts.clone()
+            };
+            let r_default = run(
+                setup.cluster.clone(),
+                &setup.trace,
+                mk(&setup.cluster),
+                base.clone(),
+            );
+            let r_none = run(
+                setup.cluster.clone(),
+                &setup.trace,
+                mk(&setup.cluster),
+                SimOpts {
+                    faults: FaultPlan::none(),
+                    retry: RetryPolicy {
+                        max_attempts: 9,
+                        base: 1.0,
+                        cap: 10.0,
+                        jitter: 0.0,
+                    },
+                    ..base.clone()
+                },
+            );
+            assert_eq!(
+                r_default, r_none,
+                "{name} S={shards}: FaultPlan::none() perturbed the run"
+            );
+            // every event past the horizon is dropped at push time, so
+            // this plan is behaviorally empty too
+            let late = FaultPlan::from_intervals(
+                7,
+                0.05,
+                &[(0, h + 10.0, h + 20.0), (3, h + 1.0, h + 5.0)],
+            );
+            let r_late = run(
+                setup.cluster.clone(),
+                &setup.trace,
+                mk(&setup.cluster),
+                SimOpts { faults: late, ..base },
+            );
+            assert_eq!(
+                r_default, r_late,
+                "{name} S={shards}: past-horizon plan perturbed the run"
+            );
+            assert_eq!(r_default.evictions, 0);
+            assert_eq!(r_default.wasted_s, 0.0);
+            assert!(r_default.outages.is_empty());
+        }
+    }
+}
+
+/// Mid-wave crash collisions across shards: the tie-break trace puts
+/// arrivals, completions, and the sample barrier on a 10 s grid, and
+/// the plan downs servers exactly on that grid (two in the same wave,
+/// one off-grid, one repeat outage on a recovered server) — so the
+/// `ServerDown`/`ServerUp` barriers split waves that are already
+/// three-way collisions. Decision streams and full `SimReport`s must
+/// be identical at S ∈ {1, 2, 3, 8} on both queue kinds, and the plan
+/// must actually evict (else the matrix proves nothing).
+#[test]
+fn midwave_crash_parity_across_shards() {
+    let (cluster, trace) = tiebreak_trace(4343);
+    let plan = FaultPlan::from_intervals(
+        11,
+        0.05,
+        &[
+            (0, 20.0, 60.0),
+            (3, 20.0, 90.0),   // second down in the same wave
+            (5, 35.0, 55.0),   // off-grid: splits between grid waves
+            (0, 200.0, 260.0), // repeat outage on a recovered server
+        ],
+    );
+    let retry = RetryPolicy {
+        max_attempts: 3,
+        base: 5.0,
+        cap: 40.0,
+        jitter: 0.5,
+    };
+    for kind in [QueueKind::Wheel, QueueKind::Heap] {
+        let opts = SimOpts {
+            horizon: 1_000.0,
+            sample_dt: 10.0,
+            track_user_series: false,
+            queue: kind,
+            faults: plan.clone(),
+            retry,
+            ..SimOpts::default()
+        };
+        assert_shard_parity(
+            &format!("midwave bestfit {kind:?}"),
+            &cluster,
+            &trace,
+            &opts,
+            BestFitDrfh::default,
+        );
+        assert_shard_parity(
+            &format!("midwave slots {kind:?}"),
+            &cluster,
+            &trace,
+            &opts,
+            || SlotsScheduler::new(&cluster, 14),
+        );
+    }
+    let opts = SimOpts {
+        horizon: 1_000.0,
+        sample_dt: 10.0,
+        track_user_series: false,
+        faults: plan,
+        retry,
+        ..SimOpts::default()
+    };
+    let r = run(
+        cluster.clone(),
+        &trace,
+        Box::new(BestFitDrfh::default()),
+        opts,
+    );
+    assert!(r.evictions > 0, "crash plan evicted nothing");
+    assert_eq!(r.evictions, r.retries + r.tasks_lost);
+    assert_eq!(r.outages.len(), 4, "one record per compiled down event");
+}
+
+/// Seeded replay: the same generator config + seed compiles to the
+/// same plan, and the same plan + trace replays to a bit-identical
+/// `SimReport` — rerun or sharded. A different fault seed moves the
+/// plan.
+#[test]
+fn seeded_fault_replay_is_reproducible() {
+    use drfh::experiments::EvalSetup;
+    let setup = EvalSetup::with_duration(7, 100, 10, 5_000.0);
+    let cfg = FaultGenConfig {
+        crash_rate: 4e-5,
+        mean_downtime: 400.0,
+        flash_at: Some(1_200.0),
+        flash_fraction: 0.2,
+        flash_downtime: 900.0,
+        ..FaultGenConfig::default()
+    };
+    let (k, h) = (setup.cluster.len(), setup.opts.horizon);
+    let plan = generate_faults(&cfg, k, h, 99);
+    assert_eq!(
+        plan,
+        generate_faults(&cfg, k, h, 99),
+        "same seed must compile the same plan"
+    );
+    assert_ne!(
+        plan.events,
+        generate_faults(&cfg, k, h, 100).events,
+        "a different fault seed must move the plan"
+    );
+    let mk_opts = |shards| SimOpts {
+        faults: plan.clone(),
+        shards: ShardCount::Fixed(shards),
+        ..setup.opts.clone()
+    };
+    let r1 = run(
+        setup.cluster.clone(),
+        &setup.trace,
+        Box::new(BestFitDrfh::default()),
+        mk_opts(1),
+    );
+    assert!(r1.evictions > 0, "replay guard needs a non-vacuous plan");
+    let r2 = run(
+        setup.cluster.clone(),
+        &setup.trace,
+        Box::new(BestFitDrfh::default()),
+        mk_opts(1),
+    );
+    assert_eq!(r1, r2, "same plan + seed must replay bit-identically");
+    let r8 = run(
+        setup.cluster.clone(),
+        &setup.trace,
+        Box::new(BestFitDrfh::default()),
+        mk_opts(8),
+    );
+    assert_eq!(r1, r8, "sharded faulted replay diverged from S=1");
+}
+
+/// Audit neutrality with a live fault plan: the fault invariants
+/// (down-server drain, attempt budgets, parked-retry slots) run every
+/// wave on healthy state without tripping, and the audited report
+/// stays bit-identical to the unaudited one across shard counts.
+#[test]
+fn audit_mode_is_decision_neutral_under_faults() {
+    let (cluster, trace) = tiebreak_trace(4545);
+    let plan = FaultPlan::from_intervals(
+        3,
+        0.05,
+        &[(1, 20.0, 80.0), (4, 50.0, 120.0), (7, 100.0, 160.0)],
+    );
+    let opts = SimOpts {
+        horizon: 1_000.0,
+        sample_dt: 10.0,
+        track_user_series: false,
+        faults: plan,
+        ..SimOpts::default()
+    };
+    assert_audit_parity(
+        "audit faulted bestfit",
+        &cluster,
+        &trace,
+        &opts,
+        BestFitDrfh::default,
+    );
+    assert_audit_parity(
+        "audit faulted slots",
+        &cluster,
+        &trace,
+        &opts,
+        || SlotsScheduler::new(&cluster, 14),
+    );
+}
+
+/// The fault auditor actually audits: phantom usage on a server the
+/// plan downs at t = 0 survives the eviction drain (no run entries
+/// back it), so the down server retains usage the fault invariant
+/// forbids — the audited run must panic with the structured dump and
+/// name the fault invariant.
+#[test]
+fn audit_trips_on_phantom_usage_on_a_down_server() {
+    use drfh::sim::Simulation;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    let mut rng = Pcg32::seeded(99);
+    let cluster = Cluster::google_sample(4, &mut rng);
+    let trace = Trace {
+        users: vec![UserSpec {
+            demand: ResVec::cpu_mem(0.2, 0.2),
+            weight: 1.0,
+        }],
+        jobs: vec![JobSpec {
+            id: 0,
+            user: 0,
+            submit: 0.0,
+            tasks: vec![TaskSpec { duration: 10.0 }; 4],
+        }],
+    };
+    let plan = FaultPlan::from_intervals(1, 0.05, &[(0, 0.0, 50.0)]);
+    let opts = SimOpts { audit: true, faults: plan, ..SimOpts::default() };
+    let mut sim = Simulation::new(
+        cluster,
+        &trace,
+        Box::new(BestFitDrfh::default()),
+        opts,
+    );
+    sim.cluster.servers[0].usage = ResVec::cpu_mem(0.5, 0.5);
+    let err = catch_unwind(AssertUnwindSafe(move || sim.run()))
+        .expect_err("audited faulted run accepted phantom down-server usage");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .unwrap_or_else(|| {
+            err.downcast_ref::<&str>().map(|s| s.to_string()).unwrap()
+        });
+    assert!(
+        msg.contains("DRFH audit failure"),
+        "unexpected panic message: {msg}"
+    );
+    assert!(
+        msg.contains("faults:"),
+        "fault invariant missing from the dump: {msg}"
+    );
 }

@@ -523,3 +523,78 @@ fn sim_conservation_randomized() {
         }
     }
 }
+
+/// Retry-backoff determinism (fault layer, satellite): the delay is a
+/// pure function of `(seed, task, attempt)` — bit-identical on
+/// re-evaluation, varying with every input, nominally doubling per
+/// attempt up to the cap, inside the documented jitter band, and
+/// exactly exponential with jitter disabled. Randomized over policies
+/// the same way the fluid properties sweep seeds.
+#[test]
+fn retry_backoff_is_pure_and_bounded() {
+    use drfh::sim::RetryPolicy;
+    for seed in 0..30u64 {
+        let mut rng = Pcg32::seeded(20_000 + seed);
+        let pol = RetryPolicy {
+            max_attempts: 1 + rng.below(8) as u32,
+            base: rng.uniform(1.0, 120.0),
+            cap: rng.uniform(300.0, 7_200.0),
+            jitter: rng.uniform(0.0, 1.0),
+        };
+        let plan_seed = rng.below(1 << 30) as u64;
+        for probe in 0..20u64 {
+            let task = rng.below(1 << 20) as u64;
+            let attempt = 1 + rng.below(12) as u32;
+            let d = pol.backoff(plan_seed, task, attempt);
+            // pure: same inputs, same bits
+            assert_eq!(
+                d.to_bits(),
+                pol.backoff(plan_seed, task, attempt).to_bits(),
+                "seed {seed} probe {probe}: backoff not reproducible"
+            );
+            // banded: nominal <= d < nominal * (1 + jitter)
+            let nominal = (pol.base
+                * (attempt.saturating_sub(1).min(63) as f64).exp2())
+            .min(pol.cap);
+            assert!(
+                d >= nominal && d <= nominal * (1.0 + pol.jitter),
+                "seed {seed} probe {probe}: {d} outside \
+                 [{nominal}, {})",
+                nominal * (1.0 + pol.jitter)
+            );
+            // input sensitivity: with jitter on, a different task or
+            // plan seed draws from an unrelated stream
+            if pol.jitter > 1e-3 {
+                assert_ne!(
+                    d.to_bits(),
+                    pol.backoff(plan_seed, task ^ 1, attempt).to_bits(),
+                    "seed {seed} probe {probe}: task did not move the draw"
+                );
+                assert_ne!(
+                    d.to_bits(),
+                    pol.backoff(plan_seed ^ 1, task, attempt).to_bits(),
+                    "seed {seed} probe {probe}: seed did not move the draw"
+                );
+            }
+        }
+        // monotone nominal growth until the cap binds, then flat
+        let exact = RetryPolicy { jitter: 0.0, ..pol };
+        let mut prev = 0.0f64;
+        for attempt in 1..=16u32 {
+            let d = exact.backoff(plan_seed, 7, attempt);
+            assert!(
+                d >= prev,
+                "seed {seed}: zero-jitter backoff not monotone"
+            );
+            assert!(d <= exact.cap, "seed {seed}: cap violated");
+            let want = (exact.base
+                * (attempt.saturating_sub(1) as f64).exp2())
+            .min(exact.cap);
+            assert_eq!(
+                d, want,
+                "seed {seed}: zero-jitter backoff not exactly exponential"
+            );
+            prev = d;
+        }
+    }
+}
