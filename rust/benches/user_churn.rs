@@ -1,0 +1,256 @@
+//! §Perf + determinism harness for the churn layer: the class-keyed
+//! Best-Fit configuration at 10⁶ users / ~10 demand classes under a
+//! churn-rate sweep, on the wheel + streaming data plane.
+//!
+//! Measured per cell: wall time, applied joins/leaves, abandoned
+//! tasks, and end-to-end task throughput. Alongside the sweep the
+//! bench enforces the two replay guarantees cheaply (the bit-exact
+//! proofs live in `tests/engine_parity.rs`):
+//!
+//! * `ChurnPlan::none()` parity — the churn-free run matches itself
+//!   at 1 shard and at the core count, with every churn counter zero;
+//! * seeded replay — the same plan + seed reproduces goodput and
+//!   abandoned-work floats bit-for-bit, sharded or not.
+//!
+//! Results go to `BENCH_churn.json` at the repo root (override with
+//! `BENCH_OUT=/path.json`); CI runs the small-scale smoke via
+//! `CHURN_SMOKE=1`.
+//!
+//! Run: `cargo bench --bench user_churn`
+
+use drfh::cluster::Cluster;
+use drfh::experiments::user_scale::{classed_trace, DEFAULT_CLASSES};
+use drfh::metrics::MetricsMode;
+use drfh::sched::BestFitDrfh;
+use drfh::sim::{run, ChurnPlan, ShardCount, SimOpts, SimReport};
+use drfh::util::bench::{bench_n, header, write_suite_json, BenchResult};
+use drfh::util::json::Json;
+use drfh::util::Pcg32;
+use drfh::workload::{generate_churn, ChurnGenConfig, Trace};
+use std::collections::BTreeMap;
+
+struct Case {
+    bench: BenchResult,
+    report: SimReport,
+}
+
+fn run_case(
+    name: &str,
+    setup: &(Cluster, Trace, SimOpts),
+    plan: &ChurnPlan,
+    shards: usize,
+) -> Case {
+    let (cluster, trace, opts) = setup;
+    let mut report = None;
+    let bench = bench_n(name, 1, || {
+        let opts = SimOpts {
+            metrics: MetricsMode::streaming(),
+            shards: ShardCount::Fixed(shards),
+            churn: plan.clone(),
+            ..opts.clone()
+        };
+        let rep = run(
+            cluster.clone(),
+            trace,
+            Box::new(BestFitDrfh::default()),
+            opts,
+        );
+        let placed = rep.tasks_placed;
+        report = Some(rep);
+        placed
+    });
+    Case { bench, report: report.expect("bench ran at least once") }
+}
+
+fn tasks_per_sec(c: &Case) -> f64 {
+    c.report.tasks_completed as f64 / c.bench.mean.as_secs_f64().max(1e-12)
+}
+
+fn main() {
+    let smoke = std::env::var_os("CHURN_SMOKE").is_some();
+    let (servers, users, total_tasks, duration): (usize, usize, usize, f64) =
+        if smoke {
+            (200, 5_000, 8_000, 3_600.0)
+        } else {
+            (2_000, 1_000_000, 200_000, 14_400.0)
+        };
+    let classes = DEFAULT_CLASSES;
+    let hw = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    println!(
+        "user_churn: k={servers} n={users} classes={classes} \
+         ~{total_tasks} tasks over {duration:.0}s ({hw} cores){}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let mut rng = Pcg32::new(2026, 0xc1);
+    let cluster = Cluster::google_sample(servers, &mut rng);
+    let trace = classed_trace(users, classes, total_tasks, duration, 2026);
+    let opts = SimOpts {
+        horizon: duration,
+        sample_dt: (duration / 200.0).max(10.0),
+        ..SimOpts::default()
+    };
+    let setup = (cluster, trace, opts);
+
+    // ---- replay guards first: none-plan parity and seeded replay
+    header("user_churn: replay guards");
+    let none = ChurnPlan::none();
+    let baseline = run_case("none-s1", &setup, &none, 1);
+    let baseline_sharded = run_case("none-shw", &setup, &none, hw);
+    assert_eq!(
+        baseline.report.tasks_placed, baseline_sharded.report.tasks_placed,
+        "ChurnPlan::none() parity: placement counts diverged across shards"
+    );
+    assert_eq!(
+        baseline.report.job_stats, baseline_sharded.report.job_stats,
+        "ChurnPlan::none() parity: job stats diverged across shards"
+    );
+    assert_eq!(baseline.report.user_joins, 0);
+    assert_eq!(baseline.report.user_leaves, 0);
+    assert_eq!(baseline.report.tasks_abandoned, 0);
+    assert_eq!(baseline.report.abandoned_s, 0.0);
+
+    let guard_cfg = ChurnGenConfig {
+        leave_rate: if smoke { 2e-4 } else { 2e-5 },
+        absent_frac: 0.2,
+        flash_at: Some(duration / 3.0),
+        flash_fraction: 0.25,
+        flash_hold: duration / 8.0,
+        ..ChurnGenConfig::default()
+    };
+    let guard_plan =
+        generate_churn(&guard_cfg, users, duration, 2026);
+    let replay_a = run_case("replay-a", &setup, &guard_plan, 1);
+    let replay_b = run_case("replay-b", &setup, &guard_plan, 1);
+    let replay_s = run_case("replay-shw", &setup, &guard_plan, hw);
+    for (label, r) in
+        [("same-seed rerun", &replay_b), ("sharded rerun", &replay_s)]
+    {
+        assert_eq!(
+            replay_a.report.goodput_s.to_bits(),
+            r.report.goodput_s.to_bits(),
+            "{label}: goodput not bit-identical"
+        );
+        assert_eq!(
+            replay_a.report.abandoned_s.to_bits(),
+            r.report.abandoned_s.to_bits(),
+            "{label}: abandoned work not bit-identical"
+        );
+        assert_eq!(
+            (
+                replay_a.report.tasks_placed,
+                replay_a.report.user_joins,
+                replay_a.report.user_leaves,
+                replay_a.report.tasks_abandoned,
+            ),
+            (
+                r.report.tasks_placed,
+                r.report.user_joins,
+                r.report.user_leaves,
+                r.report.tasks_abandoned,
+            ),
+            "{label}: counters diverged"
+        );
+    }
+    assert!(
+        replay_a.report.user_leaves > 0,
+        "guard plan churned nobody — the sweep below would be vacuous"
+    );
+    println!(
+        "guards ok: none-plan parity at S=1/{hw}, seeded replay \
+         bit-identical ({} joins, {} leaves)",
+        replay_a.report.user_joins, replay_a.report.user_leaves
+    );
+
+    // ---- the sweep: churn (leave) rate at fixed population
+    let leave_rates: &[f64] =
+        if smoke { &[1e-4, 4e-4] } else { &[1e-6, 1e-5, 1e-4] };
+    header("user_churn: churn-rate sweep (Best-Fit classed, sharded)");
+    println!(
+        "{:<16} {:>8} {:>8} {:>8} {:>10} {:>11} {:>11}",
+        "case", "events", "joins", "leaves", "abandoned", "tasks done",
+        "tasks/s"
+    );
+    let mut results = vec![
+        baseline.bench,
+        baseline_sharded.bench,
+        replay_a.bench,
+        replay_b.bench,
+        replay_s.bench,
+    ];
+    let mut rows: Vec<Json> = Vec::new();
+    for &rate in leave_rates {
+        let cfg = ChurnGenConfig {
+            leave_rate: rate,
+            absent_frac: 0.1,
+            ..ChurnGenConfig::default()
+        };
+        let plan = generate_churn(&cfg, users, duration, 2026);
+        let name = format!("churn-{rate:.0e}");
+        let case = run_case(&name, &setup, &plan, hw);
+        let r = &case.report;
+        println!(
+            "{:<16} {:>8} {:>8} {:>8} {:>10} {:>11} {:>11.0}",
+            name,
+            plan.events.len(),
+            r.user_joins,
+            r.user_leaves,
+            r.tasks_abandoned,
+            r.tasks_completed,
+            tasks_per_sec(&case),
+        );
+        let mut row = BTreeMap::new();
+        row.insert("leave_rate".to_string(), Json::Num(rate));
+        row.insert(
+            "plan_events".to_string(),
+            Json::Num(plan.events.len() as f64),
+        );
+        row.insert("joins".to_string(), Json::Num(r.user_joins as f64));
+        row.insert("leaves".to_string(), Json::Num(r.user_leaves as f64));
+        row.insert(
+            "tasks_abandoned".to_string(),
+            Json::Num(r.tasks_abandoned as f64),
+        );
+        row.insert(
+            "tasks_per_sec".to_string(),
+            Json::Num(tasks_per_sec(&case)),
+        );
+        rows.push(Json::Obj(row));
+        results.push(case.bench);
+    }
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_churn.json")
+            .to_string()
+    });
+    let meta = [
+        ("servers", Json::Num(servers as f64)),
+        ("users", Json::Num(users as f64)),
+        ("classes", Json::Num(classes as f64)),
+        ("tasks_offered_approx", Json::Num(total_tasks as f64)),
+        ("horizon_s", Json::Num(duration)),
+        ("smoke", Json::Bool(smoke)),
+        ("cores", Json::Num(hw as f64)),
+        (
+            "guard_joins",
+            Json::Num(replay_a.report.user_joins as f64),
+        ),
+        (
+            "guard_leaves",
+            Json::Num(replay_a.report.user_leaves as f64),
+        ),
+        (
+            "baseline_goodput_s",
+            Json::Num(baseline.report.goodput_s),
+        ),
+        ("sweep", Json::Arr(rows)),
+    ];
+    let path = std::path::PathBuf::from(&out);
+    if write_suite_json(&path, "user_churn", &meta, &results) {
+        println!("\nwrote {}", path.display());
+    } else {
+        println!("\ncould not write {} (read-only fs?)", path.display());
+    }
+}

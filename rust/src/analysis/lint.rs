@@ -658,7 +658,7 @@ fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
 /// `(virtual path, source)` pairs. The linter must report at least
 /// one finding on every entry: the self-tests assert per-rule hits,
 /// and `drfh lint --corpus true` must exit non-zero in CI.
-pub const VIOLATION_CORPUS: [(&str, &str); 8] = [
+pub const VIOLATION_CORPUS: [(&str, &str); 9] = [
     (
         "sched/corpus_hash_iter.rs",
         r#"use std::collections::HashMap;
@@ -727,6 +727,18 @@ impl Scheduler for P {
         .duration_since(std::time::UNIX_EPOCH)
         .unwrap()
         .as_millis()
+}
+"#,
+    ),
+    // the churn generator's renewal/flash/diurnal draws must stay
+    // pure functions of (config, seed): this entry pins that
+    // `workload/gen.rs` sits inside the linted decision-module set,
+    // so an ambient RNG sneaking into a churn stream fails CI
+    (
+        "workload/gen.rs",
+        r#"fn next_leave(rate: f64) -> f64 {
+    let r = rand::thread_rng().gen::<f64>();
+    -r.ln() / rate
 }
 "#,
     ),
@@ -923,6 +935,27 @@ mod tests {
         let real =
             lint_source("sim/faults.rs", include_str!("../sim/faults.rs"));
         assert!(real.is_empty(), "sim/faults.rs: {real:?}");
+    }
+
+    #[test]
+    fn churn_generator_is_lint_covered() {
+        // corpus entry [8]: an ambient RNG in `workload/gen.rs` — the
+        // churn/fault/trace generators' home — is flagged like any
+        // decision module, so every churn stream stays a pure
+        // function of (config, seed)
+        let (path, src) = VIOLATION_CORPUS[8];
+        assert_eq!(path, "workload/gen.rs");
+        let f = lint_source(path, src);
+        assert!(
+            f.iter().any(|x| x.rule == Rule::WallClock),
+            "ambient RNG in the generator module not flagged: {f:?}"
+        );
+        // and the real module lints clean under the same rules
+        let real = lint_source(
+            "workload/gen.rs",
+            include_str!("../workload/gen.rs"),
+        );
+        assert!(real.is_empty(), "workload/gen.rs: {real:?}");
     }
 
     #[test]

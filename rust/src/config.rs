@@ -35,6 +35,16 @@
 //! retry_base = 30.0        # base backoff (doubles per attempt)
 //! retry_cap = 3600.0       # backoff ceiling
 //! retry_jitter = 0.5       # multiplicative seeded jitter span
+//! [churn]
+//! leave_rate = 0.0         # per-user Poisson departure rate (events/s; 0 = off)
+//! rejoin_rate = 0.000556   # per-user Poisson rejoin rate while absent
+//! absent_frac = 0.0        # fraction of users absent at t = 0
+//! flash_at = 0.0           # one-off flash-crowd instant (unset = off)
+//! flash_frac = 0.1         # fraction of the population the flash crowd targets
+//! flash_hold = 1800.0      # how long flash joiners stay before leaving
+//! diurnal_amp = 0.0        # diurnal rate modulation amplitude in [0, 1]
+//! diurnal_period = 86400.0 # diurnal period (seconds)
+//! seed = 0                 # churn-plan seed (unset = top-level seed)
 //! ```
 //!
 //! Parsed with the in-tree TOML-subset parser (`util::toml_lite`; the
@@ -43,12 +53,14 @@
 use crate::cluster::Cluster;
 use crate::sched::{BestFitDrfh, FirstFitDrfh, Scheduler, SlotsScheduler};
 use crate::sim::{
-    FaultPlan, MetricsMode, QueueKind, RetryPolicy, ShardCount, SimOpts,
+    ChurnPlan, FaultPlan, MetricsMode, QueueKind, RetryPolicy, ShardCount,
+    SimOpts,
 };
 use crate::util::toml_lite;
 use crate::util::Pcg32;
 use crate::workload::{
-    generate_faults, FaultGenConfig, GoogleLikeConfig, TraceGenerator,
+    generate_churn, generate_faults, ChurnGenConfig, FaultGenConfig,
+    GoogleLikeConfig, TraceGenerator,
 };
 use crate::util::error::{anyhow, bail, Context, Result};
 
@@ -149,6 +161,18 @@ impl Default for FaultsConfig {
     }
 }
 
+/// `[churn]`: the user join/leave processes ([`ChurnGenConfig`]).
+/// Defaults leave every process off, so the compiled plan is empty and
+/// the engine's churn layer stays fully dormant (bit-identical to a
+/// churn-free build — see `tests/engine_parity.rs`).
+#[derive(Clone, Debug, Default)]
+pub struct ChurnConfig {
+    /// The seeded generators (renewal walks / flash crowd / diurnal).
+    pub gen: ChurnGenConfig,
+    /// Churn-plan seed; unset = the top-level experiment seed.
+    pub seed: Option<u64>,
+}
+
 /// Top-level experiment configuration.
 #[derive(Clone, Debug, Default)]
 pub struct ExperimentConfig {
@@ -158,6 +182,7 @@ pub struct ExperimentConfig {
     pub sim: SimConfig,
     pub scheduler: SchedulerConfig,
     pub faults: FaultsConfig,
+    pub churn: ChurnConfig,
 }
 
 impl ExperimentConfig {
@@ -274,6 +299,34 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_f64("faults", "retry_jitter") {
             f.retry_jitter = v;
         }
+        let ch = &mut cfg.churn;
+        if let Some(v) = doc.get_f64("churn", "leave_rate") {
+            ch.gen.leave_rate = v;
+        }
+        if let Some(v) = doc.get_f64("churn", "rejoin_rate") {
+            ch.gen.rejoin_rate = v;
+        }
+        if let Some(v) = doc.get_f64("churn", "absent_frac") {
+            ch.gen.absent_frac = v;
+        }
+        if let Some(v) = doc.get_f64("churn", "flash_at") {
+            ch.gen.flash_at = Some(v);
+        }
+        if let Some(v) = doc.get_f64("churn", "flash_frac") {
+            ch.gen.flash_fraction = v;
+        }
+        if let Some(v) = doc.get_f64("churn", "flash_hold") {
+            ch.gen.flash_hold = v;
+        }
+        if let Some(v) = doc.get_f64("churn", "diurnal_amp") {
+            ch.gen.diurnal_amp = v;
+        }
+        if let Some(v) = doc.get_f64("churn", "diurnal_period") {
+            ch.gen.diurnal_period = v;
+        }
+        if let Some(v) = doc.get("churn", "seed").and_then(|v| v.as_u64()) {
+            ch.seed = Some(v);
+        }
         Ok(cfg)
     }
 
@@ -354,6 +407,7 @@ impl ExperimentConfig {
             audit: self.sim.audit,
             faults: FaultPlan::none(),
             retry: self.retry_policy(),
+            churn: ChurnPlan::none(),
         })
     }
 
@@ -378,6 +432,20 @@ impl ExperimentConfig {
             servers,
             self.sim.horizon,
             self.faults.seed.unwrap_or(self.seed),
+        )
+    }
+
+    /// Compile the `[churn]` processes into a join/leave plan for a
+    /// `users`-sized population ([`crate::workload::generate_churn`]).
+    /// Empty (and free) when every process is off; callers drop it into
+    /// `SimOpts::churn` — like [`Self::build_fault_plan`] this stays out
+    /// of [`Self::sim_opts`], which does not know the population size.
+    pub fn build_churn_plan(&self, users: usize) -> ChurnPlan {
+        generate_churn(
+            &self.churn.gen,
+            users,
+            self.sim.horizon,
+            self.churn.seed.unwrap_or(self.seed),
         )
     }
 }
@@ -519,6 +587,36 @@ mod tests {
         )
         .unwrap();
         assert_eq!(c.build_fault_plan(10).seed, 11);
+    }
+
+    #[test]
+    fn churn_parse_and_default_off() {
+        let c = ExperimentConfig::from_toml("").unwrap();
+        assert!(c.churn.gen.is_empty());
+        assert!(c.build_churn_plan(100).is_empty());
+        assert!(c.sim_opts().unwrap().churn.is_empty());
+
+        let c = ExperimentConfig::from_toml(
+            "seed = 3\n[churn]\nleave_rate = 0.001\nrejoin_rate = \
+             0.002\nabsent_frac = 0.25\nflash_at = 400.0\nflash_frac = \
+             0.5\nflash_hold = 100.0\ndiurnal_amp = 0.3",
+        )
+        .unwrap();
+        assert!(!c.churn.gen.is_empty());
+        assert_eq!(c.churn.gen.rejoin_rate, 0.002);
+        assert_eq!(c.churn.gen.flash_at, Some(400.0));
+        assert_eq!(c.churn.gen.flash_fraction, 0.5);
+        assert_eq!(c.churn.gen.diurnal_amp, 0.3);
+        let plan = c.build_churn_plan(64);
+        assert!(!plan.is_empty());
+        assert_eq!(plan.seed, 3, "defaults to the experiment seed");
+        assert!(!plan.absent_at_start.is_empty(), "absent_frac = 0.25");
+        // a dedicated churn seed overrides the experiment seed
+        let c = ExperimentConfig::from_toml(
+            "seed = 3\n[churn]\nleave_rate = 0.001\nseed = 11",
+        )
+        .unwrap();
+        assert_eq!(c.build_churn_plan(10).seed, 11);
     }
 
     #[test]

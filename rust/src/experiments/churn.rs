@@ -1,0 +1,317 @@
+//! Churn experiment — dynamic user churn end to end: the same
+//! generated join/leave plan drives (a) the discrete-event engine
+//! (Best-Fit DRFH under churn vs the churn-free control, flash-crowd
+//! share trajectories) and (b) the incremental fluid allocator, where
+//! each transition is applied warm ([`IncrementalDrfh::add_user`] /
+//! [`IncrementalDrfh::remove_user`]) and compared against re-solving
+//! the LP from scratch — the measured pivot savings are the point of
+//! the standing-LP design (ROADMAP §fluid allocator).
+//!
+//! The engine pair shares one trace, so every difference in completed
+//! work is the churn plan's; the fluid replay checks its warm
+//! allocation against [`crate::allocator::solve`] at every event
+//! (`parity_ok`), so the savings are of bit-trustworthy solves.
+
+use super::{runner, write_csv, EvalSetup};
+use crate::allocator::{self, incremental::UserId, FluidUser, IncrementalDrfh};
+use crate::sched::{BestFitDrfh, Scheduler};
+use crate::sim::{run, SimReport};
+use crate::workload::{generate_churn, ChurnGenConfig};
+
+/// Reports for the churn comparison plus the fluid replay account.
+#[derive(Clone, Debug)]
+pub struct ChurnResult {
+    /// Best-Fit DRFH with no churn injected (the control run).
+    pub baseline: SimReport,
+    /// Best-Fit DRFH under the churn plan (user share series tracked).
+    pub churned: SimReport,
+    /// Join/leave transitions in the compiled plan.
+    pub plan_events: usize,
+    /// Users absent when the trace starts.
+    pub initially_absent: usize,
+    /// Cohort size of the one-off flash crowd (0 = no flash).
+    pub flash_joins: usize,
+    /// Search pivots the warm allocator spent replaying the plan
+    /// (excluding the initial build).
+    pub warm_pivots: u64,
+    /// Search pivots the same replay costs when every event re-solves
+    /// the LP from scratch.
+    pub scratch_pivots: u64,
+    /// Max |warm − scratch| dominant-share error across every event.
+    pub max_g_err: f64,
+    /// `(t, mean incumbent share, mean flash-cohort share)` at the
+    /// sample ticks around the flash instant.
+    pub flash_recovery: Vec<(f64, f64, f64)>,
+}
+
+impl ChurnResult {
+    /// Did the warm allocation match the from-scratch reference at
+    /// every replayed event?
+    pub fn parity_ok(&self) -> bool {
+        self.max_g_err <= 1e-9
+    }
+
+    /// Fraction of the scratch pivots the warm path avoided.
+    pub fn pivot_savings(&self) -> f64 {
+        if self.scratch_pivots == 0 {
+            return 0.0;
+        }
+        1.0 - self.warm_pivots as f64 / self.scratch_pivots as f64
+    }
+}
+
+/// The default churn mix for `drfh exp churn`: a third of the tenants
+/// start absent, everyone churns on a slow diurnally-modulated renewal
+/// process, and a flash crowd of a quarter of the population joins at
+/// once a third of the way in, holding for an eighth of the horizon.
+pub fn default_churn_config(horizon: f64) -> ChurnGenConfig {
+    ChurnGenConfig {
+        leave_rate: 5e-5,
+        absent_frac: 0.3,
+        flash_at: Some(horizon / 3.0),
+        flash_fraction: 0.25,
+        flash_hold: horizon / 8.0,
+        diurnal_amp: 0.5,
+        ..ChurnGenConfig::default()
+    }
+}
+
+/// Run the comparison: compile the plan from `cfg`, replay it in the
+/// engine (against the churn-free control) and through the warm fluid
+/// allocator (against per-event from-scratch solves).
+pub fn run_churn(setup: &EvalSetup, cfg: &ChurnGenConfig) -> ChurnResult {
+    let plan = generate_churn(
+        cfg,
+        setup.trace.users.len(),
+        setup.opts.horizon,
+        setup.seed,
+    );
+    let plan_events = plan.events.len();
+    let initially_absent = plan.absent_at_start.len();
+    let flash_at = cfg.flash_at;
+    let flash_cohort: Vec<usize> = match flash_at {
+        Some(at) => plan
+            .events
+            .iter()
+            .filter(|e| e.join && e.time == at)
+            .map(|e| e.user)
+            .collect(),
+        None => Vec::new(),
+    };
+
+    // engine pair: one trace, with and without the plan (two
+    // independent jobs — fan them out like the policy sweeps do)
+    let mut churn_opts = setup.opts.clone();
+    churn_opts.churn = plan.clone();
+    churn_opts.track_user_series = true;
+    let jobs: Vec<runner::Job<'_, SimReport>> = vec![
+        Box::new(|| {
+            let sched: Box<dyn Scheduler> = Box::new(BestFitDrfh::default());
+            run(setup.cluster.clone(), &setup.trace, sched, setup.opts.clone())
+        }),
+        Box::new(|| {
+            let sched: Box<dyn Scheduler> = Box::new(BestFitDrfh::default());
+            run(setup.cluster.clone(), &setup.trace, sched, churn_opts.clone())
+        }),
+    ];
+    let mut reports = runner::run_parallel(jobs);
+    let churned = reports.pop().expect("churned report");
+    let baseline = reports.pop().expect("baseline report");
+
+    // fluid replay: warm add/remove per transition vs a from-scratch
+    // solve of the same population, with pivot accounting for both
+    let fluid_user = |u: usize| {
+        let spec = &setup.trace.users[u];
+        FluidUser { demand: spec.demand, weight: spec.weight, task_cap: None }
+    };
+    let mut inc = IncrementalDrfh::new(&setup.cluster);
+    let mut ids: Vec<Option<UserId>> =
+        vec![None; setup.trace.users.len()];
+    for u in 0..setup.trace.users.len() {
+        if !plan.initially_absent(u) {
+            ids[u] = Some(inc.add_user(fluid_user(u)));
+        }
+    }
+    inc.allocate();
+    let base_pivots = inc.solver_stats().pivots;
+    let mut scratch_pivots = 0u64;
+    let mut max_g_err = 0.0f64;
+    for ev in &plan.events {
+        match (ev.join, ids[ev.user]) {
+            (true, None) => ids[ev.user] = Some(inc.add_user(fluid_user(ev.user))),
+            (false, Some(id)) => {
+                inc.remove_user(id);
+                ids[ev.user] = None;
+            }
+            // `ChurnPlan::from_transitions` drops redundant
+            // transitions, so these arms never fire on generated plans
+            _ => continue,
+        }
+        let warm = inc.allocate();
+        let specs = inc.users();
+        let reference = allocator::solve(&setup.cluster, &specs);
+        for (a, b) in warm.g.iter().zip(&reference.g) {
+            max_g_err = max_g_err.max((a - b).abs());
+        }
+        let mut scratch = IncrementalDrfh::new(&setup.cluster);
+        for spec in specs {
+            scratch.add_user(spec);
+        }
+        scratch.allocate();
+        scratch_pivots += scratch.solver_stats().pivots;
+    }
+    let warm_pivots = inc.solver_stats().pivots - base_pivots;
+
+    // flash-crowd share trajectories: cohort vs incumbents around the
+    // flash instant, off the tracked per-user dominant-share series
+    let mut flash_recovery = Vec::new();
+    if let (Some(at), false, false) = (
+        flash_at,
+        flash_cohort.is_empty(),
+        churned.user_dom_share.is_empty(),
+    ) {
+        let mut in_cohort = vec![false; churned.user_dom_share.len()];
+        for &u in &flash_cohort {
+            in_cohort[u] = true;
+        }
+        let dt = setup.opts.sample_dt;
+        let grid = &churned.user_dom_share[0].t;
+        for (i, &t) in grid.iter().enumerate() {
+            if t < at - 4.0 * dt || t > at + 16.0 * dt {
+                continue;
+            }
+            let (mut cs, mut cn, mut is, mut inn) = (0.0, 0usize, 0.0, 0usize);
+            for (u, series) in churned.user_dom_share.iter().enumerate() {
+                let v = series.v[i];
+                if in_cohort[u] {
+                    cs += v;
+                    cn += 1;
+                } else {
+                    is += v;
+                    inn += 1;
+                }
+            }
+            flash_recovery.push((
+                t,
+                if inn > 0 { is / inn as f64 } else { 0.0 },
+                if cn > 0 { cs / cn as f64 } else { 0.0 },
+            ));
+        }
+    }
+
+    ChurnResult {
+        baseline,
+        churned,
+        plan_events,
+        initially_absent,
+        flash_joins: flash_cohort.len(),
+        warm_pivots,
+        scratch_pivots,
+        max_g_err,
+        flash_recovery,
+    }
+}
+
+pub fn print(res: &ChurnResult) {
+    println!("== Churn: joins/leaves, warm-start savings, flash crowd ==");
+    println!(
+        "(plan: {} transitions, {} users absent at start, flash cohort {})",
+        res.plan_events, res.initially_absent, res.flash_joins
+    );
+    println!(
+        "{:<18} {:>7} {:>7} {:>10} {:>11} {:>11}",
+        "run", "joins", "leaves", "abandoned", "tasks done", "goodput h"
+    );
+    for (label, r) in
+        [("bestfit (clean)", &res.baseline), ("bestfit", &res.churned)]
+    {
+        println!(
+            "{:<18} {:>7} {:>7} {:>10} {:>11} {:>11.1}",
+            label,
+            r.user_joins,
+            r.user_leaves,
+            r.tasks_abandoned,
+            r.tasks_completed,
+            r.goodput_s / 3600.0,
+        );
+    }
+    println!(
+        "fluid replay: warm {} pivots vs scratch {} ({:.1}% saved), \
+         max dominant-share error {:.2e} ({})",
+        res.warm_pivots,
+        res.scratch_pivots,
+        res.pivot_savings() * 100.0,
+        res.max_g_err,
+        if res.parity_ok() { "parity ok" } else { "PARITY FAILURE" }
+    );
+    if let Some((t0, _, c0)) = res.flash_recovery.first() {
+        let (t1, _, c1) =
+            res.flash_recovery.last().expect("non-empty window");
+        println!(
+            "flash crowd: cohort mean share {:.4} at t={:.0} -> {:.4} \
+             at t={:.0} over {} sample ticks",
+            c0,
+            t0,
+            c1,
+            t1,
+            res.flash_recovery.len()
+        );
+    }
+    let rows: Vec<String> = res
+        .flash_recovery
+        .iter()
+        .map(|(t, inc, coh)| format!("{t:.1},{inc:.6},{coh:.6}"))
+        .collect();
+    write_csv(
+        "churn_flash_shares.csv",
+        "t,incumbent_mean_share,flash_mean_share",
+        &rows,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn churn_run_replays_warm_and_saves_pivots() {
+        let setup = EvalSetup::with_duration(17, 40, 8, 6_000.0);
+        let cfg = ChurnGenConfig {
+            leave_rate: 2e-4,
+            rejoin_rate: 1.0 / 600.0,
+            absent_frac: 0.25,
+            flash_at: Some(2_000.0),
+            flash_fraction: 0.5,
+            flash_hold: 1_000.0,
+            ..ChurnGenConfig::default()
+        };
+        let res = run_churn(&setup, &cfg);
+
+        // the plan actually churns, and the engine applied it
+        assert!(res.plan_events > 0);
+        assert!(res.churned.user_joins > 0, "no joins applied");
+        assert!(res.churned.user_leaves > 0, "no leaves applied");
+        // the control run injects nothing
+        assert_eq!(res.baseline.user_joins, 0);
+        assert_eq!(res.baseline.user_leaves, 0);
+        assert_eq!(res.baseline.tasks_abandoned, 0);
+        assert_eq!(res.baseline.abandoned_s, 0.0);
+
+        // warm replay matches the from-scratch reference at every
+        // event, and is cheaper than re-solving every time
+        assert!(res.parity_ok(), "max g err {}", res.max_g_err);
+        assert!(
+            res.warm_pivots < res.scratch_pivots,
+            "warm {} >= scratch {}",
+            res.warm_pivots,
+            res.scratch_pivots
+        );
+
+        // the flash crowd fired and its trajectory was captured
+        assert!(res.flash_joins > 0, "empty flash cohort");
+        assert!(
+            !res.flash_recovery.is_empty(),
+            "no sample ticks in the flash window"
+        );
+    }
+}

@@ -8,6 +8,7 @@
 //! runs out through [`runner`] (scoped threads, per-thread scheduler
 //! factories); results are bit-identical to the old sequential loops.
 
+pub mod churn;
 pub mod faults;
 pub mod fig4;
 pub mod fig4_fluid;

@@ -1,11 +1,13 @@
 //! `drfh` — launcher CLI for the DRFH reproduction.
 //!
 //! ```text
-//! drfh exp <fig4|fig4-fluid|table2|fig5|fig6|fig7|fig8|faults|sim-scale|user-scale|all>
+//! drfh exp <fig4|fig4-fluid|table2|fig5|fig6|fig7|fig8|faults|churn|sim-scale|user-scale|all>
 //!          [--seed N] [--servers K] [--users N] [--duration S]
 //!          regenerate a paper figure/table or run a §Perf harness
 //!          (`faults` replays a seeded crash/flash plan and reports
-//!          goodput, wasted work, and fairness-recovery latency)
+//!          goodput, wasted work, and fairness-recovery latency;
+//!          `churn` replays a seeded join/leave plan and reports
+//!          warm-start pivot savings and flash-crowd share recovery)
 //! drfh sim --config exp.toml                      run a configured simulation
 //! drfh lint [--src DIR] [--corpus true]           determinism conformance linter
 //! drfh solve                                      exact fluid DRFH on the Fig. 1 example
@@ -29,7 +31,7 @@ const USAGE: &str = "\
 drfh — Dominant Resource Fairness with Heterogeneous Servers (paper reproduction)
 
 USAGE:
-  drfh exp <fig4|fig4-fluid|table2|fig5|fig6|fig7|fig8|faults|sim-scale|user-scale|all>
+  drfh exp <fig4|fig4-fluid|table2|fig5|fig6|fig7|fig8|faults|churn|sim-scale|user-scale|all>
            [--seed N] [--servers K] [--users N] [--duration SECONDS]
   drfh sim --config <exp.toml>
   drfh lint [--src DIR] [--corpus true]
@@ -175,6 +177,15 @@ fn run_exp(
             let res = experiments::faults::run_faults(&s, &cfg);
             experiments::faults::print(&res);
         }
+        "churn" => {
+            let s = setup();
+            let cfg = experiments::churn::default_churn_config(duration);
+            let res = experiments::churn::run_churn(&s, &cfg);
+            experiments::churn::print(&res);
+            if !res.parity_ok() {
+                bail!("churn warm-vs-scratch allocation parity failure");
+            }
+        }
         "sim-scale" => {
             let s = setup();
             let res = experiments::sim_scale::run_sim_scale(&s);
@@ -228,9 +239,12 @@ fn run_sim(path: &std::path::Path) -> Result<()> {
         sched.name()
     );
     let mut opts = cfg.sim_opts()?;
-    // [faults] section, when present, compiles to a deterministic plan
+    // [faults] / [churn] sections, when present, compile to
+    // deterministic plans
     opts.faults = cfg.build_fault_plan(cluster.len());
+    opts.churn = cfg.build_churn_plan(trace.users.len());
     let had_faults = !opts.faults.is_empty();
+    let had_churn = !opts.churn.is_empty();
     let report = sim::run(cluster, &trace, sched, opts);
     println!(
         "done: {} placed, {} completed, cpu {:.1}%, mem {:.1}%, jobs {}",
@@ -252,6 +266,15 @@ fn run_sim(path: &std::path::Path) -> Result<()> {
             report.tasks_lost,
             report.goodput_s / 3600.0,
             report.wasted_s / 3600.0
+        );
+    }
+    if had_churn {
+        println!(
+            "churn: {} joins, {} leaves, {} tasks abandoned ({:.1} h)",
+            report.user_joins,
+            report.user_leaves,
+            report.tasks_abandoned,
+            report.abandoned_s / 3600.0
         );
     }
     Ok(())

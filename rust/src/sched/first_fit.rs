@@ -118,6 +118,18 @@ impl Scheduler for FirstFitDrfh {
         }
     }
 
+    fn on_user_join(&mut self, user: usize) {
+        if let Some(core) = &mut self.core {
+            core.on_user_join(user);
+        }
+    }
+
+    fn on_user_leave(&mut self, user: usize) {
+        if let Some(core) = &mut self.core {
+            core.on_user_leave(user);
+        }
+    }
+
     fn on_server_down(&mut self, server: usize) {
         if let Some(core) = &mut self.core {
             core.on_server_down(server);

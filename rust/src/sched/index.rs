@@ -719,6 +719,53 @@ impl PlacementIndex {
         }
     }
 
+    /// Online user add (churn layer): append one user with `demand`
+    /// without rebuilding — intern the row against the existing demand
+    /// classes by exact bit pattern (the
+    /// [`DemandClasses`] discipline), allocating fresh per-shard heaps
+    /// and a rebuild for a genuinely new row only. Before the first
+    /// build this is a no-op (the build snapshots the full user set).
+    /// Equivalent to tearing the index down and rebuilding over the
+    /// extended user set (pinned by `tests/properties.rs`).
+    pub fn add_user(&mut self, cluster: &Cluster, demand: &ResVec) {
+        if self.servers.is_none() {
+            return; // not built yet — the full build covers it
+        }
+        let bits = |d: &ResVec| {
+            let mut b = [0u64; MAX_RES];
+            for r in 0..d.dims() {
+                b[r] = d[r].to_bits();
+            }
+            (d.dims(), b)
+        };
+        let want = bits(demand);
+        let class = if self.intern {
+            self.class_demand.iter().position(|row| bits(row) == want)
+        } else {
+            None // per-user layout: every user is its own class
+        };
+        let c = match class {
+            Some(c) => c,
+            None => {
+                let c = self.class_demand.len();
+                self.class_demand.push(*demand);
+                self.dratio.push(dratio_of(demand));
+                let ns = self.spec.shards();
+                for _ in 0..ns {
+                    self.heaps.push(BinaryHeap::new());
+                }
+                self.rebuild_class(cluster, c);
+                c
+            }
+        };
+        self.class_of.push(c as u32);
+        self.n_users += 1;
+        #[cfg(debug_assertions)]
+        {
+            self.fingerprint_dirty = true;
+        }
+    }
+
     /// Lowest-key feasible server for user `i` (looked up through
     /// `i`'s demand class; entries stay in their heaps), or `None`
     /// when nothing fits. Under sharding this is the cross-shard
@@ -948,6 +995,25 @@ impl IndexedCore {
         self.share.mark_dirty(user);
     }
 
+    /// `user` joined (churn layer): re-key it in the selection index.
+    /// The engine restored its eligibility before this fires, so a
+    /// plain dirty-mark is enough — the next refresh reinserts it iff
+    /// it is schedulable (pending work is announced separately via
+    /// [`IndexedCore::on_ready`]). Placement/blocked structures key on
+    /// the demand class, which survives absence, so nothing else moves.
+    pub fn on_user_join(&mut self, user: usize) {
+        self.share.mark_dirty(user);
+    }
+
+    /// `user` left (churn layer): drop its live selection entry. The
+    /// engine already evicted its tasks (each firing
+    /// [`IndexedCore::on_touch`]) and cleared its eligibility, so this
+    /// mirrors the blocked-drop step — the entry goes stale now instead
+    /// of riding a lazy pop later.
+    pub fn on_user_leave(&mut self, user: usize) {
+        self.share.remove(user);
+    }
+
     /// `server` crashed (fault layer): by the next refresh its
     /// capacity reads zero, so the rescore finds it infeasible for
     /// every demand class and the stamp bump stales its live heap
@@ -1074,6 +1140,24 @@ impl BlockedIndex {
             flags: vec![false; n],
             len: 0,
         }
+    }
+
+    /// Online user add (churn layer): append one unblocked user in
+    /// demand class `class` with fit key `class_key`
+    /// (`min_r demand_r`). A fresh class id extends the key table;
+    /// an existing id must carry its established key bit-for-bit.
+    /// Equivalent to rebuilding over the extended user set.
+    pub fn add_user(&mut self, class: u32, class_key: f64) {
+        let c = class as usize;
+        if c == self.key.len() {
+            self.key.push(class_key);
+            self.members.push(BTreeSet::new());
+        } else {
+            debug_assert!(c < self.key.len(), "class id skips ahead");
+            debug_assert_eq!(self.key[c].to_bits(), class_key.to_bits());
+        }
+        self.class_of.push(class);
+        self.flags.push(false);
     }
 
     pub fn insert(&mut self, u: usize) {

@@ -276,6 +276,23 @@ pub trait Scheduler {
     /// work arrived or the engine unblocked it after a completion.
     fn on_ready(&mut self, _user: usize) {}
 
+    /// Notification: `user` joined the cluster
+    /// ([`crate::sim::ChurnPlan`]). Fired after the engine re-admitted
+    /// it to `eligible` and before any pending work is announced via
+    /// [`Scheduler::on_ready`]. Indexed policies re-key the user; the
+    /// engine state is authoritative, so ignoring this (the default)
+    /// is correct for stateless policies.
+    fn on_user_join(&mut self, _user: usize) {}
+
+    /// Notification: `user` left the cluster. Fired *after* the engine
+    /// evicted its running tasks (each eviction fired
+    /// [`Scheduler::on_complete`]), discarded its queued work, and
+    /// removed it from `eligible`. Indexed policies drop the user from
+    /// their share/blocked structures here; an ineligible user is
+    /// never picked anyway, so ignoring this (the default) is correct
+    /// for stateless policies.
+    fn on_user_leave(&mut self, _user: usize) {}
+
     /// Notification: `server` crashed ([`crate::sim::FaultPlan`]).
     /// Fired *after* the engine evicted its run entries (each eviction
     /// fired [`Scheduler::on_complete`]) and before its capacity is

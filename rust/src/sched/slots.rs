@@ -239,6 +239,20 @@ impl Scheduler for SlotsScheduler {
         }
     }
 
+    fn on_user_join(&mut self, user: usize) {
+        if let Some(idx) = &mut self.users_index {
+            idx.mark_dirty(user);
+        }
+    }
+
+    fn on_user_leave(&mut self, user: usize) {
+        // drop the live entry now instead of riding a lazy resync,
+        // mirroring the Blocked protocol above
+        if let Some(idx) = &mut self.users_index {
+            idx.remove(user);
+        }
+    }
+
     fn audit_indices(
         &mut self,
         _cluster: &Cluster,

@@ -93,6 +93,30 @@ impl DemandClasses {
         }
     }
 
+    /// Online user add (churn layer): intern one appended user's
+    /// demand row against the existing classes by exact bit pattern —
+    /// the same discipline as the batch build — returning its class
+    /// id (fresh rows get a fresh id). Equivalent to rebuilding over
+    /// the extended user set (pinned by `tests/properties.rs`). The
+    /// row scan is linear, but rows number in the tens where users
+    /// number in the millions, and joins are rare events.
+    pub fn add_user(&mut self, demand: &ResVec) -> u32 {
+        let same_bits = |row: &ResVec| {
+            row.dims() == demand.dims()
+                && (0..row.dims())
+                    .all(|r| row[r].to_bits() == demand[r].to_bits())
+        };
+        let c = match self.rows.iter().position(same_bits) {
+            Some(c) => c as u32,
+            None => {
+                self.rows.push(*demand);
+                (self.rows.len() - 1) as u32
+            }
+        };
+        self.class_of.push(c);
+        c
+    }
+
     /// Number of distinct classes.
     pub fn len(&self) -> usize {
         self.rows.len()
@@ -283,6 +307,53 @@ impl ClassedShareIndex {
         self.is_dirty = vec![true; n];
         self.dirty = (0..n as u32).collect();
         self.built = true;
+    }
+
+    /// Online user add (churn layer): append one user without a
+    /// rebuild — intern its key constants against the existing groups
+    /// bit-exactly (the same first-appearance id assignment as the
+    /// batch rebuild) and mark it dirty, so the next
+    /// refresh inserts it iff schedulable. Decisions equal a teardown
+    /// and rebuild over the extended user set (pinned by
+    /// `tests/properties.rs`); only the fallback-vs-grouped choice is
+    /// frozen at the original build (a perf heuristic, not a
+    /// decision input). Before the first build this is a no-op.
+    pub fn add_user(&mut self, user: &UserState) {
+        if !self.built {
+            return; // the initial build snapshots the full user set
+        }
+        let n = self.group_of.len();
+        let w = effective_weight(user.weight);
+        let delta = match self.mode {
+            KeyMode::DomShare => user.dom_delta,
+            KeyMode::RunningOnly => 1.0,
+        };
+        if let Some(heap) = &mut self.fallback {
+            self.group_of.push(0); // unused under the fallback heap
+            self.stored.push(NOT_STORED);
+            self.is_dirty.push(false);
+            heap.mark_dirty(n);
+            return;
+        }
+        let found = self.groups.iter().position(|g| {
+            g.dom_delta.to_bits() == delta.to_bits()
+                && g.eff_weight.to_bits() == w.to_bits()
+        });
+        let g = match found {
+            Some(g) => g as u32,
+            None => {
+                self.groups.push(ShareGroup {
+                    dom_delta: delta,
+                    eff_weight: w,
+                    members: BTreeSet::new(),
+                });
+                (self.groups.len() - 1) as u32
+            }
+        };
+        self.group_of.push(g);
+        self.stored.push(NOT_STORED);
+        self.is_dirty.push(true);
+        self.dirty.push(n as u32);
     }
 
     /// Note that `u`'s key or schedulability may have changed; the

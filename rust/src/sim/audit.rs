@@ -40,11 +40,17 @@
 //!   entries, `can_fit` false for every pending user), and no attempt
 //!   counter — on a run entry, a ready retry, or a backoff-parked slab
 //!   payload — exceeds the configured retry budget;
+//! * **churn invariants** (only when a churn plan is active) — every
+//!   departed user is fully drained (no run entries on any server, no
+//!   pending work, empty job/retry queues, no blocked membership, not
+//!   eligible), and the absent-user count re-derives from the plan's
+//!   initial absentees plus the effective join/leave counters;
 //! * **blocked-set validity** — `eligible` is exactly the complement
-//!   of the blocked set, no eligible user still has pending work
-//!   after a drain (post-wave quiescence), and every blocked user
-//!   truly fits on *no* server under the policy's own
-//!   [`crate::sched::Scheduler::can_fit`].
+//!   of the blocked set intersected with presence (`eligible[u] ==
+//!   present[u] && !blocked[u]`; presence is all-true without churn),
+//!   no eligible user still has pending work after a drain (post-wave
+//!   quiescence), and every blocked user truly fits on *no* server
+//!   under the policy's own [`crate::sched::Scheduler::can_fit`].
 //!
 //! Every check is read-only on engine state; the one mutating path —
 //! the policies' index refresh + lazy pops inside `audit_indices` —
@@ -132,6 +138,7 @@ impl Simulation<'_> {
         self.audit_blocked(&mut violations);
         self.audit_routing(&mut violations);
         self.audit_faults(&mut violations);
+        self.audit_churn(&mut violations);
         if let Err(e) = self.scheduler.audit_indices(
             &self.cluster,
             &self.users,
@@ -183,20 +190,23 @@ impl Simulation<'_> {
                 }
             }
         }
-        // evicted placements left the PS without completing, so they
-        // drop out of the balance (§Faults)
+        // evicted placements — fault evictions (§Faults) and departure
+        // evictions (§Churn) — left the PS without completing, so they
+        // drop out of the balance
         let balance = self
             .report
             .tasks_placed
             .checked_sub(self.report.tasks_completed)
-            .and_then(|b| b.checked_sub(self.report.evictions));
+            .and_then(|b| b.checked_sub(self.report.evictions))
+            .and_then(|b| b.checked_sub(self.churn_evicted));
         if balance != Some(total_running) {
             out.push(format!(
-                "capacity: placed {} - completed {} - evicted {} != {} \
-                 total run entries",
+                "capacity: placed {} - completed {} - evicted {} - \
+                 churn-evicted {} != {} total run entries",
                 self.report.tasks_placed,
                 self.report.tasks_completed,
                 self.report.evictions,
+                self.churn_evicted,
                 total_running
             ));
         }
@@ -283,23 +293,25 @@ impl Simulation<'_> {
     }
 
     /// Blocked-set validity: `eligible` is the exact complement of the
-    /// blocked index, the wave left no eligible pending user behind,
-    /// and every blocked user truly fits nowhere.
+    /// blocked index intersected with presence (all-present without
+    /// churn), the wave left no eligible pending user behind, and
+    /// every blocked user truly fits nowhere.
     fn audit_blocked(&self, out: &mut Vec<String>) {
         let k = self.cluster.len();
         let mut blocked_n = 0usize;
         for (u, us) in self.users.iter().enumerate() {
             let blocked = self.blocked.is_blocked(u);
-            if blocked == self.eligible[u] {
+            let present = !self.has_churn || self.present[u];
+            if self.eligible[u] != (present && !blocked) {
                 out.push(format!(
                     "blocked-set: user {u} eligible={} but \
-                     is_blocked={blocked}",
+                     is_blocked={blocked}, present={present}",
                     self.eligible[u]
                 ));
                 continue;
             }
             if !blocked {
-                if us.pending > 0 {
+                if present && us.pending > 0 {
                     out.push(format!(
                         "blocked-set: eligible user {u} still has {} \
                          pending tasks after the drain",
@@ -433,6 +445,80 @@ impl Simulation<'_> {
         });
     }
 
+    /// Churn-layer invariants (§Churn in the engine docs): every
+    /// departed user is fully drained — no run entries on any server
+    /// (re-derived from the PS heaps, not the tracked counter), no
+    /// pending work, empty job ring and retry-ready queue, no blocked
+    /// membership, not eligible — and the absent-user count re-derives
+    /// from the plan's initial absentees plus the effective join/leave
+    /// counters. Skipped when the churn plan is empty: presence is
+    /// all-true by construction, and the skip keeps audited churn-free
+    /// runs byte-for-byte on the pre-churn check set.
+    fn audit_churn(&self, out: &mut Vec<String>) {
+        if !self.has_churn {
+            return;
+        }
+        let mut entries = vec![0usize; self.users.len()];
+        for srv in &self.servers {
+            for entry in srv.running.iter() {
+                entries[entry.user as usize] += 1;
+            }
+        }
+        let mut absent = 0usize;
+        for (u, us) in self.users.iter().enumerate() {
+            if self.present[u] {
+                continue;
+            }
+            absent += 1;
+            if entries[u] > 0 {
+                out.push(format!(
+                    "churn: departed user {u} still holds {} run \
+                     entries",
+                    entries[u]
+                ));
+            }
+            if us.running != 0 || us.pending != 0 {
+                out.push(format!(
+                    "churn: departed user {u} tracks running {} / \
+                     pending {}, want 0 / 0",
+                    us.running, us.pending
+                ));
+            }
+            if !self.queues[u].is_empty() || !self.retry_ready[u].is_empty()
+            {
+                out.push(format!(
+                    "churn: departed user {u} keeps {} queued jobs and \
+                     {} ready retries",
+                    self.queues[u].len(),
+                    self.retry_ready[u].len()
+                ));
+            }
+            if self.blocked.is_blocked(u) {
+                out.push(format!(
+                    "churn: departed user {u} kept its blocked-set \
+                     membership"
+                ));
+            }
+            if self.eligible[u] {
+                out.push(format!(
+                    "churn: departed user {u} is still eligible"
+                ));
+            }
+        }
+        let want = self.opts.churn.absent_at_start.len() as i64
+            + self.report.user_leaves as i64
+            - self.report.user_joins as i64;
+        if absent as i64 != want {
+            out.push(format!(
+                "churn: {absent} absent users, but initial {} + leaves \
+                 {} - joins {} = {want}",
+                self.opts.churn.absent_at_start.len(),
+                self.report.user_leaves,
+                self.report.user_joins
+            ));
+        }
+    }
+
     /// Shard-ownership lane routing of every queued event, plus the
     /// queued-after-drained ordering bound.
     fn audit_routing(&self, out: &mut Vec<String>) {
@@ -447,7 +533,9 @@ impl Simulation<'_> {
                 }
                 EventKind::Arrival(_)
                 | EventKind::Sample
-                | EventKind::Retry { .. } => 0,
+                | EventKind::Retry { .. }
+                | EventKind::UserJoin { .. }
+                | EventKind::UserLeave { .. } => 0,
             };
             if lane != want {
                 out.push(format!(
@@ -505,6 +593,110 @@ impl Simulation<'_> {
             self.cluster.len(),
             self.users.len(),
             self.events.len(),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::Simulation;
+    use crate::cluster::{Cluster, ResVec};
+    use crate::sched::BestFitDrfh;
+    use crate::sim::{run, ChurnEvent, ChurnPlan, SimOpts};
+    use crate::workload::{JobSpec, TaskSpec, Trace, UserSpec};
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    fn two_user_trace() -> Trace {
+        Trace {
+            users: vec![
+                UserSpec { demand: ResVec::cpu_mem(1.0, 1.0), weight: 1.0 },
+                UserSpec { demand: ResVec::cpu_mem(1.0, 1.0), weight: 1.0 },
+            ],
+            jobs: vec![
+                JobSpec {
+                    id: 0,
+                    user: 0,
+                    submit: 0.0,
+                    tasks: vec![TaskSpec { duration: 10.0 }; 2],
+                },
+                JobSpec {
+                    id: 1,
+                    user: 1,
+                    submit: 0.0,
+                    tasks: vec![TaskSpec { duration: 10.0 }; 2],
+                },
+            ],
+        }
+    }
+
+    fn churn_opts() -> SimOpts {
+        SimOpts {
+            horizon: 100.0,
+            sample_dt: 10.0,
+            track_user_series: false,
+            audit: true,
+            churn: ChurnPlan::from_transitions(
+                1,
+                vec![],
+                vec![
+                    ChurnEvent { time: 5.0, user: 1, join: false },
+                    ChurnEvent { time: 20.0, user: 1, join: true },
+                ],
+            ),
+            ..SimOpts::default()
+        }
+    }
+
+    /// A clean leave/rejoin run passes every wave-boundary check,
+    /// including the churn set.
+    #[test]
+    fn audited_churn_run_passes() {
+        let cluster = Cluster::from_capacities(&[
+            ResVec::cpu_mem(1.0, 1.0),
+            ResVec::cpu_mem(1.0, 1.0),
+        ]);
+        let r = run(
+            cluster,
+            &two_user_trace(),
+            Box::new(BestFitDrfh::default()),
+            churn_opts(),
+        );
+        assert_eq!(r.user_leaves, 1);
+        assert_eq!(r.user_joins, 1);
+        // user 1 had one task running and one queued at t = 5
+        assert_eq!(r.tasks_abandoned, 2);
+        assert!(r.abandoned_s > 0.0);
+    }
+
+    /// A phantom departure — presence flipped off while the
+    /// eligibility and accounting state still read "present" — must
+    /// trip the auditor with a churn violation.
+    #[test]
+    fn phantom_departed_user_trips_the_audit() {
+        let trace = two_user_trace();
+        let cluster = Cluster::from_capacities(&[
+            ResVec::cpu_mem(1.0, 1.0),
+            ResVec::cpu_mem(1.0, 1.0),
+        ]);
+        let mut sim = Simulation::new(
+            cluster,
+            &trace,
+            Box::new(BestFitDrfh::naive()),
+            churn_opts(),
+        );
+        // corrupt: user 1 departs without the engine's teardown — it
+        // stays eligible and keeps its queue state
+        sim.present[1] = false;
+        let err = catch_unwind(AssertUnwindSafe(|| sim.audit_wave()))
+            .expect_err("corrupted presence must trip the audit");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "non-string panic payload".into());
+        assert!(msg.contains("DRFH audit failure"), "{msg}");
+        assert!(
+            msg.contains("churn: departed user 1 is still eligible"),
+            "{msg}"
         );
     }
 }

@@ -1,0 +1,194 @@
+//! Deterministic user churn: join/leave plans for dynamic user sets.
+//!
+//! A [`ChurnPlan`] is a pre-compiled, fully deterministic schedule of
+//! user join/leave transitions plus the set of users absent when the
+//! simulation starts. Plans are built offline — by the seeded
+//! generators in [`crate::workload::gen`] (per-user alternating
+//! leave/rejoin renewal processes, flash-crowd bursts, diurnal rate
+//! modulation) or by hand from raw transitions
+//! ([`ChurnPlan::from_transitions`]) — and handed to the engine
+//! through [`crate::sim::SimOpts::churn`]. The engine compiles the
+//! plan into `UserJoin`/`UserLeave` events at construction time and
+//! drains them through the one total `(time, seq)` order every other
+//! event obeys, so the same plan and seed replay bit-identically at
+//! every shard count, and [`ChurnPlan::none`] pushes *zero* events
+//! and marks nobody absent — the churn-free engine is byte-for-byte
+//! the pre-churn engine (`tests/engine_parity.rs` pins both
+//! properties).
+//!
+//! Semantics at the engine boundary: a *leave* evicts the user's
+//! running tasks (their consumed work is counted in
+//! `SimReport::abandoned_s`), discards its queued and retry-parked
+//! work (`SimReport::tasks_abandoned`), and removes it from every
+//! scheduler index; a *join* re-admits the user with a clean slate.
+//! Arrivals for an absent user are dropped and counted — degradation
+//! under churn is a measured outcome, not an error. Both transitions
+//! are idempotent: canonical plans never contain a redundant event,
+//! but hand-built ones may, and the engine treats a join of a present
+//! user (or a leave of an absent one) as a no-op.
+
+/// One user transition in a churn plan (absolute simulation time).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnEvent {
+    /// When the transition happens (seconds).
+    pub time: f64,
+    /// Which user (index into the trace's user set).
+    pub user: usize,
+    /// `true` = the user joins (enters service), `false` = it leaves.
+    pub join: bool,
+}
+
+/// A deterministic schedule of user joins and departures.
+///
+/// Invariants maintained by the constructors: events are sorted by
+/// `(time, user, join)` (a leave orders before a join at the same
+/// instant), `absent_at_start` is sorted and deduplicated, and no
+/// event is redundant — each one flips its user's presence given the
+/// initial state, so an absent-at-start user's first event is always
+/// a join.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChurnPlan {
+    /// Seed the plan was generated from (recorded for replay
+    /// provenance; every deterministic draw happened at build time).
+    pub seed: u64,
+    /// Users absent when the simulation starts (sorted, deduped).
+    pub absent_at_start: Vec<usize>,
+    /// The compiled transition schedule.
+    pub events: Vec<ChurnEvent>,
+}
+
+impl ChurnPlan {
+    /// The empty plan: everybody present, no transitions. The engine
+    /// running under `ChurnPlan::none()` produces a bit-identical
+    /// [`crate::sim::SimReport`] to the pre-churn engine at every
+    /// shard count.
+    pub fn none() -> Self {
+        ChurnPlan { seed: 0, absent_at_start: Vec::new(), events: Vec::new() }
+    }
+
+    /// True when the plan schedules no transitions and marks nobody
+    /// absent.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.absent_at_start.is_empty()
+    }
+
+    /// Is `user` absent when the simulation starts?
+    pub fn initially_absent(&self, user: usize) -> bool {
+        self.absent_at_start.binary_search(&user).is_ok()
+    }
+
+    /// Build a canonical plan from raw transitions: negative times
+    /// clamp to 0, events sort by `(time, user, join)`, and redundant
+    /// transitions (a join while present, a leave while absent, given
+    /// `absent_at_start`) are dropped — so the engine's seq
+    /// assignment, and therefore the whole replay, is a pure function
+    /// of the surviving transitions.
+    pub fn from_transitions(
+        seed: u64,
+        mut absent_at_start: Vec<usize>,
+        mut raw: Vec<ChurnEvent>,
+    ) -> Self {
+        absent_at_start.sort_unstable();
+        absent_at_start.dedup();
+        for e in &mut raw {
+            if e.time < 0.0 {
+                e.time = 0.0;
+            }
+        }
+        raw.sort_by(|a, b| {
+            a.time
+                .total_cmp(&b.time)
+                .then_with(|| a.user.cmp(&b.user))
+                .then_with(|| a.join.cmp(&b.join))
+        });
+        // presence tracking over the densest user id mentioned
+        let max_user = raw
+            .iter()
+            .map(|e| e.user)
+            .chain(absent_at_start.iter().copied())
+            .max();
+        let mut present = vec![true; max_user.map_or(0, |m| m + 1)];
+        for &u in &absent_at_start {
+            present[u] = false;
+        }
+        let mut events = Vec::with_capacity(raw.len());
+        for e in raw {
+            if e.join != present[e.user] {
+                present[e.user] = e.join;
+                events.push(e);
+            }
+        }
+        ChurnPlan { seed, absent_at_start, events }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_empty_and_cheap() {
+        let p = ChurnPlan::none();
+        assert!(p.is_empty());
+        assert_eq!(p.events.len(), 0);
+        assert!(!p.initially_absent(0));
+    }
+
+    #[test]
+    fn transitions_sort_and_drop_redundant() {
+        // user 2 starts absent: its leave at t=5 is redundant, its
+        // join at t=10 applies; user 0 starts present: its join at
+        // t=1 is redundant, its leave at t=20 applies.
+        let p = ChurnPlan::from_transitions(
+            9,
+            vec![2, 2],
+            vec![
+                ChurnEvent { time: 20.0, user: 0, join: false },
+                ChurnEvent { time: 5.0, user: 2, join: false },
+                ChurnEvent { time: 1.0, user: 0, join: true },
+                ChurnEvent { time: 10.0, user: 2, join: true },
+            ],
+        );
+        assert_eq!(p.absent_at_start, vec![2]);
+        assert_eq!(p.events, vec![
+            ChurnEvent { time: 10.0, user: 2, join: true },
+            ChurnEvent { time: 20.0, user: 0, join: false },
+        ]);
+        assert!(p.initially_absent(2));
+        assert!(!p.initially_absent(0));
+    }
+
+    #[test]
+    fn alternation_holds_per_user() {
+        // whatever the raw soup, the canonical stream alternates
+        // join/leave per user starting from the initial state
+        let raw = vec![
+            ChurnEvent { time: 3.0, user: 1, join: false },
+            ChurnEvent { time: 4.0, user: 1, join: false },
+            ChurnEvent { time: 7.0, user: 1, join: true },
+            ChurnEvent { time: 9.0, user: 1, join: true },
+            ChurnEvent { time: 11.0, user: 1, join: false },
+        ];
+        let p = ChurnPlan::from_transitions(0, vec![], raw);
+        let mine: Vec<bool> =
+            p.events.iter().filter(|e| e.user == 1).map(|e| e.join).collect();
+        assert_eq!(mine, vec![false, true, false]);
+    }
+
+    #[test]
+    fn negative_times_clamp_and_ties_order_leave_first() {
+        let p = ChurnPlan::from_transitions(
+            0,
+            vec![],
+            vec![
+                ChurnEvent { time: -3.0, user: 0, join: false },
+                ChurnEvent { time: 0.0, user: 0, join: true },
+            ],
+        );
+        // leave clamps to 0, sorts before the join at the same
+        // instant (join: false < true), both survive: net present
+        assert_eq!(p.events.len(), 2);
+        assert!(!p.events[0].join);
+        assert!(p.events[1].join);
+    }
+}

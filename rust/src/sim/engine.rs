@@ -164,6 +164,38 @@
 //! `Retry` events replay in the sequential commit like arrivals.
 //! Faults are rare relative to checks, so the barrier cost is noise,
 //! and every report float stays bit-identical across shard counts.
+//!
+//! ## Churn: join, leave, flash crowds
+//!
+//! A [`ChurnPlan`] ([`SimOpts::churn`], module [`crate::sim::churn`])
+//! compiles into `UserJoin`/`UserLeave` events at construction time,
+//! pushed after the fault transitions so an empty plan leaves seq
+//! assignment — and therefore every decision and every float —
+//! untouched (`ChurnPlan::none()` parity, pinned in
+//! `tests/engine_parity.rs`). User arrays stay fixed-size for the
+//! whole run; churn toggles a per-user *presence* flag, so no index
+//! ever resizes mid-trace.
+//!
+//! On `UserLeave` the engine evicts the user's run entries from every
+//! server (each heap drained in `(vfinish, seq)` order — the consumed
+//! work is credited to `abandoned_s`, the tasks to
+//! `tasks_abandoned`), releases the capacity, discards the user's
+//! queued and retry-ready work, bumps the user's retry *epoch* so
+//! in-flight backoff payloads are abandoned on arrival, drops the
+//! user from the blocked set, and tells the policy through the
+//! default-no-op [`Scheduler::on_user_leave`] hook to drop it from
+//! any user-keyed index. Freed capacity re-probes blocked users
+//! exactly like a completion. On `UserJoin` the user is re-admitted
+//! with a clean slate ([`Scheduler::on_user_join`]); arrivals for an
+//! absent user are dropped and counted. Both transitions are
+//! idempotent.
+//!
+//! Sharding: `UserJoin`/`UserLeave` are segment barriers like the
+//! fault transitions (a leave mutates run-entry heaps across *all*
+//! shards, so same-wave `ServerCheck`s must order strictly against
+//! it). Churn events are rare relative to checks, so the barrier
+//! cost is noise, and every report float stays bit-identical across
+//! shard counts.
 
 use crate::cluster::{Cluster, ResVec, Server, ShardCount, ShardSpec};
 use crate::metrics::shares::ShareSketch;
@@ -172,6 +204,7 @@ use crate::metrics::{
 };
 use crate::sched::index::BlockedIndex;
 use crate::sched::{DrainCtx, Scheduler, UserState};
+use crate::sim::churn::ChurnPlan;
 use crate::sim::faults::{FaultPlan, OutageRecord, RetryPolicy};
 use crate::sim::wheel::{
     self, EventQueue, QueueKind, ShardedQueue, SimQueue, TimerWheel,
@@ -240,6 +273,10 @@ pub struct SimOpts {
     /// Retry discipline for tasks evicted by a crash (attempt budget
     /// + deterministic exponential backoff).
     pub retry: RetryPolicy,
+    /// Deterministic user join/leave schedule (module docs, §Churn).
+    /// [`ChurnPlan::none`] (the default) injects nothing and leaves
+    /// the engine bit-identical to a churn-free build.
+    pub churn: ChurnPlan,
 }
 
 impl Default for SimOpts {
@@ -255,6 +292,7 @@ impl Default for SimOpts {
             audit: false,
             faults: FaultPlan::none(),
             retry: RetryPolicy::default(),
+            churn: ChurnPlan::none(),
         }
     }
 }
@@ -303,6 +341,18 @@ pub struct SimReport {
     /// One record per crash: pre-crash envy baseline and the sample
     /// tick where fairness recovered (module docs, §Faults).
     pub outages: Vec<OutageRecord>,
+    /// Applied `UserJoin` transitions (module docs, §Churn).
+    pub user_joins: usize,
+    /// Applied `UserLeave` transitions.
+    pub user_leaves: usize,
+    /// Tasks discarded by churn: a leaver's evicted running tasks,
+    /// its queued and retry-parked work, stranded backoff payloads,
+    /// and arrivals dropped while absent (measured degradation, not
+    /// an error).
+    pub tasks_abandoned: usize,
+    /// Service seconds a leaver's evicted tasks had consumed when the
+    /// departure destroyed them (the churn analogue of `wasted_s`).
+    pub abandoned_s: f64,
 }
 
 // ---------------------------------------------------------------- events
@@ -320,6 +370,10 @@ pub(super) enum EventKind {
     /// `slot` (`Simulation::retry_pending`) — the slot index keeps
     /// this variant pointer-sized instead of inlining the payload.
     Retry { slot: u32 },
+    /// Churn plan: `user` joins (enters service).
+    UserJoin { user: usize },
+    /// Churn plan: `user` leaves (evict + discard its work).
+    UserLeave { user: usize },
 }
 
 type Event = wheel::Event<EventKind>;
@@ -365,6 +419,12 @@ pub(super) struct RetryTask {
     pub(super) task: u64,
     /// Work left when the crash hit (virtual seconds).
     pub(super) remaining: f64,
+    /// The owning user's churn epoch when the eviction happened
+    /// (`Simulation::user_epoch`): every `UserLeave` bumps the epoch,
+    /// so a payload stranded by a departure is recognized — and
+    /// abandoned — when its backoff expires, even if the user has
+    /// since rejoined. Always 0 under an empty churn plan.
+    pub(super) epoch: u32,
 }
 
 impl PartialEq for RunEntry {
@@ -480,6 +540,20 @@ pub struct Simulation<'a> {
     pub(super) has_faults: bool,
     /// Outage records in `report.outages` not yet marked recovered.
     unresolved_outages: usize,
+
+    /// Churn layer (module docs, §Churn). `present[u]` is the user's
+    /// live presence (all-true under an empty plan); `user_epoch[u]`
+    /// counts the user's departures, stamped into retry payloads so
+    /// a leave strands the in-flight ones. `has_churn` gates every
+    /// hot-path touch, mirroring `has_faults`.
+    pub(super) present: Vec<bool>,
+    pub(super) user_epoch: Vec<u32>,
+    pub(super) has_churn: bool,
+    /// Running tasks evicted by departures (a subset of
+    /// `report.tasks_abandoned`): like fault evictions, they left the
+    /// PS without completing, so the auditor's placed-minus-completed
+    /// balance subtracts them separately.
+    pub(super) churn_evicted: usize,
 
     /// Wave-boundary invariant auditor state; `Some` iff auditing is
     /// on ([`SimOpts::audit`] or `DRFH_AUDIT=1`). See
@@ -605,6 +679,10 @@ impl<'a> Simulation<'a> {
                 retries: 0,
                 tasks_lost: 0,
                 outages: Vec::new(),
+                user_joins: 0,
+                user_leaves: 0,
+                tasks_abandoned: 0,
+                abandoned_s: 0.0,
             },
             total,
             down: vec![false; k],
@@ -614,8 +692,19 @@ impl<'a> Simulation<'a> {
             retry_free: Vec::new(),
             has_faults: !opts.faults.events.is_empty(),
             unresolved_outages: 0,
+            present: vec![true; n],
+            user_epoch: vec![0; n],
+            has_churn: !opts.churn.is_empty(),
+            churn_evicted: 0,
             audit: audit_on.then(super::audit::AuditState::new),
         };
+        // initial absentees consume no events and no seq — applied
+        // before anything is pushed, exactly like capacity layout
+        for &u in &opts.churn.absent_at_start {
+            assert!(u < n, "churn plan names user {u} of {n}");
+            sim.present[u] = false;
+            sim.eligible[u] = false;
+        }
         for (j, job) in trace.jobs.iter().enumerate() {
             if job.submit <= opts.horizon {
                 sim.push_event(job.submit, EventKind::Arrival(j));
@@ -632,6 +721,21 @@ impl<'a> Simulation<'a> {
                     EventKind::ServerUp { server: ev.server }
                 } else {
                     EventKind::ServerDown { server: ev.server }
+                };
+                sim.push_event(ev.time.max(0.0), kind);
+            }
+        }
+        // churn transitions after the fault ones: the same
+        // empty-plan guarantee — ChurnPlan::none() pushes nothing
+        // and marks nobody absent, so seq assignment (and every
+        // decision) matches the pre-churn engine
+        for ev in &opts.churn.events {
+            assert!(ev.user < n, "churn plan names user {} of {n}", ev.user);
+            if ev.time <= opts.horizon {
+                let kind = if ev.join {
+                    EventKind::UserJoin { user: ev.user }
+                } else {
+                    EventKind::UserLeave { user: ev.user }
                 };
                 sim.push_event(ev.time.max(0.0), kind);
             }
@@ -705,11 +809,22 @@ impl<'a> Simulation<'a> {
             }
             EventKind::ServerUp { server } => self.on_server_up_ev(server),
             EventKind::Retry { slot } => self.on_retry(slot),
+            EventKind::UserJoin { user } => self.on_user_join_ev(user),
+            EventKind::UserLeave { user } => self.on_user_leave_ev(user),
         }
     }
 
     fn on_arrival(&mut self, j: usize) -> bool {
         let user = self.arena.job_user(j);
+        if self.has_churn && !self.present[user] {
+            // an absent user's job never enters the system; counted
+            // so completion ratios reflect the churn (module docs,
+            // §Churn — measured degradation, not an error)
+            let num_tasks = self.arena.job_len(j);
+            self.report.user_tasks[user].submitted += num_tasks;
+            self.report.tasks_abandoned += num_tasks;
+            return false;
+        }
         self.queues[user].push_back(j as u32);
         let num_tasks = self.arena.job_len(j);
         self.users[user].pending += num_tasks;
@@ -803,6 +918,7 @@ impl<'a> Simulation<'a> {
                     attempt: entry.attempt,
                     task: entry.task,
                     remaining,
+                    epoch: self.user_epoch[u],
                 };
                 let slot = match self.retry_free.pop() {
                     Some(s) => {
@@ -873,6 +989,14 @@ impl<'a> Simulation<'a> {
         let rt = self.retry_pending[slot as usize];
         self.retry_free.push(slot);
         let u = self.arena.job_user(rt.job as usize);
+        // a departure since the eviction stranded this payload: every
+        // UserLeave bumps the user's epoch, so a stale stamp means
+        // the task's job was discarded wholesale — abandon it, even
+        // if the user has since rejoined (module docs, §Churn)
+        if self.has_churn && rt.epoch != self.user_epoch[u] {
+            self.report.tasks_abandoned += 1;
+            return false;
+        }
         self.retry_ready[u].push_back(rt);
         self.users[u].pending += 1;
         self.report.retries += 1;
@@ -880,6 +1004,106 @@ impl<'a> Simulation<'a> {
             self.scheduler.on_ready(u);
         }
         true
+    }
+
+    /// `UserJoin`: re-admit `u` with a clean slate (module docs,
+    /// §Churn). A departed user was dropped from the blocked set on
+    /// its way out (and an initial absentee never entered it), so it
+    /// re-enters schedulable directly. Idempotent — a join of a
+    /// present user is a no-op (canonical plans never contain one).
+    /// Pending work at join time is possible only when an arrival
+    /// shares the timestamp and a smaller seq; announce it like an
+    /// arrival would.
+    fn on_user_join_ev(&mut self, u: usize) -> bool {
+        if self.present[u] {
+            return false;
+        }
+        self.present[u] = true;
+        self.report.user_joins += 1;
+        self.eligible[u] = true;
+        self.scheduler.on_user_join(u);
+        if self.users[u].pending > 0 {
+            self.scheduler.on_ready(u);
+            return true;
+        }
+        false
+    }
+
+    /// `UserLeave`: `u` departs (module docs, §Churn) — evict its run
+    /// entries from every server (each heap drained in
+    /// `(vfinish, seq)` order, rebuilt without them: deterministic at
+    /// every shard count), release the capacity, discard its queued
+    /// and retry-ready work, bump its retry epoch (stranding
+    /// in-flight backoff payloads), drop it from the blocked set, and
+    /// notify the policy. Idempotent — a leave of an absent user is a
+    /// no-op. Freed capacity is a scheduling opportunity for the
+    /// remaining users, re-probed exactly like after a completion.
+    fn on_user_leave_ev(&mut self, u: usize) -> bool {
+        if !self.present[u] {
+            return false;
+        }
+        self.present[u] = false;
+        self.user_epoch[u] += 1;
+        self.report.user_leaves += 1;
+        let mut touched: Vec<usize> = Vec::new();
+        if self.users[u].running > 0 {
+            for l in 0..self.cluster.len() {
+                if !self.servers[l]
+                    .running
+                    .iter()
+                    .any(|e| e.user as usize == u)
+                {
+                    continue;
+                }
+                self.servers[l].advance(self.now);
+                let vtime = self.servers[l].vtime;
+                let mut running =
+                    std::mem::take(&mut self.servers[l].running);
+                let mut kept =
+                    BinaryHeap::with_capacity(running.len());
+                while let Some(entry) = running.pop() {
+                    if entry.user as usize != u {
+                        kept.push(entry);
+                        continue;
+                    }
+                    let demand = self.users[u].demand;
+                    self.cluster.servers[l].release(&demand);
+                    self.cluster.servers[l].tasks -= 1;
+                    self.scheduler.on_free(l);
+                    self.scheduler.on_complete(u, l);
+                    self.users[u].running -= 1;
+                    self.users[u].dom_share = self.users[u].running
+                        as f64
+                        * self.users[u].dom_delta;
+                    self.users[u].usage.sub_assign(&demand);
+                    self.report.tasks_abandoned += 1;
+                    self.churn_evicted += 1;
+                    let remaining = (entry.vfinish - vtime).max(0.0);
+                    self.report.abandoned_s +=
+                        (entry.dur - remaining).max(0.0);
+                }
+                self.servers[l].running = kept;
+                // rate drops with the lighter load; the gen bump
+                // stales queued checks and reschedules the next one
+                self.refresh_server(l);
+                touched.push(l);
+            }
+        }
+        // queued + retry-ready work is exactly the user's pending
+        // count (audited invariant), discarded wholesale
+        self.report.tasks_abandoned += self.users[u].pending;
+        self.users[u].pending = 0;
+        self.queues[u].clear();
+        self.retry_ready[u].clear();
+        if self.blocked.is_blocked(u) {
+            self.blocked.remove(u);
+        }
+        self.eligible[u] = false;
+        self.scheduler.on_user_leave(u);
+        for &l in &touched {
+            self.unblock_for_server(l);
+        }
+        !touched.is_empty()
     }
 
     fn complete_task(&mut self, l: usize, entry: RunEntry) {
@@ -1137,6 +1361,8 @@ impl<'a> Simulation<'a> {
                 EventKind::Sample
                     | EventKind::ServerDown { .. }
                     | EventKind::ServerUp { .. }
+                    | EventKind::UserJoin { .. }
+                    | EventKind::UserLeave { .. }
             )
         };
         let mut need = false;
@@ -1155,6 +1381,20 @@ impl<'a> Simulation<'a> {
                 }
                 EventKind::ServerUp { server } => {
                     need |= self.on_server_up_ev(server);
+                    i += 1;
+                    continue;
+                }
+                // churn transitions are barriers for the same reason
+                // as faults: a leave mutates run-entry heaps across
+                // all shards, so same-wave checks must order
+                // strictly against it (module docs, §Churn)
+                EventKind::UserJoin { user } => {
+                    need |= self.on_user_join_ev(user);
+                    i += 1;
+                    continue;
+                }
+                EventKind::UserLeave { user } => {
+                    need |= self.on_user_leave_ev(user);
                     i += 1;
                     continue;
                 }
@@ -1294,9 +1534,12 @@ impl<'a> Simulation<'a> {
                 EventKind::Retry { slot } => need |= self.on_retry(slot),
                 EventKind::Sample
                 | EventKind::ServerDown { .. }
-                | EventKind::ServerUp { .. } => {
-                    unreachable!("samples and fault transitions are \
-                                  segment barriers")
+                | EventKind::ServerUp { .. }
+                | EventKind::UserJoin { .. }
+                | EventKind::UserLeave { .. } => {
+                    unreachable!("samples, fault transitions and \
+                                  churn transitions are segment \
+                                  barriers")
                 }
             }
         }
@@ -1324,8 +1567,11 @@ fn push_event_into(
         EventKind::ServerCheck { server, .. }
         | EventKind::ServerDown { server }
         | EventKind::ServerUp { server } => spec.owner_of(server),
-        EventKind::Arrival(_) | EventKind::Sample
-        | EventKind::Retry { .. } => 0,
+        EventKind::Arrival(_)
+        | EventKind::Sample
+        | EventKind::Retry { .. }
+        | EventKind::UserJoin { .. }
+        | EventKind::UserLeave { .. } => 0,
     };
     events.push_to(lane, Event { time, seq: *seq, payload: kind });
 }

@@ -7,15 +7,18 @@
 //! invariant auditor ([`SimOpts::audit`] / `DRFH_AUDIT=1`) lives in
 //! [`audit`]; the deterministic fault-injection layer (server
 //! crash/recovery plans, retry with backoff, fairness-recovery
-//! measurement) lives in [`faults`].
+//! measurement) lives in [`faults`]; the deterministic user-churn
+//! layer (join/leave plans, flash crowds) lives in [`churn`].
 
 pub mod audit;
+pub mod churn;
 pub mod engine;
 pub mod faults;
 pub mod wheel;
 
 pub use crate::cluster::ShardCount;
 pub use crate::metrics::MetricsMode;
+pub use churn::{ChurnEvent, ChurnPlan};
 pub use engine::{run, SimOpts, SimReport, Simulation};
 pub use faults::{FaultEvent, FaultPlan, OutageRecord, RetryPolicy};
 pub use wheel::{

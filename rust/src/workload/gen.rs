@@ -13,7 +13,7 @@
 
 use super::trace::{JobSpec, TaskSpec, Trace, UserSpec};
 use crate::cluster::ResVec;
-use crate::sim::FaultPlan;
+use crate::sim::{ChurnEvent, ChurnPlan, FaultPlan};
 use crate::util::Pcg32;
 
 /// Demand profile classes (mirrors the paper's CPU-heavy / memory-heavy
@@ -305,6 +305,195 @@ pub fn generate_faults(
     FaultPlan::from_intervals(seed, cfg.envy_eps, &intervals)
 }
 
+/// Churn-process configuration (`[churn]` in the experiment config):
+/// per-user alternating leave/rejoin renewal processes, an optional
+/// flash-crowd burst, and diurnal rate modulation, compiled into one
+/// [`ChurnPlan`] by [`generate_churn`]. All rates are per second; a
+/// leave rate of 0 (with no initial absentees and no flash) disables
+/// churn entirely.
+#[derive(Clone, Debug)]
+pub struct ChurnGenConfig {
+    /// Per-user Poisson departure rate while present (events/s).
+    pub leave_rate: f64,
+    /// Per-user Poisson rejoin rate while absent (events/s).
+    pub rejoin_rate: f64,
+    /// Fraction of users absent when the trace starts (each user
+    /// draws independently on its own stream).
+    pub absent_frac: f64,
+    /// One-off "flash crowd": at this instant a cohort of
+    /// `flash_fraction` of all users — drawn from those absent at
+    /// that moment — joins at once (None disables).
+    pub flash_at: Option<f64>,
+    /// Fraction of the user population the flash crowd targets.
+    pub flash_fraction: f64,
+    /// How long flash joiners stay before leaving again (0 = they
+    /// stay, subject to their own renewal process).
+    pub flash_hold: f64,
+    /// Diurnal modulation amplitude in `[0, 1]`: both rates are
+    /// scaled by `1 + amp * sin(2πt/period)` via thinning (0
+    /// disables).
+    pub diurnal_amp: f64,
+    /// Diurnal period in seconds.
+    pub diurnal_period: f64,
+}
+
+impl Default for ChurnGenConfig {
+    fn default() -> Self {
+        ChurnGenConfig {
+            leave_rate: 0.0,
+            rejoin_rate: 1.0 / 1800.0,
+            absent_frac: 0.0,
+            flash_at: None,
+            flash_fraction: 0.1,
+            flash_hold: 1800.0,
+            diurnal_amp: 0.0,
+            diurnal_period: 86_400.0,
+        }
+    }
+}
+
+impl ChurnGenConfig {
+    /// True when every process is disabled (the generated plan is
+    /// [`ChurnPlan::none`]-equivalent).
+    pub fn is_empty(&self) -> bool {
+        self.leave_rate <= 0.0
+            && self.absent_frac <= 0.0
+            && self.flash_at.is_none()
+    }
+}
+
+/// Next event of a rate-`base` Poisson process after `from`, with
+/// diurnal thinning: candidates are drawn at the peak rate
+/// `base * (1 + amp)` and accepted with probability
+/// `rate(t) / peak`, which realizes the inhomogeneous rate
+/// `base * (1 + amp * sin(2πt/period))` exactly. `None` when the
+/// process is off or the next event falls past the horizon.
+fn next_modulated(
+    rng: &mut Pcg32,
+    from: f64,
+    base: f64,
+    amp: f64,
+    period: f64,
+    horizon: f64,
+) -> Option<f64> {
+    if base <= 0.0 {
+        return None;
+    }
+    let amp = amp.clamp(0.0, 1.0);
+    if amp == 0.0 || period <= 0.0 {
+        let t = from + rng.exp(base);
+        return (t < horizon).then_some(t);
+    }
+    let peak = base * (1.0 + amp);
+    let mut t = from;
+    loop {
+        t += rng.exp(peak);
+        if t >= horizon {
+            return None;
+        }
+        let phase = t / period * std::f64::consts::TAU;
+        let rate = base * (1.0 + amp * phase.sin());
+        if rng.f64() * peak <= rate {
+            return Some(t);
+        }
+    }
+}
+
+/// Compile the configured churn processes for a `users`-sized trace
+/// into a [`ChurnPlan`], deterministically from `seed`. Same stream
+/// discipline as [`generate_faults`]: every process draws from its
+/// own Pcg32 *stream* (per-user renewal processes on streams
+/// `CHURN_STREAM + u`, the flash-cohort shuffle on
+/// `CHURN_FLASH_STREAM`), disjoint from the trace generator's stream
+/// and the fault streams — enabling churn perturbs no other
+/// generated randomness (property-tested), and plans are stable
+/// under changes to the other processes' configs.
+pub fn generate_churn(
+    cfg: &ChurnGenConfig,
+    users: usize,
+    horizon: f64,
+    seed: u64,
+) -> ChurnPlan {
+    const CHURN_STREAM: u64 = 1 << 42;
+    const CHURN_FLASH_STREAM: u64 = 1 << 43;
+    if cfg.is_empty() || users == 0 {
+        return ChurnPlan::none();
+    }
+    let mut absent: Vec<usize> = Vec::new();
+    let mut events: Vec<ChurnEvent> = Vec::new();
+    // presence immediately before the flash instant, maintained while
+    // walking each user's renewal process (the flash cohort is drawn
+    // from users absent at that moment)
+    let mut absent_at_flash: Vec<bool> = vec![false; users];
+    let flash_at = cfg.flash_at.filter(|&at| {
+        at < horizon && cfg.flash_fraction > 0.0
+    });
+    for u in 0..users {
+        let mut rng = Pcg32::new(seed, CHURN_STREAM + u as u64);
+        let mut present =
+            !(cfg.absent_frac > 0.0 && rng.f64() < cfg.absent_frac);
+        if !present {
+            absent.push(u);
+        }
+        let mut t = 0.0;
+        loop {
+            if let Some(at) = flash_at {
+                if t < at {
+                    absent_at_flash[u] = !present;
+                }
+            }
+            let rate =
+                if present { cfg.leave_rate } else { cfg.rejoin_rate };
+            let Some(next) = next_modulated(
+                &mut rng,
+                t,
+                rate,
+                cfg.diurnal_amp,
+                cfg.diurnal_period,
+                horizon,
+            ) else {
+                break;
+            };
+            if let Some(at) = flash_at {
+                if t < at && next >= at {
+                    absent_at_flash[u] = !present;
+                }
+            }
+            t = next;
+            present = !present;
+            events.push(ChurnEvent { time: t, user: u, join: present });
+        }
+    }
+    // flash crowd: a shuffled cohort of then-absent users joins at
+    // once, and (optionally) leaves again flash_hold later
+    if let Some(at) = flash_at {
+        let want = ((cfg.flash_fraction * users as f64) as usize)
+            .clamp(1, users);
+        let mut order: Vec<usize> = (0..users).collect();
+        let mut rng = Pcg32::new(seed, CHURN_FLASH_STREAM);
+        rng.shuffle(&mut order);
+        let mut taken = 0;
+        for &u in &order {
+            if taken == want {
+                break;
+            }
+            if !absent_at_flash[u] {
+                continue;
+            }
+            taken += 1;
+            events.push(ChurnEvent { time: at, user: u, join: true });
+            if cfg.flash_hold > 0.0 && at + cfg.flash_hold < horizon {
+                events.push(ChurnEvent {
+                    time: at + cfg.flash_hold,
+                    user: u,
+                    join: false,
+                });
+            }
+        }
+    }
+    ChurnPlan::from_transitions(seed, absent, events)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -494,6 +683,93 @@ mod tests {
         servers.sort_unstable();
         servers.dedup();
         assert_eq!(servers.len(), 10);
+    }
+
+    // ---- churn-plan generation -----------------------------------
+
+    #[test]
+    fn empty_churn_config_compiles_to_empty_plan() {
+        let cfg = ChurnGenConfig::default();
+        assert!(cfg.is_empty());
+        let plan = generate_churn(&cfg, 50, 10_000.0, 7);
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn churn_plan_deterministic_given_seed() {
+        let cfg = ChurnGenConfig {
+            leave_rate: 1.0 / 2000.0,
+            rejoin_rate: 1.0 / 1000.0,
+            absent_frac: 0.3,
+            flash_at: Some(4000.0),
+            diurnal_amp: 0.5,
+            diurnal_period: 5000.0,
+            ..Default::default()
+        };
+        let a = generate_churn(&cfg, 64, 10_000.0, 21);
+        let b = generate_churn(&cfg, 64, 10_000.0, 21);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        let c = generate_churn(&cfg, 64, 10_000.0, 22);
+        assert_ne!(a, c, "seed must matter");
+    }
+
+    #[test]
+    fn churn_streams_are_per_user() {
+        // growing the user set must not move the existing users'
+        // transitions: each user draws from its own Pcg32 stream
+        let cfg = ChurnGenConfig {
+            leave_rate: 1.0 / 800.0,
+            rejoin_rate: 1.0 / 400.0,
+            absent_frac: 0.25,
+            ..Default::default()
+        };
+        let small = generate_churn(&cfg, 16, 10_000.0, 5);
+        let big = generate_churn(&cfg, 32, 10_000.0, 5);
+        let carried: Vec<_> =
+            big.events.iter().filter(|e| e.user < 16).collect();
+        assert_eq!(small.events.len(), carried.len());
+        for (a, b) in small.events.iter().zip(carried) {
+            assert_eq!(a, b, "user stream drifted with population size");
+        }
+        let carried_absent: Vec<usize> = big
+            .absent_at_start
+            .iter()
+            .copied()
+            .filter(|&u| u < 16)
+            .collect();
+        assert_eq!(small.absent_at_start, carried_absent);
+    }
+
+    #[test]
+    fn flash_crowd_joins_an_absent_cohort() {
+        // everyone absent, renewal processes off: the flash is the
+        // only process, so counts are exact
+        let cfg = ChurnGenConfig {
+            leave_rate: 0.0,
+            rejoin_rate: 0.0,
+            absent_frac: 1.0,
+            flash_at: Some(100.0),
+            flash_fraction: 0.25,
+            flash_hold: 60.0,
+            ..Default::default()
+        };
+        let plan = generate_churn(&cfg, 40, 10_000.0, 9);
+        assert_eq!(plan.absent_at_start.len(), 40);
+        let joins: Vec<_> =
+            plan.events.iter().filter(|e| e.join).collect();
+        assert_eq!(joins.len(), 10); // 25% of 40
+        assert!(joins.iter().all(|e| e.time == 100.0));
+        let leaves: Vec<_> =
+            plan.events.iter().filter(|e| !e.join).collect();
+        assert_eq!(leaves.len(), 10);
+        assert!(leaves.iter().all(|e| e.time == 160.0));
+        // distinct users
+        let mut cohort: Vec<usize> =
+            joins.iter().map(|e| e.user).collect();
+        cohort.sort_unstable();
+        cohort.dedup();
+        assert_eq!(cohort.len(), 10);
     }
 
     #[test]

@@ -16,6 +16,7 @@ pub mod trace;
 
 pub use arena::{intern_rows, DemandTable, TaskArena};
 pub use gen::{
-    generate_faults, FaultGenConfig, GoogleLikeConfig, TraceGenerator,
+    generate_churn, generate_faults, ChurnGenConfig, FaultGenConfig,
+    GoogleLikeConfig, TraceGenerator,
 };
 pub use trace::{JobSpec, TaskSpec, Trace, UserSpec};

@@ -20,12 +20,13 @@ use drfh::sched::{
     UserState,
 };
 use drfh::sim::{
-    run, FaultPlan, QueueKind, RetryPolicy, ShardCount, SimOpts,
+    run, ChurnEvent, ChurnPlan, FaultPlan, QueueKind, RetryPolicy,
+    ShardCount, SimOpts,
 };
 use drfh::util::Pcg32;
 use drfh::workload::{
-    generate_faults, FaultGenConfig, GoogleLikeConfig, JobSpec, TaskSpec,
-    Trace, TraceGenerator, UserSpec,
+    generate_churn, generate_faults, ChurnGenConfig, FaultGenConfig,
+    GoogleLikeConfig, JobSpec, TaskSpec, Trace, TraceGenerator, UserSpec,
 };
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -125,6 +126,14 @@ impl<S: Scheduler> Scheduler for Recording<S> {
         self.inner.on_ready(user);
     }
 
+    fn on_user_join(&mut self, user: usize) {
+        self.inner.on_user_join(user);
+    }
+
+    fn on_user_leave(&mut self, user: usize) {
+        self.inner.on_user_leave(user);
+    }
+
     fn on_server_down(&mut self, server: usize) {
         self.inner.on_server_down(server);
     }
@@ -184,6 +193,14 @@ impl<S: Scheduler> Scheduler for SinglePick<S> {
 
     fn on_ready(&mut self, user: usize) {
         self.0.on_ready(user);
+    }
+
+    fn on_user_join(&mut self, user: usize) {
+        self.0.on_user_join(user);
+    }
+
+    fn on_user_leave(&mut self, user: usize) {
+        self.0.on_user_leave(user);
     }
 
     fn on_server_down(&mut self, server: usize) {
@@ -664,6 +681,14 @@ impl<S: Scheduler> Scheduler for AssertShares<S> {
 
     fn on_ready(&mut self, user: usize) {
         self.0.on_ready(user);
+    }
+
+    fn on_user_join(&mut self, user: usize) {
+        self.0.on_user_join(user);
+    }
+
+    fn on_user_leave(&mut self, user: usize) {
+        self.0.on_user_leave(user);
     }
 
     fn on_server_down(&mut self, server: usize) {
@@ -1654,5 +1679,274 @@ fn audit_trips_on_phantom_usage_on_a_down_server() {
     assert!(
         msg.contains("faults:"),
         "fault invariant missing from the dump: {msg}"
+    );
+}
+
+// ---------------------------------------------------- user churn
+
+/// `ChurnPlan::none()` parity (the PR's acceptance gate): an explicit
+/// empty plan — and a plan whose transitions all land past the
+/// horizon, so it sets `has_churn` but compiles to zero queued events
+/// — must produce a [`drfh::sim::SimReport`] bit-identical to the
+/// default run, for Best-Fit, First-Fit, and Slots, at S ∈ {1, 3, 8}.
+/// The past-horizon leg is the sharp one: it proves the engine's
+/// presence/epoch gates are decision-neutral while armed, not just
+/// skipped.
+#[test]
+fn churn_plan_none_is_bit_identical() {
+    use drfh::experiments::EvalSetup;
+    let setup = EvalSetup::with_duration(42, 120, 12, 5_000.0);
+    let h = setup.opts.horizon;
+    let mks: Vec<(&str, fn(&Cluster) -> Box<dyn Scheduler>)> = vec![
+        ("bestfit", |_| Box::new(BestFitDrfh::default())),
+        ("firstfit", |_| Box::new(FirstFitDrfh::default())),
+        ("slots", |c| Box::new(SlotsScheduler::new(c, 14))),
+    ];
+    for (name, mk) in mks {
+        for shards in [1usize, 3, 8] {
+            let base = SimOpts {
+                shards: ShardCount::Fixed(shards),
+                ..setup.opts.clone()
+            };
+            let r_default = run(
+                setup.cluster.clone(),
+                &setup.trace,
+                mk(&setup.cluster),
+                base.clone(),
+            );
+            let r_none = run(
+                setup.cluster.clone(),
+                &setup.trace,
+                mk(&setup.cluster),
+                SimOpts { churn: ChurnPlan::none(), ..base.clone() },
+            );
+            assert_eq!(
+                r_default, r_none,
+                "{name} S={shards}: ChurnPlan::none() perturbed the run"
+            );
+            // every transition past the horizon is dropped at push
+            // time (consuming no seq), so this plan is behaviorally
+            // empty too — even though `has_churn` is armed
+            let late = ChurnPlan::from_transitions(
+                7,
+                vec![],
+                vec![
+                    ChurnEvent { time: h + 10.0, user: 0, join: false },
+                    ChurnEvent { time: h + 20.0, user: 0, join: true },
+                    ChurnEvent { time: h + 1.0, user: 3, join: false },
+                ],
+            );
+            assert!(!late.is_empty(), "the late plan must arm has_churn");
+            let r_late = run(
+                setup.cluster.clone(),
+                &setup.trace,
+                mk(&setup.cluster),
+                SimOpts { churn: late, ..base },
+            );
+            assert_eq!(
+                r_default, r_late,
+                "{name} S={shards}: past-horizon churn plan perturbed \
+                 the run"
+            );
+            assert_eq!(r_default.user_joins, 0);
+            assert_eq!(r_default.user_leaves, 0);
+            assert_eq!(r_default.tasks_abandoned, 0);
+            assert_eq!(r_default.abandoned_s, 0.0);
+        }
+    }
+}
+
+/// Mid-wave join/leave collisions across shards: the tie-break trace
+/// puts arrivals, completions, and the sample barrier on a 10 s grid;
+/// the churn plan fires transitions exactly on that grid and the
+/// stacked fault plan downs servers at the *same* instants — so at
+/// t = 20 one wave mixes two `ServerDown`s, a `UserLeave`, a
+/// `UserJoin`, five arrivals, and the sample barrier. Decision
+/// streams and full `SimReport`s must be identical at S ∈ {1, 2, 3,
+/// 8} on both queue kinds, and the plan must actually churn (else
+/// the matrix proves nothing).
+#[test]
+fn midwave_churn_parity_across_shards() {
+    let (cluster, trace) = tiebreak_trace(4343);
+    let churn = ChurnPlan::from_transitions(
+        13,
+        vec![2], // user 2 misses its t = 0 and t = 10 arrivals
+        vec![
+            // same wave as ServerDown(0)/ServerDown(3) + 5 arrivals
+            ChurnEvent { time: 20.0, user: 0, join: false },
+            ChurnEvent { time: 20.0, user: 2, join: true },
+            // off-grid, same instant as ServerDown(5)
+            ChurnEvent { time: 35.0, user: 1, join: false },
+            // on-grid leave colliding with the t = 40 arrivals
+            ChurnEvent { time: 40.0, user: 3, join: false },
+            // rejoin in the ServerUp(3) wave
+            ChurnEvent { time: 90.0, user: 0, join: true },
+            // rejoins colliding with the repeat outage window
+            ChurnEvent { time: 200.0, user: 1, join: true },
+            ChurnEvent { time: 260.0, user: 3, join: true },
+        ],
+    );
+    assert_eq!(churn.events.len(), 7, "no transition should be dropped");
+    let faults = FaultPlan::from_intervals(
+        11,
+        0.05,
+        &[
+            (0, 20.0, 60.0),
+            (3, 20.0, 90.0),
+            (5, 35.0, 55.0),
+            (0, 200.0, 260.0),
+        ],
+    );
+    let retry = RetryPolicy {
+        max_attempts: 3,
+        base: 5.0,
+        cap: 40.0,
+        jitter: 0.5,
+    };
+    for kind in [QueueKind::Wheel, QueueKind::Heap] {
+        let opts = SimOpts {
+            horizon: 1_000.0,
+            sample_dt: 10.0,
+            track_user_series: false,
+            queue: kind,
+            churn: churn.clone(),
+            faults: faults.clone(),
+            retry,
+            ..SimOpts::default()
+        };
+        assert_shard_parity(
+            &format!("midwave churn bestfit {kind:?}"),
+            &cluster,
+            &trace,
+            &opts,
+            BestFitDrfh::default,
+        );
+        assert_shard_parity(
+            &format!("midwave churn slots {kind:?}"),
+            &cluster,
+            &trace,
+            &opts,
+            || SlotsScheduler::new(&cluster, 14),
+        );
+    }
+    let opts = SimOpts {
+        horizon: 1_000.0,
+        sample_dt: 10.0,
+        track_user_series: false,
+        churn,
+        faults,
+        retry,
+        ..SimOpts::default()
+    };
+    let r = run(
+        cluster.clone(),
+        &trace,
+        Box::new(BestFitDrfh::default()),
+        opts,
+    );
+    // every in-horizon transition applies exactly once
+    assert_eq!(r.user_leaves, 3, "leaves not applied");
+    assert_eq!(r.user_joins, 4, "joins not applied");
+    assert!(r.tasks_abandoned > 0, "churn plan abandoned nothing");
+    assert!(r.abandoned_s > 0.0, "no evicted in-flight work recorded");
+    assert!(r.evictions > 0, "stacked crash plan evicted nothing");
+}
+
+/// Seeded replay: the same churn generator config + seed compiles to
+/// the same plan, and the same plan + trace replays to a bit-identical
+/// `SimReport` — rerun or sharded. A different churn seed moves the
+/// plan.
+#[test]
+fn seeded_churn_replay_is_reproducible() {
+    use drfh::experiments::EvalSetup;
+    let setup = EvalSetup::with_duration(7, 100, 10, 5_000.0);
+    let cfg = ChurnGenConfig {
+        leave_rate: 2e-4,
+        absent_frac: 0.2,
+        flash_at: Some(1_200.0),
+        flash_fraction: 0.3,
+        flash_hold: 800.0,
+        ..ChurnGenConfig::default()
+    };
+    let (n, h) = (setup.trace.users.len(), setup.opts.horizon);
+    let plan = generate_churn(&cfg, n, h, 99);
+    assert_eq!(
+        plan,
+        generate_churn(&cfg, n, h, 99),
+        "same seed must compile the same plan"
+    );
+    assert_ne!(
+        plan.events,
+        generate_churn(&cfg, n, h, 100).events,
+        "a different churn seed must move the plan"
+    );
+    let mk_opts = |shards| SimOpts {
+        churn: plan.clone(),
+        shards: ShardCount::Fixed(shards),
+        ..setup.opts.clone()
+    };
+    let r1 = run(
+        setup.cluster.clone(),
+        &setup.trace,
+        Box::new(BestFitDrfh::default()),
+        mk_opts(1),
+    );
+    assert!(r1.user_leaves > 0, "replay guard needs a non-vacuous plan");
+    assert!(r1.user_joins > 0, "replay guard needs rejoins in-horizon");
+    let r2 = run(
+        setup.cluster.clone(),
+        &setup.trace,
+        Box::new(BestFitDrfh::default()),
+        mk_opts(1),
+    );
+    assert_eq!(r1, r2, "same plan + seed must replay bit-identically");
+    let r8 = run(
+        setup.cluster.clone(),
+        &setup.trace,
+        Box::new(BestFitDrfh::default()),
+        mk_opts(8),
+    );
+    assert_eq!(r1, r8, "sharded churned replay diverged from S=1");
+}
+
+/// Audit neutrality with a live churn plan: the churn invariants
+/// (departed users ineligible, presence/epoch bookkeeping, abandoned
+/// counters in the capacity balance) run every wave on healthy state
+/// without tripping, and the audited report stays bit-identical to
+/// the unaudited one across shard counts.
+#[test]
+fn audit_mode_is_decision_neutral_under_churn() {
+    let (cluster, trace) = tiebreak_trace(4545);
+    let churn = ChurnPlan::from_transitions(
+        5,
+        vec![4],
+        vec![
+            ChurnEvent { time: 20.0, user: 0, join: false },
+            ChurnEvent { time: 30.0, user: 4, join: true },
+            ChurnEvent { time: 50.0, user: 2, join: false },
+            ChurnEvent { time: 120.0, user: 0, join: true },
+            ChurnEvent { time: 300.0, user: 2, join: true },
+        ],
+    );
+    let opts = SimOpts {
+        horizon: 1_000.0,
+        sample_dt: 10.0,
+        track_user_series: false,
+        churn,
+        ..SimOpts::default()
+    };
+    assert_audit_parity(
+        "audit churned bestfit",
+        &cluster,
+        &trace,
+        &opts,
+        BestFitDrfh::default,
+    );
+    assert_audit_parity(
+        "audit churned slots",
+        &cluster,
+        &trace,
+        &opts,
+        || SlotsScheduler::new(&cluster, 14),
     );
 }

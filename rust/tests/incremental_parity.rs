@@ -291,3 +291,116 @@ fn class_members_split_bitwise_under_event_stream() {
     // two users shared an LP variable block
     assert!(collapsed_any, "stream never produced a shared class");
 }
+
+/// Generator-driven churn (churn satellite): the same seeded
+/// [`drfh::workload::generate_churn`] streams that drive the engine
+/// drive the warm allocator here — every `Join` is an `add_user`,
+/// every `Leave` a `remove_user`, with the tenant specs drawn from a
+/// small demand pool so joins overwhelmingly land in live allocation
+/// classes. After every transition the warm allocation must match the
+/// from-scratch solve within 1e-9, `lp_vars()` must stay put whenever
+/// a join hits an existing class, and the replay as a whole must be
+/// cheaper in search pivots than re-solving per event.
+#[test]
+fn generated_churn_stream_matches_scratch() {
+    use drfh::workload::{generate_churn, ChurnGenConfig};
+    let demand_pool = [
+        ResVec::cpu_mem(0.25, 1.0),
+        ResVec::cpu_mem(1.0, 0.25),
+        ResVec::cpu_mem(0.5, 0.5),
+    ];
+    let n = 24usize;
+    let spec_of = |u: usize| FluidUser {
+        demand: demand_pool[u % demand_pool.len()],
+        weight: if u % 4 == 0 { 2.0 } else { 1.0 },
+        task_cap: None,
+    };
+    let cfg = ChurnGenConfig {
+        leave_rate: 4e-4,
+        rejoin_rate: 1.0 / 900.0,
+        absent_frac: 0.25,
+        flash_at: Some(2_000.0),
+        flash_fraction: 0.3,
+        flash_hold: 1_200.0,
+        ..ChurnGenConfig::default()
+    };
+    let horizon = 6_000.0;
+    let plan = generate_churn(&cfg, n, horizon, 4242);
+    assert!(
+        plan.events.len() >= 10,
+        "plan too quiet to exercise the warm path: {} events",
+        plan.events.len()
+    );
+    let mut rng = Pcg32::seeded(4242);
+    let cluster = Cluster::google_sample(60, &mut rng);
+    let mut inc = IncrementalDrfh::new(&cluster);
+    // allocation order: insertion order with removals compacting —
+    // `ids[p].0` is the trace user occupying position p
+    let mut ids: Vec<(usize, UserId)> = Vec::new();
+    let mut mirror: Vec<FluidUser> = Vec::new();
+    for u in 0..n {
+        if !plan.initially_absent(u) {
+            ids.push((u, inc.add_user(spec_of(u))));
+            mirror.push(spec_of(u));
+        }
+    }
+    inc.allocate();
+    let class_key = |u: &FluidUser| {
+        (
+            u.demand[0].to_bits(),
+            u.demand[1].to_bits(),
+            u.weight.to_bits(),
+        )
+    };
+    let mut warm_pivots = 0u64;
+    let mut scratch_pivots = 0u64;
+    let mut joined_live_class = false;
+    for (ev, e) in plan.events.iter().enumerate() {
+        let pos = ids.iter().position(|&(u, _)| u == e.user);
+        if e.join {
+            assert!(
+                pos.is_none(),
+                "event {ev}: canonical plan joined a present user"
+            );
+            let spec = spec_of(e.user);
+            let vars_before = inc.lp_vars();
+            let hits_live = mirror
+                .iter()
+                .any(|m| class_key(m) == class_key(&spec));
+            ids.push((e.user, inc.add_user(spec.clone())));
+            mirror.push(spec);
+            if hits_live {
+                joined_live_class = true;
+                assert_eq!(
+                    inc.lp_vars(),
+                    vars_before,
+                    "event {ev}: join into a live class resized the LP"
+                );
+            }
+        } else {
+            let p = pos.unwrap_or_else(|| {
+                panic!("event {ev}: canonical plan left an absent user")
+            });
+            inc.remove_user(ids.remove(p).1);
+            mirror.remove(p);
+        }
+        if mirror.is_empty() {
+            continue;
+        }
+        let warm = inc.allocate();
+        let scratch = allocator::solve(&cluster, &mirror);
+        assert_parity(&warm, &scratch, &format!("churn event {ev}"));
+        warm_pivots += warm.lp_pivots;
+        scratch_pivots += scratch.lp_pivots;
+    }
+    assert!(
+        joined_live_class,
+        "no join ever hit a live class — the pool is miswired"
+    );
+    assert!(
+        warm_pivots < scratch_pivots,
+        "churn replay not cheaper warm: {warm_pivots} >= {scratch_pivots}"
+    );
+    let st = inc.solver_stats();
+    assert!(st.warm_solves > 0, "warm path never used: {st:?}");
+}

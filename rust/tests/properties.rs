@@ -598,3 +598,374 @@ fn retry_backoff_is_pure_and_bounded() {
         }
     }
 }
+
+/// Churn-plan canonical form (churn satellite): on randomized
+/// generator configs, every compiled plan alternates per user starting
+/// from its initial presence — an absent-at-start user's first event
+/// is a join, a present user's is a leave, and no transition is
+/// redundant — with events time-sorted inside `[0, horizon)` and
+/// `absent_at_start` sorted and deduplicated.
+#[test]
+fn churn_plans_are_canonical_randomized() {
+    use drfh::workload::{generate_churn, ChurnGenConfig};
+    for seed in 0..30u64 {
+        let mut rng = Pcg32::seeded(30_000 + seed);
+        let n = 2 + rng.below(40);
+        let horizon = rng.uniform(2_000.0, 20_000.0);
+        let cfg = ChurnGenConfig {
+            leave_rate: rng.uniform(0.0, 2e-3),
+            rejoin_rate: rng.uniform(1e-4, 2e-3),
+            absent_frac: rng.uniform(0.0, 0.6),
+            flash_at: (rng.f64() < 0.5)
+                .then(|| rng.uniform(0.0, horizon)),
+            flash_fraction: rng.uniform(0.05, 0.5),
+            flash_hold: rng.uniform(0.0, horizon / 2.0),
+            diurnal_amp: rng.uniform(0.0, 1.0),
+            diurnal_period: rng.uniform(1_000.0, 90_000.0),
+        };
+        let plan = generate_churn(&cfg, n, horizon, seed);
+        assert!(
+            plan.absent_at_start.windows(2).all(|w| w[0] < w[1]),
+            "seed {seed}: absent_at_start not sorted/deduped"
+        );
+        let mut present = vec![true; n];
+        for &u in &plan.absent_at_start {
+            assert!(u < n, "seed {seed}: absentee out of range");
+            present[u] = false;
+        }
+        let mut prev = 0.0f64;
+        for e in &plan.events {
+            assert!(e.user < n, "seed {seed}: event user out of range");
+            assert!(
+                e.time >= prev && e.time >= 0.0 && e.time < horizon,
+                "seed {seed}: event at {} outside order/horizon",
+                e.time
+            );
+            assert_ne!(
+                e.join, present[e.user],
+                "seed {seed}: redundant transition for user {} at {}",
+                e.user, e.time
+            );
+            present[e.user] = e.join;
+            prev = e.time;
+        }
+    }
+}
+
+/// Stream isolation (churn satellite): the churn processes draw from
+/// dedicated RNG streams, so (a) the initial-absence draw — the first
+/// draw on each per-user stream — is invariant under every other
+/// churn knob, (b) renewal transitions before the flash instant are
+/// bitwise unchanged by enabling the flash (its cohort shuffle lives
+/// on its own stream), and (c) trace and fault generation are bitwise
+/// unchanged by churn generation running in between.
+#[test]
+fn churn_streams_are_isolated() {
+    use drfh::workload::{
+        generate_churn, generate_faults, ChurnGenConfig, FaultGenConfig,
+        GoogleLikeConfig, TraceGenerator,
+    };
+    let horizon = 20_000.0;
+    let base = ChurnGenConfig {
+        leave_rate: 3e-4,
+        absent_frac: 0.3,
+        ..ChurnGenConfig::default()
+    };
+    let flash_at = 6_000.0;
+    let flashy = ChurnGenConfig {
+        flash_at: Some(flash_at),
+        flash_fraction: 0.4,
+        flash_hold: 2_000.0,
+        ..base.clone()
+    };
+    let loud = ChurnGenConfig {
+        leave_rate: 2e-3,
+        rejoin_rate: 1e-3,
+        diurnal_amp: 0.8,
+        ..flashy.clone()
+    };
+    for seed in 0..10u64 {
+        let a = generate_churn(&base, 64, horizon, seed);
+        let b = generate_churn(&flashy, 64, horizon, seed);
+        let c = generate_churn(&loud, 64, horizon, seed);
+        // (a) same absentees no matter what the other processes do
+        assert_eq!(
+            a.absent_at_start, b.absent_at_start,
+            "seed {seed}: flash moved the initial-absence draw"
+        );
+        assert_eq!(
+            a.absent_at_start, c.absent_at_start,
+            "seed {seed}: rates moved the initial-absence draw"
+        );
+        // (b) identical renewal prefix before the flash fires
+        let pre = |p: &drfh::sim::ChurnPlan| {
+            p.events
+                .iter()
+                .filter(|e| e.time < flash_at)
+                .copied()
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(
+            pre(&a),
+            pre(&b),
+            "seed {seed}: flash perturbed pre-flash renewal events"
+        );
+    }
+    // (c) pure-function discipline: regenerating the trace and the
+    // fault plan after compiling a churn plan reproduces them bitwise
+    let gen = TraceGenerator::new(GoogleLikeConfig {
+        users: 12,
+        duration: 8_000.0,
+        jobs_per_user: 3.0,
+        ..Default::default()
+    });
+    let fcfg = FaultGenConfig {
+        crash_rate: 5e-5,
+        mean_downtime: 300.0,
+        ..FaultGenConfig::default()
+    };
+    let t1 = gen.generate(17);
+    let f1 = generate_faults(&fcfg, 40, 8_000.0, 17);
+    let churn = generate_churn(&loud, 12, 8_000.0, 17);
+    assert!(!churn.is_empty(), "isolation probe must actually churn");
+    let t2 = gen.generate(17);
+    let f2 = generate_faults(&fcfg, 40, 8_000.0, 17);
+    assert_eq!(f1, f2, "churn generation perturbed the fault plan");
+    assert_eq!(t1.jobs.len(), t2.jobs.len());
+    assert_eq!(t1.total_tasks(), t2.total_tasks());
+    for (x, y) in t1.jobs.iter().zip(&t2.jobs) {
+        assert_eq!(x.submit.to_bits(), y.submit.to_bits());
+        assert_eq!(x.user, y.user);
+    }
+    for (x, y) in t1.users.iter().zip(&t2.users) {
+        assert_eq!(x.demand[0].to_bits(), y.demand[0].to_bits());
+        assert_eq!(x.demand[1].to_bits(), y.demand[1].to_bits());
+    }
+}
+
+/// Flash-crowd accounting (churn satellite): with both renewal rates
+/// off, the flash is the whole plan — the cohort is exactly
+/// `min(clamp(flash_fraction · n, 1, n), #absent)` users, every
+/// member was absent at the flash instant, and each join pairs with
+/// an in-horizon hold departure (or none when `flash_hold` is 0).
+#[test]
+fn flash_crowd_counts_randomized() {
+    use drfh::workload::{generate_churn, ChurnGenConfig};
+    for seed in 0..20u64 {
+        let mut rng = Pcg32::seeded(31_000 + seed);
+        let n = 5 + rng.below(60);
+        let frac = rng.uniform(0.05, 0.9);
+        let hold = if rng.f64() < 0.5 {
+            0.0
+        } else {
+            rng.uniform(100.0, 5_000.0)
+        };
+        let at = 4_000.0;
+        let horizon = 10_000.0;
+        let cfg = ChurnGenConfig {
+            leave_rate: 0.0,
+            rejoin_rate: 0.0,
+            absent_frac: rng.uniform(0.1, 0.9),
+            flash_at: Some(at),
+            flash_fraction: frac,
+            flash_hold: hold,
+            diurnal_amp: 0.0,
+            diurnal_period: 86_400.0,
+        };
+        let plan = generate_churn(&cfg, n, horizon, 500 + seed);
+        let want = ((frac * n as f64) as usize).clamp(1, n);
+        let joins: Vec<usize> = plan
+            .events
+            .iter()
+            .filter(|e| e.join && e.time == at)
+            .map(|e| e.user)
+            .collect();
+        assert_eq!(
+            joins.len(),
+            want.min(plan.absent_at_start.len()),
+            "seed {seed}: cohort size off (want {want}, {} absent)",
+            plan.absent_at_start.len()
+        );
+        for &u in &joins {
+            assert!(
+                plan.initially_absent(u),
+                "seed {seed}: flash joiner {u} was never absent"
+            );
+        }
+        let hold_leaves = plan
+            .events
+            .iter()
+            .filter(|e| !e.join && e.time == at + hold)
+            .count();
+        if hold > 0.0 && at + hold < horizon {
+            assert_eq!(
+                hold_leaves,
+                joins.len(),
+                "seed {seed}: flash joins without hold departures"
+            );
+            assert_eq!(plan.events.len(), 2 * joins.len());
+        } else {
+            assert_eq!(
+                plan.events.iter().filter(|e| !e.join).count(),
+                0,
+                "seed {seed}: departures without a hold"
+            );
+            assert_eq!(plan.events.len(), joins.len());
+        }
+    }
+}
+
+/// A departure for a user that was never admitted is a strict no-op
+/// (churn satellite): the hand-built redundant `Leave` — bypassing
+/// the canonicalizer — consumes a queue slot and splits a wave, but
+/// the engine's presence guard must keep the whole `SimReport`
+/// bit-identical to the plan without it, sharded or not.
+#[test]
+fn never_admitted_departure_is_a_noop() {
+    use drfh::sched::BestFitDrfh;
+    use drfh::sim::{run, ChurnEvent, ChurnPlan, ShardCount, SimOpts};
+    use drfh::workload::{GoogleLikeConfig, TraceGenerator};
+    for seed in 0..4u64 {
+        let mut rng = Pcg32::seeded(40_000 + seed);
+        let cluster = Cluster::google_sample(20 + rng.below(20), &mut rng);
+        let trace = TraceGenerator::new(GoogleLikeConfig {
+            users: 5,
+            duration: 3_000.0,
+            jobs_per_user: 4.0,
+            ..Default::default()
+        })
+        .generate(seed);
+        let absent = ChurnPlan {
+            seed: 1,
+            absent_at_start: vec![2],
+            events: vec![],
+        };
+        let noop = ChurnPlan {
+            seed: 1,
+            absent_at_start: vec![2],
+            events: vec![ChurnEvent {
+                time: 1_000.0,
+                user: 2,
+                join: false,
+            }],
+        };
+        for shards in [1usize, 3] {
+            let mk = |churn: &ChurnPlan| SimOpts {
+                horizon: 3_000.0,
+                sample_dt: 50.0,
+                track_user_series: false,
+                churn: churn.clone(),
+                shards: ShardCount::Fixed(shards),
+                ..SimOpts::default()
+            };
+            let ra = run(
+                cluster.clone(),
+                &trace,
+                Box::new(BestFitDrfh::default()),
+                mk(&absent),
+            );
+            let rb = run(
+                cluster.clone(),
+                &trace,
+                Box::new(BestFitDrfh::default()),
+                mk(&noop),
+            );
+            assert_eq!(
+                ra, rb,
+                "seed {seed} S={shards}: redundant departure perturbed \
+                 the run"
+            );
+            assert_eq!(
+                rb.user_leaves, 0,
+                "seed {seed} S={shards}: no-op departure was counted"
+            );
+        }
+    }
+}
+
+/// Online index maintenance matches a rebuilt scan (churn satellite):
+/// random join/leave presence toggles — notified through the
+/// `on_user_join`/`on_user_leave` hooks exactly like the engine —
+/// interleaved with share-moving placements must keep the classed and
+/// per-user incremental indexes pick-identical to the naive linear
+/// scan, and every online structure must survive the
+/// `audit_indices` cross-check against a fresh rebuild.
+#[test]
+fn online_index_updates_match_rebuilt_scan() {
+    use drfh::sched::{BestFitDrfh, Scheduler, UserState};
+    for seed in 0..20u64 {
+        let mut rng = Pcg32::seeded(50_000 + seed);
+        let cluster = Cluster::google_sample(3 + rng.below(6), &mut rng);
+        let n = 3 + rng.below(8);
+        let mut users: Vec<UserState> = (0..n)
+            .map(|_| {
+                let running = rng.below(40);
+                let dom_delta = rng.uniform(0.001, 0.05);
+                UserState {
+                    demand: ResVec::cpu_mem(
+                        rng.uniform(0.05, 0.3),
+                        rng.uniform(0.05, 0.3),
+                    ),
+                    weight: 1.0,
+                    pending: 1 + rng.below(10),
+                    running,
+                    dom_share: running as f64 * dom_delta,
+                    usage: ResVec::zeros(2),
+                    dom_delta,
+                }
+            })
+            .collect();
+        let mut eligible = vec![true; n];
+        let mut naive = BestFitDrfh::naive();
+        let mut indexed = vec![
+            ("classed", BestFitDrfh::default()),
+            ("per_user", BestFitDrfh::per_user()),
+        ];
+        for round in 0..30 {
+            let want = naive.pick(&cluster, &users, &eligible);
+            for (label, s) in indexed.iter_mut() {
+                let got = s.pick(&cluster, &users, &eligible);
+                assert_eq!(
+                    got, want,
+                    "seed {seed} round {round}: {label} diverged from \
+                     the rebuilt scan"
+                );
+                let audit = s.audit_indices(&cluster, &users, &eligible);
+                assert!(
+                    audit.is_ok(),
+                    "seed {seed} round {round}: {label} index drifted: \
+                     {audit:?}"
+                );
+            }
+            // random presence toggle, engine-style notification
+            let u = rng.below(n);
+            if eligible[u] {
+                eligible[u] = false;
+                naive.on_user_leave(u);
+                for (_, s) in indexed.iter_mut() {
+                    s.on_user_leave(u);
+                }
+            } else {
+                eligible[u] = true;
+                naive.on_user_join(u);
+                for (_, s) in indexed.iter_mut() {
+                    s.on_user_join(u);
+                }
+            }
+            // occasionally move a share the way a placement would
+            if rng.f64() < 0.5 {
+                let v = rng.below(n);
+                if users[v].pending > 0 && eligible[v] {
+                    users[v].pending -= 1;
+                    users[v].running += 1;
+                    users[v].dom_share =
+                        users[v].running as f64 * users[v].dom_delta;
+                    naive.on_place(v, 0);
+                    for (_, s) in indexed.iter_mut() {
+                        s.on_place(v, 0);
+                    }
+                }
+            }
+        }
+    }
+}
